@@ -1,0 +1,65 @@
+//! Straggler-resilience scenario: how each algorithm's time-to-loss
+//! degrades as the fleet gets slower and flakier — the paper's core
+//! motivation (§1, §3) in one runnable.
+//!
+//! Sweeps straggler probability while keeping the workload fixed, and
+//! prints the virtual time each algorithm needs to reach a loss target.
+//!
+//! ```text
+//! cargo run --release --example straggler_sweep
+//! ```
+
+use dsgd_aau::algorithms::AlgorithmKind;
+use dsgd_aau::config::{BackendKind, ExperimentConfig};
+use dsgd_aau::coordinator::run_sweep;
+
+fn main() -> anyhow::Result<()> {
+    let probs = [0.0, 0.1, 0.3];
+    let target_loss = 1.8f32;
+    println!(
+        "time (virtual s) to reach training loss <= {target_loss} — 16 workers, mlp_small, non-IID\n"
+    );
+    println!(
+        "{:<18} {:>10} {:>10} {:>10}",
+        "algorithm", "p=0%", "p=10%", "p=30%"
+    );
+    for alg in AlgorithmKind::all() {
+        let cfgs: Vec<ExperimentConfig> = probs
+            .iter()
+            .map(|&p| {
+                let mut cfg = ExperimentConfig::default();
+                cfg.name = format!("sweep_{}_{p}", alg.token());
+                cfg.num_workers = 16;
+                cfg.algorithm = alg;
+                cfg.backend = BackendKind::NativeMlp;
+                cfg.model = "mlp_small".into();
+                cfg.max_iterations = u64::MAX / 2;
+                cfg.time_budget = Some(120.0);
+                cfg.eval_every = 20;
+                cfg.straggler.probability = p;
+                cfg.seed = 11;
+                cfg
+            })
+            .collect();
+        let mut cells = Vec::new();
+        for (_, res) in run_sweep(cfgs) {
+            let s = res?;
+            cells.push(match s.recorder.time_to_loss(target_loss) {
+                Some(t) => format!("{t:.1}s"),
+                None => format!("> {:.0}s", s.virtual_time),
+            });
+        }
+        println!(
+            "{:<18} {:>10} {:>10} {:>10}",
+            alg.label(),
+            cells[0],
+            cells[1],
+            cells[2]
+        );
+    }
+    println!(
+        "\nReading: synchronous DSGD blows up with straggler probability; \
+         DSGD-AAU degrades gracefully (the paper's Figure 4/9 story)."
+    );
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Topology playground: how the communication graph shapes consensus.
+//!
+//! Builds each topology, reports its structure (degree/diameter/Metropolis
+//! β), then runs a short DSGD-AAU training on each and shows how topology
+//! affects pathsearch epoch length and convergence — the paper's
+//! Assumption 2 (bounded connectivity time B) made tangible.
+//!
+//! ```text
+//! cargo run --release --example topology_explorer
+//! ```
+
+use dsgd_aau::algorithms::AlgorithmKind;
+use dsgd_aau::config::{BackendKind, ExperimentConfig};
+use dsgd_aau::consensus::GroupWeights;
+use dsgd_aau::coordinator::run_experiment;
+use dsgd_aau::topology::TopologyKind;
+
+fn main() -> anyhow::Result<()> {
+    let n = 16;
+    let kinds = [
+        ("ring", TopologyKind::Ring),
+        ("torus", TopologyKind::Torus),
+        ("random(p=.2)", TopologyKind::Random { p: 0.2, seed: 3 }),
+        ("star", TopologyKind::Star),
+        ("complete", TopologyKind::Complete),
+        ("bipartite", TopologyKind::Bipartite { seed: 3 }),
+    ];
+
+    println!(
+        "{:<14} {:>6} {:>8} {:>9} {:>8} {:>10} {:>9} {:>8}",
+        "topology", "edges", "diam", "beta", "iters", "epochs", "loss", "gap"
+    );
+    for (name, kind) in kinds {
+        let g = kind.build(n);
+        let all: Vec<usize> = (0..n).collect();
+        let gw = GroupWeights::metropolis(&g, &all);
+        anyhow::ensure!(gw.stochasticity_error() < 1e-5, "doubly stochastic");
+
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = format!("topo_{name}");
+        cfg.num_workers = n;
+        cfg.topology = kind;
+        cfg.algorithm = AlgorithmKind::DsgdAau;
+        cfg.backend = BackendKind::Quadratic;
+        cfg.max_iterations = 400;
+        cfg.eval_every = 100;
+        cfg.mean_compute = 0.01;
+        let s = run_experiment(&cfg)?;
+
+        println!(
+            "{:<14} {:>6} {:>8} {:>9.4} {:>8} {:>10} {:>9.4} {:>8.2e}",
+            name,
+            g.num_edges(),
+            g.diameter(),
+            gw.min_positive(),
+            s.iterations,
+            s.epochs_completed,
+            s.final_loss(),
+            s.consensus_gap,
+        );
+    }
+    println!(
+        "\nReading: denser graphs complete pathsearch epochs in fewer \
+         iterations (smaller B in Assumption 2) and close the consensus \
+         gap faster; the star's hub bottleneck shows up as slow epochs."
+    );
+    Ok(())
+}

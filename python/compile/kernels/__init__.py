@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels for DSGD-AAU.
+
+All kernels run in ``interpret=True`` mode so they lower to plain HLO ops
+executable on the CPU PJRT client (real-TPU Mosaic lowering is a
+compile-only target here; see DESIGN.md SS4).
+
+Public surface:
+    matmul            tiled matmul (f32 accumulate), optional bias + ReLU
+    linear_relu       custom-vjp fused linear+ReLU (fwd & bwd via Pallas)
+    linear_id         custom-vjp linear (no activation)
+    gossip_average    Metropolis-weighted neighbor parameter average
+"""
+
+from .matmul import matmul, linear_relu, linear_id  # noqa: F401
+from .gossip import gossip_average  # noqa: F401

@@ -1,0 +1,63 @@
+"""Pallas gossip-average kernel: the consensus update of eq. (4).
+
+``out = sum_k weights[k] * stack[k, :]`` over a stack of neighbor parameter
+vectors.  The Metropolis weights (Assumption 1) are computed by the rust
+coordinator; zero-weight rows make the fixed-fanout artifact usable for any
+active-neighbor count <= K_MAX.
+
+Tiling: 1-D grid over the (padded) parameter dimension; each program loads
+a ``(K, bd)`` VMEM block of the stack plus the full weight vector and emits
+one ``(bd,)`` slice of the consensus result.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_TILE_CANDIDATES = (512, 256, 128, 64, 32, 16, 8, 4, 2, 1)
+
+
+def _pick_tile(dim: int, cap: int = 512) -> int:
+    for t in _TILE_CANDIDATES:
+        if t <= cap and dim % t == 0:
+            return t
+    return 1
+
+
+def _gossip_kernel(stack_ref, w_ref, o_ref):
+    # (K, bd) * (K, 1) -> (bd,)
+    o_ref[...] = jnp.sum(stack_ref[...] * w_ref[...].reshape(-1, 1), axis=0)
+
+
+def gossip_average(stack: jax.Array, weights: jax.Array, *, bd: int | None = None) -> jax.Array:
+    """Weighted average of stacked parameter vectors.
+
+    Args:
+        stack: ``[K, D]`` neighbor parameter vectors (row 0 is usually self).
+        weights: ``[K]`` consensus weights; inactive rows carry weight 0.
+        bd: tile width override (default: largest divisor of D <= 512).
+
+    Returns:
+        ``[D]`` float32 consensus vector.
+    """
+    if stack.ndim != 2 or weights.ndim != 1:
+        raise ValueError(f"bad shapes: stack {stack.shape}, weights {weights.shape}")
+    k, d = stack.shape
+    if weights.shape[0] != k:
+        raise ValueError(f"weights {weights.shape} != stack rows {k}")
+    bd = bd or _pick_tile(d)
+    if d % bd:
+        raise ValueError(f"tile {bd} must divide D={d}")
+    return pl.pallas_call(
+        _gossip_kernel,
+        grid=(d // bd,),
+        in_specs=[
+            pl.BlockSpec((k, bd), lambda i: (0, i)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(stack.astype(jnp.float32), weights.astype(jnp.float32))

@@ -1,0 +1,158 @@
+"""Tiled Pallas matmul with fused bias + ReLU, plus custom-vjp linears.
+
+The paper's local-SGD hot spot is the dense forward/backward of the worker
+model (2-NN / transformer FFN).  On TPU this kernel tiles HBM->VMEM with
+BlockSpecs and accumulates on the MXU in f32; here it runs interpret=True
+so the identical schedule lowers to portable HLO (DESIGN.md SS4).
+
+Grid layout: (M/bm, N/bn, K/bk).  The K axis is the innermost sequential
+grid dimension: each (i, j) output tile is initialised at k == 0,
+accumulated over k, and bias/activation are applied at the final k step so
+the whole linear layer is a single fused kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile candidates in MXU-friendly descending order. 128 matches the MXU
+# systolic array edge; smaller powers of two keep small models on a 1x1 grid.
+_TILE_CANDIDATES = (512, 256, 128, 64, 32, 16, 8, 4, 2, 1)
+
+
+def _pick_tile(dim: int, cap: int = 128) -> int:
+    """Largest candidate tile <= cap that divides ``dim`` exactly."""
+    for t in _TILE_CANDIDATES:
+        if t <= cap and dim % t == 0:
+            return t
+    return 1
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, activation: str):
+    """One (bm, bn) output tile; sequential accumulation over the K grid."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _finish():
+        acc = o_ref[...] + b_ref[...]
+        if activation == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc
+
+
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    activation: str = "none",
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+) -> jax.Array:
+    """``act(x @ w + b)`` as a single tiled Pallas kernel.
+
+    Args:
+        x: ``[M, K]`` float input.
+        w: ``[K, N]`` float weights.
+        b: optional ``[N]`` bias (zeros if omitted).
+        activation: ``"none"`` or ``"relu"``, fused at the last K step.
+        bm/bn/bk: tile overrides; defaults pick the largest divisor <= 128.
+
+    Returns:
+        ``[M, N]`` float32 result.
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {x.shape}/{w.shape}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    if activation not in ("none", "relu"):
+        raise ValueError(f"unknown activation {activation!r}")
+    if b is None:
+        b = jnp.zeros((n,), jnp.float32)
+    # Tile policy (see DESIGN.md §Perf): M/N tiles at the 128 MXU edge,
+    # K tile up to 512 — deeper K slabs cut grid-iteration overhead ~4x at
+    # a VMEM cost of bm*bk + bk*bn + bm*bn floats (<= ~0.7 MiB for the
+    # models here, far inside the ~16 MiB budget).
+    bm = bm or _pick_tile(m)
+    bn = bn or _pick_tile(n, cap=256)
+    bk = bk or _pick_tile(k, cap=512)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"tiles ({bm},{bn},{bk}) must divide dims ({m},{n},{k})")
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(_mm_kernel, nk=grid[2], activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w.astype(jnp.float32), b.reshape(1, n).astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# custom-vjp linear layers: forward AND backward matmuls go through Pallas,
+# so the entire 2-NN fwd/bwd lowers through the L1 kernel.
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def linear_relu(x, w, b):
+    """Fused ``relu(x @ w + b)`` with a Pallas forward and backward."""
+    return matmul(x, w, b, activation="relu")
+
+
+def _linear_relu_fwd(x, w, b):
+    y = matmul(x, w, b, activation="relu")
+    return y, (x, w, y)
+
+
+def _linear_relu_bwd(res, dy):
+    x, w, y = res
+    dy = jnp.where(y > 0.0, dy, 0.0)
+    dx = matmul(dy, w.T)
+    dw = matmul(x.T, dy)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+linear_relu.defvjp(_linear_relu_fwd, _linear_relu_bwd)
+
+
+@jax.custom_vjp
+def linear_id(x, w, b):
+    """``x @ w + b`` with a Pallas forward and backward."""
+    return matmul(x, w, b, activation="none")
+
+
+def _linear_id_fwd(x, w, b):
+    return matmul(x, w, b, activation="none"), (x, w)
+
+
+def _linear_id_bwd(res, dy):
+    x, w = res
+    dx = matmul(dy, w.T)
+    dw = matmul(x.T, dy)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+linear_id.defvjp(_linear_id_fwd, _linear_id_bwd)

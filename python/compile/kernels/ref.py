@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w, b=None, activation: str = "none") -> jax.Array:
+    """Reference for kernels.matmul: ``act(x @ w + b)`` in plain jnp."""
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation != "none":
+        raise ValueError(activation)
+    return y
+
+
+def linear_relu_ref(x, w, b) -> jax.Array:
+    return matmul_ref(x, w, b, activation="relu")
+
+
+def linear_id_ref(x, w, b) -> jax.Array:
+    return matmul_ref(x, w, b, activation="none")
+
+
+def gossip_average_ref(stack, weights) -> jax.Array:
+    """Reference for kernels.gossip_average."""
+    return jnp.einsum(
+        "kd,k->d", stack.astype(jnp.float32), weights.astype(jnp.float32)
+    )

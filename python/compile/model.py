@@ -1,0 +1,295 @@
+"""Layer-2 JAX models for DSGD-AAU workers.
+
+Every worker in the rust engine runs the same compute graph, AOT-lowered
+once by ``aot.py``; this module defines that graph.  All parameters live in
+a single flat f32 vector (padded to a multiple of 256 so the gossip kernel
+tiles cleanly), which is also the unit the rust coordinator gossips.
+
+Models (paper SS6 / Appendix D, adapted per DESIGN.md SS3):
+    mlp_tiny          32-32-16-10    fast unit-test model
+    mlp_small         128-64-32-10   bench workhorse (synthetic CIFAR-like)
+    mlp2nn            3072-256-256-10  the paper's 2-NN (Table 3) verbatim
+    transformer_char  2-layer char LM (Shakespeare-task analogue)
+    transformer_med   4-layer char LM for the e2e example
+
+Entry points lowered to HLO:
+    train_step(flat, x, y) -> (loss, grads_flat, correct)
+    eval_step(flat, x, y)  -> (loss, correct)
+plus the shared gossip_average(stack, weights) artifact from kernels/.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import linear_id, linear_relu
+from .kernels import ref as kref
+
+PAD_MULTIPLE = 256  # gossip kernel tile granularity
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Static description of one model variant (shapes are compile-time)."""
+
+    name: str
+    kind: str  # "mlp" | "transformer"
+    batch: int
+    num_classes: int
+    # mlp fields
+    input_dim: int = 0
+    hidden: Tuple[int, ...] = ()
+    # transformer fields
+    vocab: int = 0
+    seq_len: int = 0
+    d_model: int = 0
+    n_layers: int = 0
+    n_heads: int = 0
+    d_ff: int = 0
+
+    def param_shapes(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Ordered (name, shape) list defining the flat layout."""
+        shapes: List[Tuple[str, Tuple[int, ...]]] = []
+        if self.kind == "mlp":
+            dims = (self.input_dim, *self.hidden, self.num_classes)
+            for i in range(len(dims) - 1):
+                shapes.append((f"w{i}", (dims[i], dims[i + 1])))
+                shapes.append((f"b{i}", (dims[i + 1],)))
+        elif self.kind == "transformer":
+            d, f = self.d_model, self.d_ff
+            shapes.append(("embed", (self.vocab, d)))
+            shapes.append(("pos", (self.seq_len, d)))
+            for l in range(self.n_layers):
+                shapes.append((f"l{l}.ln1_g", (d,)))
+                shapes.append((f"l{l}.ln1_b", (d,)))
+                shapes.append((f"l{l}.wqkv", (d, 3 * d)))
+                shapes.append((f"l{l}.bqkv", (3 * d,)))
+                shapes.append((f"l{l}.wo", (d, d)))
+                shapes.append((f"l{l}.bo", (d,)))
+                shapes.append((f"l{l}.ln2_g", (d,)))
+                shapes.append((f"l{l}.ln2_b", (d,)))
+                shapes.append((f"l{l}.w1", (d, f)))
+                shapes.append((f"l{l}.b1", (f,)))
+                shapes.append((f"l{l}.w2", (f, d)))
+                shapes.append((f"l{l}.b2", (d,)))
+            shapes.append(("lnf_g", (d,)))
+            shapes.append(("lnf_b", (d,)))
+            shapes.append(("head_w", (d, self.vocab)))
+            shapes.append(("head_b", (self.vocab,)))
+        else:
+            raise ValueError(f"unknown kind {self.kind!r}")
+        return shapes
+
+    @property
+    def dim(self) -> int:
+        """True parameter count."""
+        return sum(
+            functools.reduce(lambda a, b: a * b, shape, 1)
+            for _, shape in self.param_shapes()
+        )
+
+    @property
+    def padded_dim(self) -> int:
+        """Flat-vector length padded for the gossip kernel."""
+        d = self.dim
+        return ((d + PAD_MULTIPLE - 1) // PAD_MULTIPLE) * PAD_MULTIPLE
+
+    def input_spec(self) -> Tuple[Tuple[int, ...], str]:
+        """Per-batch input (shape, dtype) as seen by the rust runtime."""
+        if self.kind == "mlp":
+            return (self.batch, self.input_dim), "f32"
+        return (self.batch, self.seq_len), "i32"
+
+    def label_spec(self) -> Tuple[Tuple[int, ...], str]:
+        if self.kind == "mlp":
+            return (self.batch,), "i32"
+        return (self.batch, self.seq_len), "i32"
+
+
+MODELS: Dict[str, ModelSpec] = {
+    "mlp_tiny": ModelSpec(
+        name="mlp_tiny", kind="mlp", batch=16, num_classes=10,
+        input_dim=32, hidden=(32, 16),
+    ),
+    "mlp_small": ModelSpec(
+        name="mlp_small", kind="mlp", batch=32, num_classes=10,
+        input_dim=128, hidden=(64, 32),
+    ),
+    "mlp2nn": ModelSpec(
+        # The paper's 2-NN, Table 3: 3072 -> 256 -> 256 -> 10.
+        name="mlp2nn", kind="mlp", batch=32, num_classes=10,
+        input_dim=3072, hidden=(256, 256),
+    ),
+    "transformer_char": ModelSpec(
+        name="transformer_char", kind="transformer", batch=16, num_classes=96,
+        vocab=96, seq_len=64, d_model=128, n_layers=2, n_heads=4, d_ff=256,
+    ),
+    "transformer_med": ModelSpec(
+        name="transformer_med", kind="transformer", batch=8, num_classes=96,
+        vocab=96, seq_len=128, d_model=256, n_layers=4, n_heads=8, d_ff=1024,
+    ),
+}
+
+
+# --------------------------------------------------------------------------
+# flat <-> tree
+# --------------------------------------------------------------------------
+
+
+def unflatten(spec: ModelSpec, flat: jax.Array) -> Dict[str, jax.Array]:
+    """Slice the (padded) flat vector into named parameter arrays."""
+    params: Dict[str, jax.Array] = {}
+    off = 0
+    for name, shape in spec.param_shapes():
+        size = functools.reduce(lambda a, b: a * b, shape, 1)
+        params[name] = jax.lax.dynamic_slice_in_dim(flat, off, size).reshape(shape)
+        off += size
+    return params
+
+
+def flatten(spec: ModelSpec, params: Dict[str, jax.Array]) -> jax.Array:
+    """Inverse of :func:`unflatten`; pads with zeros to ``padded_dim``."""
+    parts = [params[name].reshape(-1) for name, _ in spec.param_shapes()]
+    flat = jnp.concatenate(parts).astype(jnp.float32)
+    pad = spec.padded_dim - flat.shape[0]
+    return jnp.pad(flat, (0, pad))
+
+
+def init_params(spec: ModelSpec, key: jax.Array) -> jax.Array:
+    """He-style init (zeros for biases, ones for LN gains), padded flat."""
+    params: Dict[str, jax.Array] = {}
+    for name, shape in spec.param_shapes():
+        key, sub = jax.random.split(key)
+        leaf = name.split(".")[-1]
+        if leaf.endswith("_g"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif leaf.startswith("b") or leaf.endswith("_b") or leaf == "pos":
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            params[name] = jnp.sqrt(2.0 / fan_in) * jax.random.normal(
+                sub, shape, jnp.float32
+            )
+    return flatten(spec, params)
+
+
+# --------------------------------------------------------------------------
+# forward passes
+# --------------------------------------------------------------------------
+
+
+def _linear(x, w, b, act: str, use_pallas: bool):
+    if use_pallas:
+        return linear_relu(x, w, b) if act == "relu" else linear_id(x, w, b)
+    return kref.matmul_ref(x, w, b, activation=act)
+
+
+def _mlp_logits(spec: ModelSpec, p: Dict[str, jax.Array], x, use_pallas: bool):
+    h = x.astype(jnp.float32)
+    n_layers = len(spec.hidden) + 1
+    for i in range(n_layers):
+        act = "relu" if i < n_layers - 1 else "none"
+        h = _linear(h, p[f"w{i}"], p[f"b{i}"], act, use_pallas)
+    return h  # [B, C]
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(spec: ModelSpec, qkv, B, T):
+    d, h = spec.d_model, spec.n_heads
+    dh = d // h
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):
+        return t.reshape(B, T, h, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(dh))
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", attn, v)
+    return out.transpose(0, 2, 1, 3).reshape(B, T, d)
+
+
+def _transformer_logits(spec: ModelSpec, p, tokens, use_pallas: bool):
+    B, T = tokens.shape
+    d = spec.d_model
+    h = p["embed"][tokens] + p["pos"][None, :T, :]
+    for l in range(spec.n_layers):
+        x = _layer_norm(h, p[f"l{l}.ln1_g"], p[f"l{l}.ln1_b"])
+        qkv = _linear(
+            x.reshape(B * T, d), p[f"l{l}.wqkv"], p[f"l{l}.bqkv"], "none", use_pallas
+        ).reshape(B, T, 3 * d)
+        attn = _attention(spec, qkv, B, T)
+        attn = _linear(
+            attn.reshape(B * T, d), p[f"l{l}.wo"], p[f"l{l}.bo"], "none", use_pallas
+        ).reshape(B, T, d)
+        h = h + attn
+        x = _layer_norm(h, p[f"l{l}.ln2_g"], p[f"l{l}.ln2_b"])
+        ff = _linear(
+            x.reshape(B * T, d), p[f"l{l}.w1"], p[f"l{l}.b1"], "relu", use_pallas
+        )
+        ff = _linear(ff, p[f"l{l}.w2"], p[f"l{l}.b2"], "none", use_pallas)
+        h = h + ff.reshape(B, T, d)
+    h = _layer_norm(h, p["lnf_g"], p["lnf_b"])
+    logits = _linear(
+        h.reshape(B * T, d), p["head_w"], p["head_b"], "none", use_pallas
+    )
+    return logits.reshape(B, T, spec.vocab)
+
+
+def forward(spec: ModelSpec, flat: jax.Array, x: jax.Array, *, use_pallas: bool = True):
+    """Logits for a batch: ``[B, C]`` (mlp) or ``[B, T, V]`` (transformer)."""
+    p = unflatten(spec, flat)
+    if spec.kind == "mlp":
+        return _mlp_logits(spec, p, x, use_pallas)
+    return _transformer_logits(spec, p, x, use_pallas)
+
+
+# --------------------------------------------------------------------------
+# loss / train / eval
+# --------------------------------------------------------------------------
+
+
+def loss_and_correct(spec: ModelSpec, flat, x, y, *, use_pallas: bool = True):
+    """Mean cross-entropy + count of correct argmax predictions."""
+    logits = forward(spec, flat, x, use_pallas=use_pallas)
+    logits2 = logits.reshape(-1, logits.shape[-1])
+    labels = y.reshape(-1).astype(jnp.int32)
+    logp = jax.nn.log_softmax(logits2, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).squeeze(-1)
+    loss = jnp.mean(nll)
+    correct = jnp.sum((jnp.argmax(logits2, axis=-1) == labels).astype(jnp.int32))
+    return loss, correct
+
+
+def make_train_step(spec: ModelSpec, *, use_pallas: bool = True):
+    """(flat, x, y) -> (loss, grads_flat_padded, correct)."""
+
+    def step(flat, x, y):
+        def loss_fn(f):
+            return loss_and_correct(spec, f, x, y, use_pallas=use_pallas)
+
+        (loss, correct), g = jax.value_and_grad(loss_fn, has_aux=True)(flat)
+        return loss, g, correct
+
+    return step
+
+
+def make_eval_step(spec: ModelSpec, *, use_pallas: bool = True):
+    """(flat, x, y) -> (loss, correct)."""
+
+    def step(flat, x, y):
+        return loss_and_correct(spec, flat, x, y, use_pallas=use_pallas)
+
+    return step

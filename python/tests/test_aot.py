@@ -1,0 +1,65 @@
+"""AOT lowering: HLO text artifacts are well-formed and manifest-consistent."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestLowering:
+    def test_train_hlo_text(self):
+        spec = M.MODELS["mlp_tiny"]
+        hlo = aot.lower_variant(spec)
+        for role in ("train", "eval"):
+            text = hlo[role]
+            assert "ENTRY" in text and "HloModule" in text
+            # train entry takes (flat, x, y)
+            assert f"f32[{spec.padded_dim}]" in text
+
+    def test_gossip_hlo_text(self):
+        text = aot.lower_gossip(512, fanout=4)
+        assert "ENTRY" in text
+        assert "f32[4,512]" in text
+
+    def test_lowering_is_deterministic(self):
+        a = aot.lower_gossip(256)
+        b = aot.lower_gossip(256)
+        assert a == b
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="run `make artifacts` first")
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_format(self, manifest):
+        assert manifest["format"] == "hlo-text/v1"
+        assert manifest["gossip_fanout"] == aot.GOSSIP_FANOUT
+
+    def test_all_files_exist(self, manifest):
+        for v in manifest["variants"].values():
+            for fname in v["files"].values():
+                assert os.path.exists(os.path.join(ART, fname)), fname
+            assert os.path.exists(os.path.join(ART, v["gossip_file"]))
+
+    def test_dims_match_specs(self, manifest):
+        for name, v in manifest["variants"].items():
+            spec = M.MODELS[name]
+            assert v["dim"] == spec.dim
+            assert v["padded_dim"] == spec.padded_dim
+            assert v["batch"] == spec.batch
+            assert v["layout"] == [[n, list(s)] for n, s in spec.param_shapes()]
+
+    def test_gossip_dim_covered(self, manifest):
+        for v in manifest["variants"].values():
+            assert str(v["padded_dim"]) in manifest["gossip"]

@@ -1,0 +1,153 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (the core signal)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gossip_average, linear_id, linear_relu, matmul
+from compile.kernels import ref
+from compile.kernels.matmul import _pick_tile
+
+DIMS = st.sampled_from([1, 2, 3, 4, 8, 10, 16, 24, 32, 48, 96, 128])
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestPickTile:
+    def test_divides(self):
+        for d in (1, 2, 10, 96, 128, 3072, 855296):
+            t = _pick_tile(d)
+            assert d % t == 0 and t <= 128
+
+    def test_prefers_128(self):
+        assert _pick_tile(3072) == 128
+        assert _pick_tile(256) == 128
+
+    def test_prime_falls_to_one(self):
+        assert _pick_tile(7) == 1
+
+
+class TestMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(m=DIMS, k=DIMS, n=DIMS, act=st.sampled_from(["none", "relu"]), seed=st.integers(0, 2**16))
+    def test_matches_ref(self, m, k, n, act, seed):
+        x = _rand(seed, (m, k))
+        w = _rand(seed + 1, (k, n))
+        b = _rand(seed + 2, (n,))
+        got = matmul(x, w, b, activation=act)
+        want = ref.matmul_ref(x, w, b, activation=act)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_no_bias(self):
+        x, w = _rand(0, (8, 16)), _rand(1, (16, 8))
+        np.testing.assert_allclose(matmul(x, w), ref.matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+    def test_multi_tile_grid(self):
+        # force a 2x2x2 grid with explicit tiles
+        x, w = _rand(2, (64, 64)), _rand(3, (64, 64))
+        got = matmul(x, w, bm=32, bn=32, bk=32)
+        np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+    def test_bad_contraction_raises(self):
+        with pytest.raises(ValueError):
+            matmul(_rand(0, (4, 5)), _rand(1, (6, 4)))
+
+    def test_bad_tile_raises(self):
+        with pytest.raises(ValueError):
+            matmul(_rand(0, (4, 4)), _rand(1, (4, 4)), bm=3)
+
+    def test_bad_activation_raises(self):
+        with pytest.raises(ValueError):
+            matmul(_rand(0, (4, 4)), _rand(1, (4, 4)), activation="gelu")
+
+    def test_f32_accumulation_from_bf16_inputs(self):
+        x = _rand(4, (16, 32)).astype(jnp.bfloat16)
+        w = _rand(5, (32, 16)).astype(jnp.bfloat16)
+        got = matmul(x, w)
+        assert got.dtype == jnp.float32
+        want = ref.matmul_ref(x, w)
+        np.testing.assert_allclose(got, want, rtol=1e-2, atol=1e-2)
+
+
+class TestLinearVjp:
+    @settings(max_examples=10, deadline=None)
+    @given(m=st.sampled_from([4, 8, 16]), k=st.sampled_from([8, 16, 32]),
+           n=st.sampled_from([4, 8, 16]), seed=st.integers(0, 2**16))
+    def test_relu_grads_match_ref(self, m, k, n, seed):
+        x, w, b = _rand(seed, (m, k)), _rand(seed + 1, (k, n)), _rand(seed + 2, (n,))
+
+        def f_p(x, w, b):
+            return jnp.sum(jnp.sin(linear_relu(x, w, b)))
+
+        def f_r(x, w, b):
+            return jnp.sum(jnp.sin(ref.linear_relu_ref(x, w, b)))
+
+        gp = jax.grad(f_p, argnums=(0, 1, 2))(x, w, b)
+        gr = jax.grad(f_r, argnums=(0, 1, 2))(x, w, b)
+        for a, c in zip(gp, gr):
+            np.testing.assert_allclose(a, c, rtol=1e-4, atol=1e-4)
+
+    def test_id_grads_match_ref(self):
+        x, w, b = _rand(0, (8, 16)), _rand(1, (16, 4)), _rand(2, (4,))
+
+        def f_p(*a):
+            return jnp.sum(linear_id(*a) ** 2)
+
+        def f_r(*a):
+            return jnp.sum(ref.linear_id_ref(*a) ** 2)
+
+        gp = jax.grad(f_p, argnums=(0, 1, 2))(x, w, b)
+        gr = jax.grad(f_r, argnums=(0, 1, 2))(x, w, b)
+        for a, c in zip(gp, gr):
+            np.testing.assert_allclose(a, c, rtol=1e-4, atol=1e-4)
+
+    def test_relu_dead_zone_zero_grad(self):
+        # all pre-activations negative -> all grads w.r.t. x are zero
+        x = jnp.ones((4, 4), jnp.float32)
+        w = -jnp.eye(4, dtype=jnp.float32)
+        b = jnp.zeros((4,), jnp.float32)
+        g = jax.grad(lambda x: jnp.sum(linear_relu(x, w, b)))(x)
+        np.testing.assert_allclose(g, jnp.zeros_like(g))
+
+
+class TestGossip:
+    @settings(max_examples=25, deadline=None)
+    @given(k=st.integers(1, 12), d=st.sampled_from([1, 2, 8, 100, 256, 1000, 1792]),
+           seed=st.integers(0, 2**16))
+    def test_matches_ref(self, k, d, seed):
+        stack = _rand(seed, (k, d))
+        weights = jax.random.uniform(jax.random.PRNGKey(seed + 1), (k,))
+        got = gossip_average(stack, weights)
+        want = ref.gossip_average_ref(stack, weights)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_zero_weight_rows_ignored(self):
+        stack = _rand(0, (4, 64))
+        w = jnp.array([0.5, 0.5, 0.0, 0.0])
+        got = gossip_average(stack, w)
+        want = 0.5 * stack[0] + 0.5 * stack[1]
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_identity_weight(self):
+        stack = _rand(1, (8, 128))
+        w = jnp.zeros((8,)).at[3].set(1.0)
+        np.testing.assert_allclose(gossip_average(stack, w), stack[3], rtol=1e-6, atol=1e-7)
+
+    def test_doubly_stochastic_preserves_mean(self):
+        # consensus with uniform weights keeps the average parameter vector
+        stack = _rand(2, (8, 256))
+        w = jnp.full((8,), 1.0 / 8.0)
+        got = gossip_average(stack, w)
+        np.testing.assert_allclose(got, jnp.mean(stack, axis=0), rtol=1e-5, atol=1e-6)
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            gossip_average(_rand(0, (4, 8)), jnp.ones((5,)))
+
+    def test_bad_rank_raises(self):
+        with pytest.raises(ValueError):
+            gossip_average(_rand(0, (4, 8, 2)), jnp.ones((4,)))

@@ -1,0 +1,132 @@
+"""L2 model correctness: pallas path vs pure-jnp path, layout round-trips."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def _batch(spec, seed=0):
+    (xs, xd) = spec.input_spec()
+    (ys, _) = spec.label_spec()
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    if xd == "f32":
+        x = jax.random.normal(kx, xs, jnp.float32)
+    else:
+        x = jax.random.randint(kx, xs, 0, spec.vocab)
+    y = jax.random.randint(ky, ys, 0, spec.num_classes)
+    return x, y
+
+
+@pytest.fixture(scope="module", params=["mlp_tiny", "transformer_char"])
+def spec(request):
+    return M.MODELS[request.param]
+
+
+class TestLayout:
+    def test_padded_dim_multiple(self):
+        for s in M.MODELS.values():
+            assert s.padded_dim % M.PAD_MULTIPLE == 0
+            assert s.padded_dim >= s.dim
+
+    def test_dim_matches_shapes(self):
+        for s in M.MODELS.values():
+            total = sum(int(np.prod(sh)) for _, sh in s.param_shapes())
+            assert total == s.dim
+
+    def test_mlp2nn_matches_paper_table3(self):
+        # 3072x256 + 256 + 256x256 + 256 + 256x10 + 10 = 855,050
+        s = M.MODELS["mlp2nn"]
+        assert s.dim == 3072 * 256 + 256 + 256 * 256 + 256 + 256 * 10 + 10
+
+    def test_flatten_unflatten_roundtrip(self, spec):
+        flat = M.init_params(spec, jax.random.PRNGKey(3))
+        tree = M.unflatten(spec, flat)
+        flat2 = M.flatten(spec, tree)
+        np.testing.assert_allclose(flat, flat2)
+
+    def test_padding_is_zero(self, spec):
+        flat = M.init_params(spec, jax.random.PRNGKey(4))
+        if spec.padded_dim > spec.dim:
+            np.testing.assert_allclose(flat[spec.dim:], 0.0)
+
+    def test_unique_param_names(self):
+        for s in M.MODELS.values():
+            names = [n for n, _ in s.param_shapes()]
+            assert len(names) == len(set(names))
+
+
+class TestForward:
+    def test_logits_shape(self, spec):
+        flat = M.init_params(spec, jax.random.PRNGKey(0))
+        x, _ = _batch(spec)
+        logits = M.forward(spec, flat, x, use_pallas=False)
+        if spec.kind == "mlp":
+            assert logits.shape == (spec.batch, spec.num_classes)
+        else:
+            assert logits.shape == (spec.batch, spec.seq_len, spec.vocab)
+
+    def test_pallas_matches_ref_forward(self, spec):
+        flat = M.init_params(spec, jax.random.PRNGKey(1))
+        x, _ = _batch(spec, 1)
+        lp = M.forward(spec, flat, x, use_pallas=True)
+        lr = M.forward(spec, flat, x, use_pallas=False)
+        np.testing.assert_allclose(lp, lr, rtol=1e-4, atol=1e-4)
+
+    def test_causality(self):
+        # transformer: flipping a future token must not change past logits
+        spec = M.MODELS["transformer_char"]
+        flat = M.init_params(spec, jax.random.PRNGKey(2))
+        x, _ = _batch(spec, 2)
+        x2 = x.at[:, -1].set((x[:, -1] + 1) % spec.vocab)
+        l1 = M.forward(spec, flat, x, use_pallas=False)
+        l2 = M.forward(spec, flat, x2, use_pallas=False)
+        np.testing.assert_allclose(l1[:, :-1], l2[:, :-1], rtol=1e-5, atol=1e-5)
+
+
+class TestTrainStep:
+    def test_pallas_grads_match_ref(self, spec):
+        flat = M.init_params(spec, jax.random.PRNGKey(5))
+        x, y = _batch(spec, 5)
+        lp, gp, cp = jax.jit(M.make_train_step(spec, use_pallas=True))(flat, x, y)
+        lr, gr, cr = jax.jit(M.make_train_step(spec, use_pallas=False))(flat, x, y)
+        np.testing.assert_allclose(lp, lr, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(gp, gr, rtol=3e-3, atol=3e-4)
+        assert int(cp) == int(cr)
+
+    def test_grad_padding_zero(self, spec):
+        flat = M.init_params(spec, jax.random.PRNGKey(6))
+        x, y = _batch(spec, 6)
+        _, g, _ = jax.jit(M.make_train_step(spec))(flat, x, y)
+        assert g.shape == (spec.padded_dim,)
+        if spec.padded_dim > spec.dim:
+            np.testing.assert_allclose(g[spec.dim:], 0.0)
+
+    def test_loss_decreases_under_sgd(self):
+        spec = M.MODELS["mlp_tiny"]
+        flat = M.init_params(spec, jax.random.PRNGKey(7))
+        x, y = _batch(spec, 7)
+        step = jax.jit(M.make_train_step(spec))
+        l0, g, _ = step(flat, x, y)
+        for _ in range(20):
+            l, g, _ = step(flat, x, y)
+            flat = flat - 0.1 * g
+        l1, _, _ = step(flat, x, y)
+        assert float(l1) < float(l0) * 0.8
+
+    def test_eval_matches_train_metrics(self, spec):
+        flat = M.init_params(spec, jax.random.PRNGKey(8))
+        x, y = _batch(spec, 8)
+        lt, _, ct = jax.jit(M.make_train_step(spec, use_pallas=False))(flat, x, y)
+        le, ce = jax.jit(M.make_eval_step(spec, use_pallas=False))(flat, x, y)
+        np.testing.assert_allclose(lt, le, rtol=1e-6)
+        assert int(ct) == int(ce)
+
+    def test_correct_bounded_by_batch(self, spec):
+        flat = M.init_params(spec, jax.random.PRNGKey(9))
+        x, y = _batch(spec, 9)
+        _, c = jax.jit(M.make_eval_step(spec, use_pallas=False))(flat, x, y)
+        n = int(np.prod(spec.label_spec()[0]))
+        assert 0 <= int(c) <= n

@@ -1,0 +1,117 @@
+//! L3 micro-benchmarks (criterion is not in the offline dependency set,
+//! so this is a hand-rolled `harness = false` bench with median-of-runs
+//! reporting).  Covers the engine hot paths that the perf pass (§Perf in
+//! EXPERIMENTS.md) optimizes:
+//!
+//!   * event-queue throughput
+//!   * native gossip average (the consensus inner loop)
+//!   * Metropolis weight construction
+//!   * pathsearch novel-pair scanning
+//!   * end-to-end engine events/sec on the quadratic backend
+//!
+//! Run: `cargo bench` (add `-- --quick` for fewer repetitions).
+
+use dsgd_aau::algorithms::AlgorithmKind;
+use dsgd_aau::config::{BackendKind, ExperimentConfig};
+use dsgd_aau::consensus::GroupWeights;
+use dsgd_aau::coordinator::run_experiment;
+use dsgd_aau::engine::native_weighted_average;
+use dsgd_aau::pathsearch::PathSearch;
+use dsgd_aau::sim::{EventKind, EventQueue};
+use dsgd_aau::topology::generators::random_connected;
+use dsgd_aau::util::Rng64;
+use std::time::Instant;
+
+/// Time `f` over `iters` inner iterations, repeated `reps` times; returns
+/// (median seconds per iteration, throughput/s).
+fn bench<F: FnMut()>(name: &str, reps: usize, iters: usize, mut f: F) {
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    println!(
+        "{name:<44} {:>12.3} ns/iter {:>14.0} iters/s",
+        median * 1e9,
+        1.0 / median
+    );
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let reps = if quick { 3 } else { 7 };
+    println!("== dsgd-aau micro benches (median of {reps}) ==\n");
+
+    // 1. event queue push+pop
+    {
+        let mut q = EventQueue::new();
+        let mut t = 0.0f64;
+        bench("event_queue push+pop", reps, 100_000, || {
+            t += 0.001;
+            q.schedule(t, EventKind::ComputeDone(1));
+            q.pop();
+        });
+    }
+
+    // 2. native gossip average, 8 x 10k f32 (mlp_small scale)
+    {
+        let d = 10_752;
+        let mut rng = Rng64::seed_from_u64(1);
+        let rows_data: Vec<Vec<f32>> =
+            (0..8).map(|_| (0..d).map(|_| rng.normal_f32()).collect()).collect();
+        let rows: Vec<&[f32]> = rows_data.iter().map(|r| r.as_slice()).collect();
+        let weights = [0.125f32; 8];
+        bench("native_gossip_average 8x10752", reps, 2_000, || {
+            let out = native_weighted_average(&rows, &weights);
+            std::hint::black_box(out);
+        });
+    }
+
+    // 3. Metropolis weights for a 32-worker group on a random graph
+    {
+        let g = random_connected(64, 0.15, 7);
+        let members: Vec<usize> = (0..64).step_by(2).collect();
+        bench("metropolis_weights group=32 (N=64)", reps, 5_000, || {
+            let gw = GroupWeights::metropolis(&g, &members);
+            std::hint::black_box(gw);
+        });
+    }
+
+    // 4. pathsearch novel-pair scan over a 32-worker ready set
+    {
+        let g = random_connected(128, 0.1, 9);
+        let mut ps = PathSearch::new();
+        ps.absorb_group(&g, &(0..64).collect::<Vec<_>>());
+        let ready: Vec<usize> = (32..64).collect();
+        bench("pathsearch find_novel_pair ready=32", reps, 20_000, || {
+            std::hint::black_box(ps.find_novel_pair(&g, &ready));
+        });
+    }
+
+    // 5. end-to-end engine throughput, quadratic backend
+    for alg in [AlgorithmKind::DsgdAau, AlgorithmKind::AdPsgd, AlgorithmKind::DsgdSync] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.num_workers = 32;
+        cfg.algorithm = alg;
+        cfg.backend = BackendKind::Quadratic;
+        cfg.max_iterations = 2_000;
+        cfg.eval_every = 1_000;
+        cfg.mean_compute = 0.01;
+        let t0 = Instant::now();
+        let s = run_experiment(&cfg).expect("engine run");
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "engine e2e {:<10} N=32 quad             {:>12.1} iters/s (host) {:>8} iters",
+            alg.label(),
+            s.iterations as f64 / wall,
+            s.iterations
+        );
+    }
+
+    println!("\n(engine e2e includes real gradient math; see EXPERIMENTS.md §Perf)");
+}

@@ -1,0 +1,65 @@
+//! AD-PSGD [45]: fully asynchronous pairwise averaging.
+//!
+//! A worker that finishes its gradient immediately applies it and
+//! atomically averages with one uniformly random neighbor — which may be
+//! mid-computation (that in-flight gradient becomes stale) or itself busy
+//! averaging (the atomic updates serialize, the conflict the Prague paper
+//! highlights).  Stragglers are never waited for, but their parameters go
+//! stale and keep getting mixed in, which is exactly the failure mode
+//! DSGD-AAU targets (paper Fig. 1b).
+
+use super::UpdateRule;
+use crate::engine::EngineCore;
+use crate::WorkerId;
+use crate::util::Rng64;
+
+/// AD-PSGD state: per-worker atomic-averaging busy horizon.
+#[derive(Debug)]
+pub struct AdPsgd {
+    rng: Rng64,
+    busy_until: Vec<f64>,
+}
+
+impl AdPsgd {
+    /// Fresh rule.
+    pub fn new(seed: u64) -> Self {
+        AdPsgd { rng: Rng64::seed_from_u64(seed), busy_until: Vec::new() }
+    }
+}
+
+impl UpdateRule for AdPsgd {
+    fn name(&self) -> &'static str {
+        "AD-PSGD"
+    }
+
+    fn on_start(&mut self, core: &mut EngineCore) {
+        self.busy_until = vec![0.0; core.num_workers()];
+    }
+
+    fn on_ready(&mut self, w: WorkerId, core: &mut EngineCore) {
+        core.apply_gradient(w);
+        let nbrs = core.graph.neighbors(w);
+        if nbrs.is_empty() {
+            core.restart_after(w, 0.0);
+            return;
+        }
+        let r = nbrs[self.rng.gen_range(nbrs.len())];
+
+        // Atomic averaging: serialize on both endpoints' busy horizons.
+        let now = core.now();
+        let start = now.max(self.busy_until[w]).max(self.busy_until[r]);
+        let dur = core.comm.gossip_time(2, core.param_bytes());
+        let end = start + dur;
+        self.busy_until[w] = end;
+        self.busy_until[r] = end;
+
+        // Values are exchanged at `end`; since nothing else touches the
+        // pair between now and `end` in this serialization model, the
+        // average itself is computed immediately.
+        core.gossip_pair(w, r);
+        core.advance_iteration();
+
+        core.restart_after(w, end - now);
+        // r is untouched: if it is mid-compute, its gradient is now stale.
+    }
+}

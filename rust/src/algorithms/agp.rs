@@ -1,0 +1,86 @@
+//! AGP — asynchronous gradient push [5].
+//!
+//! Push-sum averaging: each worker keeps a push weight `s_j`; on finishing
+//! a gradient it absorbs its inbox, applies the gradient to its de-biased
+//! estimate, then pushes half of its mass `(x_j, s_j/2)` to one random
+//! neighbor's inbox.  The column-stochastic (not doubly stochastic) mixing
+//! tolerates directed/asymmetric communication but converges slower under
+//! heterogeneous update rates — matching AGP's position in the paper's
+//! tables.
+//!
+//! We store the de-biased estimate `x = w/s` directly; a push updates the
+//! receiver as `x_r ← (s_r x_r + δ x_w)/(s_r + δ)`, `s_r ← s_r + δ` with
+//! `δ = s_w/2`, and the sender just halves `s_w` (its `x` is unchanged).
+
+use super::UpdateRule;
+use crate::engine::EngineCore;
+use crate::WorkerId;
+use crate::util::Rng64;
+
+/// AGP push-sum state.
+pub struct Agp {
+    rng: Rng64,
+    /// Push-sum weights s_j.
+    weight: Vec<f64>,
+    /// Inbox: pending (x, δ) messages per worker.
+    inbox: Vec<Vec<(Vec<f32>, f64)>>,
+}
+
+impl Agp {
+    /// Fresh rule.
+    pub fn new(seed: u64) -> Self {
+        Agp { rng: Rng64::seed_from_u64(seed), weight: Vec::new(), inbox: Vec::new() }
+    }
+
+    fn absorb_inbox(&mut self, w: WorkerId, core: &mut EngineCore) {
+        if self.inbox[w].is_empty() {
+            return;
+        }
+        let msgs = std::mem::take(&mut self.inbox[w]);
+        let mut s = self.weight[w];
+        let mut x = core.params_of(w).to_vec();
+        for (xi, delta) in msgs {
+            let total = s + delta;
+            let (a, b) = ((s / total) as f32, (delta / total) as f32);
+            for (xo, xv) in x.iter_mut().zip(&xi) {
+                *xo = a * *xo + b * *xv;
+            }
+            s = total;
+        }
+        self.weight[w] = s;
+        core.set_params(w, x);
+    }
+}
+
+impl UpdateRule for Agp {
+    fn name(&self) -> &'static str {
+        "AGP"
+    }
+
+    fn on_start(&mut self, core: &mut EngineCore) {
+        let n = core.num_workers();
+        self.weight = vec![1.0; n];
+        self.inbox = vec![Vec::new(); n];
+    }
+
+    fn on_ready(&mut self, w: WorkerId, core: &mut EngineCore) {
+        // 1. absorb pending pushes (stale by construction)
+        self.absorb_inbox(w, core);
+        // 2. local gradient on the de-biased estimate
+        core.apply_gradient(w);
+        // 3. push half of the mass to a random neighbor
+        let nbrs = core.graph.neighbors(w);
+        if !nbrs.is_empty() {
+            let r = nbrs[self.rng.gen_range(nbrs.len())];
+            let delta = self.weight[w] / 2.0;
+            self.weight[w] = (self.weight[w] - delta).max(1e-9);
+            self.inbox[r].push((core.params_of(w).to_vec(), delta));
+            core.charge_param_bytes(core.param_bytes());
+            core.recorder.gossip_rounds += 1;
+            core.recorder.group_size_sum += 2;
+        }
+        core.advance_iteration();
+        let delay = core.comm.transfer_time(core.param_bytes());
+        core.restart_after(w, delay);
+    }
+}

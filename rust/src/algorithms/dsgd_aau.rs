@@ -1,0 +1,72 @@
+//! DSGD-AAU (paper Alg. 2): adaptive asynchronous updates via Pathsearch.
+//!
+//! Finished workers accumulate in a waiting set.  The moment a *novel*
+//! edge (per Alg. 3) exists among the waiting workers, the iteration
+//! fires: every waiting worker applies its local gradient and the whole
+//! waiting set runs one Metropolis consensus update on its induced
+//! subgraph; all newly visited edges/vertices are absorbed into the
+//! Pathsearch sets (ID broadcast charged to the control plane).  When
+//! `G' = (V, P)` spans the network and is connected, the epoch resets.
+//!
+//! The adaptivity is emergent: early in an epoch almost any pair of fast
+//! workers triggers (small groups, no straggler waiting); as `P` fills,
+//! only genuinely new edges fire, so fast workers wait just long enough
+//! for information from the slow part of the graph to flow — never longer.
+
+use super::UpdateRule;
+use crate::consensus::GroupWeights;
+use crate::engine::EngineCore;
+use crate::pathsearch::PathSearch;
+use crate::WorkerId;
+
+/// DSGD-AAU update rule state.
+#[derive(Debug, Default)]
+pub struct DsgdAau {
+    waiting: Vec<WorkerId>,
+}
+
+impl DsgdAau {
+    /// Fresh rule.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl UpdateRule for DsgdAau {
+    fn name(&self) -> &'static str {
+        "DSGD-AAU"
+    }
+
+    fn on_ready(&mut self, w: WorkerId, core: &mut EngineCore) {
+        debug_assert!(!self.waiting.contains(&w), "worker {w} ready twice");
+        self.waiting.push(w);
+
+        // Alg. 3: does the waiting set now contain a novel edge?
+        if core.pathsearch.find_novel_pair(&core.graph, &self.waiting).is_none() {
+            return; // keep waiting (worker idles; straggler may still matter)
+        }
+
+        // The iteration fires: all waiting workers participate (Alg. 2
+        // lines 4-9 — j_k plus every i_k that finished during Pathsearch).
+        let group = std::mem::take(&mut self.waiting);
+        let new_edges = core.pathsearch.absorb_group(&core.graph, &group);
+        core.recorder.control_bytes +=
+            PathSearch::broadcast_bytes(core.num_workers(), new_edges);
+
+        for &m in &group {
+            core.apply_gradient(m); // w̃_j = w_j − η g_j
+        }
+        let gw = GroupWeights::metropolis(&core.graph, &group);
+        core.gossip(&gw); // w_j = Σ_i w̃_i P_ij over N_j(k)
+        core.advance_iteration();
+
+        if core.pathsearch.is_complete(&core.graph) {
+            core.pathsearch.reset_epoch();
+        }
+
+        let delay = core.gossip_delay(group.len());
+        for &m in &group {
+            core.restart_after(m, delay);
+        }
+    }
+}

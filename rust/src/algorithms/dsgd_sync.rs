@@ -1,0 +1,56 @@
+//! Synchronous decentralized SGD (paper eq. 2, Fig. 1a).
+//!
+//! Every iteration, all N workers compute a gradient, then a global
+//! barrier fires one full-graph Metropolis consensus update.  The barrier
+//! makes each round as slow as the slowest worker — this is the
+//! straggler-bound baseline that Figure 5's speedups are measured against.
+
+use super::UpdateRule;
+use crate::consensus::GroupWeights;
+use crate::engine::EngineCore;
+use crate::WorkerId;
+use std::collections::HashSet;
+
+/// Synchronous DSGD barrier state.
+#[derive(Debug, Default)]
+pub struct DsgdSync {
+    done: HashSet<WorkerId>,
+}
+
+impl DsgdSync {
+    /// Fresh rule.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl UpdateRule for DsgdSync {
+    fn name(&self) -> &'static str {
+        "DSGD"
+    }
+
+    fn on_ready(&mut self, w: WorkerId, core: &mut EngineCore) {
+        self.done.insert(w);
+        if self.done.len() < core.num_workers() {
+            return; // barrier: wait for everyone, stragglers included
+        }
+        self.done.clear();
+
+        let all: Vec<WorkerId> = (0..core.num_workers()).collect();
+        for &m in &all {
+            core.apply_gradient(m);
+        }
+        let gw = GroupWeights::metropolis(&core.graph, &all);
+        core.gossip(&gw);
+        core.advance_iteration();
+
+        // Communication round: every worker exchanges with its neighbors;
+        // the round completes when the max-degree worker has received all
+        // its messages.
+        let max_deg = all.iter().map(|&m| core.graph.degree(m)).max().unwrap_or(0);
+        let delay = core.comm.gossip_time(max_deg + 1, core.param_bytes());
+        for &m in &all {
+            core.restart_after(m, delay);
+        }
+    }
+}

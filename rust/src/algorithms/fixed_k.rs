@@ -1,0 +1,97 @@
+//! Fixed-fastest-k baseline (the manually-configured partial-participation
+//! scheme of the paper's related work, e.g. Xu et al. [74] / the
+//! stale-synchronous configurations of [13, 23]).
+//!
+//! Every iteration waits for the first `k` workers to finish, then runs a
+//! Metropolis consensus among them.  This is what DSGD-AAU's *adaptive*
+//! group sizing is argued against: a fixed k must be tuned per workload
+//! (too small → slow information diffusion, too large → stragglers are
+//! back in the critical path), whereas Pathsearch sizes groups by what
+//! the epoch still needs.  `bench_ablation --fixedk=1` sweeps k.
+
+use super::UpdateRule;
+use crate::consensus::GroupWeights;
+use crate::engine::EngineCore;
+use crate::WorkerId;
+
+/// Wait-for-first-k update rule.
+#[derive(Debug)]
+pub struct FixedFastest {
+    k: usize,
+    waiting: Vec<WorkerId>,
+}
+
+impl FixedFastest {
+    /// Gossip among the first `k >= 2` finishers of each round.
+    pub fn new(k: usize) -> Self {
+        FixedFastest { k: k.max(2), waiting: Vec::new() }
+    }
+}
+
+impl UpdateRule for FixedFastest {
+    fn name(&self) -> &'static str {
+        "Fixed-k"
+    }
+
+    fn on_ready(&mut self, w: WorkerId, core: &mut EngineCore) {
+        self.waiting.push(w);
+        if self.waiting.len() < self.k.min(core.num_workers()) {
+            return;
+        }
+        let group = std::mem::take(&mut self.waiting);
+        for &m in &group {
+            core.apply_gradient(m);
+        }
+        let gw = GroupWeights::metropolis(&core.graph, &group);
+        core.gossip(&gw);
+        core.advance_iteration();
+        let delay = core.gossip_delay(group.len());
+        for &m in &group {
+            core.restart_after(m, delay);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+
+    use crate::config::{BackendKind, ExperimentConfig};
+    use crate::coordinator::run_experiment;
+
+    fn cfg(k: usize) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.num_workers = 8;
+        cfg.algorithm = crate::algorithms::AlgorithmKind::FixedK { k };
+        cfg.backend = BackendKind::Quadratic;
+        cfg.max_iterations = 400;
+        cfg.eval_every = 100;
+        cfg.mean_compute = 0.01;
+        cfg
+    }
+
+    #[test]
+    fn fixed_k_learns() {
+        let s = run_experiment(&cfg(4)).unwrap();
+        let first = s.recorder.curve.first().unwrap().loss;
+        assert!(s.final_loss() < first, "{first} -> {}", s.final_loss());
+        // group size is pinned at k
+        assert!((s.recorder.mean_group_size() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn k_clamped_to_fleet() {
+        let s = run_experiment(&cfg(64)).unwrap(); // k > N
+        assert!(s.iterations > 0);
+        assert!((s.recorder.mean_group_size() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn small_k_faster_iterations_than_large_k() {
+        // smaller groups fire earlier -> more iterations per virtual second
+        let fast = run_experiment(&cfg(2)).unwrap();
+        let slow = run_experiment(&cfg(8)).unwrap();
+        let r_fast = fast.iterations as f64 / fast.virtual_time;
+        let r_slow = slow.iterations as f64 / slow.virtual_time;
+        assert!(r_fast > r_slow, "k=2 {r_fast:.1} it/s vs k=8 {r_slow:.1} it/s");
+    }
+}

@@ -1,0 +1,171 @@
+//! Decentralized update rules: DSGD-AAU plus the paper's baselines.
+//!
+//! Every algorithm reacts to one event — *worker w finished its local
+//! gradient computation at virtual time t* — and decides who gossips with
+//! whom, when iterations advance, and when workers restart computing.
+//! The shared mechanics (parameter storage, Metropolis averaging, comm
+//! accounting, the event queue) live in [`crate::engine::EngineCore`].
+
+mod ad_psgd;
+mod agp;
+mod dsgd_aau;
+mod dsgd_sync;
+mod fixed_k;
+mod prague;
+
+pub use ad_psgd::AdPsgd;
+pub use agp::Agp;
+pub use dsgd_aau::DsgdAau;
+pub use dsgd_sync::DsgdSync;
+pub use fixed_k::FixedFastest;
+pub use prague::Prague;
+
+use crate::engine::EngineCore;
+use crate::WorkerId;
+
+/// Selectable update rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AlgorithmKind {
+    /// The paper's contribution: adaptive asynchronous updates driven by
+    /// Pathsearch (Alg. 2 + 3).
+    DsgdAau,
+    /// Synchronous decentralized SGD (eq. 2) — full-neighbor gossip behind
+    /// a global barrier; the straggler-bound baseline.
+    DsgdSync,
+    /// Asynchronous decentralized parallel SGD [45]: random-neighbor
+    /// pairwise averaging with atomic-update serialization.
+    AdPsgd,
+    /// Prague [47]: partial all-reduce over randomly generated groups.
+    Prague,
+    /// Asynchronous gradient push [5]: push-sum averaging to one random
+    /// neighbor (non-doubly-stochastic).
+    Agp,
+    /// Fixed-fastest-k partial participation (manually tuned group size —
+    /// the stale-synchronous prior art DSGD-AAU's adaptivity replaces).
+    FixedK {
+        /// Workers waited for per round.
+        k: usize,
+    },
+}
+
+impl AlgorithmKind {
+    /// Parse the snake_case config token.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "dsgd_aau" => AlgorithmKind::DsgdAau,
+            "dsgd_sync" => AlgorithmKind::DsgdSync,
+            "ad_psgd" => AlgorithmKind::AdPsgd,
+            "prague" => AlgorithmKind::Prague,
+            "agp" => AlgorithmKind::Agp,
+            s if s.starts_with("fixed_k") => {
+                let k = s.strip_prefix("fixed_k").unwrap().parse().unwrap_or(4);
+                AlgorithmKind::FixedK { k }
+            }
+            other => anyhow::bail!(
+                "unknown algorithm {other} (dsgd_aau|dsgd_sync|ad_psgd|prague|agp)"
+            ),
+        })
+    }
+
+    /// Inverse of [`Self::parse`].
+    pub fn token(&self) -> &'static str {
+        match self {
+            AlgorithmKind::DsgdAau => "dsgd_aau",
+            AlgorithmKind::DsgdSync => "dsgd_sync",
+            AlgorithmKind::AdPsgd => "ad_psgd",
+            AlgorithmKind::Prague => "prague",
+            AlgorithmKind::Agp => "agp",
+            AlgorithmKind::FixedK { .. } => "fixed_k",
+        }
+    }
+
+    /// Display label used in tables (matches the paper's column names).
+    pub fn label(&self) -> &'static str {
+        match self {
+            AlgorithmKind::DsgdAau => "DSGD-AAU",
+            AlgorithmKind::DsgdSync => "DSGD",
+            AlgorithmKind::AdPsgd => "AD-PSGD",
+            AlgorithmKind::Prague => "Prague",
+            AlgorithmKind::Agp => "AGP",
+            AlgorithmKind::FixedK { .. } => "Fixed-k",
+        }
+    }
+
+    /// All algorithms, in the paper's table order.
+    pub fn all() -> [AlgorithmKind; 5] {
+        [
+            AlgorithmKind::Agp,
+            AlgorithmKind::AdPsgd,
+            AlgorithmKind::Prague,
+            AlgorithmKind::DsgdAau,
+            AlgorithmKind::DsgdSync,
+        ]
+    }
+
+    /// The four asynchronous-capable algorithms the paper's tables compare
+    /// (DSGD with synchronous updates appears only in the speedup figure).
+    pub fn paper_table() -> [AlgorithmKind; 4] {
+        [
+            AlgorithmKind::Agp,
+            AlgorithmKind::AdPsgd,
+            AlgorithmKind::Prague,
+            AlgorithmKind::DsgdAau,
+        ]
+    }
+
+    /// Instantiate the update rule.
+    pub fn build(&self, prague_group: usize, seed: u64) -> Box<dyn UpdateRule> {
+        match self {
+            AlgorithmKind::DsgdAau => Box::new(DsgdAau::new()),
+            AlgorithmKind::DsgdSync => Box::new(DsgdSync::new()),
+            AlgorithmKind::AdPsgd => Box::new(AdPsgd::new(seed)),
+            AlgorithmKind::Prague => Box::new(Prague::new(prague_group, seed)),
+            AlgorithmKind::Agp => Box::new(Agp::new(seed)),
+            AlgorithmKind::FixedK { k } => Box::new(FixedFastest::new(*k)),
+        }
+    }
+}
+
+/// Event-driven decentralized update rule.
+pub trait UpdateRule {
+    /// Algorithm label.
+    fn name(&self) -> &'static str;
+
+    /// Worker `w` finished a local gradient computation; its gradient is
+    /// stashed in the engine.  Decide gossip/restart actions.
+    fn on_ready(&mut self, w: WorkerId, core: &mut EngineCore);
+
+    /// Called once before the run starts (after all workers are scheduled).
+    fn on_start(&mut self, _core: &mut EngineCore) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_match_paper() {
+        assert_eq!(AlgorithmKind::DsgdAau.label(), "DSGD-AAU");
+        assert_eq!(AlgorithmKind::AdPsgd.label(), "AD-PSGD");
+    }
+
+    #[test]
+    fn token_roundtrip() {
+        for k in AlgorithmKind::all() {
+            assert_eq!(AlgorithmKind::parse(k.token()).unwrap(), k);
+        }
+        assert_eq!(
+            AlgorithmKind::parse("fixed_k6").unwrap(),
+            AlgorithmKind::FixedK { k: 6 }
+        );
+        assert!(AlgorithmKind::parse("sgd").is_err());
+    }
+
+    #[test]
+    fn build_all() {
+        for k in AlgorithmKind::all() {
+            let rule = k.build(4, 1);
+            assert!(!rule.name().is_empty());
+        }
+    }
+}

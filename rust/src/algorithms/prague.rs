@@ -1,0 +1,108 @@
+//! Prague [47]: partial all-reduce over randomly generated groups.
+//!
+//! A central "group generator" hands each finishing worker a random group;
+//! the group's partial all-reduce runs only when *all* members have
+//! finished their current local computation.  Random membership means a
+//! straggler regularly lands in a group and stalls it — the paper's
+//! explanation for Prague trailing DSGD-AAU (Appendix A).
+
+use super::UpdateRule;
+use crate::consensus::GroupWeights;
+use crate::engine::EngineCore;
+use crate::WorkerId;
+use crate::util::Rng64;
+use std::collections::HashSet;
+
+struct Group {
+    members: Vec<WorkerId>,
+    ready: HashSet<WorkerId>,
+}
+
+/// Prague group-generator state.
+pub struct Prague {
+    group_size: usize,
+    rng: Rng64,
+    /// `assignment[w]` = open group index, if any.
+    assignment: Vec<Option<usize>>,
+    groups: Vec<Option<Group>>,
+}
+
+impl Prague {
+    /// `group_size` members per partial all-reduce (paper's G).
+    pub fn new(group_size: usize, seed: u64) -> Self {
+        Prague {
+            group_size: group_size.max(2),
+            rng: Rng64::seed_from_u64(seed),
+            assignment: Vec::new(),
+            groups: Vec::new(),
+        }
+    }
+
+    fn alloc_group(&mut self, seed_worker: WorkerId, n: usize) -> usize {
+        // sample distinct unassigned peers (the generator doesn't know who
+        // is slow — that is the point)
+        let mut candidates: Vec<WorkerId> =
+            (0..n).filter(|&x| x != seed_worker && self.assignment[x].is_none()).collect();
+        self.rng.shuffle(&mut candidates);
+        let mut members = vec![seed_worker];
+        members.extend(candidates.into_iter().take(self.group_size - 1));
+        let gid = self
+            .groups
+            .iter()
+            .position(Option::is_none)
+            .unwrap_or_else(|| {
+                self.groups.push(None);
+                self.groups.len() - 1
+            });
+        for &m in &members {
+            self.assignment[m] = Some(gid);
+        }
+        self.groups[gid] = Some(Group { members, ready: HashSet::new() });
+        gid
+    }
+}
+
+impl UpdateRule for Prague {
+    fn name(&self) -> &'static str {
+        "Prague"
+    }
+
+    fn on_start(&mut self, core: &mut EngineCore) {
+        self.assignment = vec![None; core.num_workers()];
+    }
+
+    fn on_ready(&mut self, w: WorkerId, core: &mut EngineCore) {
+        let gid = match self.assignment[w] {
+            Some(g) => g,
+            None => self.alloc_group(w, core.num_workers()),
+        };
+        let complete = {
+            let group = self.groups[gid].as_mut().expect("group exists");
+            group.ready.insert(w);
+            group.ready.len() == group.members.len()
+        };
+        if !complete {
+            return; // wait for the rest of the randomly chosen group
+        }
+        let group = self.groups[gid].take().expect("group exists");
+        for &m in &group.members {
+            self.assignment[m] = None;
+            core.apply_gradient(m);
+        }
+        // Partial all-reduce = uniform average over the group (Prague's
+        // groups ignore the topology; its all-reduce is logical).
+        let gw = GroupWeights::uniform(&group.members);
+        // ring all-reduce: 2(m-1) parameter-sized message steps
+        let m_len = group.members.len() as u64;
+        let bytes = 2 * (m_len - 1) * core.param_bytes();
+        core.gossip_costed(&gw, bytes);
+        core.advance_iteration();
+
+        // Ring all-reduce cost: 2(m−1) message steps.
+        let m = group.members.len();
+        let delay = 2.0 * (m as f64 - 1.0) * core.comm.transfer_time(core.param_bytes());
+        for &mb in &group.members {
+            core.restart_after(mb, delay);
+        }
+    }
+}

@@ -1,0 +1,78 @@
+//! Gradient backends: who computes the local SGD step.
+//!
+//! * [`PjrtBackend`] — the real path: AOT JAX/Pallas artifacts via PJRT.
+//! * [`NativeMlpBackend`] — a rust reimplementation of the `mlp_*`
+//!   variants (exact same math, no PJRT), used as the fast comparator in
+//!   the table/figure harnesses and the perf baseline.
+//! * [`QuadraticBackend`] — per-worker least-squares problems with exact
+//!   gradients; used by the convergence-property tests (the theory says
+//!   all doubly-stochastic gossip rules drive `‖∇F(w̄)‖ → small`).
+
+mod native_mlp;
+mod pjrt;
+mod quadratic;
+
+pub use native_mlp::{MlpShape, NativeMlpBackend};
+pub use pjrt::PjrtBackend;
+pub use quadratic::QuadraticBackend;
+
+use crate::model::ParamVec;
+use crate::WorkerId;
+
+/// Result of a local gradient computation.
+#[derive(Debug, Clone)]
+pub struct GradOutput {
+    /// Local mini-batch loss.
+    pub loss: f32,
+    /// Flat gradient (padded_dim length).
+    pub grad: Vec<f32>,
+    /// Correct predictions in the mini-batch.
+    pub correct: u32,
+    /// Mini-batch size (denominator for accuracy).
+    pub examples: u32,
+}
+
+/// Result of a global evaluation.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalOutput {
+    /// Mean loss over the eval batches.
+    pub loss: f32,
+    /// Accuracy in [0, 1].
+    pub accuracy: f32,
+}
+
+/// A gradient/eval provider for the engine.
+///
+/// Backends are constructed and consumed within a single engine thread
+/// (`run_sweep` parallelizes across experiments, not inside one), so no
+/// `Send` bound is required — which lets the PJRT client's `Rc` internals
+/// live here directly.
+pub trait Backend {
+    /// Flat (padded) parameter dimension.
+    fn dim(&self) -> usize;
+
+    /// Initial parameters for worker `w` (workers may start identical or
+    /// not; the paper starts from a common init, seeded here per run).
+    fn init_params(&self, seed: u64) -> ParamVec;
+
+    /// Compute worker `w`'s local mini-batch gradient at `params`.
+    fn grad(&mut self, w: WorkerId, params: &[f32]) -> GradOutput;
+
+    /// Evaluate `params` globally (held-out or full-data depending on
+    /// backend).
+    fn eval(&mut self, params: &[f32]) -> EvalOutput;
+
+    /// Parameter payload size in bytes (for communication accounting).
+    fn param_bytes(&self) -> u64 {
+        4 * self.dim() as u64
+    }
+
+    /// Optional accelerated gossip average (PJRT Pallas kernel); `None`
+    /// means the engine averages natively.
+    fn gossip_average(&mut self, _rows: &[&[f32]], _weights: &[f32]) -> Option<Vec<f32>> {
+        None
+    }
+
+    /// Backend label for logs.
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,370 @@
+//! Native rust MLP backend — the same math as the `mlp_*` JAX variants
+//! (He init, ReLU hidden layers, softmax cross-entropy) with hand-written
+//! backprop.  Used as the PJRT-free comparator in the big table sweeps
+//! (N up to 256 workers × thousands of gossip iterations) and as the perf
+//! baseline for the runtime benches.
+
+use super::{Backend, EvalOutput, GradOutput};
+use crate::data::{
+    partition_iid, partition_noniid_shards, SyntheticClassification, WorkerShard,
+};
+use crate::model::{init_params, LayoutEntry, ParamVec};
+use crate::WorkerId;
+
+/// Configuration mirroring a `model.MODELS` MLP entry.
+#[derive(Debug, Clone)]
+pub struct MlpShape {
+    /// Layer dims, e.g. `[128, 64, 32, 10]`.
+    pub dims: Vec<usize>,
+    /// Mini-batch size.
+    pub batch: usize,
+}
+
+impl MlpShape {
+    /// The `mlp_small` variant (bench workhorse).
+    pub fn small() -> Self {
+        MlpShape { dims: vec![128, 64, 32, 10], batch: 32 }
+    }
+
+    /// The `mlp_tiny` variant (tests).
+    pub fn tiny() -> Self {
+        MlpShape { dims: vec![32, 32, 16, 10], batch: 16 }
+    }
+
+    /// The paper's 2-NN (Table 3).
+    pub fn mlp2nn() -> Self {
+        MlpShape { dims: vec![3072, 256, 256, 10], batch: 32 }
+    }
+
+    /// Look up by variant name.
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "mlp_tiny" => Some(Self::tiny()),
+            "mlp_small" => Some(Self::small()),
+            "mlp2nn" => Some(Self::mlp2nn()),
+            _ => None,
+        }
+    }
+
+    /// Flat parameter count.
+    pub fn dim(&self) -> usize {
+        self.dims.windows(2).map(|w| w[0] * w[1] + w[1]).sum()
+    }
+
+    /// Padded to the gossip tile multiple (matches python PAD_MULTIPLE).
+    pub fn padded_dim(&self) -> usize {
+        (self.dim() + 255) / 256 * 256
+    }
+
+    /// Layout matching `ModelSpec::param_shapes`.
+    pub fn layout(&self) -> Vec<LayoutEntry> {
+        let mut out = Vec::new();
+        for (i, w) in self.dims.windows(2).enumerate() {
+            out.push(LayoutEntry { name: format!("w{i}"), shape: vec![w[0], w[1]] });
+            out.push(LayoutEntry { name: format!("b{i}"), shape: vec![w[1]] });
+        }
+        out
+    }
+}
+
+/// Native MLP backend over synthetic classification data.
+pub struct NativeMlpBackend {
+    shape: MlpShape,
+    data: SyntheticClassification,
+    shards: Vec<WorkerShard>,
+    eval_indices: Vec<usize>,
+    padded: usize,
+}
+
+impl NativeMlpBackend {
+    /// Build over a fresh synthetic dataset.
+    ///
+    /// `iid` selects the partitioner; `classes_per_worker` applies to the
+    /// non-IID label-shard split (paper: 5).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        shape: MlpShape,
+        n_workers: usize,
+        n_samples: usize,
+        separation: f32,
+        iid: bool,
+        classes_per_worker: usize,
+        seed: u64,
+    ) -> Self {
+        let num_classes = *shape.dims.last().unwrap();
+        let input_dim = shape.dims[0];
+        // train + held-out eval pool
+        let eval_n = 512.min(n_samples / 4).max(64);
+        let data = SyntheticClassification::generate(
+            n_samples + eval_n,
+            input_dim,
+            num_classes,
+            separation,
+            seed,
+        );
+        let train_labels: Vec<i32> = data.labels()[..n_samples].to_vec();
+        let part = if iid {
+            partition_iid(n_samples, n_workers, seed ^ 1)
+        } else {
+            partition_noniid_shards(
+                &train_labels,
+                n_workers,
+                num_classes,
+                classes_per_worker,
+                seed ^ 1,
+            )
+        };
+        let shards = part
+            .assignment
+            .into_iter()
+            .enumerate()
+            .map(|(w, idx)| WorkerShard::new(idx, seed ^ (w as u64) << 8))
+            .collect();
+        let eval_indices = (n_samples..n_samples + eval_n).collect();
+        let padded = shape.padded_dim();
+        NativeMlpBackend { shape, data, shards, eval_indices, padded }
+    }
+
+    /// Forward + backward over one gathered batch.  Returns
+    /// `(loss, grad_flat, correct)`.
+    fn fwd_bwd(&self, params: &[f32], x: &[f32], y: &[i32]) -> (f32, Vec<f32>, u32) {
+        let dims = &self.shape.dims;
+        let b = y.len();
+        let l = dims.len() - 1;
+        // slice params
+        let mut weights: Vec<&[f32]> = Vec::with_capacity(l);
+        let mut biases: Vec<&[f32]> = Vec::with_capacity(l);
+        let mut off = 0usize;
+        for win in dims.windows(2) {
+            let (di, dn) = (win[0], win[1]);
+            weights.push(&params[off..off + di * dn]);
+            off += di * dn;
+            biases.push(&params[off..off + dn]);
+            off += dn;
+        }
+        // forward, keeping activations
+        let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
+        for (i, win) in dims.windows(2).enumerate() {
+            let (di, dn) = (win[0], win[1]);
+            let input = &acts[i];
+            let mut out = vec![0f32; b * dn];
+            matmul_add_bias(input, weights[i], biases[i], b, di, dn, &mut out);
+            if i < l - 1 {
+                for v in out.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            acts.push(out);
+        }
+        // softmax CE + dlogits
+        let c = dims[l];
+        let logits = &acts[l];
+        let mut loss = 0f32;
+        let mut correct = 0u32;
+        let mut delta = vec![0f32; b * c];
+        for r in 0..b {
+            let row = &logits[r * c..(r + 1) * c];
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0f32;
+            for &v in row {
+                denom += (v - max).exp();
+            }
+            let label = y[r] as usize;
+            loss += -(row[label] - max - denom.ln());
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if argmax == label {
+                correct += 1;
+            }
+            for k in 0..c {
+                let p = (row[k] - max).exp() / denom;
+                delta[r * c + k] = (p - if k == label { 1.0 } else { 0.0 }) / b as f32;
+            }
+        }
+        loss /= b as f32;
+        // backward
+        let mut grad = vec![0f32; self.padded];
+        let mut doff = off; // == dim
+        debug_assert_eq!(doff, self.shape.dim());
+        let mut delta_cur = delta;
+        for i in (0..l).rev() {
+            let (di, dn) = (dims[i], dims[i + 1]);
+            doff -= dn; // bias block
+            for r in 0..b {
+                for k in 0..dn {
+                    grad[doff + k] += delta_cur[r * dn + k];
+                }
+            }
+            doff -= di * dn; // weight block: dW = act^T delta
+            let act = &acts[i];
+            for r in 0..b {
+                let arow = &act[r * di..(r + 1) * di];
+                let drow = &delta_cur[r * dn..(r + 1) * dn];
+                for a in 0..di {
+                    let av = arow[a];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let gw = &mut grad[doff + a * dn..doff + (a + 1) * dn];
+                    for (g, d) in gw.iter_mut().zip(drow) {
+                        *g += av * d;
+                    }
+                }
+            }
+            if i > 0 {
+                // delta_prev = (delta @ W^T) * relu'(act_i)
+                let w = weights[i];
+                let mut dprev = vec![0f32; b * di];
+                for r in 0..b {
+                    let drow = &delta_cur[r * dn..(r + 1) * dn];
+                    let arow = &acts[i][r * di..(r + 1) * di];
+                    let prow = &mut dprev[r * di..(r + 1) * di];
+                    for a in 0..di {
+                        if arow[a] > 0.0 {
+                            let wrow = &w[a * dn..(a + 1) * dn];
+                            let mut acc = 0f32;
+                            for (wv, dv) in wrow.iter().zip(drow) {
+                                acc += wv * dv;
+                            }
+                            prow[a] = acc;
+                        }
+                    }
+                }
+                delta_cur = dprev;
+            }
+        }
+        (loss, grad, correct)
+    }
+}
+
+/// `out[b, dO] = x[b, dI] @ w[dI, dO] + bias`.
+fn matmul_add_bias(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    b: usize,
+    di: usize,
+    dn: usize,
+    out: &mut [f32],
+) {
+    for r in 0..b {
+        let orow = &mut out[r * dn..(r + 1) * dn];
+        orow.copy_from_slice(bias);
+        let xrow = &x[r * di..(r + 1) * di];
+        for (a, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[a * dn..(a + 1) * dn];
+            for (o, wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
+impl Backend for NativeMlpBackend {
+    fn dim(&self) -> usize {
+        self.padded
+    }
+
+    fn init_params(&self, seed: u64) -> ParamVec {
+        init_params(&self.shape.layout(), self.padded, seed)
+    }
+
+    fn grad(&mut self, w: WorkerId, params: &[f32]) -> GradOutput {
+        let idx = self.shards[w].next_batch(self.shape.batch);
+        let (x, y) = self.data.gather(&idx);
+        let (loss, grad, correct) = self.fwd_bwd(params, &x, &y);
+        GradOutput { loss, grad, correct, examples: y.len() as u32 }
+    }
+
+    fn eval(&mut self, params: &[f32]) -> EvalOutput {
+        let (x, y) = self.data.gather(&self.eval_indices);
+        let (loss, _, correct) = self.fwd_bwd(params, &x, &y);
+        EvalOutput { loss, accuracy: correct as f32 / y.len() as f32 }
+    }
+
+    fn name(&self) -> &'static str {
+        "native_mlp"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> NativeMlpBackend {
+        NativeMlpBackend::new(MlpShape::tiny(), 4, 512, 3.0, true, 5, 1)
+    }
+
+    #[test]
+    fn shapes_match_python_side() {
+        // mlp_tiny: 32*32+32 + 32*16+16 + 16*10+10 = 1754, padded 1792
+        let s = MlpShape::tiny();
+        assert_eq!(s.dim(), 1754);
+        assert_eq!(s.padded_dim(), 1792);
+        let s = MlpShape::mlp2nn();
+        assert_eq!(s.dim(), 855_050);
+        assert_eq!(s.padded_dim(), 855_296);
+    }
+
+    #[test]
+    fn numeric_gradient_check() {
+        let b = backend();
+        let params = b.init_params(3);
+        let idx: Vec<usize> = (0..8).collect();
+        let (x, y) = b.data.gather(&idx);
+        let (_, grad, _) = b.fwd_bwd(&params, &x, &y);
+        // check a scattering of coordinates with central differences
+        let eps = 1e-2f32;
+        for &d in &[0usize, 17, 600, 1200, 1700] {
+            let mut p1 = params.clone();
+            p1[d] += eps;
+            let (l1, _, _) = b.fwd_bwd(&p1, &x, &y);
+            let mut p2 = params.clone();
+            p2[d] -= eps;
+            let (l2, _, _) = b.fwd_bwd(&p2, &x, &y);
+            let num = (l1 - l2) / (2.0 * eps);
+            assert!(
+                (num - grad[d]).abs() < 2e-2 + 0.05 * num.abs(),
+                "coord {d}: numeric {num} vs analytic {}",
+                grad[d]
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_learns() {
+        let mut b = backend();
+        let mut params = b.init_params(5);
+        let before = b.eval(&params);
+        for _ in 0..150 {
+            let g = b.grad(0, &params);
+            crate::model::axpy(&mut params, -0.1, &g.grad);
+        }
+        let after = b.eval(&params);
+        assert!(
+            after.loss < before.loss,
+            "loss should drop: {} -> {}",
+            before.loss,
+            after.loss
+        );
+        assert!(after.accuracy > before.accuracy);
+    }
+
+    #[test]
+    fn grad_padding_zero() {
+        let mut b = backend();
+        let params = b.init_params(7);
+        let g = b.grad(1, &params);
+        assert_eq!(g.grad.len(), 1792);
+        assert!(g.grad[1754..].iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,204 @@
+//! PJRT gradient backend: the production path.
+//!
+//! Wraps [`crate::runtime::ModelRuntime`] with per-worker data shards so
+//! the engine's `grad`/`eval` calls execute the AOT JAX/Pallas artifacts.
+//! MLP variants train on synthetic classification data; transformer
+//! variants train on the embedded character corpus.
+
+use super::{Backend, EvalOutput, GradOutput};
+use crate::data::{
+    partition_iid, partition_noniid_shards, CharCorpus, SyntheticClassification,
+    WorkerShard, SHAKESPEARE_EXCERPT,
+};
+use crate::model::{init_params, LayoutEntry, ParamVec};
+use crate::runtime::{BatchInput, ModelRuntime};
+use crate::WorkerId;
+use anyhow::Result;
+use std::path::Path;
+
+enum TaskData {
+    Classification { data: SyntheticClassification, eval_indices: Vec<usize> },
+    Chars { corpus: CharCorpus, eval_positions: Vec<usize> },
+}
+
+/// PJRT-executing backend.
+pub struct PjrtBackend {
+    runtime: ModelRuntime,
+    task: TaskData,
+    shards: Vec<WorkerShard>,
+    layout: Vec<LayoutEntry>,
+    /// Cumulative seconds spent inside PJRT execute calls (perf metric).
+    pub execute_seconds: f64,
+    /// Number of train-step executions.
+    pub train_calls: u64,
+}
+
+impl PjrtBackend {
+    /// Load artifacts for `variant` and shard the matching task data.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        artifacts_dir: &Path,
+        variant: &str,
+        n_workers: usize,
+        n_samples: usize,
+        separation: f32,
+        iid: bool,
+        classes_per_worker: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        let runtime = ModelRuntime::load(artifacts_dir, variant)?;
+        let meta = &runtime.meta;
+        let layout: Vec<LayoutEntry> = meta
+            .layout
+            .iter()
+            .map(|(name, shape)| LayoutEntry { name: name.clone(), shape: shape.clone() })
+            .collect();
+        let (task, shards) = if meta.kind == "mlp" {
+            let eval_n = 256.min(n_samples / 4).max(64);
+            let data = SyntheticClassification::generate(
+                n_samples + eval_n,
+                meta.input_dim,
+                meta.num_classes,
+                separation,
+                seed,
+            );
+            let train_labels: Vec<i32> = data.labels()[..n_samples].to_vec();
+            let part = if iid {
+                partition_iid(n_samples, n_workers, seed ^ 1)
+            } else {
+                partition_noniid_shards(
+                    &train_labels,
+                    n_workers,
+                    meta.num_classes,
+                    classes_per_worker,
+                    seed ^ 1,
+                )
+            };
+            let shards: Vec<WorkerShard> = part
+                .assignment
+                .into_iter()
+                .enumerate()
+                .map(|(w, idx)| WorkerShard::new(idx, seed ^ ((w as u64) << 8)))
+                .collect();
+            let eval_indices = (n_samples..n_samples + eval_n).collect();
+            (TaskData::Classification { data, eval_indices }, shards)
+        } else {
+            let corpus = CharCorpus::new(SHAKESPEARE_EXCERPT, meta.seq_len);
+            let shards = corpus.shards(n_workers, seed ^ 2);
+            // spread eval windows across the whole corpus
+            let total = corpus.len();
+            let eval_positions: Vec<usize> =
+                (0..meta.batch).map(|i| i * total / meta.batch).collect();
+            (TaskData::Chars { corpus, eval_positions }, shards)
+        };
+        Ok(PjrtBackend {
+            runtime,
+            task,
+            shards,
+            layout,
+            execute_seconds: 0.0,
+            train_calls: 0,
+        })
+    }
+
+    /// PJRT platform (diagnostics).
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+
+    fn eval_batch(&self) -> (BatchOwned, Vec<i32>) {
+        match &self.task {
+            TaskData::Classification { data, eval_indices } => {
+                // eval artifact batch is fixed: take the first `batch`
+                let b = self.runtime.meta.batch;
+                let idx = &eval_indices[..b.min(eval_indices.len())];
+                let (x, y) = data.gather(idx);
+                (BatchOwned::Features(x), y)
+            }
+            TaskData::Chars { corpus, eval_positions } => {
+                let (x, y) = corpus.gather(eval_positions);
+                (BatchOwned::Tokens(x), y)
+            }
+        }
+    }
+}
+
+/// Owned batch storage matching [`BatchInput`].
+enum BatchOwned {
+    Features(Vec<f32>),
+    Tokens(Vec<i32>),
+}
+
+impl BatchOwned {
+    fn as_input(&self) -> BatchInput<'_> {
+        match self {
+            BatchOwned::Features(f) => BatchInput::Features(f),
+            BatchOwned::Tokens(t) => BatchInput::Tokens(t),
+        }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn dim(&self) -> usize {
+        self.runtime.meta.padded_dim
+    }
+
+    fn init_params(&self, seed: u64) -> ParamVec {
+        init_params(&self.layout, self.runtime.meta.padded_dim, seed)
+    }
+
+    fn grad(&mut self, w: WorkerId, params: &[f32]) -> GradOutput {
+        let b = self.runtime.meta.batch;
+        let (batch, y) = match &mut self.task {
+            TaskData::Classification { data, .. } => {
+                let idx = self.shards[w].next_batch(b);
+                let (x, y) = data.gather(&idx);
+                (BatchOwned::Features(x), y)
+            }
+            TaskData::Chars { corpus, .. } => {
+                let pos = self.shards[w].next_batch(b);
+                let (x, y) = corpus.gather(&pos);
+                (BatchOwned::Tokens(x), y)
+            }
+        };
+        let t0 = std::time::Instant::now();
+        let out = self
+            .runtime
+            .train_step(params, &batch.as_input(), &y)
+            .expect("PJRT train step failed");
+        self.execute_seconds += t0.elapsed().as_secs_f64();
+        self.train_calls += 1;
+        let examples = y.len() as u32;
+        GradOutput {
+            loss: out.loss,
+            grad: out.grad,
+            correct: out.correct.max(0) as u32,
+            examples,
+        }
+    }
+
+    fn eval(&mut self, params: &[f32]) -> EvalOutput {
+        let (batch, y) = self.eval_batch();
+        let t0 = std::time::Instant::now();
+        let (loss, correct) = self
+            .runtime
+            .eval_step(params, &batch.as_input(), &y)
+            .expect("PJRT eval step failed");
+        self.execute_seconds += t0.elapsed().as_secs_f64();
+        EvalOutput { loss, accuracy: correct.max(0) as f32 / y.len() as f32 }
+    }
+
+    fn gossip_average(&mut self, rows: &[&[f32]], weights: &[f32]) -> Option<Vec<f32>> {
+        if rows.len() > self.runtime.gossip_fanout {
+            return None;
+        }
+        let t0 = std::time::Instant::now();
+        let out = self.runtime.gossip_average(rows, weights).ok();
+        self.execute_seconds += t0.elapsed().as_secs_f64();
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

@@ -1,0 +1,354 @@
+//! Experiment configuration: one JSON-serializable struct drives the whole
+//! stack (topology, algorithm, straggler model, workload, schedule).
+//!
+//! Configs are plain JSON files parsed with [`crate::util::json`]; every
+//! field is optional and defaults to the paper's settings (§6: η0 = 0.1,
+//! δ = 0.95, 10 % stragglers at 10×, batch 128-equivalent workloads).
+
+use crate::algorithms::AlgorithmKind;
+use crate::sim::{CommModel, StragglerModel};
+use crate::topology::TopologyKind;
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Which gradient backend computes the local SGD step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT-compiled JAX/Pallas artifacts executed via PJRT (the real path).
+    Pjrt,
+    /// Native least-squares problem (exact gradients, no artifacts needed);
+    /// used by convergence-property tests and micro-benches.
+    Quadratic,
+    /// Native rust MLP fwd/bwd mirroring `mlp_*` variants (PJRT-free
+    /// comparator for the perf benches).
+    NativeMlp,
+}
+
+impl BackendKind {
+    /// Parse from the snake_case config token.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "pjrt" => BackendKind::Pjrt,
+            "quadratic" => BackendKind::Quadratic,
+            "native_mlp" => BackendKind::NativeMlp,
+            other => bail!("unknown backend {other} (pjrt|quadratic|native_mlp)"),
+        })
+    }
+
+    /// Inverse of [`Self::parse`].
+    pub fn token(&self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Quadratic => "quadratic",
+            BackendKind::NativeMlp => "native_mlp",
+        }
+    }
+}
+
+/// Learning-rate schedule. The paper uses `η(k) = η0 · δ^k` (§6).
+#[derive(Debug, Clone, Copy)]
+pub struct LrSchedule {
+    /// Initial learning rate η0 (paper: 0.1).
+    pub eta0: f64,
+    /// Decay δ applied per `decay_every` iterations (paper: 0.95/round).
+    pub decay: f64,
+    /// Iterations per decay application.
+    pub decay_every: u64,
+    /// Floor.
+    pub min_lr: f64,
+}
+
+impl Default for LrSchedule {
+    fn default() -> Self {
+        LrSchedule { eta0: 0.1, decay: 0.95, decay_every: 50, min_lr: 5e-3 }
+    }
+}
+
+impl LrSchedule {
+    /// Learning rate at gossip-iteration `k`.
+    pub fn at(&self, k: u64) -> f32 {
+        let steps = (k / self.decay_every.max(1)) as i32;
+        (self.eta0 * self.decay.powi(steps)).max(self.min_lr) as f32
+    }
+}
+
+/// Full experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Human-readable tag used in result file names.
+    pub name: String,
+    /// Number of workers N (paper sweeps 32–256).
+    pub num_workers: usize,
+    /// Communication topology.
+    pub topology: TopologyKind,
+    /// Update rule under test.
+    pub algorithm: AlgorithmKind,
+    /// Gradient backend.
+    pub backend: BackendKind,
+    /// Model variant name (manifest key) for the PJRT / native backends.
+    pub model: String,
+    /// IID or label-shard non-IID partitioning.
+    pub iid: bool,
+    /// Classes dealt to each worker under non-IID (paper: 5).
+    pub classes_per_worker: usize,
+    /// Synthetic dataset size.
+    pub dataset_samples: usize,
+    /// Synthetic class separation (higher = easier).
+    pub separation: f32,
+    /// Stop after this many gossip iterations.
+    pub max_iterations: u64,
+    /// Stop after this much virtual time (seconds), if set.
+    pub time_budget: Option<f64>,
+    /// Evaluate the global average every this many gossip iterations.
+    pub eval_every: u64,
+    /// Mean local compute time (virtual seconds per gradient step).
+    pub mean_compute: f64,
+    /// Log-normal σ of per-worker base speeds (0 = homogeneous fleet).
+    pub hetero_sigma: f64,
+    /// Straggler injection.
+    pub straggler: StragglerModel,
+    /// Link model.
+    pub comm: CommModel,
+    /// Learning-rate schedule.
+    pub lr: LrSchedule,
+    /// Index the schedule by normalized rounds (local_steps / N) instead of
+    /// the algorithm's own iteration counter k (paper default: false).
+    pub lr_per_round: bool,
+    /// Prague's group size (its partial all-reduce).
+    pub prague_group: usize,
+    /// Base RNG seed (everything derives from it deterministically).
+    pub seed: u64,
+    /// Use the PJRT gossip-average artifact when the group fits its fanout
+    /// (otherwise the engine averages natively).
+    pub pjrt_gossip: bool,
+    /// Directory containing `manifest.json` + HLO artifacts.
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            num_workers: 16,
+            topology: TopologyKind::default(),
+            algorithm: AlgorithmKind::DsgdAau,
+            backend: BackendKind::Quadratic,
+            model: "mlp_small".into(),
+            iid: false,
+            classes_per_worker: 5,
+            dataset_samples: 4096,
+            separation: 2.0,
+            max_iterations: 500,
+            time_budget: None,
+            eval_every: 10,
+            mean_compute: 0.05,
+            hetero_sigma: 0.25,
+            straggler: StragglerModel::default(),
+            comm: CommModel::default(),
+            lr: LrSchedule::default(),
+            lr_per_round: false,
+            prague_group: 4,
+            seed: 42,
+            pjrt_gossip: false,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from a JSON file (missing fields keep their defaults).
+    pub fn from_json_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Parse from a JSON value.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut cfg = ExperimentConfig::default();
+        let obj = j.as_obj().ok_or_else(|| anyhow::anyhow!("config must be an object"))?;
+        for (key, v) in obj {
+            match key.as_str() {
+                "name" => cfg.name = v.as_str().unwrap_or(&cfg.name).to_string(),
+                "num_workers" => cfg.num_workers = need_usize(key, v)?,
+                "topology" => cfg.topology = TopologyKind::from_json(v)?,
+                "algorithm" => {
+                    cfg.algorithm =
+                        AlgorithmKind::parse(v.as_str().unwrap_or_default())?
+                }
+                "backend" => cfg.backend = BackendKind::parse(v.as_str().unwrap_or_default())?,
+                "model" => cfg.model = v.as_str().unwrap_or(&cfg.model).to_string(),
+                "iid" => cfg.iid = v.as_bool().unwrap_or(cfg.iid),
+                "classes_per_worker" => cfg.classes_per_worker = need_usize(key, v)?,
+                "dataset_samples" => cfg.dataset_samples = need_usize(key, v)?,
+                "separation" => cfg.separation = need_f64(key, v)? as f32,
+                "max_iterations" => cfg.max_iterations = need_usize(key, v)? as u64,
+                "time_budget" => {
+                    cfg.time_budget = if matches!(v, Json::Null) { None } else { Some(need_f64(key, v)?) }
+                }
+                "eval_every" => cfg.eval_every = need_usize(key, v)? as u64,
+                "mean_compute" => cfg.mean_compute = need_f64(key, v)?,
+                "hetero_sigma" => cfg.hetero_sigma = need_f64(key, v)?,
+                "straggler_probability" => cfg.straggler.probability = need_f64(key, v)?,
+                "straggler_slowdown" => cfg.straggler.slowdown = need_f64(key, v)?,
+                "comm_latency" => cfg.comm.latency = need_f64(key, v)?,
+                "comm_bandwidth" => cfg.comm.bandwidth = need_f64(key, v)?,
+                "lr_eta0" => cfg.lr.eta0 = need_f64(key, v)?,
+                "lr_decay" => cfg.lr.decay = need_f64(key, v)?,
+                "lr_decay_every" => cfg.lr.decay_every = need_usize(key, v)? as u64,
+                "lr_min" => cfg.lr.min_lr = need_f64(key, v)?,
+                "lr_per_round" => cfg.lr_per_round = v.as_bool().unwrap_or(false),
+                "prague_group" => cfg.prague_group = need_usize(key, v)?,
+                "seed" => cfg.seed = need_usize(key, v)? as u64,
+                "pjrt_gossip" => cfg.pjrt_gossip = v.as_bool().unwrap_or(false),
+                "artifacts_dir" => {
+                    cfg.artifacts_dir = v.as_str().unwrap_or(&cfg.artifacts_dir).to_string()
+                }
+                other => bail!("unknown config key {other:?}"),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Serialize to a JSON value (round-trips through [`Self::from_json`]).
+    pub fn to_json(&self) -> Json {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("name".into(), Json::from(self.name.as_str()));
+        m.insert("num_workers".into(), Json::from(self.num_workers));
+        m.insert("topology".into(), self.topology.to_json());
+        m.insert("algorithm".into(), Json::from(self.algorithm.token()));
+        m.insert("backend".into(), Json::from(self.backend.token()));
+        m.insert("model".into(), Json::from(self.model.as_str()));
+        m.insert("iid".into(), Json::from(self.iid));
+        m.insert("classes_per_worker".into(), Json::from(self.classes_per_worker));
+        m.insert("dataset_samples".into(), Json::from(self.dataset_samples));
+        m.insert("separation".into(), Json::Num(self.separation as f64));
+        m.insert("max_iterations".into(), Json::from(self.max_iterations as usize));
+        if let Some(t) = self.time_budget {
+            m.insert("time_budget".into(), Json::Num(t));
+        }
+        m.insert("eval_every".into(), Json::from(self.eval_every as usize));
+        m.insert("mean_compute".into(), Json::Num(self.mean_compute));
+        m.insert("hetero_sigma".into(), Json::Num(self.hetero_sigma));
+        m.insert("straggler_probability".into(), Json::Num(self.straggler.probability));
+        m.insert("straggler_slowdown".into(), Json::Num(self.straggler.slowdown));
+        m.insert("comm_latency".into(), Json::Num(self.comm.latency));
+        m.insert("comm_bandwidth".into(), Json::Num(self.comm.bandwidth));
+        m.insert("lr_eta0".into(), Json::Num(self.lr.eta0));
+        m.insert("lr_decay".into(), Json::Num(self.lr.decay));
+        m.insert("lr_decay_every".into(), Json::from(self.lr.decay_every as usize));
+        m.insert("lr_min".into(), Json::Num(self.lr.min_lr));
+        m.insert("lr_per_round".into(), Json::from(self.lr_per_round));
+        m.insert("prague_group".into(), Json::from(self.prague_group));
+        m.insert("seed".into(), Json::from(self.seed as usize));
+        m.insert("pjrt_gossip".into(), Json::from(self.pjrt_gossip));
+        m.insert("artifacts_dir".into(), Json::from(self.artifacts_dir.as_str()));
+        Json::Obj(m)
+    }
+
+    /// Derived seed for a named subsystem (stable across runs).
+    pub fn seed_for(&self, subsystem: &str) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.seed.hash(&mut h);
+        subsystem.hash(&mut h);
+        h.finish()
+    }
+
+    /// Basic sanity validation.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.num_workers >= 2, "need at least 2 workers");
+        anyhow::ensure!(self.max_iterations > 0, "max_iterations must be positive");
+        anyhow::ensure!(self.mean_compute > 0.0, "mean_compute must be positive");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.straggler.probability),
+            "straggler probability must be in [0,1]"
+        );
+        anyhow::ensure!(self.straggler.slowdown >= 1.0, "slowdown must be >= 1");
+        anyhow::ensure!(self.prague_group >= 2, "prague group must be >= 2");
+        Ok(())
+    }
+}
+
+fn need_usize(key: &str, v: &Json) -> Result<usize> {
+    v.as_usize().ok_or_else(|| anyhow::anyhow!("{key} must be a non-negative integer"))
+}
+
+fn need_f64(key: &str, v: &Json) -> Result<f64> {
+    v.as_f64().ok_or_else(|| anyhow::anyhow!("{key} must be a number"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.algorithm = AlgorithmKind::Prague;
+        cfg.backend = BackendKind::NativeMlp;
+        cfg.time_budget = Some(50.0);
+        cfg.topology = TopologyKind::Ring;
+        let text = cfg.to_json().to_string_compact();
+        let back = ExperimentConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.algorithm, cfg.algorithm);
+        assert_eq!(back.backend, cfg.backend);
+        assert_eq!(back.time_budget, cfg.time_budget);
+        assert_eq!(back.num_workers, cfg.num_workers);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let cfg =
+            ExperimentConfig::from_json(&Json::parse(r#"{"num_workers": 64, "seed": 7}"#).unwrap())
+                .unwrap();
+        assert_eq!(cfg.num_workers, 64);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.eval_every, ExperimentConfig::default().eval_every);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(ExperimentConfig::from_json(&Json::parse(r#"{"typo": 1}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn lr_schedule_decays_with_floor() {
+        let lr = LrSchedule { eta0: 0.1, decay: 0.5, decay_every: 10, min_lr: 0.01 };
+        assert!((lr.at(0) - 0.1).abs() < 1e-9);
+        assert!((lr.at(10) - 0.05).abs() < 1e-9);
+        assert_eq!(lr.at(1000), 0.01);
+    }
+
+    #[test]
+    fn seed_for_is_stable_and_distinct() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.seed_for("data"), cfg.seed_for("data"));
+        assert_ne!(cfg.seed_for("data"), cfg.seed_for("compute"));
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.num_workers = 1;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.straggler.slowdown = 0.5;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn backend_tokens_roundtrip() {
+        for b in [BackendKind::Pjrt, BackendKind::Quadratic, BackendKind::NativeMlp] {
+            assert_eq!(BackendKind::parse(b.token()).unwrap(), b);
+        }
+        assert!(BackendKind::parse("gpu").is_err());
+    }
+}

@@ -1,0 +1,225 @@
+//! Metropolis consensus weights (paper Assumption 1, eq. 6).
+//!
+//! For a gossip group `S` at iteration k, the active communication graph is
+//! the subgraph of `G` induced on `S`; the Metropolis rule assigns
+//!
+//! ```text
+//! P_ij = 1 / (1 + max(p_i, p_j))    if (i,j) active,
+//! P_ii = 1 - Σ_{j≠i} P_ij,
+//! ```
+//!
+//! where `p_i` is the number of active neighbors worker i waits on.  The
+//! resulting matrix is symmetric and doubly stochastic, which is what the
+//! convergence proof (Lemma 1/2) requires of every `P(k)`.
+
+use crate::topology::Graph;
+use crate::WorkerId;
+
+/// Consensus weights for one gossip group: for each member, the weight it
+/// assigns to every member (including itself).  Row-indexed by position in
+/// `members`.
+#[derive(Debug, Clone)]
+pub struct GroupWeights {
+    /// Group members in ascending WorkerId order.
+    pub members: Vec<WorkerId>,
+    /// `weights[a][b]` = P_{members[b], members[a]}: contribution of member
+    /// b's parameters to member a's update.  Symmetric.
+    pub weights: Vec<Vec<f32>>,
+}
+
+impl GroupWeights {
+    /// Metropolis weights on the subgraph of `g` induced on `members`.
+    ///
+    /// Members with no active neighbor inside the group get weight 1 on
+    /// themselves (they keep their parameters — a degenerate but valid
+    /// doubly-stochastic row).
+    pub fn metropolis(g: &Graph, members: &[WorkerId]) -> Self {
+        let mut members: Vec<WorkerId> = members.to_vec();
+        members.sort_unstable();
+        members.dedup();
+        let m = members.len();
+
+        // Probe each pair exactly once (hash lookups dominate this path —
+        // see EXPERIMENTS.md §Perf) and keep the adjacency for both passes.
+        let mut adj = vec![false; m * m];
+        let mut active_deg = vec![0usize; m];
+        for a in 0..m {
+            for b in (a + 1)..m {
+                if g.has_edge(members[a], members[b]) {
+                    adj[a * m + b] = true;
+                    active_deg[a] += 1;
+                    active_deg[b] += 1;
+                }
+            }
+        }
+
+        let mut w = vec![vec![0f32; m]; m];
+        for a in 0..m {
+            for b in (a + 1)..m {
+                if adj[a * m + b] {
+                    let v = 1.0 / (1.0 + active_deg[a].max(active_deg[b]) as f32);
+                    w[a][b] = v;
+                    w[b][a] = v;
+                }
+            }
+        }
+        for a in 0..m {
+            let off: f32 = w[a].iter().sum();
+            w[a][a] = 1.0 - off;
+        }
+        GroupWeights { members, weights: w }
+    }
+
+    /// Pairwise averaging (AD-PSGD style): both members weight 1/2.
+    pub fn pairwise(i: WorkerId, j: WorkerId) -> Self {
+        let members = if i < j { vec![i, j] } else { vec![j, i] };
+        GroupWeights { members, weights: vec![vec![0.5, 0.5], vec![0.5, 0.5]] }
+    }
+
+    /// Uniform all-to-all averaging (Prague's partial all-reduce inside a
+    /// group): every member weight 1/m.
+    pub fn uniform(members: &[WorkerId]) -> Self {
+        let mut members: Vec<WorkerId> = members.to_vec();
+        members.sort_unstable();
+        members.dedup();
+        let m = members.len();
+        let v = 1.0 / m as f32;
+        GroupWeights { members, weights: vec![vec![v; m]; m] }
+    }
+
+    /// Group size.
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    /// True when the group is a single worker (gossip is a no-op).
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Max |row sum − 1| and |col sum − 1|: 0 for doubly stochastic.
+    pub fn stochasticity_error(&self) -> f32 {
+        let m = self.len();
+        let mut err = 0f32;
+        for a in 0..m {
+            let row: f32 = self.weights[a].iter().sum();
+            err = err.max((row - 1.0).abs());
+            let col: f32 = (0..m).map(|b| self.weights[b][a]).sum();
+            err = err.max((col - 1.0).abs());
+        }
+        err
+    }
+
+    /// Smallest strictly-positive entry (the paper's β, which lower-bounds
+    /// the product-matrix entries via Lemma 2).
+    pub fn min_positive(&self) -> f32 {
+        self.weights
+            .iter()
+            .flatten()
+            .copied()
+            .filter(|&v| v > 0.0)
+            .fold(f32::INFINITY, f32::min)
+    }
+
+    /// Number of active (positive-weight) undirected pairs — the edges
+    /// parameter messages actually traverse.  Metropolis weights are zero
+    /// between non-adjacent members, so this equals the induced-subgraph
+    /// edge count; for uniform (all-reduce) groups it is m(m-1)/2.
+    pub fn active_edges(&self) -> usize {
+        let m = self.len();
+        let mut count = 0;
+        for a in 0..m {
+            for b in (a + 1)..m {
+                if self.weights[a][b] > 0.0 {
+                    count += 1;
+                }
+            }
+        }
+        count
+    }
+
+    /// Whether every entry is non-negative (Assumption 1's "non-negative
+    /// Metropolis weight rule"; can fail only for adversarial inputs).
+    pub fn is_non_negative(&self) -> bool {
+        self.weights.iter().flatten().all(|&v| v >= -1e-7)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::generators::{complete, random_connected, ring};
+
+    #[test]
+    fn metropolis_doubly_stochastic_ring() {
+        let g = ring(6);
+        let gw = GroupWeights::metropolis(&g, &[0, 1, 2, 3, 4, 5]);
+        assert!(gw.stochasticity_error() < 1e-6);
+        assert!(gw.is_non_negative());
+    }
+
+    #[test]
+    fn metropolis_partial_group() {
+        // group {0,1,3} on a ring of 6: only edge (0,1) is active
+        let g = ring(6);
+        let gw = GroupWeights::metropolis(&g, &[0, 1, 3]);
+        assert!(gw.stochasticity_error() < 1e-6);
+        // p_0 = p_1 = 1 -> P_01 = 1/2
+        assert!((gw.weights[0][1] - 0.5).abs() < 1e-6);
+        // worker 3 is isolated inside the group: keeps itself
+        assert!((gw.weights[2][2] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn metropolis_symmetric() {
+        let g = random_connected(12, 0.3, 3);
+        let gw = GroupWeights::metropolis(&g, &(0..12).collect::<Vec<_>>());
+        for a in 0..12 {
+            for b in 0..12 {
+                assert!((gw.weights[a][b] - gw.weights[b][a]).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn metropolis_complete_is_uniformish() {
+        let g = complete(4);
+        let gw = GroupWeights::metropolis(&g, &[0, 1, 2, 3]);
+        // all degrees 3 -> off-diagonals 1/4, diagonal 1/4
+        for a in 0..4 {
+            for b in 0..4 {
+                assert!((gw.weights[a][b] - 0.25).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn pairwise_is_half_half() {
+        let gw = GroupWeights::pairwise(5, 2);
+        assert_eq!(gw.members, vec![2, 5]);
+        assert!(gw.stochasticity_error() < 1e-7);
+        assert!((gw.weights[0][1] - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn uniform_rows() {
+        let gw = GroupWeights::uniform(&[3, 1, 2]);
+        assert_eq!(gw.members, vec![1, 2, 3]);
+        assert!(gw.stochasticity_error() < 1e-6);
+        assert!((gw.min_positive() - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dedup_members() {
+        let gw = GroupWeights::uniform(&[1, 1, 2]);
+        assert_eq!(gw.members, vec![1, 2]);
+    }
+
+    #[test]
+    fn singleton_group_identity() {
+        let g = ring(4);
+        let gw = GroupWeights::metropolis(&g, &[2]);
+        assert_eq!(gw.len(), 1);
+        assert!((gw.weights[0][0] - 1.0).abs() < 1e-7);
+    }
+}

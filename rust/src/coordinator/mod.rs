@@ -1,0 +1,173 @@
+//! High-level experiment coordinator: config → backend → engine → summary,
+//! plus parallel sweep helpers used by the table/figure harnesses.
+
+use crate::backend::{Backend, MlpShape, NativeMlpBackend, PjrtBackend, QuadraticBackend};
+use crate::config::{BackendKind, ExperimentConfig};
+use crate::engine::{Engine, RunSummary};
+use anyhow::Result;
+use std::path::Path;
+
+/// Build the configured gradient backend.
+pub fn build_backend(cfg: &ExperimentConfig) -> Result<Box<dyn Backend>> {
+    let seed = cfg.seed_for("data");
+    Ok(match cfg.backend {
+        BackendKind::Quadratic => Box::new(QuadraticBackend::new(
+            cfg.num_workers,
+            64,
+            32,
+            if cfg.iid { 0.0 } else { 1.0 },
+            seed,
+        )),
+        BackendKind::NativeMlp => {
+            let shape = MlpShape::by_name(&cfg.model)
+                .ok_or_else(|| anyhow::anyhow!("no native MLP shape for variant {}", cfg.model))?;
+            Box::new(NativeMlpBackend::new(
+                shape,
+                cfg.num_workers,
+                cfg.dataset_samples,
+                cfg.separation,
+                cfg.iid,
+                cfg.classes_per_worker,
+                seed,
+            ))
+        }
+        BackendKind::Pjrt => Box::new(PjrtBackend::new(
+            Path::new(&cfg.artifacts_dir),
+            &cfg.model,
+            cfg.num_workers,
+            cfg.dataset_samples,
+            cfg.separation,
+            cfg.iid,
+            cfg.classes_per_worker,
+            seed,
+        )?),
+    })
+}
+
+/// Run one experiment end to end.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunSummary> {
+    cfg.validate()?;
+    let backend = build_backend(cfg)?;
+    let mut engine = Engine::from_config(cfg, backend);
+    Ok(engine.run())
+}
+
+/// Run many configs in parallel on OS threads (each engine is
+/// single-threaded and CPU-bound; scale-out is per-experiment).
+pub fn run_sweep(configs: Vec<ExperimentConfig>) -> Vec<(ExperimentConfig, Result<RunSummary>)> {
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    let configs = std::sync::Arc::new(std::sync::Mutex::new(
+        configs.into_iter().enumerate().collect::<Vec<_>>(),
+    ));
+    let results = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+    let mut handles = Vec::new();
+    for _ in 0..threads {
+        let configs = configs.clone();
+        let results = results.clone();
+        handles.push(std::thread::spawn(move || loop {
+            let next = configs.lock().unwrap().pop();
+            let Some((idx, cfg)) = next else { break };
+            let out = run_experiment(&cfg);
+            results.lock().unwrap().push((idx, cfg, out));
+        }));
+    }
+    for h in handles {
+        h.join().expect("sweep worker panicked");
+    }
+    let mut out = std::sync::Arc::try_unwrap(results).unwrap().into_inner().unwrap();
+    out.sort_by_key(|(idx, _, _)| *idx);
+    out.into_iter().map(|(_, cfg, res)| (cfg, res)).collect()
+}
+
+/// Mean ± population-std helper for table cells over repeated seeds.
+pub fn mean_std(values: &[f64]) -> (f64, f64) {
+    if values.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let mean = values.iter().sum::<f64>() / values.len() as f64;
+    let var = values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / values.len() as f64;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::AlgorithmKind;
+
+    fn quick_cfg(alg: AlgorithmKind) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.num_workers = 8;
+        cfg.algorithm = alg;
+        cfg.backend = BackendKind::Quadratic;
+        cfg.max_iterations = 300;
+        cfg.eval_every = 50;
+        cfg.mean_compute = 0.01;
+        cfg
+    }
+
+    #[test]
+    fn every_algorithm_runs_and_learns_quadratic() {
+        for alg in AlgorithmKind::all() {
+            let cfg = quick_cfg(alg);
+            let out = run_experiment(&cfg).unwrap();
+            let first = out.recorder.curve.first().unwrap().loss;
+            let last = out.final_loss();
+            assert!(
+                last < first,
+                "{}: loss {first} -> {last} should decrease",
+                alg.label()
+            );
+            assert!(out.iterations > 0);
+            assert!(out.virtual_time > 0.0);
+        }
+    }
+
+    #[test]
+    fn dsgd_aau_completes_epochs() {
+        let out = run_experiment(&quick_cfg(AlgorithmKind::DsgdAau)).unwrap();
+        assert!(out.epochs_completed >= 1, "pathsearch should complete epochs");
+    }
+
+    #[test]
+    fn sync_dsgd_slowest_per_iteration_time() {
+        // With identical iteration counts, synchronous DSGD must burn more
+        // virtual time per iteration than DSGD-AAU under stragglers.
+        let mut sync_cfg = quick_cfg(AlgorithmKind::DsgdSync);
+        sync_cfg.max_iterations = 30;
+        let mut aau_cfg = quick_cfg(AlgorithmKind::DsgdAau);
+        aau_cfg.max_iterations = 30;
+        let sync = run_experiment(&sync_cfg).unwrap();
+        let aau = run_experiment(&aau_cfg).unwrap();
+        let t_sync = sync.virtual_time / sync.iterations.max(1) as f64;
+        let t_aau = aau.virtual_time / aau.iterations.max(1) as f64;
+        assert!(
+            t_sync > t_aau,
+            "sync {t_sync:.4}s/iter should exceed AAU {t_aau:.4}s/iter"
+        );
+    }
+
+    #[test]
+    fn sweep_runs_in_parallel_and_preserves_order() {
+        let cfgs: Vec<_> = AlgorithmKind::all()
+            .into_iter()
+            .map(|a| {
+                let mut c = quick_cfg(a);
+                c.max_iterations = 50;
+                c
+            })
+            .collect();
+        let results = run_sweep(cfgs.clone());
+        assert_eq!(results.len(), cfgs.len());
+        for ((cfg, res), expect) in results.iter().zip(&cfgs) {
+            assert_eq!(cfg.algorithm, expect.algorithm);
+            assert!(res.is_ok());
+        }
+    }
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,230 @@
+//! Character corpus for the next-character-prediction task (the paper's
+//! Shakespeare/LSTM workload, DESIGN.md §3).
+//!
+//! A public-domain excerpt of *The Complete Works of William Shakespeare*
+//! is embedded so the LM task runs with zero external downloads.  Bytes
+//! are mapped to a 96-symbol vocabulary (printable ASCII; everything else
+//! folds to space), matching the `transformer_char` model's vocab.
+
+use crate::data::WorkerShard;
+
+/// Public-domain Shakespeare excerpt (sonnets 1–8 + Hamlet soliloquy).
+pub const SHAKESPEARE_EXCERPT: &str = r#"
+From fairest creatures we desire increase,
+That thereby beauty's rose might never die,
+But as the riper should by time decease,
+His tender heir might bear his memory:
+But thou, contracted to thine own bright eyes,
+Feed'st thy light's flame with self-substantial fuel,
+Making a famine where abundance lies,
+Thyself thy foe, to thy sweet self too cruel.
+Thou that art now the world's fresh ornament
+And only herald to the gaudy spring,
+Within thine own bud buriest thy content
+And, tender churl, mak'st waste in niggarding.
+Pity the world, or else this glutton be,
+To eat the world's due, by the grave and thee.
+
+When forty winters shall besiege thy brow,
+And dig deep trenches in thy beauty's field,
+Thy youth's proud livery, so gazed on now,
+Will be a tattered weed of small worth held:
+Then being asked where all thy beauty lies,
+Where all the treasure of thy lusty days;
+To say within thine own deep-sunken eyes,
+Were an all-eating shame, and thriftless praise.
+How much more praise deserved thy beauty's use,
+If thou couldst answer 'This fair child of mine
+Shall sum my count, and make my old excuse,'
+Proving his beauty by succession thine.
+This were to be new made when thou art old,
+And see thy blood warm when thou feel'st it cold.
+
+Look in thy glass and tell the face thou viewest,
+Now is the time that face should form another,
+Whose fresh repair if now thou not renewest,
+Thou dost beguile the world, unbless some mother.
+For where is she so fair whose uneared womb
+Disdains the tillage of thy husbandry?
+Or who is he so fond will be the tomb
+Of his self-love, to stop posterity?
+Thou art thy mother's glass, and she in thee
+Calls back the lovely April of her prime;
+So thou through windows of thine age shalt see,
+Despite of wrinkles, this thy golden time.
+But if thou live remembered not to be,
+Die single and thine image dies with thee.
+
+Unthrifty loveliness, why dost thou spend
+Upon thyself thy beauty's legacy?
+Nature's bequest gives nothing, but doth lend,
+And being frank she lends to those are free:
+Then, beauteous niggard, why dost thou abuse
+The bounteous largess given thee to give?
+Profitless usurer, why dost thou use
+So great a sum of sums, yet canst not live?
+For having traffic with thyself alone,
+Thou of thyself thy sweet self dost deceive:
+Then how when nature calls thee to be gone,
+What acceptable audit canst thou leave?
+Thy unused beauty must be tombed with thee,
+Which, used, lives th' executor to be.
+
+To be, or not to be, that is the question:
+Whether 'tis nobler in the mind to suffer
+The slings and arrows of outrageous fortune,
+Or to take arms against a sea of troubles
+And by opposing end them. To die: to sleep;
+No more; and by a sleep to say we end
+The heart-ache and the thousand natural shocks
+That flesh is heir to, 'tis a consummation
+Devoutly to be wish'd. To die, to sleep;
+To sleep: perchance to dream: ay, there's the rub;
+For in that sleep of death what dreams may come
+When we have shuffled off this mortal coil,
+Must give us pause: there's the respect
+That makes calamity of so long life;
+For who would bear the whips and scorns of time,
+The oppressor's wrong, the proud man's contumely,
+The pangs of despised love, the law's delay,
+The insolence of office and the spurns
+That patient merit of the unworthy takes,
+When he himself might his quietus make
+With a bare bodkin? who would fardels bear,
+To grunt and sweat under a weary life,
+But that the dread of something after death,
+The undiscover'd country from whose bourn
+No traveller returns, puzzles the will
+And makes us rather bear those ills we have
+Than fly to others that we know not of?
+Thus conscience does make cowards of us all;
+And thus the native hue of resolution
+Is sicklied o'er with the pale cast of thought,
+And enterprises of great pith and moment
+With this regard their currents turn awry,
+And lose the name of action.
+"#;
+
+/// Vocabulary size: printable ASCII 32..=126 plus newline -> 96 symbols.
+pub const CHAR_VOCAB: usize = 96;
+
+/// Map a byte to a token id in `0..CHAR_VOCAB`.
+#[inline]
+pub fn byte_to_token(b: u8) -> i32 {
+    match b {
+        b'\n' => 95,
+        32..=126 => (b - 32) as i32,
+        _ => 0, // fold to space
+    }
+}
+
+/// Tokenized character corpus with next-char batch extraction.
+#[derive(Debug, Clone)]
+pub struct CharCorpus {
+    tokens: Vec<i32>,
+    /// Sequence length per sample.
+    pub seq_len: usize,
+}
+
+impl CharCorpus {
+    /// Tokenize `text` (use [`SHAKESPEARE_EXCERPT`] for the default task).
+    pub fn new(text: &str, seq_len: usize) -> Self {
+        let tokens: Vec<i32> = text.bytes().map(byte_to_token).collect();
+        assert!(
+            tokens.len() > seq_len + 1,
+            "corpus ({}) shorter than seq_len {}",
+            tokens.len(),
+            seq_len
+        );
+        CharCorpus { tokens, seq_len }
+    }
+
+    /// Number of distinct sample positions (windows).
+    pub fn len(&self) -> usize {
+        self.tokens.len() - self.seq_len - 1
+    }
+
+    /// Whether no window fits.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Input/target windows for sample position `i`:
+    /// `x = tokens[i .. i+T]`, `y = tokens[i+1 .. i+T+1]`.
+    pub fn window(&self, i: usize) -> (&[i32], &[i32]) {
+        (
+            &self.tokens[i..i + self.seq_len],
+            &self.tokens[i + 1..i + 1 + self.seq_len],
+        )
+    }
+
+    /// Gather a batch from window positions: `([B*T] x, [B*T] y)`.
+    pub fn gather(&self, positions: &[usize]) -> (Vec<i32>, Vec<i32>) {
+        let mut x = Vec::with_capacity(positions.len() * self.seq_len);
+        let mut y = Vec::with_capacity(positions.len() * self.seq_len);
+        for &p in positions {
+            let (xi, yi) = self.window(p);
+            x.extend_from_slice(xi);
+            y.extend_from_slice(yi);
+        }
+        (x, y)
+    }
+
+    /// Contiguous-range shards: worker `w` of `n` owns an equal slice of
+    /// window positions — naturally non-IID (different text regions).
+    pub fn shards(&self, n_workers: usize, seed: u64) -> Vec<WorkerShard> {
+        let total = self.len();
+        let per = (total / n_workers).max(1);
+        (0..n_workers)
+            .map(|w| {
+                let lo = (w * per).min(total - 1);
+                let hi = ((w + 1) * per).min(total);
+                WorkerShard::new((lo..hi.max(lo + 1)).collect(), seed ^ w as u64)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_vocab() {
+        let c = CharCorpus::new(SHAKESPEARE_EXCERPT, 64);
+        for i in 0..c.len().min(500) {
+            let (x, y) = c.window(i);
+            assert!(x.iter().all(|&t| (0..CHAR_VOCAB as i32).contains(&t)));
+            assert!(y.iter().all(|&t| (0..CHAR_VOCAB as i32).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn target_is_shifted_input() {
+        let c = CharCorpus::new("hello world, hello again", 8);
+        let (x, y) = c.window(3);
+        assert_eq!(&x[1..], &y[..7]);
+    }
+
+    #[test]
+    fn gather_shapes() {
+        let c = CharCorpus::new(SHAKESPEARE_EXCERPT, 32);
+        let (x, y) = c.gather(&[0, 10, 20]);
+        assert_eq!(x.len(), 3 * 32);
+        assert_eq!(y.len(), 3 * 32);
+    }
+
+    #[test]
+    fn shards_cover_disjoint_regions() {
+        let c = CharCorpus::new(SHAKESPEARE_EXCERPT, 16);
+        let shards = c.shards(4, 0);
+        assert_eq!(shards.len(), 4);
+        assert!(shards.iter().all(|s| !s.is_empty()));
+    }
+
+    #[test]
+    #[should_panic(expected = "corpus")]
+    fn short_corpus_panics() {
+        CharCorpus::new("ab", 64);
+    }
+}

@@ -1,0 +1,184 @@
+//! IID and non-IID dataset partitioners (paper Appendix D).
+//!
+//! Non-IID follows McMahan et al. [48] as used by the paper: sort by
+//! label, split each class into `shards_per_class = N * classes_per_worker
+//! / num_classes` shards, and deal each worker `classes_per_worker` shards
+//! from distinct random classes (paper: 5 classes per worker with
+//! `N/2 = 64` shards per class at N = 128).
+
+use crate::util::Rng64;
+
+/// Per-worker index assignment.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// `assignment[w]` = global sample indices owned by worker w.
+    pub assignment: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    /// Number of workers.
+    pub fn num_workers(&self) -> usize {
+        self.assignment.len()
+    }
+
+    /// Total assigned samples.
+    pub fn total(&self) -> usize {
+        self.assignment.iter().map(Vec::len).sum()
+    }
+
+    /// Label-distribution skew measure: mean number of distinct labels per
+    /// worker (low = very non-IID).
+    pub fn mean_distinct_labels(&self, labels: &[i32]) -> f64 {
+        let mut sum = 0usize;
+        for shard in &self.assignment {
+            let distinct: std::collections::HashSet<i32> =
+                shard.iter().map(|&i| labels[i]).collect();
+            sum += distinct.len();
+        }
+        sum as f64 / self.assignment.len().max(1) as f64
+    }
+}
+
+/// Uniform random split of all indices among `n_workers`.
+pub fn partition_iid(n_samples: usize, n_workers: usize, seed: u64) -> Partition {
+    let mut rng = Rng64::seed_from_u64(seed);
+    let mut idx: Vec<usize> = (0..n_samples).collect();
+    rng.shuffle(&mut idx);
+    let mut assignment = vec![Vec::new(); n_workers];
+    for (pos, i) in idx.into_iter().enumerate() {
+        assignment[pos % n_workers].push(i);
+    }
+    Partition { assignment }
+}
+
+/// McMahan-style label-shard non-IID split.
+///
+/// Each worker receives `classes_per_worker` shards, each shard drawn from
+/// a single class; classes are chosen per-worker without replacement.
+pub fn partition_noniid_shards(
+    labels: &[i32],
+    n_workers: usize,
+    num_classes: usize,
+    classes_per_worker: usize,
+    seed: u64,
+) -> Partition {
+    let classes_per_worker = classes_per_worker.min(num_classes).max(1);
+    let mut rng = Rng64::seed_from_u64(seed);
+
+    // bucket indices per class, shuffled
+    let mut per_class: Vec<Vec<usize>> = vec![Vec::new(); num_classes];
+    for (i, &l) in labels.iter().enumerate() {
+        per_class[l as usize].push(i);
+    }
+    for bucket in per_class.iter_mut() {
+        rng.shuffle(bucket);
+    }
+
+    // shards per class so that total shards = n_workers * classes_per_worker
+    let shards_per_class =
+        ((n_workers * classes_per_worker) as f64 / num_classes as f64).ceil() as usize;
+    let mut shards: Vec<(usize, Vec<usize>)> = Vec::new(); // (class, indices)
+    for (c, bucket) in per_class.iter().enumerate() {
+        if bucket.is_empty() {
+            continue;
+        }
+        let size = (bucket.len() / shards_per_class).max(1);
+        // keep EVERY chunk (the tail remainder too) so no sample is dropped;
+        // surplus shards beyond the nominal count are dealt as leftovers
+        for chunk in bucket.chunks(size) {
+            shards.push((c, chunk.to_vec()));
+        }
+    }
+    rng.shuffle(&mut shards);
+
+    // deal each worker classes_per_worker shards of distinct classes
+    let mut assignment = vec![Vec::new(); n_workers];
+    let mut taken = vec![false; shards.len()];
+    for (w, a) in assignment.iter_mut().enumerate() {
+        let mut have: std::collections::HashSet<usize> = std::collections::HashSet::new();
+        for _ in 0..classes_per_worker {
+            // first pass: prefer an untaken shard of a class we don't have
+            let pick = shards
+                .iter()
+                .enumerate()
+                .position(|(si, (c, _))| !taken[si] && !have.contains(c))
+                .or_else(|| shards.iter().enumerate().position(|(si, _)| !taken[si]));
+            if let Some(si) = pick {
+                taken[si] = true;
+                have.insert(shards[si].0);
+                a.extend_from_slice(&shards[si].1);
+            }
+        }
+        let _ = w;
+    }
+    // leftovers (rounding) go round-robin so no sample is dropped
+    let mut w = 0;
+    for (si, shard) in shards.iter().enumerate() {
+        if !taken[si] {
+            assignment[w % n_workers].extend_from_slice(&shard.1);
+            w += 1;
+        }
+    }
+    Partition { assignment }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn labels(n: usize, classes: usize, seed: u64) -> Vec<i32> {
+        let mut rng = Rng64::seed_from_u64(seed);
+        (0..n).map(|_| rng.gen_range(classes) as i32).collect()
+    }
+
+    #[test]
+    fn iid_covers_everything_evenly() {
+        let p = partition_iid(1000, 8, 1);
+        assert_eq!(p.total(), 1000);
+        for a in &p.assignment {
+            assert!((a.len() as i64 - 125).abs() <= 1);
+        }
+        let mut all: Vec<usize> = p.assignment.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn noniid_covers_everything_no_duplicates() {
+        let l = labels(2000, 10, 2);
+        let p = partition_noniid_shards(&l, 16, 10, 5, 3);
+        let mut all: Vec<usize> = p.assignment.iter().flatten().copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 2000, "every sample assigned exactly once");
+    }
+
+    #[test]
+    fn noniid_is_skewed_vs_iid() {
+        let l = labels(4000, 10, 4);
+        let noniid = partition_noniid_shards(&l, 32, 10, 3, 5);
+        let iid = partition_iid(4000, 32, 5);
+        let skew_non = noniid.mean_distinct_labels(&l);
+        let skew_iid = iid.mean_distinct_labels(&l);
+        assert!(
+            skew_non < skew_iid - 2.0,
+            "non-IID {skew_non} should see far fewer labels than IID {skew_iid}"
+        );
+        assert!(skew_non <= 5.0, "≤ classes_per_worker + leftovers, got {skew_non}");
+    }
+
+    #[test]
+    fn noniid_every_worker_nonempty() {
+        let l = labels(1000, 10, 6);
+        let p = partition_noniid_shards(&l, 64, 10, 5, 7);
+        assert!(p.assignment.iter().all(|a| !a.is_empty()));
+    }
+
+    #[test]
+    fn classes_per_worker_clamped() {
+        let l = labels(500, 4, 8);
+        // asking for 10 classes with only 4 available must not panic
+        let p = partition_noniid_shards(&l, 8, 4, 10, 9);
+        assert_eq!(p.total(), 500);
+    }
+}

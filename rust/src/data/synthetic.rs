@@ -1,0 +1,164 @@
+//! Synthetic class-clustered classification data (the CIFAR/MNIST stand-in).
+//!
+//! Each class `c` gets a random unit centroid `µ_c`; samples are
+//! `x = µ_c · sep + ε`, `ε ~ N(0, σ²I)`.  With `sep/σ` around 1–2 the task
+//! is learnable but not trivial, mirroring the relative difficulty ordering
+//! of the paper's datasets.
+
+use crate::util::Rng64;
+
+/// In-memory synthetic classification dataset.
+#[derive(Debug, Clone)]
+pub struct SyntheticClassification {
+    /// Feature matrix, row-major `[n_samples * dim]`.
+    features: Vec<f32>,
+    /// Labels in `0..num_classes`.
+    labels: Vec<i32>,
+    /// Feature dimension.
+    pub dim: usize,
+    /// Number of classes.
+    pub num_classes: usize,
+}
+
+impl SyntheticClassification {
+    /// Generate `n_samples` over `num_classes` clusters in `dim` dims.
+    ///
+    /// `separation` scales centroid norms relative to unit noise.
+    pub fn generate(
+        n_samples: usize,
+        dim: usize,
+        num_classes: usize,
+        separation: f32,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng64::seed_from_u64(seed);
+        // random unit centroids
+        let mut centroids = vec![0f32; num_classes * dim];
+        for c in 0..num_classes {
+            let mut norm = 0f32;
+            for d in 0..dim {
+                let v: f32 = rng.normal_f32();
+                centroids[c * dim + d] = v;
+                norm += v * v;
+            }
+            let norm = norm.sqrt().max(1e-6);
+            for d in 0..dim {
+                centroids[c * dim + d] *= separation / norm;
+            }
+        }
+        let mut features = vec![0f32; n_samples * dim];
+        let mut labels = vec![0i32; n_samples];
+        for i in 0..n_samples {
+            let c = rng.gen_range(num_classes);
+            labels[i] = c as i32;
+            for d in 0..dim {
+                let noise: f32 = rng.normal_f32();
+                features[i * dim + d] = centroids[c * dim + d] + noise;
+            }
+        }
+        SyntheticClassification { features, labels, dim, num_classes }
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Whether the dataset is empty.
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Feature row of sample `i`.
+    pub fn feature(&self, i: usize) -> &[f32] {
+        &self.features[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Label of sample `i`.
+    pub fn label(&self, i: usize) -> i32 {
+        self.labels[i]
+    }
+
+    /// All labels (for the partitioner).
+    pub fn labels(&self) -> &[i32] {
+        &self.labels
+    }
+
+    /// Gather a batch `[batch * dim]` of features and labels.
+    pub fn gather(&self, indices: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let mut x = Vec::with_capacity(indices.len() * self.dim);
+        let mut y = Vec::with_capacity(indices.len());
+        for &i in indices {
+            x.extend_from_slice(self.feature(i));
+            y.push(self.labels[i]);
+        }
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_label_range() {
+        let ds = SyntheticClassification::generate(200, 16, 10, 2.0, 1);
+        assert_eq!(ds.len(), 200);
+        assert_eq!(ds.feature(0).len(), 16);
+        assert!(ds.labels().iter().all(|&l| (0..10).contains(&l)));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = SyntheticClassification::generate(50, 8, 4, 2.0, 9);
+        let b = SyntheticClassification::generate(50, 8, 4, 2.0, 9);
+        assert_eq!(a.labels(), b.labels());
+        assert_eq!(a.feature(7), b.feature(7));
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // nearest-centroid classifier must beat chance by a wide margin
+        let ds = SyntheticClassification::generate(500, 32, 5, 3.0, 3);
+        // estimate centroids from data
+        let mut centroids = vec![vec![0f32; 32]; 5];
+        let mut counts = vec![0usize; 5];
+        for i in 0..ds.len() {
+            let c = ds.label(i) as usize;
+            counts[c] += 1;
+            for (d, v) in ds.feature(i).iter().enumerate() {
+                centroids[c][d] += v;
+            }
+        }
+        for c in 0..5 {
+            for d in 0..32 {
+                centroids[c][d] /= counts[c].max(1) as f32;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..ds.len() {
+            let f = ds.feature(i);
+            let best = (0..5)
+                .min_by(|&a, &b| {
+                    let da: f32 = f.iter().zip(&centroids[a]).map(|(x, c)| (x - c).powi(2)).sum();
+                    let db: f32 = f.iter().zip(&centroids[b]).map(|(x, c)| (x - c).powi(2)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best as i32 == ds.label(i) {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ds.len() as f64;
+        assert!(acc > 0.8, "nearest-centroid accuracy {acc}");
+    }
+
+    #[test]
+    fn gather_matches_rows() {
+        let ds = SyntheticClassification::generate(20, 4, 3, 2.0, 5);
+        let (x, y) = ds.gather(&[3, 7]);
+        assert_eq!(&x[0..4], ds.feature(3));
+        assert_eq!(&x[4..8], ds.feature(7));
+        assert_eq!(y, vec![ds.label(3), ds.label(7)]);
+    }
+}

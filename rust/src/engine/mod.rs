@@ -1,0 +1,436 @@
+//! The decentralized training engine: event loop + shared mechanics.
+//!
+//! [`EngineCore`] owns worker parameters, gradient stashes, the virtual
+//! clock, the consensus/Pathsearch state and all accounting; an
+//! [`UpdateRule`](crate::algorithms::UpdateRule) reacts to compute-done
+//! events and drives gossip through the core's primitives.  Gradient
+//! *values* are real (produced by the [`Backend`]); *durations* come from
+//! the [`ComputeModel`] so straggler dynamics match the paper's testbed.
+
+use crate::algorithms::UpdateRule;
+use crate::backend::{Backend, GradOutput};
+use crate::config::{ExperimentConfig, LrSchedule};
+use crate::consensus::GroupWeights;
+use crate::metrics::Recorder;
+use crate::model::ParamVec;
+use crate::pathsearch::PathSearch;
+use crate::sim::{CommModel, ComputeModel, Event, EventKind, EventQueue};
+use crate::topology::Graph;
+use crate::WorkerId;
+
+/// Shared engine state exposed to update rules.
+pub struct EngineCore {
+    /// Communication topology.
+    pub graph: Graph,
+    /// Virtual-time event queue.
+    pub queue: EventQueue,
+    /// Link model.
+    pub comm: CommModel,
+    /// Pathsearch consensus sets (used by DSGD-AAU).
+    pub pathsearch: PathSearch,
+    /// Metrics.
+    pub recorder: Recorder,
+    /// Gossip-iteration counter k.
+    pub k: u64,
+    compute: ComputeModel,
+    backend: Box<dyn Backend>,
+    params: Vec<ParamVec>,
+    stash: Vec<Option<GradOutput>>,
+    lr: LrSchedule,
+    lr_per_round: bool,
+    eval_every: u64,
+    pjrt_gossip: bool,
+    param_bytes: u64,
+    /// Sum/count of recent local losses (coarse progress signal).
+    recent_loss: (f64, u64),
+    /// Reusable gossip output buffers (swapped with worker params each
+    /// round, so the steady-state hot loop performs zero allocation).
+    scratch: Vec<ParamVec>,
+}
+
+impl EngineCore {
+    /// Number of workers.
+    pub fn num_workers(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> f64 {
+        self.queue.now()
+    }
+
+    /// Immutable view of worker `w`'s parameters.
+    pub fn params_of(&self, w: WorkerId) -> &[f32] {
+        &self.params[w]
+    }
+
+    /// Whether worker `w` has a stashed (un-applied) gradient.
+    pub fn has_stash(&self, w: WorkerId) -> bool {
+        self.stash[w].is_some()
+    }
+
+    /// Begin a local computation for `w` *now*: the gradient is evaluated
+    /// on the current parameters and its completion scheduled after a
+    /// sampled compute duration.
+    pub fn begin_compute(&mut self, w: WorkerId) {
+        let out = self.backend.grad(w, &self.params[w]);
+        self.recent_loss.0 += out.loss as f64;
+        self.recent_loss.1 += 1;
+        self.stash[w] = Some(out);
+        let dur = self.compute.sample_duration(w);
+        self.queue.schedule_in(dur, EventKind::ComputeDone(w));
+    }
+
+    /// Schedule worker `w` to begin computing after `delay` (e.g. after a
+    /// gossip round's communication completes).
+    pub fn restart_after(&mut self, w: WorkerId, delay: f64) {
+        self.queue.schedule_in(delay, EventKind::ComputeStart(w));
+    }
+
+    /// Apply worker `w`'s stashed gradient: `w̃ = w − η(k)·g` (eq. 4 line 1).
+    /// No-op if no stash is pending (defensive).
+    ///
+    /// The schedule follows the paper verbatim by default: `η(k) = η0 δ^k`
+    /// indexed by the algorithm's own gossip-iteration counter k.  Setting
+    /// `lr_per_round` in the config indexes by normalized rounds
+    /// (`local_steps / N`) instead, equalizing decay per unit of gradient
+    /// work across iteration semantics (an ablation knob; see DESIGN.md §10).
+    pub fn apply_gradient(&mut self, w: WorkerId) {
+        if let Some(out) = self.stash[w].take() {
+            let idx = if self.lr_per_round {
+                self.recorder.local_steps / self.params.len() as u64
+            } else {
+                self.k
+            };
+            let lr = self.lr.at(idx);
+            crate::model::axpy(&mut self.params[w], -lr, &out.grad);
+            self.recorder.local_steps += 1;
+        }
+    }
+
+    /// Drop worker `w`'s stashed gradient without applying it.
+    pub fn discard_stash(&mut self, w: WorkerId) {
+        self.stash[w] = None;
+    }
+
+    /// Simultaneous consensus update over a gossip group (eq. 4 line 2):
+    /// every member's new vector is the weighted average of the group's
+    /// current vectors.  Uses the PJRT Pallas gossip kernel when enabled
+    /// and the group fits the artifact fanout; falls back to a native
+    /// fused loop otherwise.  Charges two parameter messages per active
+    /// (positive-weight) pair — the induced-subgraph edges.
+    pub fn gossip(&mut self, gw: &GroupWeights) {
+        let m = gw.len();
+        if m <= 1 {
+            return;
+        }
+        debug_assert!(gw.stochasticity_error() < 1e-4, "non-doubly-stochastic weights");
+        self.mix_into_scratch(gw);
+        for (a, &mb) in gw.members.iter().enumerate() {
+            std::mem::swap(&mut self.params[mb], &mut self.scratch[a]);
+        }
+        // Parameter messages traverse only active (positive-weight) pairs,
+        // bidirectionally — the induced-subgraph edges for Metropolis
+        // groups.  Rules with a cheaper collective (Prague's ring
+        // all-reduce) use `gossip_costed` instead.
+        let bytes = 2 * gw.active_edges() as u64 * self.param_bytes;
+        self.recorder.record_gossip(m, bytes);
+    }
+
+    /// Like [`Self::gossip`] but with an explicit byte charge (collectives
+    /// whose traffic is not edge-shaped, e.g. ring all-reduce).
+    pub fn gossip_costed(&mut self, gw: &GroupWeights, bytes: u64) {
+        let m = gw.len();
+        if m <= 1 {
+            return;
+        }
+        self.mix_into_scratch(gw);
+        for (a, &mb) in gw.members.iter().enumerate() {
+            std::mem::swap(&mut self.params[mb], &mut self.scratch[a]);
+        }
+        self.recorder.record_gossip(m, bytes);
+    }
+
+    /// Compute every member's weighted average into the scratch buffers
+    /// (allocation-free once warm; the PJRT Pallas kernel is used when
+    /// enabled and the group fits the artifact fanout).
+    fn mix_into_scratch(&mut self, gw: &GroupWeights) {
+        let m = gw.len();
+        let d = self.params[0].len();
+        while self.scratch.len() < m {
+            self.scratch.push(vec![0f32; d]);
+        }
+        for a in 0..m {
+            let rows: Vec<&[f32]> =
+                gw.members.iter().map(|&mb| self.params[mb].as_slice()).collect();
+            let weights = &gw.weights[a];
+            if self.pjrt_gossip {
+                if let Some(out) = self.backend.gossip_average(&rows, weights) {
+                    self.scratch[a] = out;
+                    continue;
+                }
+            }
+            self.scratch[a].resize(d, 0.0);
+            native_weighted_average_into(&rows, weights, &mut self.scratch[a]);
+        }
+    }
+
+    /// Pairwise average with explicit byte accounting (AD-PSGD's atomic
+    /// averaging exchanges exactly two parameter messages).
+    pub fn gossip_pair(&mut self, i: WorkerId, j: WorkerId) {
+        let gw = GroupWeights::pairwise(i, j);
+        self.mix_into_scratch(&gw);
+        for (a, &mb) in gw.members.iter().enumerate() {
+            std::mem::swap(&mut self.params[mb], &mut self.scratch[a]);
+        }
+        self.recorder.record_gossip(2, 2 * self.param_bytes);
+    }
+
+    /// Overwrite worker `w`'s parameters (push-sum style rules).
+    pub fn set_params(&mut self, w: WorkerId, v: ParamVec) {
+        debug_assert_eq!(v.len(), self.params[w].len());
+        self.params[w] = v;
+    }
+
+    /// Charge `bytes` of parameter traffic without a group update (AGP
+    /// pushes, Pathsearch floods use `recorder.control_bytes`).
+    pub fn charge_param_bytes(&mut self, bytes: u64) {
+        self.recorder.param_bytes += bytes;
+    }
+
+    /// Parameter message size in bytes.
+    pub fn param_bytes(&self) -> u64 {
+        self.param_bytes
+    }
+
+    /// Communication time for a gossip round among `m` workers.
+    pub fn gossip_delay(&self, m: usize) -> f64 {
+        self.comm.gossip_time(m, self.param_bytes)
+    }
+
+    /// Advance the gossip-iteration counter, evaluating on schedule.
+    pub fn advance_iteration(&mut self) {
+        self.k += 1;
+        if self.k % self.eval_every == 0 {
+            self.eval_now();
+        }
+    }
+
+    /// Evaluate the fleet-average parameter vector and record the point.
+    pub fn eval_now(&mut self) {
+        let refs: Vec<&[f32]> = self.params.iter().map(|p| p.as_slice()).collect();
+        let mean = crate::model::mean_of(&refs);
+        let out = self.backend.eval(&mean);
+        let (k, t) = (self.k, self.now());
+        self.recorder.record_eval(k, t, out.loss, out.accuracy);
+    }
+
+    /// Consensus gap `max_j ‖w_j − w̄‖` (Theorem 1 diagnostics).
+    pub fn consensus_gap(&self) -> f32 {
+        let refs: Vec<&[f32]> = self.params.iter().map(|p| p.as_slice()).collect();
+        crate::model::consensus_gap(&refs)
+    }
+
+    /// Mean of local losses since the last call (coarse progress signal).
+    pub fn drain_recent_loss(&mut self) -> f32 {
+        let (s, n) = self.recent_loss;
+        self.recent_loss = (0.0, 0);
+        if n == 0 {
+            f32::NAN
+        } else {
+            (s / n as f64) as f32
+        }
+    }
+
+    /// Observed straggler fraction from the compute model.
+    pub fn straggler_fraction(&self) -> f64 {
+        self.compute.straggler_fraction()
+    }
+}
+
+/// `Σ_b weights[b] · rows[b]` with a flat fused loop (the native gossip).
+pub fn native_weighted_average(rows: &[&[f32]], weights: &[f32]) -> ParamVec {
+    let mut out = vec![0f32; rows[0].len()];
+    native_weighted_average_into(rows, weights, &mut out);
+    out
+}
+
+/// Allocation-free form of [`native_weighted_average`].  Active rows are
+/// gathered first and the inner loop is unrolled two-rows-at-a-time so
+/// each pass over `out` consumes two inputs (halves the `out` read/write
+/// traffic versus row-by-row axpy; see EXPERIMENTS.md §Perf).
+pub fn native_weighted_average_into(rows: &[&[f32]], weights: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(rows.len(), weights.len());
+    let d = out.len();
+    out.fill(0.0);
+    let active: Vec<(usize, f32)> = weights
+        .iter()
+        .enumerate()
+        .filter(|(_, &w)| w != 0.0)
+        .map(|(i, &w)| (i, w))
+        .collect();
+    let mut it = active.chunks_exact(2);
+    for pair in &mut it {
+        let (i0, w0) = pair[0];
+        let (i1, w1) = pair[1];
+        let (r0, r1) = (rows[i0], rows[i1]);
+        debug_assert!(r0.len() == d && r1.len() == d);
+        for k in 0..d {
+            out[k] += w0 * r0[k] + w1 * r1[k];
+        }
+    }
+    for &(i, w) in it.remainder() {
+        let r = rows[i];
+        debug_assert_eq!(r.len(), d);
+        for k in 0..d {
+            out[k] += w * r[k];
+        }
+    }
+}
+
+/// Outcome of a full engine run.
+#[derive(Debug)]
+pub struct RunSummary {
+    /// All recorded metrics.
+    pub recorder: Recorder,
+    /// Gossip iterations executed.
+    pub iterations: u64,
+    /// Final virtual time (seconds).
+    pub virtual_time: f64,
+    /// Observed straggler fraction.
+    pub straggler_fraction: f64,
+    /// Pathsearch epochs completed (DSGD-AAU only; 0 otherwise).
+    pub epochs_completed: u64,
+    /// Final consensus gap `max_j ‖w_j − w̄‖`.
+    pub consensus_gap: f32,
+    /// Algorithm label.
+    pub algorithm: &'static str,
+}
+
+impl RunSummary {
+    /// Final global loss.
+    pub fn final_loss(&self) -> f32 {
+        self.recorder.final_loss()
+    }
+
+    /// Final global accuracy.
+    pub fn final_accuracy(&self) -> f32 {
+        self.recorder.final_accuracy()
+    }
+}
+
+/// Event loop driver binding an [`EngineCore`] to an update rule.
+pub struct Engine {
+    core: EngineCore,
+    rule: Box<dyn UpdateRule>,
+    max_iterations: u64,
+    time_budget: Option<f64>,
+}
+
+impl Engine {
+    /// Assemble an engine from a config and a backend.
+    pub fn from_config(cfg: &ExperimentConfig, backend: Box<dyn Backend>) -> Self {
+        let n = cfg.num_workers;
+        let graph = cfg.topology.build(n);
+        assert!(graph.is_connected(), "topology must be connected");
+        let compute = ComputeModel::heterogeneous(
+            n,
+            cfg.mean_compute,
+            cfg.hetero_sigma,
+            cfg.straggler,
+            cfg.seed_for("compute"),
+        );
+        let dim = backend.dim();
+        let init = backend.init_params(cfg.seed_for("init"));
+        assert_eq!(init.len(), dim);
+        let param_bytes = backend.param_bytes();
+        let core = EngineCore {
+            graph,
+            queue: EventQueue::new(),
+            comm: cfg.comm,
+            pathsearch: PathSearch::new(),
+            recorder: Recorder::new(),
+            k: 0,
+            compute,
+            backend,
+            params: vec![init; n],
+            stash: vec![None; n],
+            lr: cfg.lr,
+            lr_per_round: cfg.lr_per_round,
+            eval_every: cfg.eval_every.max(1),
+            pjrt_gossip: cfg.pjrt_gossip,
+            param_bytes,
+            recent_loss: (0.0, 0),
+            scratch: Vec::new(),
+        };
+        let rule = cfg.algorithm.build(cfg.prague_group, cfg.seed_for("algorithm"));
+        Engine {
+            core,
+            rule,
+            max_iterations: cfg.max_iterations,
+            time_budget: cfg.time_budget,
+        }
+    }
+
+    /// Read-only core access (tests/diagnostics).
+    pub fn core(&self) -> &EngineCore {
+        &self.core
+    }
+
+    /// Run to completion (iteration cap, time budget, or quiescence).
+    pub fn run(&mut self) -> RunSummary {
+        let n = self.core.num_workers();
+        for w in 0..n {
+            self.core.begin_compute(w);
+        }
+        self.rule.on_start(&mut self.core);
+        self.core.eval_now(); // k = 0 baseline point
+        while let Some(Event { kind, .. }) = self.core.queue.pop() {
+            match kind {
+                EventKind::ComputeStart(w) => self.core.begin_compute(w),
+                EventKind::ComputeDone(w) => self.rule.on_ready(w, &mut self.core),
+                EventKind::EvalTick => self.core.eval_now(),
+            }
+            if self.core.k >= self.max_iterations {
+                break;
+            }
+            if let Some(budget) = self.time_budget {
+                if self.core.now() >= budget {
+                    break;
+                }
+            }
+        }
+        self.core.eval_now();
+        RunSummary {
+            iterations: self.core.k,
+            virtual_time: self.core.now(),
+            straggler_fraction: self.core.straggler_fraction(),
+            epochs_completed: self.core.pathsearch.epochs_completed,
+            consensus_gap: self.core.consensus_gap(),
+            algorithm: self.rule.name(),
+            recorder: std::mem::take(&mut self.core.recorder),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_weighted_average_basics() {
+        let a = vec![1.0f32, 0.0];
+        let b = vec![0.0f32, 1.0];
+        let out = native_weighted_average(&[&a, &b], &[0.25, 0.75]);
+        assert_eq!(out, vec![0.25, 0.75]);
+    }
+
+    #[test]
+    fn zero_weight_skipped() {
+        let a = vec![f32::NAN, f32::NAN];
+        let b = vec![2.0f32, 4.0];
+        // NaN row has zero weight and must not poison the result
+        let out = native_weighted_average(&[&a, &b], &[0.0, 1.0]);
+        assert_eq!(out, vec![2.0, 4.0]);
+    }
+}

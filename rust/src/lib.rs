@@ -1,0 +1,51 @@
+//! # dsgd-aau — Straggler-Resilient Decentralized Learning
+//!
+//! A production-quality reproduction of *"Straggler-Resilient Decentralized
+//! Learning via Adaptive Asynchronous Updates"* (DSGD-AAU, cs.LG 2023) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the decentralized training runtime: communication
+//!   topologies, Metropolis consensus, the Pathsearch procedure (paper
+//!   Alg. 3), the DSGD-AAU update rule plus four baselines (synchronous
+//!   DSGD, AD-PSGD, Prague, AGP), a discrete-event cluster simulator with
+//!   straggler injection, and the experiment harness regenerating every
+//!   table/figure of the paper's evaluation.
+//! * **L2 (python/compile/model.py)** — the worker model fwd/bwd in JAX,
+//!   AOT-lowered once to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (fused linear
+//!   fwd/bwd, gossip average) called from L2.
+//!
+//! Python never runs on the training path: the [`runtime`] module loads the
+//! AOT artifacts via PJRT and executes them from the rust event loop.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use dsgd_aau::config::ExperimentConfig;
+//! use dsgd_aau::coordinator;
+//!
+//! let mut cfg = ExperimentConfig::default();
+//! cfg.num_workers = 16;
+//! cfg.algorithm = dsgd_aau::algorithms::AlgorithmKind::DsgdAau;
+//! let result = coordinator::run_experiment(&cfg).unwrap();
+//! println!("final loss {:.4}", result.final_loss());
+//! ```
+
+pub mod algorithms;
+pub mod backend;
+pub mod config;
+pub mod consensus;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod harness;
+pub mod metrics;
+pub mod model;
+pub mod pathsearch;
+pub mod runtime;
+pub mod sim;
+pub mod topology;
+pub mod util;
+
+/// Worker identifier: dense indices `0..N`.
+pub type WorkerId = usize;

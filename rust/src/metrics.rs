@@ -1,0 +1,167 @@
+//! Training metrics: loss/accuracy curves over iteration and virtual time,
+//! communication accounting, and CSV export for the figure harnesses.
+
+use std::io::Write;
+use std::path::Path;
+
+/// One point on the training curve.
+#[derive(Debug, Clone, Copy)]
+pub struct CurvePoint {
+    /// Gossip-iteration counter k.
+    pub iteration: u64,
+    /// Virtual wall-clock seconds.
+    pub time: f64,
+    /// Global training loss (evaluated on the averaged parameters).
+    pub loss: f32,
+    /// Global accuracy in [0, 1].
+    pub accuracy: f32,
+    /// Cumulative bytes (parameters + control) exchanged so far.
+    pub bytes: u64,
+}
+
+/// Accumulated run metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Recorder {
+    /// Eval snapshots over the run.
+    pub curve: Vec<CurvePoint>,
+    /// Total parameter bytes exchanged.
+    pub param_bytes: u64,
+    /// Total control-plane bytes (Pathsearch ID broadcasts etc.).
+    pub control_bytes: u64,
+    /// Number of gossip rounds performed.
+    pub gossip_rounds: u64,
+    /// Number of local gradient steps across all workers.
+    pub local_steps: u64,
+    /// Sum of gossip group sizes (for mean group size diagnostics).
+    pub group_size_sum: u64,
+    /// Wall-clock seconds of real compute spent in backend calls.
+    pub backend_seconds: f64,
+}
+
+impl Recorder {
+    /// Fresh recorder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append an eval snapshot (bytes = cumulative traffic at this point).
+    pub fn record_eval(&mut self, iteration: u64, time: f64, loss: f32, accuracy: f32) {
+        let bytes = self.total_bytes();
+        self.curve.push(CurvePoint { iteration, time, loss, accuracy, bytes });
+    }
+
+    /// Cumulative bytes at the first point reaching `target` accuracy.
+    pub fn bytes_to_accuracy(&self, target: f32) -> Option<u64> {
+        self.curve.iter().find(|p| p.accuracy >= target).map(|p| p.bytes)
+    }
+
+    /// Charge a gossip round among `group_size` workers of `bytes` payload.
+    pub fn record_gossip(&mut self, group_size: usize, bytes: u64) {
+        self.gossip_rounds += 1;
+        self.group_size_sum += group_size as u64;
+        self.param_bytes += bytes;
+    }
+
+    /// Total bytes (parameters + control plane).
+    pub fn total_bytes(&self) -> u64 {
+        self.param_bytes + self.control_bytes
+    }
+
+    /// Mean gossip group size.
+    pub fn mean_group_size(&self) -> f64 {
+        if self.gossip_rounds == 0 {
+            0.0
+        } else {
+            self.group_size_sum as f64 / self.gossip_rounds as f64
+        }
+    }
+
+    /// Final recorded loss (NaN when no eval happened).
+    pub fn final_loss(&self) -> f32 {
+        self.curve.last().map(|p| p.loss).unwrap_or(f32::NAN)
+    }
+
+    /// Final recorded accuracy.
+    pub fn final_accuracy(&self) -> f32 {
+        self.curve.last().map(|p| p.accuracy).unwrap_or(f32::NAN)
+    }
+
+    /// Best (max) accuracy along the curve.
+    pub fn best_accuracy(&self) -> f32 {
+        self.curve.iter().map(|p| p.accuracy).fold(f32::NAN, f32::max)
+    }
+
+    /// Earliest virtual time at which `target` accuracy was reached.
+    pub fn time_to_accuracy(&self, target: f32) -> Option<f64> {
+        self.curve.iter().find(|p| p.accuracy >= target).map(|p| p.time)
+    }
+
+    /// Earliest virtual time at which loss dropped to `target` or below.
+    pub fn time_to_loss(&self, target: f32) -> Option<f64> {
+        self.curve.iter().find(|p| p.loss <= target).map(|p| p.time)
+    }
+
+    /// Write the curve as CSV (`iteration,time,loss,accuracy`).
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "iteration,time,loss,accuracy,bytes")?;
+        for p in &self.curve {
+            writeln!(
+                f,
+                "{},{:.6},{:.6},{:.6},{}",
+                p.iteration, p.time, p.loss, p.accuracy, p.bytes
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn recorder() -> Recorder {
+        let mut r = Recorder::new();
+        r.record_eval(0, 0.0, 2.3, 0.1);
+        r.record_eval(10, 1.0, 1.5, 0.4);
+        r.record_eval(20, 2.0, 0.9, 0.7);
+        r
+    }
+
+    #[test]
+    fn curve_queries() {
+        let r = recorder();
+        assert_eq!(r.final_loss(), 0.9);
+        assert_eq!(r.final_accuracy(), 0.7);
+        assert_eq!(r.best_accuracy(), 0.7);
+        assert_eq!(r.time_to_accuracy(0.4), Some(1.0));
+        assert_eq!(r.time_to_accuracy(0.9), None);
+        assert_eq!(r.time_to_loss(1.5), Some(1.0));
+    }
+
+    #[test]
+    fn gossip_accounting() {
+        let mut r = Recorder::new();
+        r.record_gossip(2, 100);
+        r.record_gossip(4, 300);
+        assert_eq!(r.param_bytes, 400);
+        assert_eq!(r.mean_group_size(), 3.0);
+        r.control_bytes += 50;
+        assert_eq!(r.total_bytes(), 450);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let r = recorder();
+        let dir = std::env::temp_dir().join("dsgd_aau_metrics_test");
+        let path = dir.join("curve.csv");
+        r.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("iteration,time,loss,accuracy,bytes"));
+        assert_eq!(text.lines().count(), 4);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

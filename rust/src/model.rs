@@ -1,0 +1,160 @@
+//! Flat parameter vectors and their initialization.
+//!
+//! Workers gossip whole flat f32 vectors (padded to the gossip-kernel tile
+//! multiple — see `python/compile/model.py`).  Initialization mirrors the
+//! JAX side: He-scaled normals for weight matrices, zeros for biases,
+//! ones for LayerNorm gains, driven by the manifest's layout table.
+
+use crate::util::Rng64;
+
+/// Named tensor layout entry from the manifest.
+#[derive(Debug, Clone)]
+pub struct LayoutEntry {
+    /// Parameter name, e.g. `"w0"` or `"l1.wqkv"`.
+    pub name: String,
+    /// Tensor shape.
+    pub shape: Vec<usize>,
+}
+
+impl LayoutEntry {
+    /// Element count.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A worker's flat parameter (or gradient) vector.
+pub type ParamVec = Vec<f32>;
+
+/// He-style init over a layout, padded with zeros to `padded_dim`.
+///
+/// Weight tensors (rank ≥ 2 or names not matching bias/gain patterns) get
+/// `N(0, 2/fan_in)`; biases and positional tables get zeros; LayerNorm
+/// gains (`*_g`) get ones — mirroring `model.init_params` on the JAX side.
+pub fn init_params(layout: &[LayoutEntry], padded_dim: usize, seed: u64) -> ParamVec {
+    let mut rng = Rng64::seed_from_u64(seed);
+    let mut out = Vec::with_capacity(padded_dim);
+    for entry in layout {
+        let leaf = entry.name.rsplit('.').next().unwrap_or(&entry.name);
+        let n = entry.numel();
+        if leaf.ends_with("_g") {
+            out.extend(std::iter::repeat(1.0f32).take(n));
+        } else if leaf.starts_with('b') || leaf.ends_with("_b") || leaf == "pos" {
+            out.extend(std::iter::repeat(0.0f32).take(n));
+        } else {
+            let fan_in = entry.shape[0].max(1);
+            let scale = (2.0 / fan_in as f32).sqrt();
+            for _ in 0..n {
+                out.push(rng.normal_f32() * scale);
+            }
+        }
+    }
+    assert!(out.len() <= padded_dim, "layout exceeds padded_dim");
+    out.resize(padded_dim, 0.0);
+    out
+}
+
+/// `y += alpha * x` over equal-length slices (the SGD apply).
+#[inline]
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Euclidean norm.
+pub fn l2_norm(x: &[f32]) -> f32 {
+    x.iter().map(|v| v * v).sum::<f32>().sqrt()
+}
+
+/// Mean of several equal-length vectors (consensus diagnostics).
+pub fn mean_of(vectors: &[&[f32]]) -> ParamVec {
+    assert!(!vectors.is_empty());
+    let d = vectors[0].len();
+    let mut out = vec![0f32; d];
+    for v in vectors {
+        debug_assert_eq!(v.len(), d);
+        for (o, x) in out.iter_mut().zip(*v) {
+            *o += x;
+        }
+    }
+    let inv = 1.0 / vectors.len() as f32;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+    out
+}
+
+/// Max pairwise L2 distance from the mean — the consensus gap
+/// `max_j ||w_j − w̄||` that Theorem 1's proof bounds.
+pub fn consensus_gap(vectors: &[&[f32]]) -> f32 {
+    let mean = mean_of(vectors);
+    vectors
+        .iter()
+        .map(|v| {
+            v.iter()
+                .zip(&mean)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                .sqrt()
+        })
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> Vec<LayoutEntry> {
+        vec![
+            LayoutEntry { name: "w0".into(), shape: vec![8, 4] },
+            LayoutEntry { name: "b0".into(), shape: vec![4] },
+            LayoutEntry { name: "l0.ln1_g".into(), shape: vec![4] },
+            LayoutEntry { name: "pos".into(), shape: vec![2, 4] },
+        ]
+    }
+
+    #[test]
+    fn init_respects_layout_roles() {
+        let p = init_params(&layout(), 64, 1);
+        assert_eq!(p.len(), 64);
+        // bias zeros
+        assert!(p[32..36].iter().all(|&v| v == 0.0));
+        // gains ones
+        assert!(p[36..40].iter().all(|&v| v == 1.0));
+        // pos zeros
+        assert!(p[40..48].iter().all(|&v| v == 0.0));
+        // padding zeros
+        assert!(p[48..].iter().all(|&v| v == 0.0));
+        // weights non-degenerate
+        assert!(l2_norm(&p[..32]) > 0.1);
+    }
+
+    #[test]
+    fn init_deterministic() {
+        assert_eq!(init_params(&layout(), 64, 5), init_params(&layout(), 64, 5));
+        assert_ne!(init_params(&layout(), 64, 5), init_params(&layout(), 64, 6));
+    }
+
+    #[test]
+    fn axpy_works() {
+        let mut y = vec![1.0, 2.0];
+        axpy(&mut y, -0.5, &[2.0, 4.0]);
+        assert_eq!(y, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn consensus_gap_zero_when_equal() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let refs: Vec<&[f32]> = vec![&a, &a, &a];
+        assert_eq!(consensus_gap(&refs), 0.0);
+    }
+
+    #[test]
+    fn mean_of_two() {
+        let a = vec![0.0f32, 2.0];
+        let b = vec![2.0f32, 0.0];
+        assert_eq!(mean_of(&[&a, &b]), vec![1.0, 1.0]);
+    }
+}

@@ -1,0 +1,232 @@
+//! `artifacts/manifest.json` schema (written by `python -m compile.aot`),
+//! parsed with the in-tree JSON substrate.
+
+use crate::util::json::Json;
+use anyhow::{ensure, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Per-variant artifact metadata.
+#[derive(Debug, Clone)]
+pub struct VariantMeta {
+    /// `"mlp"` or `"transformer"`.
+    pub kind: String,
+    /// True parameter count.
+    pub dim: usize,
+    /// Flat-vector length (padded to the gossip tile multiple).
+    pub padded_dim: usize,
+    /// Batch size the artifact was lowered for.
+    pub batch: usize,
+    /// Classification classes (== vocab for LM variants).
+    pub num_classes: usize,
+    /// Batch input shape, e.g. `[32, 128]`.
+    pub input_shape: Vec<usize>,
+    /// `"f32"` (features) or `"i32"` (tokens).
+    pub input_dtype: String,
+    /// Label shape, e.g. `[32]` or `[16, 64]`.
+    pub label_shape: Vec<usize>,
+    /// MLP input feature dimension (0 for LM variants).
+    pub input_dim: usize,
+    /// LM sequence length (0 for MLP variants).
+    pub seq_len: usize,
+    /// LM vocabulary (0 for MLP variants).
+    pub vocab: usize,
+    /// Role -> HLO file name (`train`, `eval`).
+    pub files: HashMap<String, String>,
+    /// Gossip artifact file for this variant's padded_dim.
+    pub gossip_file: String,
+    /// Ordered (name, shape) parameter layout.
+    pub layout: Vec<(String, Vec<usize>)>,
+}
+
+/// Top-level manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Schema tag, `"hlo-text/v1"`.
+    pub format: String,
+    /// Max gossip stack rows K in the gossip artifacts.
+    pub gossip_fanout: usize,
+    /// Model variants by name.
+    pub variants: HashMap<String, VariantMeta>,
+    /// padded_dim (stringified) -> gossip artifact file.
+    pub gossip: HashMap<String, String>,
+}
+
+fn shape_of(j: &Json, key: &str) -> Result<Vec<usize>> {
+    j.req(key)?
+        .as_arr()
+        .with_context(|| format!("{key} must be an array"))?
+        .iter()
+        .map(|v| v.as_usize().with_context(|| format!("{key} entries must be integers")))
+        .collect()
+}
+
+fn str_of(j: &Json, key: &str) -> Result<String> {
+    Ok(j.req(key)?.as_str().with_context(|| format!("{key} must be a string"))?.to_string())
+}
+
+fn usize_of(j: &Json, key: &str) -> Result<usize> {
+    j.req(key)?.as_usize().with_context(|| format!("{key} must be an integer"))
+}
+
+impl VariantMeta {
+    fn from_json(j: &Json) -> Result<Self> {
+        let files = j
+            .req("files")?
+            .as_obj()
+            .context("files must be an object")?
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), v.as_str().context("file names")?.to_string())))
+            .collect::<Result<HashMap<_, _>>>()?;
+        let layout = j
+            .req("layout")?
+            .as_arr()
+            .context("layout must be an array")?
+            .iter()
+            .map(|entry| {
+                let pair = entry.as_arr().context("layout entry")?;
+                ensure!(pair.len() == 2, "layout entry must be [name, shape]");
+                let name = pair[0].as_str().context("layout name")?.to_string();
+                let shape = pair[1]
+                    .as_arr()
+                    .context("layout shape")?
+                    .iter()
+                    .map(|v| v.as_usize().context("layout dims"))
+                    .collect::<Result<Vec<_>>>()?;
+                Ok((name, shape))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(VariantMeta {
+            kind: str_of(j, "kind")?,
+            dim: usize_of(j, "dim")?,
+            padded_dim: usize_of(j, "padded_dim")?,
+            batch: usize_of(j, "batch")?,
+            num_classes: usize_of(j, "num_classes")?,
+            input_shape: shape_of(j, "input_shape")?,
+            input_dtype: str_of(j, "input_dtype")?,
+            label_shape: shape_of(j, "label_shape")?,
+            input_dim: usize_of(j, "input_dim")?,
+            seq_len: usize_of(j, "seq_len")?,
+            vocab: usize_of(j, "vocab")?,
+            gossip_file: str_of(j, "gossip_file")?,
+            files,
+            layout,
+        })
+    }
+}
+
+impl Manifest {
+    /// Load and validate from a JSON file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        let j = Json::parse(&text)?;
+        let format = str_of(&j, "format")?;
+        ensure!(format == "hlo-text/v1", "unknown manifest format {format}");
+        let gossip_fanout = usize_of(&j, "gossip_fanout")?;
+        let variants = j
+            .req("variants")?
+            .as_obj()
+            .context("variants must be an object")?
+            .iter()
+            .map(|(name, v)| {
+                Ok((
+                    name.clone(),
+                    VariantMeta::from_json(v).with_context(|| format!("variant {name}"))?,
+                ))
+            })
+            .collect::<Result<HashMap<_, _>>>()?;
+        let gossip = j
+            .req("gossip")?
+            .as_obj()
+            .context("gossip must be an object")?
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), v.as_str().context("gossip file")?.to_string())))
+            .collect::<Result<HashMap<_, _>>>()?;
+        Ok(Manifest { format, gossip_fanout, variants, gossip })
+    }
+
+    /// Layout converted to the model module's entry type.
+    pub fn layout_of(&self, variant: &str) -> Option<Vec<crate::model::LayoutEntry>> {
+        self.variants.get(variant).map(|v| {
+            v.layout
+                .iter()
+                .map(|(name, shape)| crate::model::LayoutEntry {
+                    name: name.clone(),
+                    shape: shape.clone(),
+                })
+                .collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "format": "hlo-text/v1",
+        "gossip_fanout": 8,
+        "variants": {
+            "mlp_tiny": {
+                "kind": "mlp", "dim": 1754, "padded_dim": 1792,
+                "batch": 16, "num_classes": 10,
+                "input_shape": [16, 32], "input_dtype": "f32",
+                "label_shape": [16], "input_dim": 32, "seq_len": 0, "vocab": 0,
+                "files": {"train": "t.hlo.txt", "eval": "e.hlo.txt"},
+                "gossip_file": "g.hlo.txt",
+                "layout": [["w0", [32, 32]], ["b0", [32]]]
+            }
+        },
+        "gossip": {"1792": "g.hlo.txt"}
+    }"#;
+
+    fn write_tmp(text: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("dsgd_manifest_{}.json", std::process::id()));
+        std::fs::write(&p, text).unwrap();
+        p
+    }
+
+    #[test]
+    fn parses_sample() {
+        let p = write_tmp(SAMPLE);
+        let m = Manifest::load(&p).unwrap();
+        assert_eq!(m.gossip_fanout, 8);
+        let v = &m.variants["mlp_tiny"];
+        assert_eq!(v.padded_dim, 1792);
+        assert_eq!(v.layout[0].0, "w0");
+        assert_eq!(v.layout[0].1, vec![32, 32]);
+        assert_eq!(v.files["train"], "t.hlo.txt");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn layout_conversion() {
+        let p = write_tmp(SAMPLE);
+        let m = Manifest::load(&p).unwrap();
+        let layout = m.layout_of("mlp_tiny").unwrap();
+        assert_eq!(layout[0].numel(), 1024);
+        assert!(m.layout_of("nope").is_none());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let p = write_tmp(r#"{"format": "v2", "gossip_fanout": 1, "variants": {}, "gossip": {}}"#);
+        assert!(Manifest::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let p = Path::new("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(p).unwrap();
+            assert!(m.variants.contains_key("mlp_tiny"));
+            for v in m.variants.values() {
+                assert!(v.padded_dim % 256 == 0);
+                assert!(v.dim <= v.padded_dim);
+            }
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Per-worker compute-time model with straggler injection (paper §6).
+//!
+//! "We randomly select workers as stragglers in each iteration … the
+//! straggler sleeps for some time in the iteration (e.g., the sleep time
+//! could be 6x of the average one local computation time)."  The ablation
+//! (Figs. 9–12) sweeps the straggler probability (5–40 %) and the slowdown
+//! factor (5–40×); both are first-class knobs here.
+
+use crate::util::Rng64;
+use crate::WorkerId;
+
+/// Straggler injection knobs (paper ablation parameters).
+#[derive(Debug, Clone, Copy)]
+pub struct StragglerModel {
+    /// Per-iteration probability that a worker is a straggler ("P").
+    pub probability: f64,
+    /// Multiplicative slowdown applied to the straggler's compute time.
+    pub slowdown: f64,
+}
+
+impl Default for StragglerModel {
+    fn default() -> Self {
+        // The paper settles on 10 % stragglers at 10x slowdown.
+        StragglerModel { probability: 0.10, slowdown: 10.0 }
+    }
+}
+
+/// Heterogeneous per-worker compute-time sampler.
+#[derive(Debug, Clone)]
+pub struct ComputeModel {
+    /// Mean gradient-computation time per worker (seconds).
+    base_mean: Vec<f64>,
+    /// Log-normal jitter σ applied to every sample.
+    jitter_sigma: f64,
+    straggler: StragglerModel,
+    rng: Rng64,
+    /// Count of straggler-inflated samples (diagnostics).
+    pub straggler_events: u64,
+    /// Total samples drawn.
+    pub samples: u64,
+}
+
+impl ComputeModel {
+    /// Homogeneous fleet: every worker has the same `mean_compute` time.
+    pub fn homogeneous(n: usize, mean_compute: f64, straggler: StragglerModel, seed: u64) -> Self {
+        ComputeModel {
+            base_mean: vec![mean_compute; n],
+            jitter_sigma: 0.1,
+            straggler,
+            rng: Rng64::seed_from_u64(seed ^ 0xC0FFEE),
+            straggler_events: 0,
+            samples: 0,
+        }
+    }
+
+    /// Heterogeneous fleet: worker means drawn log-normally around
+    /// `mean_compute` with spread `hetero_sigma` (0 = homogeneous).
+    pub fn heterogeneous(
+        n: usize,
+        mean_compute: f64,
+        hetero_sigma: f64,
+        straggler: StragglerModel,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng64::seed_from_u64(seed ^ 0xBEEF);
+        let base_mean = if hetero_sigma > 0.0 {
+            (0..n).map(|_| mean_compute * rng.lognormal(hetero_sigma)).collect()
+        } else {
+            vec![mean_compute; n]
+        };
+        ComputeModel {
+            base_mean,
+            jitter_sigma: 0.1,
+            straggler,
+            rng,
+            straggler_events: 0,
+            samples: 0,
+        }
+    }
+
+    /// Number of workers.
+    pub fn num_workers(&self) -> usize {
+        self.base_mean.len()
+    }
+
+    /// Mean compute time of worker `w` (pre-jitter, pre-straggler).
+    pub fn mean_of(&self, w: WorkerId) -> f64 {
+        self.base_mean[w]
+    }
+
+    /// Fleet-wide average compute time.
+    pub fn fleet_mean(&self) -> f64 {
+        self.base_mean.iter().sum::<f64>() / self.base_mean.len() as f64
+    }
+
+    /// Sample the duration of worker `w`'s next local gradient step.
+    /// Bernoulli straggler injection multiplies by the slowdown factor.
+    pub fn sample_duration(&mut self, w: WorkerId) -> f64 {
+        self.samples += 1;
+        let jitter =
+            if self.jitter_sigma > 0.0 { self.rng.lognormal(self.jitter_sigma) } else { 1.0 };
+        let mut d = self.base_mean[w] * jitter;
+        if self.rng.gen_bool(self.straggler.probability) {
+            d *= self.straggler.slowdown;
+            self.straggler_events += 1;
+        }
+        d
+    }
+
+    /// Observed straggler fraction (diagnostics / tests).
+    pub fn straggler_fraction(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.straggler_events as f64 / self.samples as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn durations_positive_and_mean_reasonable() {
+        let mut m = ComputeModel::homogeneous(
+            4,
+            0.1,
+            StragglerModel { probability: 0.0, slowdown: 10.0 },
+            1,
+        );
+        let mut sum = 0.0;
+        for _ in 0..2000 {
+            let d = m.sample_duration(0);
+            assert!(d > 0.0);
+            sum += d;
+        }
+        let mean = sum / 2000.0;
+        assert!((mean - 0.1).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn straggler_injection_rate() {
+        let mut m = ComputeModel::homogeneous(
+            1,
+            1.0,
+            StragglerModel { probability: 0.25, slowdown: 6.0 },
+            7,
+        );
+        for _ in 0..4000 {
+            m.sample_duration(0);
+        }
+        let f = m.straggler_fraction();
+        assert!((f - 0.25).abs() < 0.03, "fraction {f}");
+    }
+
+    #[test]
+    fn straggler_slowdown_multiplies() {
+        let mut slow = ComputeModel::homogeneous(
+            1,
+            1.0,
+            StragglerModel { probability: 1.0, slowdown: 8.0 },
+            3,
+        );
+        let mut fast = ComputeModel::homogeneous(
+            1,
+            1.0,
+            StragglerModel { probability: 0.0, slowdown: 8.0 },
+            3,
+        );
+        let ds: f64 = (0..500).map(|_| slow.sample_duration(0)).sum::<f64>() / 500.0;
+        let df: f64 = (0..500).map(|_| fast.sample_duration(0)).sum::<f64>() / 500.0;
+        let ratio = ds / df;
+        assert!((ratio - 8.0).abs() < 1.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn heterogeneous_spread() {
+        let m = ComputeModel::heterogeneous(64, 0.1, 0.5, StragglerModel::default(), 11);
+        let means: Vec<f64> = (0..64).map(|w| m.mean_of(w)).collect();
+        let min = means.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = means.iter().cloned().fold(0.0, f64::max);
+        assert!(max / min > 1.5, "expected heterogeneity, got {min}..{max}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = ComputeModel::homogeneous(2, 0.1, StragglerModel::default(), 42);
+        let mut b = ComputeModel::homogeneous(2, 0.1, StragglerModel::default(), 42);
+        for _ in 0..50 {
+            assert_eq!(a.sample_duration(1), b.sample_duration(1));
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Virtual-time event queue for the cluster simulator.
+
+use crate::WorkerId;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What happened at a point in virtual time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Worker begins a local gradient computation (the gradient is taken
+    /// on the parameters as of this instant — staleness is then whatever
+    /// gossip does to the worker's parameters before `ComputeDone`).
+    ComputeStart(WorkerId),
+    /// Worker finished its local gradient computation.
+    ComputeDone(WorkerId),
+    /// Periodic evaluation tick (global metrics snapshot).
+    EvalTick,
+}
+
+/// A scheduled event.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// Virtual timestamp in seconds.
+    pub time: f64,
+    /// Tie-break sequence number (FIFO among equal timestamps).
+    pub seq: u64,
+    /// Payload.
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap semantics: smaller time = greater priority.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Monotone virtual-time priority queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    seq: u64,
+    now: f64,
+}
+
+impl EventQueue {
+    /// Empty queue at t = 0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current virtual time (timestamp of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Schedule `kind` at absolute time `t` (clamped to now — time never
+    /// goes backwards).
+    pub fn schedule(&mut self, t: f64, kind: EventKind) {
+        let t = if t < self.now { self.now } else { t };
+        debug_assert!(t.is_finite(), "non-finite event time");
+        self.heap.push(Event { time: t, seq: self.seq, kind });
+        self.seq += 1;
+    }
+
+    /// Schedule `kind` after a relative delay.
+    pub fn schedule_in(&mut self, delay: f64, kind: EventKind) {
+        self.schedule(self.now + delay, kind);
+    }
+
+    /// Pop the earliest event, advancing the clock.
+    pub fn pop(&mut self) -> Option<Event> {
+        let ev = self.heap.pop()?;
+        debug_assert!(ev.time >= self.now, "virtual time went backwards");
+        self.now = ev.time;
+        Some(ev)
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Whether no events are pending.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, EventKind::ComputeDone(3));
+        q.schedule(1.0, EventKind::ComputeDone(1));
+        q.schedule(2.0, EventKind::ComputeDone(2));
+        let order: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.time).collect();
+        assert_eq!(order, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn fifo_among_ties() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, EventKind::ComputeDone(7));
+        q.schedule(1.0, EventKind::ComputeDone(8));
+        assert_eq!(q.pop().unwrap().kind, EventKind::ComputeDone(7));
+        assert_eq!(q.pop().unwrap().kind, EventKind::ComputeDone(8));
+    }
+
+    #[test]
+    fn clock_monotone_and_clamped() {
+        let mut q = EventQueue::new();
+        q.schedule(5.0, EventKind::EvalTick);
+        q.pop();
+        assert_eq!(q.now(), 5.0);
+        // scheduling in the past clamps to now
+        q.schedule(1.0, EventKind::ComputeDone(0));
+        let e = q.pop().unwrap();
+        assert_eq!(e.time, 5.0);
+        assert_eq!(q.now(), 5.0);
+    }
+
+    #[test]
+    fn schedule_in_is_relative() {
+        let mut q = EventQueue::new();
+        q.schedule(2.0, EventKind::EvalTick);
+        q.pop();
+        q.schedule_in(3.0, EventKind::EvalTick);
+        assert_eq!(q.pop().unwrap().time, 5.0);
+    }
+}

@@ -1,0 +1,74 @@
+//! Discrete-event cluster simulator (the testbed substitute, DESIGN.md §3).
+//!
+//! The paper runs 32–256 worker processes on a 3-GPU server and injects
+//! stragglers by making randomly chosen workers sleep for `s×` the mean
+//! local-computation time.  We reproduce exactly that timing model with a
+//! virtual clock: per-worker compute durations are sampled from a
+//! heterogeneous speed model with Bernoulli straggler injection, and
+//! parameter exchange is charged through a latency/bandwidth link model.
+//! The gradient *values* remain real (computed by the backend); only the
+//! *durations* are simulated.
+
+mod compute;
+mod events;
+
+pub use compute::{ComputeModel, StragglerModel};
+pub use events::{Event, EventKind, EventQueue};
+
+
+/// Point-to-point link model: `latency + bytes / bandwidth` seconds.
+///
+/// Paper Appendix C.4 measures communication at 0.14–4 % of total time on a
+/// 20 GB/s fabric; the defaults mirror that regime.
+#[derive(Debug, Clone, Copy)]
+pub struct CommModel {
+    /// Per-message latency in (virtual) seconds.
+    pub latency: f64,
+    /// Link bandwidth in bytes/second.
+    pub bandwidth: f64,
+}
+
+impl Default for CommModel {
+    fn default() -> Self {
+        // 50 µs latency, 20 GB/s — the paper's measured fabric.
+        CommModel { latency: 50e-6, bandwidth: 20e9 }
+    }
+}
+
+impl CommModel {
+    /// Transfer time for one message of `bytes`.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency + bytes as f64 / self.bandwidth
+    }
+
+    /// Time for a gossip round inside a group: everyone broadcasts its
+    /// parameter vector to the group, transfers proceed in parallel links,
+    /// so the round costs one transfer per peer received serially on the
+    /// slowest node: `(m-1)` receives.
+    pub fn gossip_time(&self, group_size: usize, param_bytes: u64) -> f64 {
+        if group_size <= 1 {
+            0.0
+        } else {
+            (group_size as f64 - 1.0) * self.transfer_time(param_bytes)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_monotone_in_bytes() {
+        let c = CommModel::default();
+        assert!(c.transfer_time(1 << 20) < c.transfer_time(1 << 24));
+        assert!(c.transfer_time(0) >= c.latency);
+    }
+
+    #[test]
+    fn gossip_time_zero_for_singleton() {
+        let c = CommModel::default();
+        assert_eq!(c.gossip_time(1, 1 << 20), 0.0);
+        assert!(c.gossip_time(4, 1 << 20) > c.gossip_time(2, 1 << 20));
+    }
+}

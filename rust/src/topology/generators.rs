@@ -1,0 +1,320 @@
+//! Topology generators.  Every generator returns a *connected* graph; the
+//! random family repairs connectivity by wiring components along a random
+//! spanning chain, matching the paper's "randomly generate a connected
+//! graph" setup (§6).
+
+use super::Graph;
+use crate::util::json::Json;
+use crate::util::Rng64;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Which communication graph to build (config-selectable).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TopologyKind {
+    /// Cycle over all workers: degree 2, diameter N/2.
+    Ring,
+    /// Every pair connected (the paper's Figure 2 example setting).
+    Complete,
+    /// Erdős–Rényi `G(n, p)` with connectivity repair — the paper's
+    /// "randomly generated connected graph".
+    Random {
+        /// Edge probability.
+        p: f64,
+        /// Generator seed.
+        seed: u64,
+    },
+    /// 2-D torus grid (near-square factorization of N).
+    Torus,
+    /// Hub-and-spoke; worst case for decentralized gossip.
+    Star,
+    /// Random connected bipartite graph (what AD-PSGD formally needs).
+    Bipartite {
+        /// Generator seed.
+        seed: u64,
+    },
+}
+
+impl Default for TopologyKind {
+    fn default() -> Self {
+        TopologyKind::Random { p: 0.1, seed: 17 }
+    }
+}
+
+impl TopologyKind {
+    /// Build the graph over `n` workers.
+    pub fn build(&self, n: usize) -> Graph {
+        match *self {
+            TopologyKind::Ring => ring(n),
+            TopologyKind::Complete => complete(n),
+            TopologyKind::Random { p, seed } => random_connected(n, p, seed),
+            TopologyKind::Torus => torus(n),
+            TopologyKind::Star => star(n),
+            TopologyKind::Bipartite { seed } => bipartite(n, seed),
+        }
+    }
+
+    /// Parse the config form: `{"kind": "random", "p": 0.1, "seed": 17}` or
+    /// a bare string for parameterless kinds.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let kind = j
+            .as_str()
+            .or_else(|| j.get("kind").and_then(Json::as_str))
+            .unwrap_or_default()
+            .to_string();
+        Ok(match kind.as_str() {
+            "ring" => TopologyKind::Ring,
+            "complete" => TopologyKind::Complete,
+            "torus" => TopologyKind::Torus,
+            "star" => TopologyKind::Star,
+            "random" => TopologyKind::Random {
+                p: j.get("p").and_then(Json::as_f64).unwrap_or(0.1),
+                seed: j.get("seed").and_then(Json::as_u64).unwrap_or(17),
+            },
+            "bipartite" => TopologyKind::Bipartite {
+                seed: j.get("seed").and_then(Json::as_u64).unwrap_or(17),
+            },
+            other => bail!("unknown topology kind {other:?}"),
+        })
+    }
+
+    /// Inverse of [`Self::from_json`].
+    pub fn to_json(&self) -> Json {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        match *self {
+            TopologyKind::Ring => m.insert("kind".into(), Json::from("ring")),
+            TopologyKind::Complete => m.insert("kind".into(), Json::from("complete")),
+            TopologyKind::Torus => m.insert("kind".into(), Json::from("torus")),
+            TopologyKind::Star => m.insert("kind".into(), Json::from("star")),
+            TopologyKind::Random { p, seed } => {
+                m.insert("kind".into(), Json::from("random"));
+                m.insert("p".into(), Json::Num(p));
+                m.insert("seed".into(), Json::from(seed as usize))
+            }
+            TopologyKind::Bipartite { seed } => {
+                m.insert("kind".into(), Json::from("bipartite"));
+                m.insert("seed".into(), Json::from(seed as usize))
+            }
+        };
+        Json::Obj(m)
+    }
+}
+
+/// Cycle graph 0-1-2-…-(n-1)-0.
+pub fn ring(n: usize) -> Graph {
+    let mut g = Graph::empty(n);
+    if n < 2 {
+        return g;
+    }
+    for i in 0..n {
+        g.add_edge(i, (i + 1) % n);
+    }
+    g
+}
+
+/// Complete graph K_n.
+pub fn complete(n: usize) -> Graph {
+    let mut g = Graph::empty(n);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            g.add_edge(i, j);
+        }
+    }
+    g
+}
+
+/// Erdős–Rényi with connectivity repair: sample `G(n, p)`, then connect the
+/// components along a shuffled spanning chain so the result is connected
+/// while staying sparse.
+pub fn random_connected(n: usize, p: f64, seed: u64) -> Graph {
+    let mut rng = Rng64::seed_from_u64(seed);
+    let mut g = Graph::empty(n);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if rng.gen_f64() < p {
+                g.add_edge(i, j);
+            }
+        }
+    }
+    // Connectivity repair: union-find over components, then chain them.
+    let mut parent: Vec<usize> = (0..n).collect();
+    fn find(parent: &mut Vec<usize>, x: usize) -> usize {
+        if parent[x] != x {
+            let r = find(parent, parent[x]);
+            parent[x] = r;
+        }
+        parent[x]
+    }
+    for (i, j) in g.edges().collect::<Vec<_>>() {
+        let (ri, rj) = (find(&mut parent, i), find(&mut parent, j));
+        if ri != rj {
+            parent[ri] = rj;
+        }
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    for w in order.windows(2) {
+        let (a, b) = (w[0], w[1]);
+        let (ra, rb) = (find(&mut parent, a), find(&mut parent, b));
+        if ra != rb {
+            g.add_edge(a, b);
+            parent[ra] = rb;
+        }
+    }
+    g
+}
+
+/// 2-D torus on the most-square factorization of `n` (falls back to ring
+/// when `n` is prime).
+pub fn torus(n: usize) -> Graph {
+    let mut rows = (n as f64).sqrt() as usize;
+    while rows > 1 && n % rows != 0 {
+        rows -= 1;
+    }
+    if rows <= 1 {
+        return ring(n);
+    }
+    let cols = n / rows;
+    let mut g = Graph::empty(n);
+    let idx = |r: usize, c: usize| r * cols + c;
+    for r in 0..rows {
+        for c in 0..cols {
+            g.add_edge(idx(r, c), idx(r, (c + 1) % cols));
+            g.add_edge(idx(r, c), idx((r + 1) % rows, c));
+        }
+    }
+    g
+}
+
+/// Star with hub 0.
+pub fn star(n: usize) -> Graph {
+    let mut g = Graph::empty(n);
+    for i in 1..n {
+        g.add_edge(0, i);
+    }
+    g
+}
+
+/// Random connected bipartite graph: split vertices in two halves, add
+/// random cross edges, repair with a zig-zag chain.
+pub fn bipartite(n: usize, seed: u64) -> Graph {
+    let mut rng = Rng64::seed_from_u64(seed);
+    let half = n / 2;
+    let mut g = Graph::empty(n);
+    for a in 0..half {
+        for b in half..n {
+            if rng.gen_f64() < 0.3 {
+                g.add_edge(a, b);
+            }
+        }
+    }
+    // zig-zag spanning chain alternating sides keeps it bipartite + connected
+    if half >= 1 && n > half {
+        let right = n - half;
+        for k in 0..n.saturating_sub(1) {
+            let a = (k / 2) % half;
+            let b = half + ((k + 1) / 2) % right;
+            g.add_edge(a, b);
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_properties() {
+        let g = ring(8);
+        assert!(g.is_connected());
+        assert_eq!(g.num_edges(), 8);
+        assert!((0..8).all(|i| g.degree(i) == 2));
+    }
+
+    #[test]
+    fn complete_properties() {
+        let g = complete(6);
+        assert!(g.is_connected());
+        assert_eq!(g.num_edges(), 15);
+        assert_eq!(g.diameter(), 1);
+    }
+
+    #[test]
+    fn random_always_connected_even_p_zero() {
+        for seed in 0..20 {
+            let g = random_connected(32, 0.0, seed);
+            assert!(g.is_connected(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn random_deterministic_per_seed() {
+        let a = random_connected(16, 0.2, 5);
+        let b = random_connected(16, 0.2, 5);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn torus_properties() {
+        let g = torus(16); // 4x4
+        assert!(g.is_connected());
+        assert!((0..16).all(|i| g.degree(i) == 4));
+    }
+
+    #[test]
+    fn torus_prime_falls_back_to_ring() {
+        let g = torus(7);
+        assert!(g.is_connected());
+        assert_eq!(g.num_edges(), 7);
+    }
+
+    #[test]
+    fn star_properties() {
+        let g = star(10);
+        assert!(g.is_connected());
+        assert_eq!(g.degree(0), 9);
+        assert_eq!(g.diameter(), 2);
+    }
+
+    #[test]
+    fn bipartite_connected_and_two_colorable() {
+        for seed in 0..10 {
+            let g = bipartite(20, seed);
+            assert!(g.is_connected(), "seed {seed}");
+            assert!(g.is_bipartite(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn kind_builds() {
+        for kind in [
+            TopologyKind::Ring,
+            TopologyKind::Complete,
+            TopologyKind::Random { p: 0.1, seed: 1 },
+            TopologyKind::Torus,
+            TopologyKind::Star,
+            TopologyKind::Bipartite { seed: 1 },
+        ] {
+            assert!(kind.build(12).is_connected(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for kind in [
+            TopologyKind::Ring,
+            TopologyKind::Random { p: 0.25, seed: 9 },
+            TopologyKind::Bipartite { seed: 3 },
+        ] {
+            let back = TopologyKind::from_json(&kind.to_json()).unwrap();
+            assert_eq!(back, kind);
+        }
+        // bare-string form
+        assert_eq!(
+            TopologyKind::from_json(&Json::from("ring")).unwrap(),
+            TopologyKind::Ring
+        );
+        assert!(TopologyKind::from_json(&Json::from("hypercube")).is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! Communication graphs for the decentralized system (paper §2).
+//!
+//! The decentralized system is an undirected graph `G = (N, E)`; an edge
+//! `(i, j)` means workers i and j can exchange parameters.  The paper
+//! assumes `G` is (strongly) connected; all generators here guarantee it.
+
+pub mod generators;
+
+pub use generators::TopologyKind;
+
+use std::collections::HashSet;
+
+/// Undirected communication graph with adjacency lists and an edge set.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Graph {
+    n: usize,
+    adj: Vec<Vec<usize>>,
+    edges: HashSet<(usize, usize)>, // normalized (min, max)
+}
+
+/// Normalize an undirected edge to `(min, max)` form.
+#[inline]
+pub fn norm_edge(i: usize, j: usize) -> (usize, usize) {
+    if i < j {
+        (i, j)
+    } else {
+        (j, i)
+    }
+}
+
+impl Graph {
+    /// Empty graph over `n` vertices.
+    pub fn empty(n: usize) -> Self {
+        Graph { n, adj: vec![Vec::new(); n], edges: HashSet::new() }
+    }
+
+    /// Build from an explicit edge list (self-loops and duplicates ignored).
+    pub fn from_edges(n: usize, edges: &[(usize, usize)]) -> Self {
+        let mut g = Graph::empty(n);
+        for &(i, j) in edges {
+            g.add_edge(i, j);
+        }
+        g
+    }
+
+    /// Insert the undirected edge `(i, j)`; no-op for self-loops/duplicates.
+    pub fn add_edge(&mut self, i: usize, j: usize) {
+        assert!(i < self.n && j < self.n, "edge ({i},{j}) out of range n={}", self.n);
+        if i == j {
+            return;
+        }
+        if self.edges.insert(norm_edge(i, j)) {
+            self.adj[i].push(j);
+            self.adj[j].push(i);
+        }
+    }
+
+    /// Number of vertices.
+    pub fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    /// Number of undirected edges.
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Neighbors of `i` (excluding `i` itself).
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.adj[i]
+    }
+
+    /// Degree of `i`.
+    pub fn degree(&self, i: usize) -> usize {
+        self.adj[i].len()
+    }
+
+    /// Whether the undirected edge `(i, j)` exists.
+    pub fn has_edge(&self, i: usize, j: usize) -> bool {
+        i != j && self.edges.contains(&norm_edge(i, j))
+    }
+
+    /// Iterator over normalized edges.
+    pub fn edges(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.edges.iter().copied()
+    }
+
+    /// BFS connectivity over all `n` vertices.  For undirected graphs this
+    /// is exactly the paper's strong-connectivity assumption.
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(v) = stack.pop() {
+            for &u in &self.adj[v] {
+                if !seen[u] {
+                    seen[u] = true;
+                    count += 1;
+                    stack.push(u);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Connectivity of the subgraph induced by `vertices` using only
+    /// `edge_set` edges.  Used by Pathsearch to decide epoch completion.
+    pub fn subgraph_connected(
+        n: usize,
+        vertices: &HashSet<usize>,
+        edge_set: &HashSet<(usize, usize)>,
+    ) -> bool {
+        if vertices.is_empty() {
+            return false;
+        }
+        let mut adj = vec![Vec::new(); n];
+        for &(i, j) in edge_set {
+            adj[i].push(j);
+            adj[j].push(i);
+        }
+        let start = *vertices.iter().next().unwrap();
+        let mut seen = HashSet::new();
+        seen.insert(start);
+        let mut stack = vec![start];
+        while let Some(v) = stack.pop() {
+            for &u in &adj[v] {
+                if vertices.contains(&u) && seen.insert(u) {
+                    stack.push(u);
+                }
+            }
+        }
+        seen.len() == vertices.len()
+    }
+
+    /// Two-coloring check (bipartite graphs are what AD-PSGD formally
+    /// requires to avoid deadlock; see paper §7).
+    pub fn is_bipartite(&self) -> bool {
+        let mut color = vec![-1i8; self.n];
+        for s in 0..self.n {
+            if color[s] != -1 {
+                continue;
+            }
+            color[s] = 0;
+            let mut stack = vec![s];
+            while let Some(v) = stack.pop() {
+                for &u in &self.adj[v] {
+                    if color[u] == -1 {
+                        color[u] = 1 - color[v];
+                        stack.push(u);
+                    } else if color[u] == color[v] {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// Graph diameter via BFS from every vertex (test/diagnostic helper;
+    /// O(V·E), fine for the sizes we simulate).
+    pub fn diameter(&self) -> usize {
+        let mut diam = 0;
+        for s in 0..self.n {
+            let mut dist = vec![usize::MAX; self.n];
+            dist[s] = 0;
+            let mut q = std::collections::VecDeque::from([s]);
+            while let Some(v) = q.pop_front() {
+                for &u in &self.adj[v] {
+                    if dist[u] == usize::MAX {
+                        dist[u] = dist[v] + 1;
+                        q.push_back(u);
+                    }
+                }
+            }
+            diam = diam.max(dist.iter().copied().filter(|&d| d != usize::MAX).max().unwrap_or(0));
+        }
+        diam
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_graph_connected_iff_tiny() {
+        assert!(Graph::empty(0).is_connected());
+        assert!(Graph::empty(1).is_connected());
+        assert!(!Graph::empty(2).is_connected());
+    }
+
+    #[test]
+    fn add_edge_dedup_and_self_loop() {
+        let mut g = Graph::empty(3);
+        g.add_edge(0, 1);
+        g.add_edge(1, 0);
+        g.add_edge(1, 1);
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.degree(1), 1);
+        assert!(!g.has_edge(1, 1));
+    }
+
+    #[test]
+    fn path_graph_connectivity_and_diameter() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        assert!(g.is_connected());
+        assert_eq!(g.diameter(), 3);
+        assert!(g.is_bipartite());
+    }
+
+    #[test]
+    fn triangle_not_bipartite() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2), (2, 0)]);
+        assert!(!g.is_bipartite());
+        assert_eq!(g.diameter(), 1);
+    }
+
+    #[test]
+    fn subgraph_connectivity() {
+        let verts: HashSet<usize> = [0, 1, 2].into_iter().collect();
+        let edges: HashSet<(usize, usize)> = [(0, 1), (1, 2)].into_iter().collect();
+        assert!(Graph::subgraph_connected(5, &verts, &edges));
+        let edges2: HashSet<(usize, usize)> = [(0, 1)].into_iter().collect();
+        assert!(!Graph::subgraph_connected(5, &verts, &edges2));
+    }
+
+    #[test]
+    fn disconnected_detected() {
+        let g = Graph::from_edges(4, &[(0, 1), (2, 3)]);
+        assert!(!g.is_connected());
+    }
+}

@@ -1,0 +1,7 @@
+//! Self-contained utility substrates (this image vendors no `rand`,
+//! `serde_json` or CLI crates, so we build exactly what the system needs).
+
+pub mod json;
+pub mod rng;
+
+pub use rng::Rng64;

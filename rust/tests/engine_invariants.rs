@@ -1,0 +1,168 @@
+//! Integration: randomized property tests over engine/consensus invariants
+//! (the offline dependency set has no proptest, so these sweep seeds with
+//! the in-tree PRNG — same idea, explicit generators).
+
+use dsgd_aau::algorithms::AlgorithmKind;
+use dsgd_aau::config::{BackendKind, ExperimentConfig};
+use dsgd_aau::consensus::GroupWeights;
+use dsgd_aau::coordinator::run_experiment;
+use dsgd_aau::engine::native_weighted_average;
+use dsgd_aau::pathsearch::PathSearch;
+use dsgd_aau::topology::generators::random_connected;
+use dsgd_aau::util::Rng64;
+
+/// Property: Metropolis weights on any induced group of any connected
+/// graph are doubly stochastic, symmetric and non-negative.
+#[test]
+fn prop_metropolis_doubly_stochastic() {
+    for seed in 0..40u64 {
+        let mut rng = Rng64::seed_from_u64(seed);
+        let n = 4 + rng.gen_range(28);
+        let g = random_connected(n, 0.05 + rng.gen_f64() * 0.4, seed);
+        let k = 2 + rng.gen_range(n - 2);
+        let pool: Vec<usize> = (0..n).collect();
+        let members = rng.sample(&pool, k);
+        let gw = GroupWeights::metropolis(&g, &members);
+        assert!(gw.stochasticity_error() < 1e-5, "seed {seed}");
+        assert!(gw.is_non_negative(), "seed {seed}");
+        for a in 0..gw.len() {
+            for b in 0..gw.len() {
+                assert!((gw.weights[a][b] - gw.weights[b][a]).abs() < 1e-6);
+            }
+        }
+    }
+}
+
+/// Property: a doubly-stochastic gossip round preserves the group mean
+/// (parameter mass conservation — what makes w̄ a meaningful estimate).
+#[test]
+fn prop_gossip_preserves_mean() {
+    for seed in 0..25u64 {
+        let mut rng = Rng64::seed_from_u64(seed ^ 0xAB);
+        let n = 12;
+        let d = 64;
+        let g = random_connected(n, 0.3, seed);
+        let pool: Vec<usize> = (0..n).collect();
+        let k = 2 + rng.gen_range(n - 2);
+        let members = rng.sample(&pool, k);
+        let gw = GroupWeights::metropolis(&g, &members);
+        let vectors: Vec<Vec<f32>> = (0..gw.len())
+            .map(|_| (0..d).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let rows: Vec<&[f32]> = vectors.iter().map(|v| v.as_slice()).collect();
+        let new_vectors: Vec<Vec<f32>> =
+            (0..gw.len()).map(|a| native_weighted_average(&rows, &gw.weights[a])).collect();
+        for dim in 0..d {
+            let before: f32 = vectors.iter().map(|v| v[dim]).sum();
+            let after: f32 = new_vectors.iter().map(|v| v[dim]).sum();
+            assert!(
+                (before - after).abs() < 1e-3,
+                "seed {seed} dim {dim}: mass {before} -> {after}"
+            );
+        }
+    }
+}
+
+/// Property: pathsearch epochs terminate on random connected graphs with
+/// random ready-set arrival orders, and the accumulated subgraph is a
+/// subset of E spanning all of N.
+#[test]
+fn prop_pathsearch_epoch_terminates_and_spans() {
+    for seed in 0..30u64 {
+        let mut rng = Rng64::seed_from_u64(seed ^ 0xCD);
+        let n = 6 + rng.gen_range(26);
+        let g = random_connected(n, 0.1 + rng.gen_f64() * 0.3, seed);
+        let mut ps = PathSearch::new();
+        let mut guard = 0usize;
+        while !ps.is_complete(&g) {
+            let pool: Vec<usize> = (0..n).collect();
+            let k = 2 + rng.gen_range(n - 1);
+            let ready = rng.sample(&pool, k);
+            if let Some((a, b)) = ps.find_novel_pair(&g, &ready) {
+                assert!(g.has_edge(a, b), "absorbed edges must be E edges");
+                ps.absorb_group(&g, &ready);
+            }
+            guard += 1;
+            assert!(guard < 20 * (g.num_edges() + n), "seed {seed}: epoch diverged");
+        }
+        assert_eq!(ps.num_vertices(), n, "V must equal N at completion");
+        ps.reset_epoch();
+        assert_eq!(ps.num_edges(), 0);
+    }
+}
+
+/// Property: engine runs are deterministic per seed and respect budgets.
+#[test]
+fn prop_runs_deterministic_and_budgeted() {
+    for (i, alg) in AlgorithmKind::all().into_iter().enumerate() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.num_workers = 6 + i;
+        cfg.algorithm = alg;
+        cfg.backend = BackendKind::Quadratic;
+        cfg.max_iterations = 200;
+        cfg.eval_every = 40;
+        cfg.mean_compute = 0.02;
+        cfg.seed = 99 + i as u64;
+        let a = run_experiment(&cfg).unwrap();
+        let b = run_experiment(&cfg).unwrap();
+        assert_eq!(a.iterations, b.iterations, "{}", alg.label());
+        assert_eq!(a.final_loss(), b.final_loss(), "{}", alg.label());
+        assert_eq!(
+            a.recorder.total_bytes(),
+            b.recorder.total_bytes(),
+            "{}",
+            alg.label()
+        );
+        assert!(a.iterations >= cfg.max_iterations, "{}", alg.label());
+        // virtual time strictly increases and curve is time-monotone
+        let mut last = -1.0f64;
+        for p in &a.recorder.curve {
+            assert!(p.time >= last, "{}: time went backwards", alg.label());
+            last = p.time;
+        }
+    }
+}
+
+/// Property: a time budget is honored within one compute duration.
+#[test]
+fn prop_time_budget_respected() {
+    for alg in [AlgorithmKind::DsgdAau, AlgorithmKind::AdPsgd, AlgorithmKind::Agp] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.num_workers = 8;
+        cfg.algorithm = alg;
+        cfg.backend = BackendKind::Quadratic;
+        cfg.max_iterations = u64::MAX / 2;
+        cfg.time_budget = Some(5.0);
+        cfg.eval_every = 1000;
+        cfg.mean_compute = 0.01;
+        let s = run_experiment(&cfg).unwrap();
+        // allow one straggler-inflated step past the budget
+        let slack = cfg.mean_compute * cfg.straggler.slowdown * 20.0;
+        assert!(
+            s.virtual_time <= 5.0 + slack,
+            "{}: {} exceeds budget",
+            alg.label(),
+            s.virtual_time
+        );
+    }
+}
+
+/// Property: communication accounting is consistent — bytes grow with
+/// iterations and every gossip round counts at least a pair.
+#[test]
+fn prop_comm_accounting_consistent() {
+    for alg in AlgorithmKind::all() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.num_workers = 8;
+        cfg.algorithm = alg;
+        cfg.backend = BackendKind::Quadratic;
+        cfg.max_iterations = 150;
+        cfg.eval_every = 50;
+        cfg.mean_compute = 0.01;
+        let s = run_experiment(&cfg).unwrap();
+        assert!(s.recorder.param_bytes > 0, "{}", alg.label());
+        assert!(s.recorder.gossip_rounds > 0, "{}", alg.label());
+        assert!(s.recorder.mean_group_size() >= 2.0, "{}", alg.label());
+        assert!(s.recorder.local_steps > 0, "{}", alg.label());
+    }
+}
