@@ -1,0 +1,113 @@
+//! Churn playground: time-varying communication graphs end to end.
+//!
+//! 1. Materializes a flaky-link scenario into an explicit JSON schedule
+//!    (the `topology_updates.json` idea), saves + reloads it, and replays
+//!    it to show the schedule is a faithful, portable artifact.
+//! 2. Runs DSGD-AAU against synchronous DSGD on a static graph and under
+//!    three churn scenarios, showing that adaptive asynchronous updates
+//!    keep converging while the graph shifts underneath them.
+//!
+//! ```text
+//! cargo run --release --example churn_demo
+//! ```
+
+use dsgd_aau::algorithms::AlgorithmKind;
+use dsgd_aau::churn::{apply_mutations, materialize, ChurnConfig, ChurnKind, TopologyTimeline};
+use dsgd_aau::config::{BackendKind, ExperimentConfig};
+use dsgd_aau::coordinator::run_experiment;
+use dsgd_aau::topology::TopologyKind;
+
+fn main() -> anyhow::Result<()> {
+    let n = 16;
+    let topology = TopologyKind::Random { p: 0.25, seed: 3 };
+
+    // --- 1. schedules are explicit, saveable artifacts -----------------
+    let flaky = ChurnConfig {
+        kind: ChurnKind::FlakyLinks { rate: 2.0, mean_downtime: 1.0 },
+        seed: Some(42),
+    };
+    let g0 = topology.build(n);
+    let timeline = materialize(&flaky, n, 0, &g0, 20.0)?;
+    println!(
+        "materialized {} change batches / {} mutations over 20 virtual seconds",
+        timeline.len(),
+        timeline.num_mutations()
+    );
+    for e in timeline.entries.iter().take(4) {
+        println!("  t={:<6.2} {:?}", e.time, e.mutations);
+    }
+
+    let path = std::env::temp_dir().join("churn_demo_schedule.json");
+    timeline.save(&path)?;
+    let reloaded = TopologyTimeline::load(&path)?;
+    anyhow::ensure!(reloaded == timeline, "schedule must round-trip through JSON");
+
+    let mut g = g0.clone();
+    for e in &reloaded.entries {
+        apply_mutations(&mut g, &e.mutations);
+        anyhow::ensure!(g.is_connected(), "repair keeps the graph connected");
+    }
+    println!(
+        "replayed schedule: {} -> {} edges, still connected\n",
+        g0.num_edges(),
+        g.num_edges()
+    );
+    std::fs::remove_file(&path).ok();
+
+    // --- 2. training under churn ---------------------------------------
+    let scenarios: Vec<(&str, ChurnConfig)> = vec![
+        ("static", ChurnConfig::default()),
+        ("flaky links", flaky.clone()),
+        (
+            "mobile workers",
+            ChurnConfig {
+                kind: ChurnKind::Mobile { movers: 4, interval: 0.5, degree: 3 },
+                seed: None,
+            },
+        ),
+        (
+            "partition/heal",
+            ChurnConfig {
+                kind: ChurnKind::PartitionHeal { period: 4.0, downtime: 1.5 },
+                seed: None,
+            },
+        ),
+    ];
+
+    println!(
+        "{:<16} {:>10} {:>8} {:>9} {:>9} {:>9} {:>9}",
+        "scenario", "algo", "iters", "loss", "gap", "changes", "deferred"
+    );
+    for (label, churn) in &scenarios {
+        for alg in [AlgorithmKind::DsgdAau, AlgorithmKind::DsgdSync] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.name = format!("churn_demo_{label}");
+            cfg.num_workers = n;
+            cfg.topology = topology;
+            cfg.algorithm = alg;
+            cfg.backend = BackendKind::Quadratic;
+            cfg.churn = churn.clone();
+            cfg.max_iterations = 600;
+            cfg.eval_every = 150;
+            cfg.mean_compute = 0.01;
+            let s = run_experiment(&cfg)?;
+            println!(
+                "{:<16} {:>10} {:>8} {:>9.4} {:>9.2e} {:>9} {:>9}",
+                label,
+                s.algorithm,
+                s.iterations,
+                s.final_loss(),
+                s.consensus_gap,
+                s.recorder.topology_changes,
+                s.recorder.mutations_deferred,
+            );
+        }
+    }
+    println!(
+        "\nReading: DSGD-AAU's Pathsearch re-discovers novel edges as the \
+         graph shifts, so churn costs it little; synchronous DSGD pays the \
+         same barrier either way but its cached Metropolis weights now \
+         refresh on every change."
+    );
+    Ok(())
+}

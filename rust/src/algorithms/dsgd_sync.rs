@@ -6,7 +6,6 @@
 //! straggler-bound baseline that Figure 5's speedups are measured against.
 
 use super::UpdateRule;
-use crate::consensus::GroupWeights;
 use crate::engine::EngineCore;
 use crate::WorkerId;
 use std::collections::HashSet;
@@ -40,8 +39,9 @@ impl UpdateRule for DsgdSync {
         for &m in &all {
             core.apply_gradient(m);
         }
-        let gw = GroupWeights::metropolis(&core.graph, &all);
-        core.gossip(&gw);
+        // Full-fleet Metropolis round; the engine caches the weight matrix
+        // and recomputes it only after a topology change.
+        core.gossip_all();
         core.advance_iteration();
 
         // Communication round: every worker exchanges with its neighbors;

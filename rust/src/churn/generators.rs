@@ -1,0 +1,680 @@
+//! Churn scenario generators: seeded processes that emit topology
+//! mutations over virtual time, plus schedule replay.
+//!
+//! Three synthetic scenario families (the axes the nebulastream
+//! topology-change generator sweeps — rate of change, number of mobile
+//! nodes, planned link schedules) and a replay mode:
+//!
+//! * **flaky links** — at a configurable rate a random non-bridge link
+//!   fails, coming back after ~`mean_downtime` seconds;
+//! * **mobile workers** — a fixed cohort of workers re-wires its
+//!   neighborhood on an interval (old links dropped, fresh ones attached);
+//! * **partition/heal** — every `period` a random bisection cuts all
+//!   cross links (connectivity repair retains one bridge, modeling the
+//!   last degraded route) and heals `downtime` seconds later;
+//! * **schedule** — replay a [`TopologyTimeline`] JSON file.
+//!
+//! All randomness flows through [`Rng64`] streams seeded from
+//! `ExperimentConfig::seed_for("churn")` (overridable per config), so
+//! runs are exactly reproducible and [`materialize`] emits the same
+//! evolution the engine will execute.
+
+use super::{apply_mutations, TopologyMutation, TopologyTimeline};
+use crate::topology::Graph;
+use crate::util::json::Json;
+use crate::util::Rng64;
+use crate::WorkerId;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::collections::HashSet;
+use std::path::Path;
+
+/// Which churn scenario to run (config-selectable).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChurnKind {
+    /// Static graph (the paper's setting).
+    None,
+    /// Random link failures at `rate` events/second; each failed link
+    /// restores after roughly `mean_downtime` seconds.
+    FlakyLinks {
+        /// Link-failure events per virtual second.
+        rate: f64,
+        /// Mean seconds a failed link stays down.
+        mean_downtime: f64,
+    },
+    /// `movers` mobile workers; every `interval` seconds the next one
+    /// re-wires to `degree` fresh random neighbors.
+    Mobile {
+        /// Size of the mobile cohort.
+        movers: usize,
+        /// Seconds between re-wiring events.
+        interval: f64,
+        /// Links each mobile worker maintains after a move.
+        degree: usize,
+    },
+    /// Every `period` seconds a random bisection cuts the cross links
+    /// (one repaired bridge survives); the cut heals `downtime` seconds
+    /// later.
+    PartitionHeal {
+        /// Seconds between partition events.
+        period: f64,
+        /// Seconds the partition lasts before healing.
+        downtime: f64,
+    },
+    /// Replay a saved [`TopologyTimeline`] JSON schedule.
+    Schedule {
+        /// Path to the schedule file.
+        path: String,
+    },
+}
+
+impl Default for ChurnKind {
+    fn default() -> Self {
+        ChurnKind::None
+    }
+}
+
+/// Churn section of the experiment config.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ChurnConfig {
+    /// Scenario kind and parameters.
+    pub kind: ChurnKind,
+    /// Generator seed override; defaults to `seed_for("churn")`.
+    pub seed: Option<u64>,
+}
+
+impl ChurnConfig {
+    /// Parse the config form: a bare kind string (all parameters default)
+    /// or an object like `{"kind": "flaky_links", "rate": 2.0,
+    /// "mean_downtime": 1.0}`.  Like `ExperimentConfig::from_json`,
+    /// unknown keys and wrongly-typed values are rejected rather than
+    /// silently defaulted.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let kind_token = j
+            .as_str()
+            .or_else(|| j.get("kind").and_then(Json::as_str))
+            .context("churn must be a kind string or an object with a \"kind\" field")?
+            .to_string();
+        let f = |key: &str, default: f64| -> Result<f64> {
+            match j.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_f64()
+                    .with_context(|| format!("churn {key} must be a number")),
+            }
+        };
+        let u = |key: &str, default: usize| -> Result<usize> {
+            match j.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_usize()
+                    .with_context(|| format!("churn {key} must be a non-negative integer")),
+            }
+        };
+        let (kind, allowed): (ChurnKind, &[&str]) = match kind_token.as_str() {
+            "none" => (ChurnKind::None, &[]),
+            "flaky_links" => (
+                ChurnKind::FlakyLinks {
+                    rate: f("rate", 1.0)?,
+                    mean_downtime: f("mean_downtime", 1.0)?,
+                },
+                &["rate", "mean_downtime"],
+            ),
+            "mobile" => (
+                ChurnKind::Mobile {
+                    movers: u("movers", 2)?,
+                    interval: f("interval", 1.0)?,
+                    degree: u("degree", 2)?,
+                },
+                &["movers", "interval", "degree"],
+            ),
+            "partition_heal" => (
+                ChurnKind::PartitionHeal {
+                    period: f("period", 10.0)?,
+                    downtime: f("downtime", 3.0)?,
+                },
+                &["period", "downtime"],
+            ),
+            "schedule" => (
+                ChurnKind::Schedule {
+                    path: j
+                        .get("path")
+                        .and_then(Json::as_str)
+                        .context("schedule churn needs a \"path\" string")?
+                        .to_string(),
+                },
+                &["path"],
+            ),
+            other => bail!(
+                "unknown churn kind {other:?} (none|flaky_links|mobile|partition_heal|schedule)"
+            ),
+        };
+        let seed = match j.get("seed") {
+            None => None,
+            Some(v) => {
+                Some(v.as_u64().context("churn seed must be a non-negative integer")?)
+            }
+        };
+        if let Some(obj) = j.as_obj() {
+            for key in obj.keys() {
+                if key != "kind" && key != "seed" && !allowed.contains(&key.as_str()) {
+                    bail!("unknown churn key {key:?} for kind {kind_token:?}");
+                }
+            }
+        }
+        Ok(ChurnConfig { kind, seed })
+    }
+
+    /// Inverse of [`Self::from_json`].
+    pub fn to_json(&self) -> Json {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        match &self.kind {
+            ChurnKind::None => {
+                m.insert("kind".into(), Json::from("none"));
+            }
+            ChurnKind::FlakyLinks { rate, mean_downtime } => {
+                m.insert("kind".into(), Json::from("flaky_links"));
+                m.insert("rate".into(), Json::Num(*rate));
+                m.insert("mean_downtime".into(), Json::Num(*mean_downtime));
+            }
+            ChurnKind::Mobile { movers, interval, degree } => {
+                m.insert("kind".into(), Json::from("mobile"));
+                m.insert("movers".into(), Json::from(*movers));
+                m.insert("interval".into(), Json::Num(*interval));
+                m.insert("degree".into(), Json::from(*degree));
+            }
+            ChurnKind::PartitionHeal { period, downtime } => {
+                m.insert("kind".into(), Json::from("partition_heal"));
+                m.insert("period".into(), Json::Num(*period));
+                m.insert("downtime".into(), Json::Num(*downtime));
+            }
+            ChurnKind::Schedule { path } => {
+                m.insert("kind".into(), Json::from("schedule"));
+                m.insert("path".into(), Json::from(path.as_str()));
+            }
+        }
+        if let Some(s) = self.seed {
+            m.insert("seed".into(), Json::from(s as usize));
+        }
+        Json::Obj(m)
+    }
+
+    /// Parameter sanity checks (called from `ExperimentConfig::validate`).
+    pub fn validate(&self) -> Result<()> {
+        match &self.kind {
+            ChurnKind::None => {}
+            ChurnKind::FlakyLinks { rate, mean_downtime } => {
+                anyhow::ensure!(*rate > 0.0, "flaky_links rate must be positive");
+                anyhow::ensure!(*mean_downtime > 0.0, "mean_downtime must be positive");
+            }
+            ChurnKind::Mobile { movers, interval, degree } => {
+                anyhow::ensure!(*movers >= 1, "mobile movers must be >= 1");
+                anyhow::ensure!(*interval > 0.0, "mobile interval must be positive");
+                anyhow::ensure!(*degree >= 1, "mobile degree must be >= 1");
+            }
+            ChurnKind::PartitionHeal { period, downtime } => {
+                anyhow::ensure!(*period > 0.0, "partition period must be positive");
+                anyhow::ensure!(
+                    *downtime > 0.0 && *downtime < *period,
+                    "partition downtime must lie in (0, period)"
+                );
+            }
+            ChurnKind::Schedule { path } => {
+                anyhow::ensure!(!path.is_empty(), "schedule churn needs a path");
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether the config describes an active (non-static) scenario.
+    pub fn is_active(&self) -> bool {
+        self.kind != ChurnKind::None
+    }
+}
+
+/// Runtime churn process: the engine asks it *when* the next change is
+/// due and *what* mutations fire at that time.
+#[derive(Debug)]
+pub struct ChurnModel {
+    inner: Inner,
+    next: Option<f64>,
+}
+
+#[derive(Debug)]
+enum Inner {
+    Inactive,
+    Flaky {
+        dt: f64,
+        mean_downtime: f64,
+        rng: Rng64,
+        /// Failed links and their restore times.
+        down: Vec<((usize, usize), f64)>,
+        /// Next failure tick (failures stay on the `dt` grid; restores
+        /// fire at their own sampled times).
+        next_fail: f64,
+    },
+    Mobile {
+        movers: Vec<WorkerId>,
+        interval: f64,
+        degree: usize,
+        rng: Rng64,
+        cursor: usize,
+    },
+    Partition {
+        period: f64,
+        downtime: f64,
+        rng: Rng64,
+        /// Cross links cut by the active partition (restored on heal).
+        cut: Vec<(usize, usize)>,
+        healing: bool,
+    },
+    Replay {
+        timeline: TopologyTimeline,
+        cursor: usize,
+    },
+}
+
+impl ChurnModel {
+    /// A model that never fires (static topology).
+    pub fn inactive() -> Self {
+        ChurnModel { inner: Inner::Inactive, next: None }
+    }
+
+    /// Build from the config section.  `derived_seed` should come from
+    /// `ExperimentConfig::seed_for("churn")`; an explicit `seed` in the
+    /// config overrides it.
+    pub fn from_config(cfg: &ChurnConfig, num_workers: usize, derived_seed: u64) -> Result<Self> {
+        cfg.validate()?;
+        let seed = cfg.seed.unwrap_or(derived_seed);
+        Ok(match &cfg.kind {
+            ChurnKind::None => ChurnModel::inactive(),
+            ChurnKind::FlakyLinks { rate, mean_downtime } => {
+                let dt = 1.0 / *rate;
+                ChurnModel {
+                    inner: Inner::Flaky {
+                        dt,
+                        mean_downtime: *mean_downtime,
+                        rng: Rng64::seed_from_u64(seed),
+                        down: Vec::new(),
+                        next_fail: dt,
+                    },
+                    next: Some(dt),
+                }
+            }
+            ChurnKind::Mobile { movers, interval, degree } => {
+                anyhow::ensure!(
+                    *movers <= num_workers,
+                    "mobile movers ({movers}) exceeds the fleet size ({num_workers})"
+                );
+                anyhow::ensure!(
+                    *degree < num_workers,
+                    "mobile degree ({degree}) needs at least degree+1 workers ({num_workers})"
+                );
+                let mut rng = Rng64::seed_from_u64(seed);
+                let pool: Vec<WorkerId> = (0..num_workers).collect();
+                let movers = rng.sample(&pool, *movers);
+                ChurnModel {
+                    inner: Inner::Mobile {
+                        movers,
+                        interval: *interval,
+                        degree: *degree,
+                        rng,
+                        cursor: 0,
+                    },
+                    next: Some(*interval),
+                }
+            }
+            ChurnKind::PartitionHeal { period, downtime } => ChurnModel {
+                inner: Inner::Partition {
+                    period: *period,
+                    downtime: *downtime,
+                    rng: Rng64::seed_from_u64(seed),
+                    cut: Vec::new(),
+                    healing: false,
+                },
+                next: Some(*period),
+            },
+            ChurnKind::Schedule { path } => {
+                Self::replay(TopologyTimeline::load(Path::new(path))?)
+            }
+        })
+    }
+
+    /// Replay an in-memory schedule (used by tests and demos).
+    pub fn replay(timeline: TopologyTimeline) -> Self {
+        let next = timeline.entries.first().map(|e| e.time);
+        ChurnModel { inner: Inner::Replay { timeline, cursor: 0 }, next }
+    }
+
+    /// Whether any future change is pending.
+    pub fn is_active(&self) -> bool {
+        self.next.is_some()
+    }
+
+    /// Virtual time of the next change, if any.
+    pub fn next_change(&self) -> Option<f64> {
+        self.next
+    }
+
+    /// Emit the mutations due at `now` (the time previously returned by
+    /// [`Self::next_change`]) against the current graph `g`, advancing the
+    /// process.  The caller applies them via
+    /// [`apply_mutations`](super::apply_mutations).
+    pub fn step(&mut self, now: f64, g: &Graph) -> Vec<TopologyMutation> {
+        match &mut self.inner {
+            Inner::Inactive => {
+                self.next = None;
+                Vec::new()
+            }
+            Inner::Flaky { dt, mean_downtime, rng, down, next_fail } => {
+                let mut muts = Vec::new();
+                // restore links whose downtime expired
+                down.retain(|&((i, j), until)| {
+                    if until <= now + 1e-9 {
+                        muts.push(TopologyMutation::AddEdge(i, j));
+                        false
+                    } else {
+                        true
+                    }
+                });
+                // failure ticks stay on the 1/rate grid; this step may be
+                // a pure restore event between ticks
+                if now + 1e-9 >= *next_fail {
+                    // fail one random non-bridge link (sorted for
+                    // determinism: the edge set iterates in hash order)
+                    let mut edges: Vec<(usize, usize)> = g.edges().collect();
+                    edges.sort_unstable();
+                    for _ in 0..8 {
+                        if edges.is_empty() {
+                            break;
+                        }
+                        let idx = rng.gen_range(edges.len());
+                        let (i, j) = edges[idx];
+                        if g.would_disconnect(i, j) {
+                            edges.swap_remove(idx);
+                            continue;
+                        }
+                        muts.push(TopologyMutation::RemoveEdge(i, j));
+                        let downtime = *mean_downtime * (0.5 + rng.gen_f64());
+                        down.push(((i, j), now + downtime));
+                        break;
+                    }
+                    *next_fail = now + *dt;
+                }
+                // wake at whichever comes first: the next failure tick or
+                // the earliest pending restore (so downtime is honored
+                // even when 1/rate exceeds it)
+                let earliest_restore =
+                    down.iter().map(|&(_, until)| until).fold(f64::INFINITY, f64::min);
+                self.next = Some(next_fail.min(earliest_restore));
+                muts
+            }
+            Inner::Mobile { movers, interval, degree, rng, cursor } => {
+                let w = movers[*cursor % movers.len()];
+                *cursor += 1;
+                let pool: Vec<WorkerId> =
+                    (0..g.num_vertices()).filter(|&x| x != w).collect();
+                let fresh = rng.sample(&pool, *degree);
+                // attach first, then drop the stale links: the new
+                // neighborhood is in place before the old one goes away
+                let mut muts = vec![TopologyMutation::Attach(w, fresh.clone())];
+                for &old in g.neighbors(w) {
+                    if !fresh.contains(&old) {
+                        muts.push(TopologyMutation::RemoveEdge(w, old));
+                    }
+                }
+                self.next = Some(now + *interval);
+                muts
+            }
+            Inner::Partition { period, downtime, rng, cut, healing } => {
+                if *healing {
+                    *healing = false;
+                    self.next = Some(now - *downtime + *period);
+                    cut.drain(..).map(|(i, j)| TopologyMutation::AddEdge(i, j)).collect()
+                } else {
+                    let n = g.num_vertices();
+                    let mut ids: Vec<usize> = (0..n).collect();
+                    rng.shuffle(&mut ids);
+                    let side_a: HashSet<usize> = ids[..n / 2].iter().copied().collect();
+                    let mut edges: Vec<(usize, usize)> = g.edges().collect();
+                    edges.sort_unstable();
+                    let mut muts = Vec::new();
+                    for (i, j) in edges {
+                        if side_a.contains(&i) != side_a.contains(&j) {
+                            muts.push(TopologyMutation::RemoveEdge(i, j));
+                            cut.push((i, j));
+                        }
+                    }
+                    *healing = true;
+                    self.next = Some(now + *downtime);
+                    muts
+                }
+            }
+            Inner::Replay { timeline, cursor } => {
+                let mut muts = Vec::new();
+                while let Some(e) = timeline.entries.get(*cursor) {
+                    if e.time <= now + 1e-9 {
+                        muts.extend(e.mutations.iter().cloned());
+                        *cursor += 1;
+                    } else {
+                        break;
+                    }
+                }
+                self.next = timeline.entries.get(*cursor).map(|e| e.time);
+                muts
+            }
+        }
+    }
+}
+
+/// Materialize the evolution `cfg` would produce on `initial` up to
+/// `horizon` virtual seconds, as a saveable [`TopologyTimeline`].
+/// Replaying the result through [`apply_mutations`] reproduces the exact
+/// same graph evolution the engine executes with the generator.
+pub fn materialize(
+    cfg: &ChurnConfig,
+    num_workers: usize,
+    derived_seed: u64,
+    initial: &Graph,
+    horizon: f64,
+) -> Result<TopologyTimeline> {
+    let mut model = ChurnModel::from_config(cfg, num_workers, derived_seed)?;
+    let mut g = initial.clone();
+    let mut timeline = TopologyTimeline::new();
+    while let Some(t) = model.next_change() {
+        if t > horizon {
+            break;
+        }
+        let muts = model.step(t, &g);
+        assert!(
+            model.next_change().map_or(true, |nt| nt > t),
+            "churn process must advance time"
+        );
+        if !muts.is_empty() {
+            apply_mutations(&mut g, &muts);
+            timeline.push(t, muts);
+        }
+    }
+    Ok(timeline)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::generators::{random_connected, ring};
+
+    fn flaky() -> ChurnConfig {
+        ChurnConfig {
+            kind: ChurnKind::FlakyLinks { rate: 2.0, mean_downtime: 1.0 },
+            seed: Some(7),
+        }
+    }
+
+    #[test]
+    fn config_json_roundtrip() {
+        for cfg in [
+            ChurnConfig::default(),
+            flaky(),
+            ChurnConfig {
+                kind: ChurnKind::Mobile { movers: 3, interval: 0.5, degree: 2 },
+                seed: None,
+            },
+            ChurnConfig {
+                kind: ChurnKind::PartitionHeal { period: 8.0, downtime: 2.0 },
+                seed: Some(1),
+            },
+            ChurnConfig {
+                kind: ChurnKind::Schedule { path: "sched.json".into() },
+                seed: None,
+            },
+        ] {
+            let back = ChurnConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(back, cfg);
+        }
+        // bare-string form
+        assert_eq!(
+            ChurnConfig::from_json(&Json::from("none")).unwrap(),
+            ChurnConfig::default()
+        );
+        assert!(ChurnConfig::from_json(&Json::from("earthquake")).is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_typos_and_wrong_types() {
+        // misspelled parameter key: rejected, not silently defaulted
+        let j = Json::parse(r#"{"kind": "flaky_links", "rte": 8.0}"#).unwrap();
+        assert!(ChurnConfig::from_json(&j).is_err());
+        // parameter of another kind: also unknown here
+        let j = Json::parse(r#"{"kind": "mobile", "rate": 2.0}"#).unwrap();
+        assert!(ChurnConfig::from_json(&j).is_err());
+        // wrongly-typed value
+        let j = Json::parse(r#"{"kind": "flaky_links", "rate": "8.0"}"#).unwrap();
+        assert!(ChurnConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"kind": "mobile", "movers": 2.5}"#).unwrap();
+        assert!(ChurnConfig::from_json(&j).is_err());
+        // schedule without a path
+        let j = Json::parse(r#"{"kind": "schedule"}"#).unwrap();
+        assert!(ChurnConfig::from_json(&j).is_err());
+        // missing kind entirely
+        let j = Json::parse(r#"{"rate": 2.0}"#).unwrap();
+        assert!(ChurnConfig::from_json(&j).is_err());
+        // correct spellings still parse
+        let j = Json::parse(r#"{"kind": "flaky_links", "rate": 8.0, "seed": 3}"#).unwrap();
+        let cfg = ChurnConfig::from_json(&j).unwrap();
+        assert_eq!(
+            cfg.kind,
+            ChurnKind::FlakyLinks { rate: 8.0, mean_downtime: 1.0 }
+        );
+        assert_eq!(cfg.seed, Some(3));
+    }
+
+    #[test]
+    fn validate_rejects_bad_parameters() {
+        let bad = ChurnConfig {
+            kind: ChurnKind::FlakyLinks { rate: 0.0, mean_downtime: 1.0 },
+            seed: None,
+        };
+        assert!(bad.validate().is_err());
+        let bad = ChurnConfig {
+            kind: ChurnKind::PartitionHeal { period: 5.0, downtime: 5.0 },
+            seed: None,
+        };
+        assert!(bad.validate().is_err());
+        assert!(flaky().validate().is_ok());
+    }
+
+    #[test]
+    fn flaky_keeps_graph_connected_and_link_count_stable() {
+        let g0 = random_connected(16, 0.2, 3);
+        let tl = materialize(&flaky(), 16, 99, &g0, 50.0).unwrap();
+        assert!(!tl.is_empty(), "flaky scenario must generate events");
+        let mut g = g0.clone();
+        for e in &tl.entries {
+            apply_mutations(&mut g, &e.mutations);
+            assert!(g.is_connected(), "disconnected at t={}", e.time);
+        }
+        // failed links come back: the long-run edge count stays in a band
+        assert!(g.num_edges() + 4 >= g0.num_edges(), "{} vs {}", g.num_edges(), g0.num_edges());
+    }
+
+    #[test]
+    fn mobile_rewires_the_cohort() {
+        let cfg = ChurnConfig {
+            kind: ChurnKind::Mobile { movers: 2, interval: 1.0, degree: 2 },
+            seed: Some(11),
+        };
+        let g0 = ring(10);
+        let tl = materialize(&cfg, 10, 0, &g0, 10.0).unwrap();
+        assert_eq!(tl.len(), 10, "one move per interval");
+        let mut g = g0.clone();
+        for e in &tl.entries {
+            assert!(matches!(e.mutations[0], TopologyMutation::Attach(_, _)));
+            apply_mutations(&mut g, &e.mutations);
+            assert!(g.is_connected());
+        }
+        assert_ne!(g, g0, "moves must change the graph");
+    }
+
+    #[test]
+    fn partition_cuts_then_heals() {
+        let cfg = ChurnConfig {
+            kind: ChurnKind::PartitionHeal { period: 10.0, downtime: 4.0 },
+            seed: Some(5),
+        };
+        let g0 = random_connected(12, 0.4, 9);
+        let mut model = ChurnModel::from_config(&cfg, 12, 0).unwrap();
+        assert_eq!(model.next_change(), Some(10.0));
+        let mut g = g0.clone();
+
+        let cut = model.step(10.0, &g);
+        assert!(cut.iter().all(|m| matches!(m, TopologyMutation::RemoveEdge(_, _))));
+        let out = apply_mutations(&mut g, &cut);
+        assert!(g.is_connected(), "repair must leave a bridge");
+        assert!(out.deferred >= 1, "the last cross link is deferred");
+        assert!(g.num_edges() < g0.num_edges());
+
+        assert_eq!(model.next_change(), Some(14.0));
+        let heal = model.step(14.0, &g);
+        assert!(heal.iter().all(|m| matches!(m, TopologyMutation::AddEdge(_, _))));
+        apply_mutations(&mut g, &heal);
+        assert_eq!(g.num_edges(), g0.num_edges(), "heal restores every cut link");
+        assert_eq!(model.next_change(), Some(20.0), "next partition one period later");
+    }
+
+    #[test]
+    fn generator_is_deterministic_per_seed() {
+        let g0 = random_connected(14, 0.25, 1);
+        let a = materialize(&flaky(), 14, 42, &g0, 25.0).unwrap();
+        let b = materialize(&flaky(), 14, 42, &g0, 25.0).unwrap();
+        assert_eq!(a, b);
+        let mut other = flaky();
+        other.seed = Some(8);
+        let c = materialize(&other, 14, 42, &g0, 25.0).unwrap();
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn replay_matches_materialized_evolution() {
+        let cfg = ChurnConfig {
+            kind: ChurnKind::Mobile { movers: 3, interval: 0.5, degree: 2 },
+            seed: Some(21),
+        };
+        let g0 = random_connected(12, 0.2, 4);
+        let tl = materialize(&cfg, 12, 0, &g0, 12.0).unwrap();
+
+        // drive the materialized schedule through a replay model
+        let mut model = ChurnModel::replay(tl.clone());
+        let mut g = g0.clone();
+        while let Some(t) = model.next_change() {
+            let muts = model.step(t, &g);
+            apply_mutations(&mut g, &muts);
+        }
+
+        // and directly through apply_mutations
+        let mut g2 = g0.clone();
+        for e in &tl.entries {
+            apply_mutations(&mut g2, &e.mutations);
+        }
+        assert_eq!(g, g2);
+    }
+}

@@ -1,0 +1,415 @@
+//! Dynamic-topology & churn subsystem: time-varying communication graphs.
+//!
+//! The paper analyzes a *fixed* connected graph `G`, but real decentralized
+//! deployments face flaky links, worker churn and mobility.  This module
+//! models those as timestamped **topology mutations** applied to the live
+//! [`Graph`] at virtual time:
+//!
+//! * [`TopologyMutation`] — link add/remove, worker isolate (crash/leave)
+//!   and attach (join/recover/move);
+//! * [`TopologyTimeline`] — an explicit schedule of mutation batches with
+//!   JSON load/save (in the spirit of nebulastream's
+//!   `topology_updates.json`), so scenarios are reproducible artifacts;
+//! * [`apply_mutations`] — the single mutation entry point, with
+//!   **connectivity repair**: any removal that would disconnect `G` is
+//!   deferred (left in place), so the paper's standing connectivity
+//!   assumption holds after every applied mutation;
+//! * [`generators`] — seeded scenario generators (random flaky links,
+//!   mobile workers rewiring their neighborhood, planned partition/heal
+//!   cycles) plus schedule replay, all driven through [`ChurnModel`].
+//!
+//! The engine consumes this via `EventKind::TopologyChange` events: at
+//! each change point the model emits mutations, the engine applies them
+//! with repair, prunes Pathsearch's visited-edge set, and invalidates its
+//! cached full-graph Metropolis weights.
+
+pub mod generators;
+
+pub use generators::{materialize, ChurnConfig, ChurnKind, ChurnModel};
+
+use crate::topology::Graph;
+use crate::util::json::Json;
+use crate::WorkerId;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One atomic change to the communication graph.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TopologyMutation {
+    /// Insert the undirected link `(i, j)`.
+    AddEdge(usize, usize),
+    /// Drop the undirected link `(i, j)` (deferred if it is a bridge).
+    RemoveEdge(usize, usize),
+    /// Worker crash/leave: drop every incident link.  Connectivity repair
+    /// always retains a last "lifeline" link, modeling the degraded but
+    /// reachable state the connectivity assumption requires.
+    Isolate(WorkerId),
+    /// Worker join/recover/move: connect to the listed neighbors.
+    Attach(WorkerId, Vec<WorkerId>),
+}
+
+impl TopologyMutation {
+    /// Serialize to the schedule-file form.
+    pub fn to_json(&self) -> Json {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        match self {
+            TopologyMutation::AddEdge(i, j) => {
+                m.insert("action".into(), Json::from("add"));
+                m.insert("i".into(), Json::from(*i));
+                m.insert("j".into(), Json::from(*j));
+            }
+            TopologyMutation::RemoveEdge(i, j) => {
+                m.insert("action".into(), Json::from("remove"));
+                m.insert("i".into(), Json::from(*i));
+                m.insert("j".into(), Json::from(*j));
+            }
+            TopologyMutation::Isolate(w) => {
+                m.insert("action".into(), Json::from("isolate"));
+                m.insert("worker".into(), Json::from(*w));
+            }
+            TopologyMutation::Attach(w, ns) => {
+                m.insert("action".into(), Json::from("attach"));
+                m.insert("worker".into(), Json::from(*w));
+                m.insert(
+                    "neighbors".into(),
+                    Json::Arr(ns.iter().map(|&n| Json::from(n)).collect()),
+                );
+            }
+        }
+        Json::Obj(m)
+    }
+
+    /// Inverse of [`Self::to_json`].
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let action = j.req("action")?.as_str().context("action must be a string")?;
+        let endpoint = |key: &str| -> Result<usize> {
+            j.req(key)?.as_usize().with_context(|| format!("{key} must be a worker id"))
+        };
+        Ok(match action {
+            "add" => TopologyMutation::AddEdge(endpoint("i")?, endpoint("j")?),
+            "remove" => TopologyMutation::RemoveEdge(endpoint("i")?, endpoint("j")?),
+            "isolate" => TopologyMutation::Isolate(endpoint("worker")?),
+            "attach" => {
+                let ns = j
+                    .req("neighbors")?
+                    .as_arr()
+                    .context("neighbors must be an array")?
+                    .iter()
+                    .map(|v| v.as_usize().context("neighbor ids must be integers"))
+                    .collect::<Result<Vec<_>>>()?;
+                TopologyMutation::Attach(endpoint("worker")?, ns)
+            }
+            other => bail!("unknown mutation action {other:?} (add|remove|isolate|attach)"),
+        })
+    }
+}
+
+/// A batch of mutations at one virtual timestamp.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimelineEntry {
+    /// Virtual time (seconds) the batch fires at.
+    pub time: f64,
+    /// Mutations applied in order.
+    pub mutations: Vec<TopologyMutation>,
+}
+
+/// Timestamped mutation schedule (sorted by time).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TopologyTimeline {
+    /// Schedule entries in non-decreasing time order.
+    pub entries: Vec<TimelineEntry>,
+}
+
+impl TopologyTimeline {
+    /// Empty schedule.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a batch (times must be appended in non-decreasing order;
+    /// [`Self::from_json`] sorts, so hand-built schedules can use it).
+    pub fn push(&mut self, time: f64, mutations: Vec<TopologyMutation>) {
+        debug_assert!(
+            self.entries.last().map_or(true, |e| e.time <= time),
+            "timeline must be pushed in time order"
+        );
+        self.entries.push(TimelineEntry { time, mutations });
+    }
+
+    /// Number of scheduled batches.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the schedule is empty.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total mutation count across all batches.
+    pub fn num_mutations(&self) -> usize {
+        self.entries.iter().map(|e| e.mutations.len()).sum()
+    }
+
+    /// Serialize as `{"updates": [{"time": t, "events": [...]}]}`.
+    pub fn to_json(&self) -> Json {
+        let updates: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut m: BTreeMap<String, Json> = BTreeMap::new();
+                m.insert("time".into(), Json::Num(e.time));
+                m.insert(
+                    "events".into(),
+                    Json::Arr(e.mutations.iter().map(|mu| mu.to_json()).collect()),
+                );
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("updates".into(), Json::Arr(updates));
+        Json::Obj(m)
+    }
+
+    /// Inverse of [`Self::to_json`]; entries are sorted by time.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut entries = Vec::new();
+        for e in j.req("updates")?.as_arr().context("updates must be an array")? {
+            let time = e.req("time")?.as_f64().context("time must be a number")?;
+            anyhow::ensure!(time >= 0.0 && time.is_finite(), "bad update time {time}");
+            let mutations = e
+                .req("events")?
+                .as_arr()
+                .context("events must be an array")?
+                .iter()
+                .map(TopologyMutation::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            entries.push(TimelineEntry { time, mutations });
+        }
+        entries.sort_by(|a, b| a.time.partial_cmp(&b.time).expect("finite times"));
+        Ok(TopologyTimeline { entries })
+    }
+
+    /// Write the schedule to a JSON file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string_compact())
+            .with_context(|| format!("write schedule {}", path.display()))
+    }
+
+    /// Load a schedule from a JSON file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read schedule {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// What happened when a mutation batch was applied.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ApplyOutcome {
+    /// Mutated links (adds + removals) actually applied.
+    pub applied: usize,
+    /// Removals deferred by connectivity repair (the link stays up).
+    pub deferred: usize,
+}
+
+impl ApplyOutcome {
+    /// Accumulate another outcome.
+    pub fn absorb(&mut self, other: ApplyOutcome) {
+        self.applied += other.applied;
+        self.deferred += other.deferred;
+    }
+}
+
+/// Apply a mutation batch in order with connectivity repair: a removal
+/// that would disconnect the graph is deferred (the link stays up), so a
+/// connected graph stays connected after *every* mutation.  Out-of-range
+/// ids, self-loops and redundant adds/removes are skipped.
+pub fn apply_mutations(g: &mut Graph, mutations: &[TopologyMutation]) -> ApplyOutcome {
+    let n = g.num_vertices();
+    let mut out = ApplyOutcome::default();
+    for m in mutations {
+        match m {
+            TopologyMutation::AddEdge(i, j) => {
+                if *i < n && *j < n && i != j && !g.has_edge(*i, *j) {
+                    g.add_edge(*i, *j);
+                    out.applied += 1;
+                }
+            }
+            TopologyMutation::RemoveEdge(i, j) => {
+                if *i < n && *j < n {
+                    try_remove(g, *i, *j, &mut out);
+                }
+            }
+            TopologyMutation::Isolate(w) => {
+                if *w < n {
+                    for nb in g.neighbors(*w).to_vec() {
+                        try_remove(g, *w, nb, &mut out);
+                    }
+                }
+            }
+            TopologyMutation::Attach(w, ns) => {
+                for &nb in ns {
+                    if *w < n && nb < n && nb != *w && !g.has_edge(*w, nb) {
+                        g.add_edge(*w, nb);
+                        out.applied += 1;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Remove `(i, j)` unless absent or a bridge (deferred).
+fn try_remove(g: &mut Graph, i: usize, j: usize, out: &mut ApplyOutcome) {
+    if !g.has_edge(i, j) {
+        return;
+    }
+    if g.would_disconnect(i, j) {
+        out.deferred += 1;
+    } else {
+        g.remove_edge(i, j);
+        out.applied += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::generators::{ring, star};
+
+    #[test]
+    fn apply_add_remove_roundtrip() {
+        let mut g = ring(6);
+        let out = apply_mutations(
+            &mut g,
+            &[
+                TopologyMutation::AddEdge(0, 3),
+                TopologyMutation::RemoveEdge(0, 1),
+                TopologyMutation::RemoveEdge(0, 1), // redundant: skipped
+                TopologyMutation::AddEdge(0, 3),    // redundant: skipped
+            ],
+        );
+        assert_eq!(out, ApplyOutcome { applied: 2, deferred: 0 });
+        assert!(g.has_edge(0, 3) && !g.has_edge(0, 1));
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn bridge_removal_deferred() {
+        // ring edges are all non-bridges until the first removal; after
+        // removing (0,1) every remaining ring edge is a bridge.
+        let mut g = ring(4);
+        let out = apply_mutations(
+            &mut g,
+            &[TopologyMutation::RemoveEdge(0, 1), TopologyMutation::RemoveEdge(2, 3)],
+        );
+        assert_eq!(out, ApplyOutcome { applied: 1, deferred: 1 });
+        assert!(g.has_edge(2, 3), "bridge must stay up");
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn isolate_keeps_a_lifeline() {
+        let mut g = star(5); // hub 0
+        let out = apply_mutations(&mut g, &[TopologyMutation::Isolate(3)]);
+        // worker 3's only link is a bridge: the crash leaves the lifeline
+        assert_eq!(out, ApplyOutcome { applied: 0, deferred: 1 });
+        assert!(g.is_connected());
+
+        // with redundancy the isolate strips all but one link
+        let mut g = ring(5);
+        g.add_edge(0, 2);
+        g.add_edge(0, 3);
+        let out = apply_mutations(&mut g, &[TopologyMutation::Isolate(0)]);
+        assert!(out.applied >= 1 && out.deferred >= 1, "{out:?}");
+        assert_eq!(g.degree(0), 1, "exactly the lifeline remains");
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn attach_then_isolate_rewires() {
+        let mut g = ring(6);
+        let out = apply_mutations(
+            &mut g,
+            &[
+                TopologyMutation::Attach(0, vec![2, 3]),
+                TopologyMutation::RemoveEdge(0, 1),
+                TopologyMutation::RemoveEdge(0, 5),
+            ],
+        );
+        assert_eq!(out.deferred, 0, "{out:?}");
+        assert!(g.has_edge(0, 2) && g.has_edge(0, 3));
+        assert!(!g.has_edge(0, 1) && !g.has_edge(0, 5));
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn out_of_range_and_self_loops_skipped() {
+        let mut g = ring(4);
+        let before = g.clone();
+        let out = apply_mutations(
+            &mut g,
+            &[
+                TopologyMutation::AddEdge(0, 9),
+                TopologyMutation::RemoveEdge(9, 1),
+                TopologyMutation::AddEdge(2, 2),
+                TopologyMutation::Isolate(17),
+                TopologyMutation::Attach(1, vec![1, 40]),
+            ],
+        );
+        assert_eq!(out, ApplyOutcome::default());
+        assert_eq!(g, before);
+    }
+
+    #[test]
+    fn mutation_json_roundtrip() {
+        for m in [
+            TopologyMutation::AddEdge(1, 2),
+            TopologyMutation::RemoveEdge(3, 0),
+            TopologyMutation::Isolate(7),
+            TopologyMutation::Attach(4, vec![0, 2, 5]),
+        ] {
+            assert_eq!(TopologyMutation::from_json(&m.to_json()).unwrap(), m);
+        }
+        assert!(TopologyMutation::from_json(&Json::parse(r#"{"action":"warp"}"#).unwrap())
+            .is_err());
+    }
+
+    #[test]
+    fn timeline_json_and_file_roundtrip() {
+        let mut tl = TopologyTimeline::new();
+        tl.push(0.5, vec![TopologyMutation::AddEdge(0, 2)]);
+        tl.push(
+            1.25,
+            vec![TopologyMutation::RemoveEdge(1, 2), TopologyMutation::Isolate(3)],
+        );
+        let back = TopologyTimeline::from_json(&tl.to_json()).unwrap();
+        assert_eq!(back, tl);
+        assert_eq!(back.num_mutations(), 3);
+
+        let path = std::env::temp_dir()
+            .join(format!("dsgd_churn_schedule_{}.json", std::process::id()));
+        tl.save(&path).unwrap();
+        assert_eq!(TopologyTimeline::load(&path).unwrap(), tl);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn timeline_from_json_sorts_by_time() {
+        let text = r#"{"updates": [
+            {"time": 2.0, "events": [{"action": "add", "i": 0, "j": 1}]},
+            {"time": 1.0, "events": [{"action": "remove", "i": 2, "j": 3}]}
+        ]}"#;
+        let tl = TopologyTimeline::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(tl.entries[0].time, 1.0);
+        assert_eq!(tl.entries[1].time, 2.0);
+    }
+}

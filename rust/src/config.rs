@@ -6,6 +6,7 @@
 //! δ = 0.95, 10 % stragglers at 10×, batch 128-equivalent workloads).
 
 use crate::algorithms::AlgorithmKind;
+use crate::churn::ChurnConfig;
 use crate::sim::{CommModel, StragglerModel};
 use crate::topology::TopologyKind;
 use crate::util::json::Json;
@@ -81,8 +82,11 @@ pub struct ExperimentConfig {
     pub name: String,
     /// Number of workers N (paper sweeps 32–256).
     pub num_workers: usize,
-    /// Communication topology.
+    /// Communication topology (the graph at t = 0).
     pub topology: TopologyKind,
+    /// Dynamic-topology churn scenario applied on top of `topology`
+    /// (kind, rate parameters, seed override or schedule path).
+    pub churn: ChurnConfig,
     /// Update rule under test.
     pub algorithm: AlgorithmKind,
     /// Gradient backend.
@@ -133,6 +137,7 @@ impl Default for ExperimentConfig {
             name: "default".into(),
             num_workers: 16,
             topology: TopologyKind::default(),
+            churn: ChurnConfig::default(),
             algorithm: AlgorithmKind::DsgdAau,
             backend: BackendKind::Quadratic,
             model: "mlp_small".into(),
@@ -174,6 +179,7 @@ impl ExperimentConfig {
                 "name" => cfg.name = v.as_str().unwrap_or(&cfg.name).to_string(),
                 "num_workers" => cfg.num_workers = need_usize(key, v)?,
                 "topology" => cfg.topology = TopologyKind::from_json(v)?,
+                "churn" => cfg.churn = ChurnConfig::from_json(v)?,
                 "algorithm" => {
                     cfg.algorithm =
                         AlgorithmKind::parse(v.as_str().unwrap_or_default())?
@@ -218,6 +224,7 @@ impl ExperimentConfig {
         m.insert("name".into(), Json::from(self.name.as_str()));
         m.insert("num_workers".into(), Json::from(self.num_workers));
         m.insert("topology".into(), self.topology.to_json());
+        m.insert("churn".into(), self.churn.to_json());
         m.insert("algorithm".into(), Json::from(self.algorithm.token()));
         m.insert("backend".into(), Json::from(self.backend.token()));
         m.insert("model".into(), Json::from(self.model.as_str()));
@@ -268,6 +275,7 @@ impl ExperimentConfig {
         );
         anyhow::ensure!(self.straggler.slowdown >= 1.0, "slowdown must be >= 1");
         anyhow::ensure!(self.prague_group >= 2, "prague group must be >= 2");
+        self.churn.validate()?;
         Ok(())
     }
 }
@@ -296,12 +304,17 @@ mod tests {
         cfg.backend = BackendKind::NativeMlp;
         cfg.time_budget = Some(50.0);
         cfg.topology = TopologyKind::Ring;
+        cfg.churn = crate::churn::ChurnConfig {
+            kind: crate::churn::ChurnKind::FlakyLinks { rate: 2.0, mean_downtime: 0.5 },
+            seed: Some(9),
+        };
         let text = cfg.to_json().to_string_compact();
         let back = ExperimentConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.algorithm, cfg.algorithm);
         assert_eq!(back.backend, cfg.backend);
         assert_eq!(back.time_budget, cfg.time_budget);
         assert_eq!(back.num_workers, cfg.num_workers);
+        assert_eq!(back.churn, cfg.churn);
     }
 
     #[test]
@@ -342,6 +355,10 @@ mod tests {
         let mut cfg = ExperimentConfig::default();
         cfg.straggler.slowdown = 0.5;
         assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.churn.kind =
+            crate::churn::ChurnKind::Mobile { movers: 0, interval: 1.0, degree: 2 };
+        assert!(cfg.validate().is_err(), "churn section is validated too");
     }
 
     #[test]

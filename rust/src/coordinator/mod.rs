@@ -48,7 +48,7 @@ pub fn build_backend(cfg: &ExperimentConfig) -> Result<Box<dyn Backend>> {
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunSummary> {
     cfg.validate()?;
     let backend = build_backend(cfg)?;
-    let mut engine = Engine::from_config(cfg, backend);
+    let mut engine = Engine::try_from_config(cfg, backend)?;
     Ok(engine.run())
 }
 

@@ -9,6 +9,7 @@
 
 use crate::algorithms::UpdateRule;
 use crate::backend::{Backend, GradOutput};
+use crate::churn::{self, ApplyOutcome, ChurnModel};
 use crate::config::{ExperimentConfig, LrSchedule};
 use crate::consensus::GroupWeights;
 use crate::metrics::Recorder;
@@ -20,7 +21,9 @@ use crate::WorkerId;
 
 /// Shared engine state exposed to update rules.
 pub struct EngineCore {
-    /// Communication topology.
+    /// Communication topology.  Under churn this is the *live* graph:
+    /// `TopologyChange` events mutate it in place (with connectivity
+    /// repair), so update rules always act on the current topology.
     pub graph: Graph,
     /// Virtual-time event queue.
     pub queue: EventQueue,
@@ -46,6 +49,9 @@ pub struct EngineCore {
     /// Reusable gossip output buffers (swapped with worker params each
     /// round, so the steady-state hot loop performs zero allocation).
     scratch: Vec<ParamVec>,
+    /// Cached full-fleet Metropolis weights (synchronous DSGD's per-round
+    /// matrix); invalidated whenever the topology changes.
+    full_weights: Option<GroupWeights>,
 }
 
 impl EngineCore {
@@ -173,6 +179,34 @@ impl EngineCore {
             self.scratch[a].resize(d, 0.0);
             native_weighted_average_into(&rows, weights, &mut self.scratch[a]);
         }
+    }
+
+    /// Full-fleet Metropolis consensus round on the *current* graph.  The
+    /// weight matrix is cached between rounds and recomputed only after a
+    /// topology change (synchronous DSGD previously rebuilt it every
+    /// barrier).
+    pub fn gossip_all(&mut self) {
+        let gw = self.full_weights.take().unwrap_or_else(|| {
+            let all: Vec<WorkerId> = (0..self.params.len()).collect();
+            GroupWeights::metropolis(&self.graph, &all)
+        });
+        self.gossip(&gw);
+        self.full_weights = Some(gw);
+    }
+
+    /// Bookkeeping after a topology mutation batch: invalidate the cached
+    /// full-graph Metropolis weights, restore Pathsearch's `P ⊆ E`
+    /// invariant, and charge the membership broadcast to the control
+    /// plane (each applied mutation floods two endpoint IDs, the same
+    /// O(2N) accounting as Pathsearch's Remark 4).
+    pub fn on_topology_changed(&mut self, outcome: ApplyOutcome) {
+        self.full_weights = None;
+        self.pathsearch.prune_missing(&self.graph);
+        self.recorder.control_bytes +=
+            PathSearch::broadcast_bytes(self.num_workers(), outcome.applied);
+        self.recorder.topology_changes += 1;
+        self.recorder.mutations_applied += outcome.applied as u64;
+        self.recorder.mutations_deferred += outcome.deferred as u64;
     }
 
     /// Pairwise average with explicit byte accounting (AD-PSGD's atomic
@@ -323,13 +357,25 @@ impl RunSummary {
 pub struct Engine {
     core: EngineCore,
     rule: Box<dyn UpdateRule>,
+    churn: ChurnModel,
     max_iterations: u64,
     time_budget: Option<f64>,
 }
 
 impl Engine {
-    /// Assemble an engine from a config and a backend.
+    /// Assemble an engine from a config and a backend; panics on invalid
+    /// configs (tests/benches convenience — [`Self::try_from_config`] is
+    /// the fallible form used by the coordinator).
     pub fn from_config(cfg: &ExperimentConfig, backend: Box<dyn Backend>) -> Self {
+        Self::try_from_config(cfg, backend)
+            .expect("engine config invalid (churn schedule missing or bad parameters)")
+    }
+
+    /// Assemble an engine from a config and a backend.
+    pub fn try_from_config(
+        cfg: &ExperimentConfig,
+        backend: Box<dyn Backend>,
+    ) -> anyhow::Result<Self> {
         let n = cfg.num_workers;
         let graph = cfg.topology.build(n);
         assert!(graph.is_connected(), "topology must be connected");
@@ -362,14 +408,17 @@ impl Engine {
             param_bytes,
             recent_loss: (0.0, 0),
             scratch: Vec::new(),
+            full_weights: None,
         };
         let rule = cfg.algorithm.build(cfg.prague_group, cfg.seed_for("algorithm"));
-        Engine {
+        let churn = ChurnModel::from_config(&cfg.churn, n, cfg.seed_for("churn"))?;
+        Ok(Engine {
             core,
             rule,
+            churn,
             max_iterations: cfg.max_iterations,
             time_budget: cfg.time_budget,
-        }
+        })
     }
 
     /// Read-only core access (tests/diagnostics).
@@ -385,11 +434,29 @@ impl Engine {
         }
         self.rule.on_start(&mut self.core);
         self.core.eval_now(); // k = 0 baseline point
+        if let Some(t) = self.churn.next_change() {
+            self.core.queue.schedule(t, EventKind::TopologyChange);
+        }
         while let Some(Event { kind, .. }) = self.core.queue.pop() {
             match kind {
                 EventKind::ComputeStart(w) => self.core.begin_compute(w),
                 EventKind::ComputeDone(w) => self.rule.on_ready(w, &mut self.core),
                 EventKind::EvalTick => self.core.eval_now(),
+                EventKind::TopologyChange => {
+                    let now = self.core.queue.now();
+                    let muts = self.churn.step(now, &self.core.graph);
+                    if !muts.is_empty() {
+                        let outcome = churn::apply_mutations(&mut self.core.graph, &muts);
+                        debug_assert!(
+                            self.core.graph.is_connected(),
+                            "connectivity repair failed at t={now}"
+                        );
+                        self.core.on_topology_changed(outcome);
+                    }
+                    if let Some(t) = self.churn.next_change() {
+                        self.core.queue.schedule(t, EventKind::TopologyChange);
+                    }
+                }
             }
             if self.core.k >= self.max_iterations {
                 break;

@@ -8,8 +8,11 @@
 //!   topologies, Metropolis consensus, the Pathsearch procedure (paper
 //!   Alg. 3), the DSGD-AAU update rule plus four baselines (synchronous
 //!   DSGD, AD-PSGD, Prague, AGP), a discrete-event cluster simulator with
-//!   straggler injection, and the experiment harness regenerating every
-//!   table/figure of the paper's evaluation.
+//!   straggler injection, a dynamic-topology [`churn`] subsystem
+//!   (time-varying graphs: flaky links, mobile workers, partition/heal
+//!   cycles, JSON schedules — applied live with connectivity repair), and
+//!   the experiment harness regenerating every table/figure of the
+//!   paper's evaluation plus churn sweeps (`bench_churn`).
 //! * **L2 (python/compile/model.py)** — the worker model fwd/bwd in JAX,
 //!   AOT-lowered once to HLO text.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (fused linear
@@ -33,6 +36,7 @@
 
 pub mod algorithms;
 pub mod backend;
+pub mod churn;
 pub mod config;
 pub mod consensus;
 pub mod coordinator;

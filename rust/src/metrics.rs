@@ -36,6 +36,12 @@ pub struct Recorder {
     pub group_size_sum: u64,
     /// Wall-clock seconds of real compute spent in backend calls.
     pub backend_seconds: f64,
+    /// Topology-change events processed (churn subsystem).
+    pub topology_changes: u64,
+    /// Graph mutations actually applied across all changes.
+    pub mutations_applied: u64,
+    /// Removals deferred by connectivity repair (the link stayed up).
+    pub mutations_deferred: u64,
 }
 
 impl Recorder {

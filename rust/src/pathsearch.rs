@@ -125,6 +125,17 @@ impl PathSearch {
         self.epochs_completed += 1;
     }
 
+    /// Dynamic-topology hook: drop visited edges that no longer exist in
+    /// `g`, restoring the invariant `P ⊆ E` after a churn mutation.
+    /// Visited vertices stay — their information already diffused — so an
+    /// epoch completes once the *surviving* accumulated subgraph spans and
+    /// connects `N` again.  Returns the number of pruned edges.
+    pub fn prune_missing(&mut self, g: &Graph) -> usize {
+        let before = self.edges.len();
+        self.edges.retain(|&(i, j)| g.has_edge(i, j));
+        before - self.edges.len()
+    }
+
     /// ID-broadcast cost of an update per Remark 4: each newly established
     /// edge floods two IDs through the network, bounded by `O(2N)` per
     /// worker; we charge `2 * N * 8` bytes per new edge.
@@ -218,6 +229,37 @@ mod tests {
             ps.reset_epoch();
             assert_eq!(ps.epochs_completed, 1);
         }
+    }
+
+    #[test]
+    fn prune_missing_restores_subset_invariant() {
+        let mut g = complete(4);
+        let mut ps = PathSearch::new();
+        ps.absorb_group(&g, &[0, 1, 2]); // edges (0,1),(0,2),(1,2)
+        assert_eq!(ps.num_edges(), 3);
+        g.remove_edge(0, 1);
+        g.remove_edge(1, 2);
+        assert_eq!(ps.prune_missing(&g), 2);
+        assert_eq!(ps.num_edges(), 1);
+        assert_eq!(ps.num_vertices(), 3, "visited vertices survive pruning");
+        // the pruned edge is novel again
+        assert!(ps.is_unvisited_edge(&g, 0, 2) == false);
+        g.add_edge(0, 1);
+        assert!(ps.is_unvisited_edge(&g, 0, 1));
+    }
+
+    #[test]
+    fn epoch_completes_after_pruning() {
+        let g_full = complete(4);
+        let mut ps = PathSearch::new();
+        ps.absorb_group(&g_full, &[0, 1, 2, 3]);
+        assert!(ps.is_complete(&g_full));
+        // drop an edge the accumulated subgraph relied on; epoch resumes
+        let mut g = g_full.clone();
+        g.remove_vertex(3);
+        g.add_edge(2, 3); // lifeline
+        ps.prune_missing(&g);
+        assert!(ps.is_complete(&g), "surviving subgraph still spans via (2,3)");
     }
 
     #[test]

@@ -1,0 +1,181 @@
+//! Real PJRT runtime (feature `pjrt`): compiles the AOT HLO-text
+//! artifacts on a CPU PJRT client via the vendored `xla` bindings.
+//!
+//! Interchange is HLO *text*: xla_extension 0.5.1 rejects jax ≥ 0.5
+//! serialized protos (64-bit instruction ids); the text parser reassigns
+//! ids (see /opt/xla-example/README.md).
+
+use super::{BatchInput, TrainOutput, VariantMeta};
+use crate::runtime::Manifest;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// f32 slice -> raw bytes (little-endian host layout, what PJRT expects).
+fn f32_bytes(x: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
+}
+
+fn i32_bytes(x: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
+}
+
+/// Build an f32 literal of the given dims from a host slice (zero-copy on
+/// the rust side; PJRT copies into device-layout memory once).
+pub fn literal_f32(dims: &[usize], data: &[f32]) -> xla::Literal {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        f32_bytes(data),
+    )
+    .expect("f32 literal")
+}
+
+/// Build an i32 literal of the given dims.
+pub fn literal_i32(dims: &[usize], data: &[i32]) -> xla::Literal {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        dims,
+        i32_bytes(data),
+    )
+    .expect("i32 literal")
+}
+
+/// One compiled HLO module on the shared CPU client.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Load HLO text from `path` and compile it on `client`.
+    pub fn load(client: &xla::PjRtClient, path: &Path) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e}", path.display()))?;
+        Ok(Executable { exe })
+    }
+
+    /// Execute with literal inputs; returns the (single-device) output
+    /// tuple decomposed into element literals.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self.exe.execute::<xla::Literal>(inputs).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let lit = bufs[0][0].to_literal_sync().map_err(|e| anyhow::anyhow!("{e}"))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("{e}"))
+    }
+}
+
+/// All executables for one model variant.
+pub struct ModelRuntime {
+    /// Variant metadata from the manifest.
+    pub meta: VariantMeta,
+    /// Gossip stack fanout K of the gossip artifact.
+    pub gossip_fanout: usize,
+    client: xla::PjRtClient,
+    train: Executable,
+    evals: Executable,
+    gossip: Executable,
+}
+
+impl ModelRuntime {
+    /// Load the manifest in `dir` and compile the three executables for
+    /// `variant`.
+    pub fn load(dir: &Path, variant: &str) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .context("loading manifest (run `make artifacts`)")?;
+        let meta = manifest
+            .variants
+            .get(variant)
+            .ok_or_else(|| anyhow::anyhow!("variant {variant} not in manifest"))?
+            .clone();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let train = Executable::load(&client, &dir.join(&meta.files["train"]))?;
+        let evals = Executable::load(&client, &dir.join(&meta.files["eval"]))?;
+        let gossip = Executable::load(&client, &dir.join(&meta.gossip_file))?;
+        Ok(ModelRuntime {
+            meta,
+            gossip_fanout: manifest.gossip_fanout,
+            client,
+            train,
+            evals,
+            gossip,
+        })
+    }
+
+    /// Path helper: `ModelRuntime::load(Path::new("artifacts"), …)`.
+    pub fn load_default(variant: &str) -> Result<Self> {
+        Self::load(&PathBuf::from("artifacts"), variant)
+    }
+
+    fn input_literals(&self, flat: &[f32], x: &BatchInput, y: &[i32]) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            flat.len() == self.meta.padded_dim,
+            "flat params {} != padded_dim {}",
+            flat.len(),
+            self.meta.padded_dim
+        );
+        let x_lit = match x {
+            BatchInput::Features(f) => {
+                anyhow::ensure!(self.meta.input_dtype == "f32", "variant expects tokens");
+                literal_f32(&self.meta.input_shape, f)
+            }
+            BatchInput::Tokens(t) => {
+                anyhow::ensure!(self.meta.input_dtype == "i32", "variant expects features");
+                literal_i32(&self.meta.input_shape, t)
+            }
+        };
+        let y_lit = literal_i32(&self.meta.label_shape, y);
+        Ok(vec![literal_f32(&[self.meta.padded_dim], flat), x_lit, y_lit])
+    }
+
+    /// One local SGD gradient step: `(loss, grads, correct)`.
+    pub fn train_step(&self, flat: &[f32], x: &BatchInput, y: &[i32]) -> Result<TrainOutput> {
+        let inputs = self.input_literals(flat, x, y)?;
+        let out = self.train.run(&inputs)?;
+        anyhow::ensure!(out.len() == 3, "train output arity {}", out.len());
+        let loss = out[0].get_first_element::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let grad = out[1].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let correct = out[2].get_first_element::<i32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(TrainOutput { loss, grad, correct })
+    }
+
+    /// Evaluate a parameter vector on one batch: `(loss, correct)`.
+    pub fn eval_step(&self, flat: &[f32], x: &BatchInput, y: &[i32]) -> Result<(f32, i32)> {
+        let inputs = self.input_literals(flat, x, y)?;
+        let out = self.evals.run(&inputs)?;
+        anyhow::ensure!(out.len() == 2, "eval output arity {}", out.len());
+        let loss = out[0].get_first_element::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let correct = out[1].get_first_element::<i32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok((loss, correct))
+    }
+
+    /// Metropolis-weighted average of up to `gossip_fanout` parameter
+    /// vectors via the Pallas gossip kernel.  `rows` and `weights` shorter
+    /// than the fanout are zero-padded (zero rows contribute nothing).
+    pub fn gossip_average(&self, rows: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>> {
+        let k = self.gossip_fanout;
+        let d = self.meta.padded_dim;
+        anyhow::ensure!(rows.len() == weights.len(), "rows/weights mismatch");
+        anyhow::ensure!(rows.len() <= k, "group {} exceeds fanout {k}", rows.len());
+        let mut stack = vec![0f32; k * d];
+        for (r, row) in rows.iter().enumerate() {
+            anyhow::ensure!(row.len() == d, "row {} len {} != {d}", r, row.len());
+            stack[r * d..(r + 1) * d].copy_from_slice(row);
+        }
+        let mut w = vec![0f32; k];
+        w[..weights.len()].copy_from_slice(weights);
+        let out = self
+            .gossip
+            .run(&[literal_f32(&[k, d], &stack), literal_f32(&[k], &w)])?;
+        anyhow::ensure!(out.len() == 1, "gossip output arity {}", out.len());
+        out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))
+    }
+
+    /// Underlying PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

@@ -1,0 +1,54 @@
+//! PJRT runtime stub: compiled when the `pjrt` feature is off (the
+//! default in the offline container, which lacks the vendored `xla`
+//! bindings).  The API mirrors [`super::pjrt_impl`]'s `ModelRuntime` so
+//! the PJRT backend type-checks; every entry point reports that the
+//! runtime is unavailable.  The native_mlp and quadratic backends cover
+//! the full test/bench surface without it.
+
+use super::{BatchInput, TrainOutput, VariantMeta};
+use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
+
+/// Stub of the PJRT model runtime; [`ModelRuntime::load`] always errors.
+pub struct ModelRuntime {
+    /// Variant metadata (never populated — load always fails).
+    pub meta: VariantMeta,
+    /// Gossip stack fanout (never populated).
+    pub gossip_fanout: usize,
+}
+
+impl ModelRuntime {
+    /// Always errors: built without the `pjrt` feature.
+    pub fn load(_dir: &Path, _variant: &str) -> Result<Self> {
+        bail!(
+            "built without the `pjrt` feature: the xla/PJRT runtime is \
+             unavailable (use backend = native_mlp or quadratic, or rebuild \
+             with --features pjrt on the full toolchain image)"
+        )
+    }
+
+    /// Path helper matching the real runtime.
+    pub fn load_default(variant: &str) -> Result<Self> {
+        Self::load(&PathBuf::from("artifacts"), variant)
+    }
+
+    /// Unreachable (no instance can be constructed).
+    pub fn train_step(&self, _flat: &[f32], _x: &BatchInput, _y: &[i32]) -> Result<TrainOutput> {
+        bail!("pjrt feature disabled")
+    }
+
+    /// Unreachable (no instance can be constructed).
+    pub fn eval_step(&self, _flat: &[f32], _x: &BatchInput, _y: &[i32]) -> Result<(f32, i32)> {
+        bail!("pjrt feature disabled")
+    }
+
+    /// Unreachable (no instance can be constructed).
+    pub fn gossip_average(&self, _rows: &[&[f32]], _weights: &[f32]) -> Result<Vec<f32>> {
+        bail!("pjrt feature disabled")
+    }
+
+    /// Platform label for logs.
+    pub fn platform(&self) -> String {
+        "pjrt-disabled".to_string()
+    }
+}

@@ -15,6 +15,10 @@ pub enum EventKind {
     ComputeDone(WorkerId),
     /// Periodic evaluation tick (global metrics snapshot).
     EvalTick,
+    /// The communication graph mutates now (churn subsystem): the engine
+    /// asks its `ChurnModel` for the due mutations and applies them with
+    /// connectivity repair.
+    TopologyChange,
 }
 
 /// A scheduled event.
@@ -146,5 +150,62 @@ mod tests {
         q.pop();
         q.schedule_in(3.0, EventKind::EvalTick);
         assert_eq!(q.pop().unwrap().time, 5.0);
+    }
+
+    #[test]
+    fn interleaved_schedule_pop_keeps_fifo_among_equal_timestamps() {
+        // FIFO among ties must hold even when scheduling is interleaved
+        // with pops at the tied timestamp (the sequence counter is global,
+        // not per-push-batch).
+        let mut q = EventQueue::new();
+        q.schedule(1.0, EventKind::ComputeDone(0));
+        q.schedule(1.0, EventKind::ComputeDone(1));
+        assert_eq!(q.pop().unwrap().kind, EventKind::ComputeDone(0));
+        // clock is now exactly 1.0; new same-time events go behind older ones
+        q.schedule(1.0, EventKind::ComputeDone(2));
+        q.schedule(1.0, EventKind::TopologyChange);
+        assert_eq!(q.pop().unwrap().kind, EventKind::ComputeDone(1));
+        assert_eq!(q.pop().unwrap().kind, EventKind::ComputeDone(2));
+        assert_eq!(q.pop().unwrap().kind, EventKind::TopologyChange);
+        assert_eq!(q.now(), 1.0);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn past_clamping_with_many_events_preserves_order_and_clock() {
+        // Advance the clock, then schedule a burst of events whose
+        // requested times all lie in the past: every one clamps to `now`,
+        // pops in schedule (FIFO) order, and never rewinds the clock.
+        let mut q = EventQueue::new();
+        q.schedule(10.0, EventKind::EvalTick);
+        q.pop();
+        assert_eq!(q.now(), 10.0);
+        for w in 0..50 {
+            q.schedule(w as f64 * 0.1, EventKind::ComputeDone(w)); // all < 10.0
+        }
+        q.schedule(10.5, EventKind::EvalTick); // one genuine future event
+        assert_eq!(q.len(), 51);
+        for w in 0..50 {
+            let e = q.pop().unwrap();
+            assert_eq!(e.time, 10.0, "clamped to now");
+            assert_eq!(e.kind, EventKind::ComputeDone(w), "FIFO among clamped");
+            assert_eq!(q.now(), 10.0);
+        }
+        let e = q.pop().unwrap();
+        assert_eq!((e.time, e.kind), (10.5, EventKind::EvalTick));
+        assert_eq!(q.now(), 10.5);
+    }
+
+    #[test]
+    fn mixed_past_and_future_after_partial_drain() {
+        // Clamped events tie with an existing event at `now`-equal time:
+        // the earlier-scheduled pending event wins the tie.
+        let mut q = EventQueue::new();
+        q.schedule(5.0, EventKind::EvalTick);
+        q.schedule(5.0, EventKind::ComputeDone(1));
+        q.pop(); // now = 5.0, ComputeDone(1) still pending at 5.0
+        q.schedule(2.0, EventKind::ComputeDone(2)); // clamps to 5.0
+        assert_eq!(q.pop().unwrap().kind, EventKind::ComputeDone(1));
+        assert_eq!(q.pop().unwrap().kind, EventKind::ComputeDone(2));
     }
 }

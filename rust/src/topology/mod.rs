@@ -55,6 +55,62 @@ impl Graph {
         }
     }
 
+    /// Remove the undirected edge `(i, j)`, keeping the adjacency lists
+    /// and edge set consistent.  Returns whether the edge existed.
+    pub fn remove_edge(&mut self, i: usize, j: usize) -> bool {
+        assert!(i < self.n && j < self.n, "edge ({i},{j}) out of range n={}", self.n);
+        if i == j || !self.edges.remove(&norm_edge(i, j)) {
+            return false;
+        }
+        if let Some(p) = self.adj[i].iter().position(|&x| x == j) {
+            self.adj[i].swap_remove(p);
+        }
+        if let Some(p) = self.adj[j].iter().position(|&x| x == i) {
+            self.adj[j].swap_remove(p);
+        }
+        true
+    }
+
+    /// Detach vertex `i` by removing every incident edge (worker ids are
+    /// dense and fixed, so "removing" a vertex means isolating it).
+    /// Returns the number of edges removed.
+    pub fn remove_vertex(&mut self, i: usize) -> usize {
+        let nbrs = std::mem::take(&mut self.adj[i]);
+        for &j in &nbrs {
+            self.edges.remove(&norm_edge(i, j));
+            if let Some(p) = self.adj[j].iter().position(|&x| x == i) {
+                self.adj[j].swap_remove(p);
+            }
+        }
+        nbrs.len()
+    }
+
+    /// Whether removing the (existing) edge `(i, j)` would disconnect the
+    /// graph — i.e. the edge is a bridge.  False when the edge is absent.
+    pub fn would_disconnect(&self, i: usize, j: usize) -> bool {
+        if !self.has_edge(i, j) {
+            return false;
+        }
+        let skip = norm_edge(i, j);
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(v) = stack.pop() {
+            for &u in &self.adj[v] {
+                if norm_edge(v, u) == skip {
+                    continue;
+                }
+                if !seen[u] {
+                    seen[u] = true;
+                    count += 1;
+                    stack.push(u);
+                }
+            }
+        }
+        count != self.n
+    }
+
     /// Number of vertices.
     pub fn num_vertices(&self) -> usize {
         self.n
@@ -232,5 +288,55 @@ mod tests {
     fn disconnected_detected() {
         let g = Graph::from_edges(4, &[(0, 1), (2, 3)]);
         assert!(!g.is_connected());
+    }
+
+    #[test]
+    fn remove_edge_keeps_adjacency_consistent() {
+        let mut g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        assert!(g.remove_edge(1, 2));
+        assert!(!g.has_edge(1, 2));
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.degree(1), 1);
+        assert_eq!(g.degree(2), 1);
+        assert!(!g.neighbors(1).contains(&2));
+        assert!(!g.neighbors(2).contains(&1));
+        // removing again (or a never-present edge, or a self-loop) is a no-op
+        assert!(!g.remove_edge(1, 2));
+        assert!(!g.remove_edge(0, 2));
+        assert!(!g.remove_edge(3, 3));
+        assert_eq!(g.num_edges(), 3);
+        // re-adding restores both views
+        g.add_edge(2, 1);
+        assert!(g.has_edge(1, 2));
+        assert_eq!(g.degree(1), 2);
+    }
+
+    #[test]
+    fn remove_vertex_isolates() {
+        let mut g = Graph::from_edges(5, &[(0, 1), (0, 2), (0, 3), (3, 4), (1, 2)]);
+        assert_eq!(g.remove_vertex(0), 3);
+        assert_eq!(g.degree(0), 0);
+        assert_eq!(g.num_edges(), 2);
+        assert!(g.has_edge(3, 4) && g.has_edge(1, 2));
+        for v in 1..5 {
+            assert!(!g.neighbors(v).contains(&0), "stale adjacency at {v}");
+        }
+        assert_eq!(g.remove_vertex(0), 0); // already isolated
+    }
+
+    #[test]
+    fn would_disconnect_detects_bridges() {
+        // path 0-1-2 plus triangle 2-3-4: every path edge is a bridge,
+        // triangle edges are not.
+        let mut g = Graph::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 2)]);
+        assert!(g.would_disconnect(0, 1));
+        assert!(g.would_disconnect(1, 2));
+        assert!(!g.would_disconnect(2, 3));
+        assert!(!g.would_disconnect(3, 4));
+        assert!(!g.would_disconnect(0, 3)); // absent edge: never a bridge
+        // consistency with an actual removal
+        g.remove_edge(2, 3);
+        assert!(g.is_connected());
+        assert!(g.would_disconnect(4, 2));
     }
 }

@@ -1,0 +1,221 @@
+//! Minimal in-tree drop-in for the `anyhow` crate.
+//!
+//! The container vendors no crates.io registry, so this workspace builds
+//! against exactly the subset of the anyhow API its code uses: [`Result`],
+//! [`Error`], the [`anyhow!`]/[`bail!`]/[`ensure!`] macros, and the
+//! [`Context`] extension for `Result` and `Option`.  Errors carry a plain
+//! message string (nothing in the workspace downcasts), and context wraps
+//! as `"context: inner"` exactly like anyhow's Display output.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `anyhow::Result`: defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Dynamic error value: a display message (with accumulated context).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string() }
+    }
+
+    /// Wrap with an outer context message (`"context: inner"`).
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like anyhow: a blanket conversion from std errors.  `Error` itself does
+// not implement `std::error::Error`, which keeps this coherent with the
+// reflexive `From<T> for T`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// Internal unifier so [`Context`] works on both `Result<T, E: StdError>`
+/// and `Result<T, Error>` (mirrors anyhow's private ext trait).
+#[doc(hidden)]
+pub trait IntoError {
+    /// Convert into the dynamic [`Error`].
+    fn into_error(self) -> Error;
+}
+
+impl<E: StdError + Send + Sync + 'static> IntoError for E {
+    fn into_error(self) -> Error {
+        Error { msg: self.to_string() }
+    }
+}
+
+impl IntoError for Error {
+    fn into_error(self) -> Error {
+        self
+    }
+}
+
+/// Context extension: attach a message to the error arm of a `Result`, or
+/// convert `Option::None` into an error.
+pub trait Context<T, E> {
+    /// Wrap the error with `context`.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error with a lazily evaluated context.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: IntoError> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Early-return with an [`Error`] when the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(
+                "condition failed: `{}`",
+                ::std::stringify!($cond)
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let v: u32 = s.parse().context("not a number")?;
+        ensure!(v < 100, "value {v} too large");
+        Ok(v)
+    }
+
+    #[test]
+    fn happy_path() {
+        assert_eq!(parse("42").unwrap(), 42);
+    }
+
+    #[test]
+    fn context_wraps_std_errors() {
+        let e = parse("nope").unwrap_err();
+        assert!(e.to_string().starts_with("not a number: "), "{e}");
+    }
+
+    #[test]
+    fn ensure_formats_args() {
+        let e = parse("200").unwrap_err();
+        assert_eq!(e.to_string(), "value 200 too large");
+    }
+
+    #[test]
+    fn bail_and_bare_ensure() {
+        fn f(flag: bool) -> Result<()> {
+            ensure!(flag);
+            bail!("always fails: {}", 7)
+        }
+        assert!(f(false).unwrap_err().to_string().contains("condition failed"));
+        assert_eq!(f(true).unwrap_err().to_string(), "always fails: 7");
+    }
+
+    #[test]
+    fn option_context_and_with_context() {
+        let none: Option<u8> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+        let none: Option<u8> = None;
+        let e = none.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(e.to_string(), "missing x");
+        assert_eq!(Some(5u8).context("unused").unwrap(), 5);
+    }
+
+    #[test]
+    fn result_chain_through_question_mark() {
+        fn inner() -> Result<()> {
+            bail!("inner failure")
+        }
+        fn outer() -> Result<()> {
+            inner().context("outer")?;
+            Ok(())
+        }
+        assert_eq!(outer().unwrap_err().to_string(), "outer: inner failure");
+    }
+
+    #[test]
+    fn from_io_error() {
+        fn f() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+        }
+        assert!(f().is_err());
+    }
+}
