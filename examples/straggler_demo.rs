@@ -1,0 +1,129 @@
+//! Straggler-process playground: correlated failures end to end.
+//!
+//! 1. Materializes a Gilbert–Elliott persistent-slow-state scenario into
+//!    an explicit JSON trace (the failure-process analogue of the churn
+//!    subsystem's `topology_updates.json`), saves + reloads it, and
+//!    replays it to show traces are faithful, portable artifacts.
+//! 2. Runs DSGD-AAU against synchronous DSGD and fixed-k under the
+//!    i.i.d. Bernoulli coin and under correlated processes with the same
+//!    slowdown, showing that adaptive waiting matters most when slowness
+//!    is *persistent* — the regime the coin cannot express.
+//!
+//! ```text
+//! cargo run --release --example straggler_demo
+//! ```
+
+use dsgd_aau::algorithms::AlgorithmKind;
+use dsgd_aau::config::{BackendKind, ExperimentConfig};
+use dsgd_aau::coordinator::run_experiment;
+use dsgd_aau::engine::Engine;
+use dsgd_aau::sim::{materialize_trace, StragglerKind, StragglerModel};
+use dsgd_aau::topology::TopologyKind;
+
+fn main() -> anyhow::Result<()> {
+    let n = 16;
+
+    // --- 1. traces are explicit, saveable artifacts --------------------
+    // (time constants at the workload scale: slow windows of ~0.1 s span
+    // ~10 gradient steps at mean_compute = 0.01 s)
+    let ge = StragglerModel {
+        kind: StragglerKind::GilbertElliott { mean_fast: 0.4, mean_slow: 0.1 },
+        seed: Some(42),
+        ..StragglerModel::default()
+    };
+    let timeline = materialize_trace(&ge, n, 0, 150.0)?;
+    println!(
+        "materialized {} state flips over 150 virtual seconds ({} workers)",
+        timeline.num_events(),
+        n
+    );
+    for e in timeline.entries.iter().take(4) {
+        let ev = e.events[0];
+        println!(
+            "  t={:<6.2} worker {} -> {}",
+            e.time,
+            ev.worker,
+            if ev.slow { "slow" } else { "fast" }
+        );
+    }
+
+    let path = std::env::temp_dir().join("straggler_demo_trace.json");
+    timeline.save(&path)?;
+    let reloaded = dsgd_aau::sim::StragglerTimeline::load(&path)?;
+    anyhow::ensure!(reloaded == timeline, "trace must round-trip through JSON");
+    println!("trace round-trips through JSON\n");
+
+    // --- 2. training under correlated stragglers -----------------------
+    let processes: Vec<(&str, StragglerModel)> = vec![
+        ("bernoulli", StragglerModel::default()),
+        ("gilbert_elliott", ge.clone()),
+        (
+            "weibull bursts",
+            StragglerModel {
+                kind: StragglerKind::WeibullBursts { shape: 0.7, scale: 0.4, mean_burst: 0.1 },
+                seed: Some(42),
+                ..StragglerModel::default()
+            },
+        ),
+        (
+            "trace replay",
+            StragglerModel {
+                kind: StragglerKind::Trace { path: path.display().to_string() },
+                ..StragglerModel::default()
+            },
+        ),
+    ];
+
+    println!(
+        "{:<16} {:>10} {:>8} {:>10} {:>9} {:>9}",
+        "process", "algo", "iters", "vtime(s)", "s/iter", "loss"
+    );
+    for (label, straggler) in &processes {
+        for alg in [
+            AlgorithmKind::DsgdAau,
+            AlgorithmKind::DsgdSync,
+            AlgorithmKind::FixedK { k: n },
+        ] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.name = format!("straggler_demo_{label}");
+            cfg.num_workers = n;
+            cfg.topology = TopologyKind::Random { p: 0.25, seed: 3 };
+            cfg.algorithm = alg;
+            cfg.backend = BackendKind::Quadratic;
+            cfg.straggler = straggler.clone();
+            cfg.max_iterations = 400;
+            cfg.eval_every = 100;
+            cfg.mean_compute = 0.01;
+            let s = run_experiment(&cfg)?;
+            println!(
+                "{:<16} {:>10} {:>8} {:>10.2} {:>9.4} {:>9.4}",
+                label,
+                s.algorithm,
+                s.iterations,
+                s.virtual_time,
+                s.virtual_time / s.iterations.max(1) as f64,
+                s.final_loss(),
+            );
+        }
+    }
+    std::fs::remove_file(&path).ok();
+
+    // --- 3. the engine exposes which process drove a run ----------------
+    let mut cfg = ExperimentConfig::default();
+    cfg.num_workers = 8;
+    cfg.backend = BackendKind::Quadratic;
+    cfg.straggler = ge;
+    cfg.max_iterations = 50;
+    cfg.mean_compute = 0.01;
+    let eng = Engine::from_config(&cfg, dsgd_aau::coordinator::build_backend(&cfg)?);
+    println!("\nactive straggler process: {}", eng.core().straggler_process());
+
+    println!(
+        "\nReading: under bernoulli the per-iteration coin spreads slowness \
+         evenly, so the barrier baselines limp along; under gilbert_elliott \
+         or weibull the *same* slowdown concentrates into persistent windows \
+         and the full-barrier baselines' time per iteration blows up while \
+         DSGD-AAU routes gossip around the currently-slow workers."
+    );
+    Ok(())
+}

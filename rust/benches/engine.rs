@@ -72,6 +72,28 @@ fn main() {
         });
     }
 
+    // 2b. full gossip round: every member's weighted average, rows
+    //     gathered once per round (mix_into_scratch's access pattern —
+    //     the per-member re-gather made this O(m²) in allocations)
+    {
+        let d = 10_752;
+        let m = 16;
+        let mut rng = Rng64::seed_from_u64(2);
+        let rows_data: Vec<Vec<f32>> =
+            (0..m).map(|_| (0..d).map(|_| rng.normal_f32()).collect()).collect();
+        let g = random_connected(m, 0.4, 5);
+        let members: Vec<usize> = (0..m).collect();
+        let gw = GroupWeights::metropolis(&g, &members);
+        let mut scratch: Vec<Vec<f32>> = vec![vec![0f32; d]; m];
+        bench("gossip_round gather-once 16x10752", reps, 200, || {
+            let rows: Vec<&[f32]> = rows_data.iter().map(|r| r.as_slice()).collect();
+            for (a, out) in scratch.iter_mut().enumerate() {
+                dsgd_aau::engine::native_weighted_average_into(&rows, &gw.weights[a], out);
+            }
+            std::hint::black_box(&scratch);
+        });
+    }
+
     // 3. Metropolis weights for a 32-worker group on a random graph
     {
         let g = random_connected(64, 0.15, 7);

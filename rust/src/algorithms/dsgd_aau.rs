@@ -43,7 +43,18 @@ impl UpdateRule for DsgdAau {
 
         // Alg. 3: does the waiting set now contain a novel edge?
         if core.pathsearch.find_novel_pair(&core.graph, &self.waiting).is_none() {
-            return; // keep waiting (worker idles; straggler may still matter)
+            if self.waiting.len() < core.num_workers() {
+                return; // keep waiting (worker idles; straggler may still matter)
+            }
+            // Liveness guard: every worker is now waiting, so no
+            // ComputeDone/ComputeStart event is left in the queue and
+            // returning here would quiesce the run silently before
+            // max_iterations (reachable once churn's `prune_missing`
+            // leaves the epoch without a usable novel edge).  Fire a
+            // fallback Metropolis round over the whole waiting set
+            // instead — one plain consensus step that restarts the fleet
+            // and lets Pathsearch re-accumulate on the live graph.
+            core.recorder.stall_fallbacks += 1;
         }
 
         // The iteration fires: all waiting workers participate (Alg. 2

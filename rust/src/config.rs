@@ -107,6 +107,10 @@ pub struct ExperimentConfig {
     pub time_budget: Option<f64>,
     /// Evaluate the global average every this many gossip iterations.
     pub eval_every: u64,
+    /// Additionally evaluate every this many *virtual seconds* (drives
+    /// `EventKind::EvalTick`; useful when iteration rates differ wildly
+    /// across algorithms).  `None` disables time-based evaluation.
+    pub eval_every_seconds: Option<f64>,
     /// Mean local compute time (virtual seconds per gradient step).
     pub mean_compute: f64,
     /// Log-normal σ of per-worker base speeds (0 = homogeneous fleet).
@@ -148,6 +152,7 @@ impl Default for ExperimentConfig {
             max_iterations: 500,
             time_budget: None,
             eval_every: 10,
+            eval_every_seconds: None,
             mean_compute: 0.05,
             hetero_sigma: 0.25,
             straggler: StragglerModel::default(),
@@ -195,8 +200,15 @@ impl ExperimentConfig {
                     cfg.time_budget = if matches!(v, Json::Null) { None } else { Some(need_f64(key, v)?) }
                 }
                 "eval_every" => cfg.eval_every = need_usize(key, v)? as u64,
+                "eval_every_seconds" => {
+                    cfg.eval_every_seconds =
+                        if matches!(v, Json::Null) { None } else { Some(need_f64(key, v)?) }
+                }
                 "mean_compute" => cfg.mean_compute = need_f64(key, v)?,
                 "hetero_sigma" => cfg.hetero_sigma = need_f64(key, v)?,
+                // the full straggler section (process kind + parameters)
+                "straggler" => cfg.straggler = StragglerModel::from_json(v)?,
+                // legacy flat knobs, kept for config compatibility
                 "straggler_probability" => cfg.straggler.probability = need_f64(key, v)?,
                 "straggler_slowdown" => cfg.straggler.slowdown = need_f64(key, v)?,
                 "comm_latency" => cfg.comm.latency = need_f64(key, v)?,
@@ -237,10 +249,12 @@ impl ExperimentConfig {
             m.insert("time_budget".into(), Json::Num(t));
         }
         m.insert("eval_every".into(), Json::from(self.eval_every as usize));
+        if let Some(t) = self.eval_every_seconds {
+            m.insert("eval_every_seconds".into(), Json::Num(t));
+        }
         m.insert("mean_compute".into(), Json::Num(self.mean_compute));
         m.insert("hetero_sigma".into(), Json::Num(self.hetero_sigma));
-        m.insert("straggler_probability".into(), Json::Num(self.straggler.probability));
-        m.insert("straggler_slowdown".into(), Json::Num(self.straggler.slowdown));
+        m.insert("straggler".into(), self.straggler.to_json());
         m.insert("comm_latency".into(), Json::Num(self.comm.latency));
         m.insert("comm_bandwidth".into(), Json::Num(self.comm.bandwidth));
         m.insert("lr_eta0".into(), Json::Num(self.lr.eta0));
@@ -269,12 +283,11 @@ impl ExperimentConfig {
         anyhow::ensure!(self.num_workers >= 2, "need at least 2 workers");
         anyhow::ensure!(self.max_iterations > 0, "max_iterations must be positive");
         anyhow::ensure!(self.mean_compute > 0.0, "mean_compute must be positive");
-        anyhow::ensure!(
-            (0.0..=1.0).contains(&self.straggler.probability),
-            "straggler probability must be in [0,1]"
-        );
-        anyhow::ensure!(self.straggler.slowdown >= 1.0, "slowdown must be >= 1");
+        if let Some(dt) = self.eval_every_seconds {
+            anyhow::ensure!(dt > 0.0, "eval_every_seconds must be positive");
+        }
         anyhow::ensure!(self.prague_group >= 2, "prague group must be >= 2");
+        self.straggler.validate()?;
         self.churn.validate()?;
         Ok(())
     }
@@ -308,6 +321,13 @@ mod tests {
             kind: crate::churn::ChurnKind::FlakyLinks { rate: 2.0, mean_downtime: 0.5 },
             seed: Some(9),
         };
+        cfg.straggler = StragglerModel {
+            kind: crate::sim::StragglerKind::GilbertElliott { mean_fast: 6.0, mean_slow: 1.5 },
+            slowdown: 8.0,
+            seed: Some(4),
+            ..StragglerModel::default()
+        };
+        cfg.eval_every_seconds = Some(2.5);
         let text = cfg.to_json().to_string_compact();
         let back = ExperimentConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.algorithm, cfg.algorithm);
@@ -315,6 +335,38 @@ mod tests {
         assert_eq!(back.time_budget, cfg.time_budget);
         assert_eq!(back.num_workers, cfg.num_workers);
         assert_eq!(back.churn, cfg.churn);
+        assert_eq!(back.straggler, cfg.straggler);
+        assert_eq!(back.eval_every_seconds, cfg.eval_every_seconds);
+    }
+
+    #[test]
+    fn straggler_section_parses_strictly() {
+        let cfg = ExperimentConfig::from_json(
+            &Json::parse(
+                r#"{"straggler": {"kind": "weibull", "shape": 0.6, "scale": 9.0,
+                     "mean_burst": 2.0, "slowdown": 12.0}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.straggler.kind,
+            crate::sim::StragglerKind::WeibullBursts { shape: 0.6, scale: 9.0, mean_burst: 2.0 }
+        );
+        assert_eq!(cfg.straggler.slowdown, 12.0);
+        // unknown straggler keys are rejected, not defaulted
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"straggler": {"kind": "bernoulli", "prob": 0.2}}"#).unwrap()
+        )
+        .is_err());
+        // the legacy flat knobs still work and target the Bernoulli coin
+        let cfg = ExperimentConfig::from_json(
+            &Json::parse(r#"{"straggler_probability": 0.3, "straggler_slowdown": 6}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.straggler.probability, 0.3);
+        assert_eq!(cfg.straggler.slowdown, 6.0);
+        assert_eq!(cfg.straggler.kind, crate::sim::StragglerKind::Bernoulli);
     }
 
     #[test]

@@ -83,7 +83,7 @@ impl EngineCore {
         self.recent_loss.0 += out.loss as f64;
         self.recent_loss.1 += 1;
         self.stash[w] = Some(out);
-        let dur = self.compute.sample_duration(w);
+        let dur = self.compute.sample_duration(w, self.queue.now());
         self.queue.schedule_in(dur, EventKind::ComputeDone(w));
     }
 
@@ -150,6 +150,7 @@ impl EngineCore {
         if m <= 1 {
             return;
         }
+        debug_assert!(gw.stochasticity_error() < 1e-4, "non-doubly-stochastic weights");
         self.mix_into_scratch(gw);
         for (a, &mb) in gw.members.iter().enumerate() {
             std::mem::swap(&mut self.params[mb], &mut self.scratch[a]);
@@ -159,16 +160,18 @@ impl EngineCore {
 
     /// Compute every member's weighted average into the scratch buffers
     /// (allocation-free once warm; the PJRT Pallas kernel is used when
-    /// enabled and the group fits the artifact fanout).
+    /// enabled and the group fits the artifact fanout).  The member rows
+    /// are gathered once per round, not once per member — the per-member
+    /// gather made this hot path O(m²) in allocations.
     fn mix_into_scratch(&mut self, gw: &GroupWeights) {
         let m = gw.len();
         let d = self.params[0].len();
         while self.scratch.len() < m {
             self.scratch.push(vec![0f32; d]);
         }
+        let rows: Vec<&[f32]> =
+            gw.members.iter().map(|&mb| self.params[mb].as_slice()).collect();
         for a in 0..m {
-            let rows: Vec<&[f32]> =
-                gw.members.iter().map(|&mb| self.params[mb].as_slice()).collect();
             let weights = &gw.weights[a];
             if self.pjrt_gossip {
                 if let Some(out) = self.backend.gossip_average(&rows, weights) {
@@ -251,11 +254,17 @@ impl EngineCore {
     }
 
     /// Evaluate the fleet-average parameter vector and record the point.
+    /// A repeat call at the same `(k, now)` — e.g. the end-of-run eval
+    /// landing on an iteration that already evaluated — is a no-op: the
+    /// recorder dedupes, and the backend eval is skipped up front.
     pub fn eval_now(&mut self) {
+        let (k, t) = (self.k, self.now());
+        if self.recorder.curve.last().map_or(false, |p| p.iteration == k && p.time == t) {
+            return;
+        }
         let refs: Vec<&[f32]> = self.params.iter().map(|p| p.as_slice()).collect();
         let mean = crate::model::mean_of(&refs);
         let out = self.backend.eval(&mean);
-        let (k, t) = (self.k, self.now());
         self.recorder.record_eval(k, t, out.loss, out.accuracy);
     }
 
@@ -279,6 +288,11 @@ impl EngineCore {
     /// Observed straggler fraction from the compute model.
     pub fn straggler_fraction(&self) -> f64 {
         self.compute.straggler_fraction()
+    }
+
+    /// Label of the active straggler process.
+    pub fn straggler_process(&self) -> &'static str {
+        self.compute.process_name()
     }
 }
 
@@ -333,6 +347,8 @@ pub struct RunSummary {
     pub virtual_time: f64,
     /// Observed straggler fraction.
     pub straggler_fraction: f64,
+    /// Label of the straggler process that drove the run.
+    pub straggler_process: &'static str,
     /// Pathsearch epochs completed (DSGD-AAU only; 0 otherwise).
     pub epochs_completed: u64,
     /// Final consensus gap `max_j ‖w_j − w̄‖`.
@@ -360,6 +376,8 @@ pub struct Engine {
     churn: ChurnModel,
     max_iterations: u64,
     time_budget: Option<f64>,
+    /// Time-based evaluation period (drives `EventKind::EvalTick`).
+    eval_every_seconds: Option<f64>,
 }
 
 impl Engine {
@@ -379,13 +397,13 @@ impl Engine {
         let n = cfg.num_workers;
         let graph = cfg.topology.build(n);
         assert!(graph.is_connected(), "topology must be connected");
-        let compute = ComputeModel::heterogeneous(
+        let compute = ComputeModel::new(
             n,
             cfg.mean_compute,
             cfg.hetero_sigma,
-            cfg.straggler,
+            &cfg.straggler,
             cfg.seed_for("compute"),
-        );
+        )?;
         let dim = backend.dim();
         let init = backend.init_params(cfg.seed_for("init"));
         assert_eq!(init.len(), dim);
@@ -418,6 +436,7 @@ impl Engine {
             churn,
             max_iterations: cfg.max_iterations,
             time_budget: cfg.time_budget,
+            eval_every_seconds: cfg.eval_every_seconds,
         })
     }
 
@@ -437,11 +456,23 @@ impl Engine {
         if let Some(t) = self.churn.next_change() {
             self.core.queue.schedule(t, EventKind::TopologyChange);
         }
+        if let Some(dt) = self.eval_every_seconds {
+            self.core.queue.schedule(dt, EventKind::EvalTick);
+        }
         while let Some(Event { kind, .. }) = self.core.queue.pop() {
             match kind {
                 EventKind::ComputeStart(w) => self.core.begin_compute(w),
                 EventKind::ComputeDone(w) => self.rule.on_ready(w, &mut self.core),
-                EventKind::EvalTick => self.core.eval_now(),
+                EventKind::EvalTick => {
+                    self.core.eval_now();
+                    // re-arm only while other activity is pending so a
+                    // quiescing run cannot be kept alive by its own ticks
+                    if let Some(dt) = self.eval_every_seconds {
+                        if !self.core.queue.is_empty() {
+                            self.core.queue.schedule_in(dt, EventKind::EvalTick);
+                        }
+                    }
+                }
                 EventKind::TopologyChange => {
                     let now = self.core.queue.now();
                     let muts = self.churn.step(now, &self.core.graph);
@@ -467,11 +498,15 @@ impl Engine {
                 }
             }
         }
+        // Final curve point.  When the last event already evaluated at
+        // this exact (k, t) the recorder drops the duplicate, so CSV
+        // output and bytes_to_accuracy see each point once.
         self.core.eval_now();
         RunSummary {
             iterations: self.core.k,
             virtual_time: self.core.now(),
             straggler_fraction: self.core.straggler_fraction(),
+            straggler_process: self.core.straggler_process(),
             epochs_completed: self.core.pathsearch.epochs_completed,
             consensus_gap: self.core.consensus_gap(),
             algorithm: self.rule.name(),

@@ -8,11 +8,14 @@
 //!   topologies, Metropolis consensus, the Pathsearch procedure (paper
 //!   Alg. 3), the DSGD-AAU update rule plus four baselines (synchronous
 //!   DSGD, AD-PSGD, Prague, AGP), a discrete-event cluster simulator with
-//!   straggler injection, a dynamic-topology [`churn`] subsystem
-//!   (time-varying graphs: flaky links, mobile workers, partition/heal
-//!   cycles, JSON schedules — applied live with connectivity repair), and
-//!   the experiment harness regenerating every table/figure of the
-//!   paper's evaluation plus churn sweeps (`bench_churn`).
+//!   pluggable straggler injection ([`sim::straggler`]: the paper's
+//!   i.i.d. Bernoulli coin, Gilbert–Elliott persistent slow states,
+//!   Weibull-renewal bursts, JSON trace replay), a dynamic-topology
+//!   [`churn`] subsystem (time-varying graphs: flaky links, mobile
+//!   workers, partition/heal cycles, JSON schedules — applied live with
+//!   connectivity repair), and the experiment harness regenerating every
+//!   table/figure of the paper's evaluation plus churn and straggler
+//!   sweeps (`bench_churn`, `bench_straggler`).
 //! * **L2 (python/compile/model.py)** — the worker model fwd/bwd in JAX,
 //!   AOT-lowered once to HLO text.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (fused linear

@@ -36,7 +36,9 @@ OPTIONS (train/compare):
   --iterations K         gossip iterations to run
   --time-budget SECS     virtual-time budget
   --iid                  IID partitioning (default non-IID)
-  --straggler-prob P     straggler probability
+  --straggler-prob P     Bernoulli straggler probability (forces the
+                         bernoulli process, overriding a correlated
+                         \"straggler\" section from --config)
   --slowdown S           straggler slowdown factor
   --seed S               RNG seed
   --out FILE             write the loss-curve CSV here
@@ -122,7 +124,11 @@ impl TrainArgs {
             cfg.iid = true;
         }
         if let Some(p) = self.straggler_prob {
+            // the flag names the Bernoulli coin explicitly, so it also
+            // overrides a correlated `straggler` section from --config
+            // (otherwise it would be silently ignored)
             cfg.straggler.probability = p;
+            cfg.straggler.kind = dsgd_aau::sim::StragglerKind::Bernoulli;
         }
         if let Some(s) = self.slowdown {
             cfg.straggler.slowdown = s;

@@ -42,6 +42,9 @@ pub struct Recorder {
     pub mutations_applied: u64,
     /// Removals deferred by connectivity repair (the link stayed up).
     pub mutations_deferred: u64,
+    /// Full-fleet stall fallbacks fired by DSGD-AAU (liveness guard:
+    /// every worker was waiting with no novel edge available).
+    pub stall_fallbacks: u64,
 }
 
 impl Recorder {
@@ -51,7 +54,15 @@ impl Recorder {
     }
 
     /// Append an eval snapshot (bytes = cumulative traffic at this point).
+    /// An exact repeat of the last point's `(iteration, time)` is dropped:
+    /// nothing can have changed in zero virtual time at the same k, and
+    /// trailing duplicates would skew CSV output and `bytes_to_accuracy`.
     pub fn record_eval(&mut self, iteration: u64, time: f64, loss: f32, accuracy: f32) {
+        if let Some(last) = self.curve.last() {
+            if last.iteration == iteration && last.time == time {
+                return;
+            }
+        }
         let bytes = self.total_bytes();
         self.curve.push(CurvePoint { iteration, time, loss, accuracy, bytes });
     }
@@ -146,6 +157,22 @@ mod tests {
         assert_eq!(r.time_to_accuracy(0.4), Some(1.0));
         assert_eq!(r.time_to_accuracy(0.9), None);
         assert_eq!(r.time_to_loss(1.5), Some(1.0));
+    }
+
+    #[test]
+    fn duplicate_trailing_eval_point_dropped() {
+        let mut r = recorder();
+        assert_eq!(r.curve.len(), 3);
+        // exact repeat of the last (iteration, time): dropped
+        r.record_eval(20, 2.0, 0.9, 0.7);
+        assert_eq!(r.curve.len(), 3, "duplicate trailing point must be deduped");
+        // same iteration at a later time (an EvalTick): kept
+        r.record_eval(20, 2.5, 0.85, 0.72);
+        assert_eq!(r.curve.len(), 4);
+        // same time at a later iteration (two fires at one instant): kept
+        r.record_eval(21, 2.5, 0.84, 0.73);
+        assert_eq!(r.curve.len(), 5);
+        assert_eq!(r.final_accuracy(), 0.73);
     }
 
     #[test]

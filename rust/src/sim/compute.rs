@@ -1,38 +1,31 @@
-//! Per-worker compute-time model with straggler injection (paper §6).
+//! Per-worker compute-time model with pluggable straggler injection
+//! (paper §6 + the correlated-failure extension).
 //!
 //! "We randomly select workers as stragglers in each iteration … the
 //! straggler sleeps for some time in the iteration (e.g., the sleep time
 //! could be 6x of the average one local computation time)."  The ablation
 //! (Figs. 9–12) sweeps the straggler probability (5–40 %) and the slowdown
-//! factor (5–40×); both are first-class knobs here.
+//! factor (5–40×); both are first-class knobs here.  *When* a worker is
+//! slow is decided by a [`StragglerProcess`] — the paper's i.i.d. coin by
+//! default, or a time-correlated process (Gilbert–Elliott, Weibull
+//! bursts, trace replay) from the `straggler` config section.
 
+use super::straggler::{StragglerModel, StragglerProcess};
 use crate::util::Rng64;
 use crate::WorkerId;
-
-/// Straggler injection knobs (paper ablation parameters).
-#[derive(Debug, Clone, Copy)]
-pub struct StragglerModel {
-    /// Per-iteration probability that a worker is a straggler ("P").
-    pub probability: f64,
-    /// Multiplicative slowdown applied to the straggler's compute time.
-    pub slowdown: f64,
-}
-
-impl Default for StragglerModel {
-    fn default() -> Self {
-        // The paper settles on 10 % stragglers at 10x slowdown.
-        StragglerModel { probability: 0.10, slowdown: 10.0 }
-    }
-}
+use anyhow::Result;
 
 /// Heterogeneous per-worker compute-time sampler.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct ComputeModel {
     /// Mean gradient-computation time per worker (seconds).
     base_mean: Vec<f64>,
     /// Log-normal jitter σ applied to every sample.
     jitter_sigma: f64,
-    straggler: StragglerModel,
+    /// Multiplicative slowdown applied while a worker is slow.
+    slowdown: f64,
+    /// Decides *when* a worker is slow.
+    process: Box<dyn StragglerProcess>,
     rng: Rng64,
     /// Count of straggler-inflated samples (diagnostics).
     pub straggler_events: u64,
@@ -41,20 +34,50 @@ pub struct ComputeModel {
 }
 
 impl ComputeModel {
+    /// General constructor: worker means drawn log-normally around
+    /// `mean_compute` with spread `hetero_sigma` (0 = homogeneous), and
+    /// the straggler process built from the config section (fails only
+    /// when a trace file cannot be loaded).
+    pub fn new(
+        n: usize,
+        mean_compute: f64,
+        hetero_sigma: f64,
+        straggler: &StragglerModel,
+        seed: u64,
+    ) -> Result<Self> {
+        let mut rng = Rng64::seed_from_u64(seed ^ 0xBEEF);
+        let base_mean = if hetero_sigma > 0.0 {
+            (0..n).map(|_| mean_compute * rng.lognormal(hetero_sigma)).collect()
+        } else {
+            vec![mean_compute; n]
+        };
+        Ok(ComputeModel {
+            base_mean,
+            jitter_sigma: 0.1,
+            slowdown: straggler.slowdown,
+            process: straggler.build(n, seed)?,
+            rng,
+            straggler_events: 0,
+            samples: 0,
+        })
+    }
+
     /// Homogeneous fleet: every worker has the same `mean_compute` time.
+    /// Panics on an invalid straggler section (tests convenience).
     pub fn homogeneous(n: usize, mean_compute: f64, straggler: StragglerModel, seed: u64) -> Self {
         ComputeModel {
             base_mean: vec![mean_compute; n],
             jitter_sigma: 0.1,
-            straggler,
+            slowdown: straggler.slowdown,
+            process: straggler.build(n, seed).expect("straggler process"),
             rng: Rng64::seed_from_u64(seed ^ 0xC0FFEE),
             straggler_events: 0,
             samples: 0,
         }
     }
 
-    /// Heterogeneous fleet: worker means drawn log-normally around
-    /// `mean_compute` with spread `hetero_sigma` (0 = homogeneous).
+    /// Heterogeneous fleet (see [`Self::new`]); panics on an invalid
+    /// straggler section (tests/benches convenience).
     pub fn heterogeneous(
         n: usize,
         mean_compute: f64,
@@ -62,20 +85,7 @@ impl ComputeModel {
         straggler: StragglerModel,
         seed: u64,
     ) -> Self {
-        let mut rng = Rng64::seed_from_u64(seed ^ 0xBEEF);
-        let base_mean = if hetero_sigma > 0.0 {
-            (0..n).map(|_| mean_compute * rng.lognormal(hetero_sigma)).collect()
-        } else {
-            vec![mean_compute; n]
-        };
-        ComputeModel {
-            base_mean,
-            jitter_sigma: 0.1,
-            straggler,
-            rng,
-            straggler_events: 0,
-            samples: 0,
-        }
+        Self::new(n, mean_compute, hetero_sigma, &straggler, seed).expect("straggler process")
     }
 
     /// Number of workers.
@@ -93,15 +103,22 @@ impl ComputeModel {
         self.base_mean.iter().sum::<f64>() / self.base_mean.len() as f64
     }
 
-    /// Sample the duration of worker `w`'s next local gradient step.
-    /// Bernoulli straggler injection multiplies by the slowdown factor.
-    pub fn sample_duration(&mut self, w: WorkerId) -> f64 {
+    /// Label of the active straggler process.
+    pub fn process_name(&self) -> &'static str {
+        self.process.name()
+    }
+
+    /// Sample the duration of worker `w`'s next local gradient step
+    /// beginning at virtual time `now` (per worker, `now` must be
+    /// non-decreasing across calls — the event loop guarantees this).
+    /// The straggler process decides whether the slowdown applies.
+    pub fn sample_duration(&mut self, w: WorkerId, now: f64) -> f64 {
         self.samples += 1;
         let jitter =
             if self.jitter_sigma > 0.0 { self.rng.lognormal(self.jitter_sigma) } else { 1.0 };
         let mut d = self.base_mean[w] * jitter;
-        if self.rng.gen_bool(self.straggler.probability) {
-            d *= self.straggler.slowdown;
+        if self.process.is_slow(w, now, &mut self.rng) {
+            d *= self.slowdown;
             self.straggler_events += 1;
         }
         d
@@ -120,18 +137,18 @@ impl ComputeModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::straggler::StragglerKind;
+
+    fn bernoulli(probability: f64, slowdown: f64) -> StragglerModel {
+        StragglerModel { probability, slowdown, ..StragglerModel::default() }
+    }
 
     #[test]
     fn durations_positive_and_mean_reasonable() {
-        let mut m = ComputeModel::homogeneous(
-            4,
-            0.1,
-            StragglerModel { probability: 0.0, slowdown: 10.0 },
-            1,
-        );
+        let mut m = ComputeModel::homogeneous(4, 0.1, bernoulli(0.0, 10.0), 1);
         let mut sum = 0.0;
-        for _ in 0..2000 {
-            let d = m.sample_duration(0);
+        for i in 0..2000 {
+            let d = m.sample_duration(0, i as f64 * 0.1);
             assert!(d > 0.0);
             sum += d;
         }
@@ -141,14 +158,9 @@ mod tests {
 
     #[test]
     fn straggler_injection_rate() {
-        let mut m = ComputeModel::homogeneous(
-            1,
-            1.0,
-            StragglerModel { probability: 0.25, slowdown: 6.0 },
-            7,
-        );
-        for _ in 0..4000 {
-            m.sample_duration(0);
+        let mut m = ComputeModel::homogeneous(1, 1.0, bernoulli(0.25, 6.0), 7);
+        for i in 0..4000 {
+            m.sample_duration(0, i as f64);
         }
         let f = m.straggler_fraction();
         assert!((f - 0.25).abs() < 0.03, "fraction {f}");
@@ -156,20 +168,10 @@ mod tests {
 
     #[test]
     fn straggler_slowdown_multiplies() {
-        let mut slow = ComputeModel::homogeneous(
-            1,
-            1.0,
-            StragglerModel { probability: 1.0, slowdown: 8.0 },
-            3,
-        );
-        let mut fast = ComputeModel::homogeneous(
-            1,
-            1.0,
-            StragglerModel { probability: 0.0, slowdown: 8.0 },
-            3,
-        );
-        let ds: f64 = (0..500).map(|_| slow.sample_duration(0)).sum::<f64>() / 500.0;
-        let df: f64 = (0..500).map(|_| fast.sample_duration(0)).sum::<f64>() / 500.0;
+        let mut slow = ComputeModel::homogeneous(1, 1.0, bernoulli(1.0, 8.0), 3);
+        let mut fast = ComputeModel::homogeneous(1, 1.0, bernoulli(0.0, 8.0), 3);
+        let ds: f64 = (0..500).map(|i| slow.sample_duration(0, i as f64)).sum::<f64>() / 500.0;
+        let df: f64 = (0..500).map(|i| fast.sample_duration(0, i as f64)).sum::<f64>() / 500.0;
         let ratio = ds / df;
         assert!((ratio - 8.0).abs() < 1.0, "ratio {ratio}");
     }
@@ -187,8 +189,39 @@ mod tests {
     fn deterministic_per_seed() {
         let mut a = ComputeModel::homogeneous(2, 0.1, StragglerModel::default(), 42);
         let mut b = ComputeModel::homogeneous(2, 0.1, StragglerModel::default(), 42);
-        for _ in 0..50 {
-            assert_eq!(a.sample_duration(1), b.sample_duration(1));
+        for i in 0..50 {
+            let t = i as f64 * 0.05;
+            assert_eq!(a.sample_duration(1, t), b.sample_duration(1, t));
         }
+    }
+
+    #[test]
+    fn correlated_process_inflates_in_windows() {
+        // A Gilbert–Elliott model with long slow periods must produce
+        // *runs* of inflated samples, not isolated coin flips.
+        let cfg = StragglerModel {
+            kind: StragglerKind::GilbertElliott { mean_fast: 2.0, mean_slow: 2.0 },
+            slowdown: 50.0,
+            seed: Some(3),
+            ..StragglerModel::default()
+        };
+        let mut m = ComputeModel::new(1, 0.1, 0.0, &cfg, 5).unwrap();
+        let flags: Vec<bool> = (0..4000)
+            .map(|i| m.sample_duration(0, i as f64 * 0.01) > 0.1 * 50.0 * 0.3)
+            .collect();
+        let slow = flags.iter().filter(|&&b| b).count();
+        let flips = flags.windows(2).filter(|p| p[0] != p[1]).count();
+        assert!(slow > 100, "slow windows must cover part of the run ({slow})");
+        assert!(slow > 5 * flips.max(1), "correlated: {slow} slow in {flips} flips");
+        assert!((m.straggler_fraction() - slow as f64 / 4000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn invalid_straggler_section_is_an_error() {
+        let cfg = StragglerModel {
+            kind: StragglerKind::Trace { path: "/no/such/trace.json".into() },
+            ..StragglerModel::default()
+        };
+        assert!(ComputeModel::new(4, 0.1, 0.0, &cfg, 1).is_err());
     }
 }

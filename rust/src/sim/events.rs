@@ -13,7 +13,9 @@ pub enum EventKind {
     ComputeStart(WorkerId),
     /// Worker finished its local gradient computation.
     ComputeDone(WorkerId),
-    /// Periodic evaluation tick (global metrics snapshot).
+    /// Periodic time-based evaluation tick (global metrics snapshot);
+    /// scheduled by the engine when `eval_every_seconds` is configured
+    /// and re-armed while other activity is pending.
     EvalTick,
     /// The communication graph mutates now (churn subsystem): the engine
     /// asks its `ChurnModel` for the due mutations and applies them with

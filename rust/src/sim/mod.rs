@@ -4,16 +4,24 @@
 //! stragglers by making randomly chosen workers sleep for `s×` the mean
 //! local-computation time.  We reproduce exactly that timing model with a
 //! virtual clock: per-worker compute durations are sampled from a
-//! heterogeneous speed model with Bernoulli straggler injection, and
-//! parameter exchange is charged through a latency/bandwidth link model.
-//! The gradient *values* remain real (computed by the backend); only the
+//! heterogeneous speed model with pluggable straggler injection (the
+//! paper's i.i.d. Bernoulli coin by default; the [`straggler`] subsystem
+//! adds time-correlated processes — Gilbert–Elliott persistent slow
+//! states, Weibull-renewal bursts and JSON trace replay), and parameter
+//! exchange is charged through a latency/bandwidth link model.  The
+//! gradient *values* remain real (computed by the backend); only the
 //! *durations* are simulated.
 
 mod compute;
 mod events;
+pub mod straggler;
 
-pub use compute::{ComputeModel, StragglerModel};
+pub use compute::ComputeModel;
 pub use events::{Event, EventKind, EventQueue};
+pub use straggler::{
+    materialize_trace, StragglerKind, StragglerModel, StragglerProcess, StragglerTimeline,
+    TraceProcess,
+};
 
 
 /// Point-to-point link model: `latency + bytes / bandwidth` seconds.

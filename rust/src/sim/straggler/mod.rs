@@ -1,0 +1,658 @@
+//! Pluggable straggler processes: *when* is a worker slow?
+//!
+//! The paper's testbed flips an i.i.d. per-iteration coin (§6), but the
+//! whole point of adaptive waiting is *persistent* slowness — machines
+//! that stay slow for extended windows (the motivating scenario of both
+//! AD-PSGD and Hop).  This module generalizes the old Bernoulli
+//! `StragglerModel` behind a [`StragglerProcess`] trait with four
+//! implementations:
+//!
+//! * [`BernoulliProcess`] — the paper's i.i.d. coin (default; bit-for-bit
+//!   the pre-subsystem behavior, it consumes the compute model's shared
+//!   RNG stream exactly like the old inline draw did);
+//! * [`GilbertElliottProcess`] — a two-state Markov process in virtual
+//!   time: each worker alternates exponentially-distributed fast/slow
+//!   periods, so slowness is correlated across consecutive iterations
+//!   (long-run slow fraction = `mean_slow / (mean_fast + mean_slow)`);
+//! * [`WeibullBurstProcess`] — a renewal process with heavy-tailed
+//!   (Weibull, shape < 1) inter-failure times; each failure opens a slow
+//!   burst of exponentially-sampled duration;
+//! * [`TraceProcess`] — replay of a [`StragglerTimeline`] JSON trace
+//!   (same `{"updates": [{"time", "events"}]}` shape as the churn
+//!   subsystem's `TopologyTimeline`), so failure scenarios are portable
+//!   artifacts.  [`materialize_trace`] converts any time-correlated
+//!   process into such a trace, and replaying it reproduces the exact
+//!   slow/fast decisions of the generator.
+//!
+//! All correlated processes keep **per-worker** RNG streams derived from
+//! the experiment seed, so a worker's failure timeline is independent of
+//! how the event loop interleaves samples across workers.
+
+mod trace;
+
+pub use trace::{materialize_trace, StragglerEvent, StragglerTimeline, TraceEntry, TraceProcess};
+
+use crate::util::json::Json;
+use crate::util::Rng64;
+use crate::WorkerId;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Which straggler process injects slowness (config-selectable).
+#[derive(Debug, Clone, PartialEq)]
+pub enum StragglerKind {
+    /// I.i.d. per-sample coin with the config's `probability` (the
+    /// paper's testbed; the default).
+    Bernoulli,
+    /// Two-state Markov process: exponential fast periods of mean
+    /// `mean_fast` seconds alternating with slow periods of mean
+    /// `mean_slow` seconds, independently per worker.
+    GilbertElliott {
+        /// Mean seconds a worker stays fast before entering the slow state.
+        mean_fast: f64,
+        /// Mean seconds a worker stays slow before recovering.
+        mean_slow: f64,
+    },
+    /// Weibull-renewal bursts: inter-failure times ~ Weibull(shape,
+    /// scale) measured from the end of the previous burst; each failure
+    /// opens a slow burst of Exp(`mean_burst`) duration.
+    WeibullBursts {
+        /// Weibull shape k (< 1 = heavy-tailed inter-failure times).
+        shape: f64,
+        /// Weibull scale λ (seconds).
+        scale: f64,
+        /// Mean burst duration (seconds).
+        mean_burst: f64,
+    },
+    /// Replay a saved [`StragglerTimeline`] JSON trace.
+    Trace {
+        /// Path to the trace file.
+        path: String,
+    },
+}
+
+impl Default for StragglerKind {
+    fn default() -> Self {
+        StragglerKind::Bernoulli
+    }
+}
+
+/// Straggler section of the experiment config.
+///
+/// Kept under its historical name: the old `StragglerModel` was exactly
+/// the `(probability, slowdown)` pair, which survives here as the
+/// Bernoulli knobs (`probability` is ignored by the correlated kinds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StragglerModel {
+    /// Per-sample straggler probability for [`StragglerKind::Bernoulli`]
+    /// (paper ablation sweeps 5–40 %).
+    pub probability: f64,
+    /// Multiplicative slowdown applied while a worker is slow (paper
+    /// ablation sweeps 5–40×).
+    pub slowdown: f64,
+    /// Which process decides slowness.
+    pub kind: StragglerKind,
+    /// Process seed override; defaults to `seed_for("compute")`.
+    pub seed: Option<u64>,
+}
+
+impl Default for StragglerModel {
+    fn default() -> Self {
+        // The paper settles on 10 % stragglers at 10x slowdown.
+        StragglerModel {
+            probability: 0.10,
+            slowdown: 10.0,
+            kind: StragglerKind::Bernoulli,
+            seed: None,
+        }
+    }
+}
+
+impl StragglerModel {
+    /// Parse the config form: a bare kind string (all parameters default)
+    /// or an object like `{"kind": "gilbert_elliott", "mean_fast": 5.0,
+    /// "mean_slow": 1.0, "slowdown": 10.0}`.  Like the churn section,
+    /// unknown keys and wrongly-typed values are rejected rather than
+    /// silently defaulted.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let kind_token = j
+            .as_str()
+            .or_else(|| j.get("kind").and_then(Json::as_str))
+            .context("straggler must be a kind string or an object with a \"kind\" field")?
+            .to_string();
+        let f = |key: &str, default: f64| -> Result<f64> {
+            match j.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_f64()
+                    .with_context(|| format!("straggler {key} must be a number")),
+            }
+        };
+        let mut cfg = StragglerModel::default();
+        let allowed: &[&str] = match kind_token.as_str() {
+            "bernoulli" => {
+                cfg.probability = f("probability", cfg.probability)?;
+                cfg.kind = StragglerKind::Bernoulli;
+                &["probability"]
+            }
+            "gilbert_elliott" => {
+                cfg.kind = StragglerKind::GilbertElliott {
+                    mean_fast: f("mean_fast", 5.0)?,
+                    mean_slow: f("mean_slow", 1.0)?,
+                };
+                &["mean_fast", "mean_slow"]
+            }
+            "weibull" => {
+                cfg.kind = StragglerKind::WeibullBursts {
+                    shape: f("shape", 0.7)?,
+                    scale: f("scale", 5.0)?,
+                    mean_burst: f("mean_burst", 1.0)?,
+                };
+                &["shape", "scale", "mean_burst"]
+            }
+            "trace" => {
+                cfg.kind = StragglerKind::Trace {
+                    path: j
+                        .get("path")
+                        .and_then(Json::as_str)
+                        .context("trace straggler needs a \"path\" string")?
+                        .to_string(),
+                };
+                &["path"]
+            }
+            other => bail!(
+                "unknown straggler kind {other:?} (bernoulli|gilbert_elliott|weibull|trace)"
+            ),
+        };
+        cfg.slowdown = f("slowdown", cfg.slowdown)?;
+        cfg.seed = match j.get("seed") {
+            None => None,
+            Some(v) => Some(
+                v.as_u64()
+                    .context("straggler seed must be a non-negative integer")?,
+            ),
+        };
+        if let Some(obj) = j.as_obj() {
+            for key in obj.keys() {
+                if key != "kind"
+                    && key != "slowdown"
+                    && key != "seed"
+                    && !allowed.contains(&key.as_str())
+                {
+                    bail!("unknown straggler key {key:?} for kind {kind_token:?}");
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Inverse of [`Self::from_json`].
+    pub fn to_json(&self) -> Json {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        match &self.kind {
+            StragglerKind::Bernoulli => {
+                m.insert("kind".into(), Json::from("bernoulli"));
+                m.insert("probability".into(), Json::Num(self.probability));
+            }
+            StragglerKind::GilbertElliott { mean_fast, mean_slow } => {
+                m.insert("kind".into(), Json::from("gilbert_elliott"));
+                m.insert("mean_fast".into(), Json::Num(*mean_fast));
+                m.insert("mean_slow".into(), Json::Num(*mean_slow));
+            }
+            StragglerKind::WeibullBursts { shape, scale, mean_burst } => {
+                m.insert("kind".into(), Json::from("weibull"));
+                m.insert("shape".into(), Json::Num(*shape));
+                m.insert("scale".into(), Json::Num(*scale));
+                m.insert("mean_burst".into(), Json::Num(*mean_burst));
+            }
+            StragglerKind::Trace { path } => {
+                m.insert("kind".into(), Json::from("trace"));
+                m.insert("path".into(), Json::from(path.as_str()));
+            }
+        }
+        m.insert("slowdown".into(), Json::Num(self.slowdown));
+        if let Some(s) = self.seed {
+            m.insert("seed".into(), Json::from(s as usize));
+        }
+        Json::Obj(m)
+    }
+
+    /// Parameter sanity checks (called from `ExperimentConfig::validate`).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.probability),
+            "straggler probability must be in [0,1]"
+        );
+        anyhow::ensure!(self.slowdown >= 1.0, "slowdown must be >= 1");
+        match &self.kind {
+            StragglerKind::Bernoulli => {}
+            StragglerKind::GilbertElliott { mean_fast, mean_slow } => {
+                anyhow::ensure!(*mean_fast > 0.0, "gilbert_elliott mean_fast must be positive");
+                anyhow::ensure!(*mean_slow > 0.0, "gilbert_elliott mean_slow must be positive");
+            }
+            StragglerKind::WeibullBursts { shape, scale, mean_burst } => {
+                anyhow::ensure!(*shape > 0.0, "weibull shape must be positive");
+                anyhow::ensure!(*scale > 0.0, "weibull scale must be positive");
+                anyhow::ensure!(*mean_burst > 0.0, "weibull mean_burst must be positive");
+            }
+            StragglerKind::Trace { path } => {
+                anyhow::ensure!(!path.is_empty(), "trace straggler needs a path");
+            }
+        }
+        Ok(())
+    }
+
+    /// Instantiate the process for an `n`-worker fleet.  `derived_seed`
+    /// should come from `ExperimentConfig::seed_for("compute")`; an
+    /// explicit `seed` in the config overrides it.
+    pub fn build(&self, n: usize, derived_seed: u64) -> Result<Box<dyn StragglerProcess>> {
+        self.validate()?;
+        let seed = self.seed.unwrap_or(derived_seed);
+        Ok(match &self.kind {
+            StragglerKind::Bernoulli => Box::new(BernoulliProcess::new(self.probability)),
+            StragglerKind::GilbertElliott { mean_fast, mean_slow } => {
+                Box::new(GilbertElliottProcess::new(n, *mean_fast, *mean_slow, seed))
+            }
+            StragglerKind::WeibullBursts { shape, scale, mean_burst } => {
+                Box::new(WeibullBurstProcess::new(n, *shape, *scale, *mean_burst, seed))
+            }
+            StragglerKind::Trace { path } => {
+                let tl = StragglerTimeline::load(Path::new(path))?;
+                Box::new(TraceProcess::from_timeline(&tl, n))
+            }
+        })
+    }
+
+    /// Whether the config describes a time-correlated (non-Bernoulli)
+    /// process.
+    pub fn is_correlated(&self) -> bool {
+        !matches!(self.kind, StragglerKind::Bernoulli)
+    }
+}
+
+/// Decides whether a worker's gradient step is straggler-inflated.
+///
+/// `now` is the virtual time the step begins; per worker, queries must be
+/// non-decreasing in `now` (the time-correlated processes advance their
+/// per-worker state lazily and never rewind).  `rng` is the compute
+/// model's shared stream: the Bernoulli process consumes exactly one draw
+/// from it — bit-for-bit the pre-subsystem behavior — while the
+/// correlated processes keep per-worker streams and leave it untouched.
+pub trait StragglerProcess: std::fmt::Debug {
+    /// Process label for logs/tables.
+    fn name(&self) -> &'static str;
+
+    /// Whether worker `w`'s step starting at `now` runs slow.
+    fn is_slow(&mut self, w: WorkerId, now: f64, rng: &mut Rng64) -> bool;
+}
+
+/// The paper's i.i.d. per-sample coin.
+#[derive(Debug, Clone)]
+pub struct BernoulliProcess {
+    probability: f64,
+}
+
+impl BernoulliProcess {
+    /// Coin with the given per-sample probability.
+    pub fn new(probability: f64) -> Self {
+        BernoulliProcess { probability }
+    }
+}
+
+impl StragglerProcess for BernoulliProcess {
+    fn name(&self) -> &'static str {
+        "bernoulli"
+    }
+
+    fn is_slow(&mut self, _w: WorkerId, _now: f64, rng: &mut Rng64) -> bool {
+        rng.gen_bool(self.probability)
+    }
+}
+
+/// Derive a decorrelated per-worker stream from the process seed.
+pub(crate) fn worker_rng(seed: u64, w: usize) -> Rng64 {
+    Rng64::seed_from_u64(seed ^ (w as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15))
+}
+
+/// One worker's alternating fast/slow state in virtual time.
+#[derive(Debug, Clone)]
+struct GeWorker {
+    rng: Rng64,
+    /// Currently in the slow state?
+    slow: bool,
+    /// Virtual time the current state ends (state flips at exactly this
+    /// instant — the new state applies at `now >= until`).
+    until: f64,
+}
+
+impl GeWorker {
+    /// Execute the next state flip; returns (flip time, new slow state).
+    /// The single draw site shared by the live process and
+    /// [`materialize_trace`](trace::materialize_trace), so replayed
+    /// traces consume the per-worker stream in exactly the same order.
+    fn flip(&mut self, mean_fast: f64, mean_slow: f64) -> (f64, bool) {
+        let t = self.until;
+        self.slow = !self.slow;
+        let mean = if self.slow { mean_slow } else { mean_fast };
+        self.until += self.rng.exponential(mean);
+        (t, self.slow)
+    }
+
+    fn advance(&mut self, now: f64, mean_fast: f64, mean_slow: f64) {
+        while self.until <= now {
+            self.flip(mean_fast, mean_slow);
+        }
+    }
+}
+
+/// Two-state Markov (Gilbert–Elliott) process: persistent slow windows.
+#[derive(Debug, Clone)]
+pub struct GilbertElliottProcess {
+    mean_fast: f64,
+    mean_slow: f64,
+    workers: Vec<GeWorker>,
+}
+
+impl GilbertElliottProcess {
+    /// Every worker starts fast with its first fast period already drawn.
+    pub fn new(n: usize, mean_fast: f64, mean_slow: f64, seed: u64) -> Self {
+        let workers = (0..n)
+            .map(|w| {
+                let mut rng = worker_rng(seed, w);
+                let until = rng.exponential(mean_fast);
+                GeWorker { rng, slow: false, until }
+            })
+            .collect();
+        GilbertElliottProcess { mean_fast, mean_slow, workers }
+    }
+
+    /// Long-run fraction of time spent slow (alternating-renewal limit).
+    pub fn stationary_slow_fraction(&self) -> f64 {
+        self.mean_slow / (self.mean_fast + self.mean_slow)
+    }
+}
+
+impl StragglerProcess for GilbertElliottProcess {
+    fn name(&self) -> &'static str {
+        "gilbert_elliott"
+    }
+
+    fn is_slow(&mut self, w: WorkerId, now: f64, _rng: &mut Rng64) -> bool {
+        let gw = &mut self.workers[w];
+        gw.advance(now, self.mean_fast, self.mean_slow);
+        gw.slow
+    }
+}
+
+/// One worker's burst renewal state.
+#[derive(Debug, Clone)]
+struct WbWorker {
+    rng: Rng64,
+    /// End of the most recently started burst.
+    slow_until: f64,
+    /// Start of the next burst.
+    next_fail: f64,
+}
+
+impl WbWorker {
+    /// Start the next burst; returns its (start, end) window.  The single
+    /// draw site shared by the live process and
+    /// [`materialize_trace`](trace::materialize_trace), so replayed
+    /// traces consume the per-worker stream in exactly the same order.
+    fn next_burst(&mut self, shape: f64, scale: f64, mean_burst: f64) -> (f64, f64) {
+        let start = self.next_fail;
+        self.slow_until = start + self.rng.exponential(mean_burst);
+        self.next_fail = self.slow_until + self.rng.weibull(shape, scale);
+        (start, self.slow_until)
+    }
+
+    fn advance(&mut self, now: f64, shape: f64, scale: f64, mean_burst: f64) {
+        while self.next_fail <= now {
+            self.next_burst(shape, scale, mean_burst);
+        }
+    }
+}
+
+/// Weibull-renewal burst process: heavy-tailed inter-failure times.
+#[derive(Debug, Clone)]
+pub struct WeibullBurstProcess {
+    shape: f64,
+    scale: f64,
+    mean_burst: f64,
+    workers: Vec<WbWorker>,
+}
+
+impl WeibullBurstProcess {
+    /// Every worker's first failure time is one Weibull draw from t = 0.
+    pub fn new(n: usize, shape: f64, scale: f64, mean_burst: f64, seed: u64) -> Self {
+        let workers = (0..n)
+            .map(|w| {
+                let mut rng = worker_rng(seed, w);
+                let next_fail = rng.weibull(shape, scale);
+                WbWorker { rng, slow_until: 0.0, next_fail }
+            })
+            .collect();
+        WeibullBurstProcess { shape, scale, mean_burst, workers }
+    }
+}
+
+impl StragglerProcess for WeibullBurstProcess {
+    fn name(&self) -> &'static str {
+        "weibull"
+    }
+
+    fn is_slow(&mut self, w: WorkerId, now: f64, _rng: &mut Rng64) -> bool {
+        let (shape, scale, mean_burst) = (self.shape, self.scale, self.mean_burst);
+        let wb = &mut self.workers[w];
+        wb.advance(now, shape, scale, mean_burst);
+        now < wb.slow_until
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ge_cfg() -> StragglerModel {
+        StragglerModel {
+            kind: StragglerKind::GilbertElliott { mean_fast: 4.0, mean_slow: 1.0 },
+            seed: Some(7),
+            ..StragglerModel::default()
+        }
+    }
+
+    #[test]
+    fn config_json_roundtrip() {
+        for cfg in [
+            StragglerModel::default(),
+            ge_cfg(),
+            StragglerModel {
+                kind: StragglerKind::WeibullBursts { shape: 0.6, scale: 8.0, mean_burst: 2.0 },
+                slowdown: 6.0,
+                seed: None,
+                ..StragglerModel::default()
+            },
+            StragglerModel {
+                kind: StragglerKind::Trace { path: "trace.json".into() },
+                ..StragglerModel::default()
+            },
+        ] {
+            let back = StragglerModel::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(back, cfg);
+        }
+        // bare-string form
+        assert_eq!(
+            StragglerModel::from_json(&Json::from("bernoulli")).unwrap(),
+            StragglerModel::default()
+        );
+        assert!(StragglerModel::from_json(&Json::from("gremlins")).is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_typos_and_wrong_types() {
+        // misspelled parameter key: rejected, not silently defaulted
+        let j = Json::parse(r#"{"kind": "gilbert_elliott", "mean_fsat": 2.0}"#).unwrap();
+        assert!(StragglerModel::from_json(&j).is_err());
+        // parameter of another kind: also unknown here
+        let j = Json::parse(r#"{"kind": "bernoulli", "mean_burst": 1.0}"#).unwrap();
+        assert!(StragglerModel::from_json(&j).is_err());
+        // wrongly-typed value
+        let j = Json::parse(r#"{"kind": "weibull", "shape": "0.7"}"#).unwrap();
+        assert!(StragglerModel::from_json(&j).is_err());
+        // trace without a path
+        let j = Json::parse(r#"{"kind": "trace"}"#).unwrap();
+        assert!(StragglerModel::from_json(&j).is_err());
+        // missing kind entirely
+        let j = Json::parse(r#"{"probability": 0.2}"#).unwrap();
+        assert!(StragglerModel::from_json(&j).is_err());
+        // correct spellings still parse
+        let j =
+            Json::parse(r#"{"kind": "bernoulli", "probability": 0.25, "slowdown": 6, "seed": 3}"#)
+                .unwrap();
+        let cfg = StragglerModel::from_json(&j).unwrap();
+        assert_eq!(cfg.probability, 0.25);
+        assert_eq!(cfg.slowdown, 6.0);
+        assert_eq!(cfg.seed, Some(3));
+    }
+
+    #[test]
+    fn validate_rejects_bad_parameters() {
+        let bad = StragglerModel { probability: 1.5, ..StragglerModel::default() };
+        assert!(bad.validate().is_err());
+        let bad = StragglerModel { slowdown: 0.5, ..StragglerModel::default() };
+        assert!(bad.validate().is_err());
+        let bad = StragglerModel {
+            kind: StragglerKind::GilbertElliott { mean_fast: 0.0, mean_slow: 1.0 },
+            ..StragglerModel::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = StragglerModel {
+            kind: StragglerKind::WeibullBursts { shape: -1.0, scale: 1.0, mean_burst: 1.0 },
+            ..StragglerModel::default()
+        };
+        assert!(bad.validate().is_err());
+        assert!(ge_cfg().validate().is_ok());
+    }
+
+    #[test]
+    fn gilbert_elliott_stationary_fraction() {
+        // Sample the process on a fine uniform time grid over a long
+        // horizon; the observed slow fraction must approach
+        // mean_slow / (mean_fast + mean_slow) = 0.2.
+        let mut p = GilbertElliottProcess::new(8, 4.0, 1.0, 99);
+        let mut shared = Rng64::seed_from_u64(0);
+        let mut slow = 0u64;
+        let mut total = 0u64;
+        let steps = 40_000;
+        for i in 0..steps {
+            let t = i as f64 * 0.05; // 2000 virtual seconds
+            for w in 0..8 {
+                if p.is_slow(w, t, &mut shared) {
+                    slow += 1;
+                }
+                total += 1;
+            }
+        }
+        let frac = slow as f64 / total as f64;
+        let expect = p.stationary_slow_fraction();
+        assert!((expect - 0.2).abs() < 1e-12);
+        assert!((frac - expect).abs() < 0.03, "fraction {frac} vs {expect}");
+    }
+
+    #[test]
+    fn gilbert_elliott_is_persistent() {
+        // Consecutive close-in-time samples must be far more correlated
+        // than the stationary fraction: P(slow at t+δ | slow at t) ≈ 1
+        // for δ << mean_slow.
+        let mut p = GilbertElliottProcess::new(4, 4.0, 1.0, 5);
+        let mut shared = Rng64::seed_from_u64(0);
+        let (mut both, mut first) = (0u64, 0u64);
+        for i in 0..80_000 {
+            let t = i as f64 * 0.02;
+            for w in 0..4 {
+                let a = p.is_slow(w, t, &mut shared);
+                let b = p.is_slow(w, t + 0.01, &mut shared);
+                if a {
+                    first += 1;
+                    if b {
+                        both += 1;
+                    }
+                }
+            }
+        }
+        assert!(first > 0);
+        let cond = both as f64 / first as f64;
+        assert!(cond > 0.9, "persistence {cond} should be near 1, not the 0.2 stationary rate");
+    }
+
+    #[test]
+    fn weibull_bursts_deterministic_per_seed() {
+        let mut a = WeibullBurstProcess::new(6, 0.7, 5.0, 1.0, 42);
+        let mut b = WeibullBurstProcess::new(6, 0.7, 5.0, 1.0, 42);
+        let mut c = WeibullBurstProcess::new(6, 0.7, 5.0, 1.0, 43);
+        let mut shared = Rng64::seed_from_u64(0);
+        let mut diff = 0u64;
+        for i in 0..5_000 {
+            let t = i as f64 * 0.1;
+            for w in 0..6 {
+                let va = a.is_slow(w, t, &mut shared);
+                assert_eq!(va, b.is_slow(w, t, &mut shared), "w={w} t={t}");
+                if va != c.is_slow(w, t, &mut shared) {
+                    diff += 1;
+                }
+            }
+        }
+        assert!(diff > 0, "different seeds must produce different timelines");
+    }
+
+    #[test]
+    fn weibull_bursts_have_positive_dwell() {
+        // Bursts occupy time: somewhere on the grid the process is slow,
+        // and slow samples cluster into runs rather than isolated points.
+        let mut p = WeibullBurstProcess::new(1, 0.7, 3.0, 1.5, 11);
+        let mut shared = Rng64::seed_from_u64(0);
+        let flags: Vec<bool> = (0..20_000)
+            .map(|i| p.is_slow(0, i as f64 * 0.01, &mut shared))
+            .collect();
+        let slow = flags.iter().filter(|&&b| b).count();
+        assert!(slow > 0, "no bursts in 200 virtual seconds");
+        let flips = flags.windows(2).filter(|p| p[0] != p[1]).count();
+        // slow samples cluster into runs: with Exp(1.5s) bursts on a 0.01s
+        // grid the mean slow-run is ~150 samples, so flips << slow samples
+        assert!(slow > 5 * flips.max(1), "bursty? {slow} slow samples, {flips} transitions");
+    }
+
+    #[test]
+    fn bernoulli_consumes_shared_stream() {
+        // The Bernoulli process must draw exactly one shared-RNG sample
+        // per query — the bit-for-bit compatibility contract.
+        let mut p = BernoulliProcess::new(0.5);
+        let mut a = Rng64::seed_from_u64(1);
+        let mut b = Rng64::seed_from_u64(1);
+        for _ in 0..100 {
+            assert_eq!(p.is_slow(0, 0.0, &mut a), b.gen_bool(0.5));
+        }
+    }
+
+    #[test]
+    fn build_constructs_every_kind() {
+        for cfg in [
+            StragglerModel::default(),
+            ge_cfg(),
+            StragglerModel {
+                kind: StragglerKind::WeibullBursts { shape: 0.7, scale: 5.0, mean_burst: 1.0 },
+                ..StragglerModel::default()
+            },
+        ] {
+            let p = cfg.build(4, 9).unwrap();
+            assert!(!p.name().is_empty());
+        }
+        // a missing trace file is an error, not a panic
+        let cfg = StragglerModel {
+            kind: StragglerKind::Trace { path: "/definitely/not/a/trace.json".into() },
+            ..StragglerModel::default()
+        };
+        assert!(cfg.build(4, 9).is_err());
+    }
+}

@@ -1,0 +1,416 @@
+//! Straggler traces: portable slow/fast schedules in virtual time.
+//!
+//! A [`StragglerTimeline`] is the failure-process analogue of the churn
+//! subsystem's `TopologyTimeline` and shares its JSON schedule shape —
+//! `{"updates": [{"time": t, "events": [...]}]}` — with each event
+//! flipping one worker's slow flag: `{"worker": 3, "slow": true}`.
+//! [`materialize_trace`] converts a time-correlated [`StragglerKind`]
+//! into such a trace (drawing from the exact per-worker streams the live
+//! process uses), and [`TraceProcess`] replays one; replaying a
+//! materialized trace reproduces the generator's slow/fast decisions
+//! bit for bit, so failure scenarios can be saved, shipped and re-run.
+
+use super::{worker_rng, GeWorker, StragglerKind, StragglerModel, StragglerProcess, WbWorker};
+use crate::util::json::Json;
+use crate::util::Rng64;
+use crate::WorkerId;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One worker's slow flag flipping at a point in virtual time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StragglerEvent {
+    /// Worker whose state flips.
+    pub worker: WorkerId,
+    /// New state: `true` enters the slow state, `false` recovers.
+    pub slow: bool,
+}
+
+impl StragglerEvent {
+    /// Serialize to the trace-file form.
+    pub fn to_json(&self) -> Json {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("worker".into(), Json::from(self.worker));
+        m.insert("slow".into(), Json::from(self.slow));
+        Json::Obj(m)
+    }
+
+    /// Inverse of [`Self::to_json`].
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(StragglerEvent {
+            worker: j.req("worker")?.as_usize().context("worker must be a worker id")?,
+            slow: j.req("slow")?.as_bool().context("slow must be a boolean")?,
+        })
+    }
+}
+
+/// A batch of state flips at one virtual timestamp.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEntry {
+    /// Virtual time (seconds) the batch fires at.
+    pub time: f64,
+    /// Flips applied in order.
+    pub events: Vec<StragglerEvent>,
+}
+
+/// Timestamped slow/fast schedule (sorted by time).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StragglerTimeline {
+    /// Schedule entries in non-decreasing time order.
+    pub entries: Vec<TraceEntry>,
+}
+
+impl StragglerTimeline {
+    /// Empty trace.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a batch (times must be appended in non-decreasing order;
+    /// [`Self::from_json`] sorts, so hand-built traces can use it).
+    pub fn push(&mut self, time: f64, events: Vec<StragglerEvent>) {
+        debug_assert!(
+            self.entries.last().map_or(true, |e| e.time <= time),
+            "trace must be pushed in time order"
+        );
+        self.entries.push(TraceEntry { time, events });
+    }
+
+    /// Number of scheduled batches.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the trace is empty.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total flip count across all batches.
+    pub fn num_events(&self) -> usize {
+        self.entries.iter().map(|e| e.events.len()).sum()
+    }
+
+    /// Serialize as `{"updates": [{"time": t, "events": [...]}]}` — the
+    /// same envelope the churn `TopologyTimeline` uses.
+    pub fn to_json(&self) -> Json {
+        let updates: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut m: BTreeMap<String, Json> = BTreeMap::new();
+                m.insert("time".into(), Json::Num(e.time));
+                m.insert(
+                    "events".into(),
+                    Json::Arr(e.events.iter().map(|ev| ev.to_json()).collect()),
+                );
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("updates".into(), Json::Arr(updates));
+        Json::Obj(m)
+    }
+
+    /// Inverse of [`Self::to_json`]; entries are stably sorted by time
+    /// (same-time batches keep their file order).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut entries = Vec::new();
+        for e in j.req("updates")?.as_arr().context("updates must be an array")? {
+            let time = e.req("time")?.as_f64().context("time must be a number")?;
+            anyhow::ensure!(time >= 0.0 && time.is_finite(), "bad update time {time}");
+            let events = e
+                .req("events")?
+                .as_arr()
+                .context("events must be an array")?
+                .iter()
+                .map(StragglerEvent::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            entries.push(TraceEntry { time, events });
+        }
+        entries.sort_by(|a, b| a.time.partial_cmp(&b.time).expect("finite times"));
+        Ok(StragglerTimeline { entries })
+    }
+
+    /// Write the trace to a JSON file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string_compact())
+            .with_context(|| format!("write trace {}", path.display()))
+    }
+
+    /// Load a trace from a JSON file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read trace {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// Replay of a [`StragglerTimeline`]: per-worker slow windows queried by
+/// binary search, so (unlike the generators) arbitrary-time queries work.
+#[derive(Debug, Clone)]
+pub struct TraceProcess {
+    /// Per-worker `[start, end)` slow windows, sorted by start.
+    windows: Vec<Vec<(f64, f64)>>,
+}
+
+impl TraceProcess {
+    /// Convert a flip schedule into per-worker slow windows for an
+    /// `n`-worker fleet (events for workers ≥ `n` are ignored; a trailing
+    /// un-recovered slow state extends to infinity).
+    pub fn from_timeline(tl: &StragglerTimeline, n: usize) -> Self {
+        let mut windows = vec![Vec::new(); n];
+        let mut open: Vec<Option<f64>> = vec![None; n];
+        for e in &tl.entries {
+            for ev in &e.events {
+                if ev.worker >= n {
+                    continue;
+                }
+                match (ev.slow, open[ev.worker]) {
+                    (true, None) => open[ev.worker] = Some(e.time),
+                    (false, Some(start)) => {
+                        windows[ev.worker].push((start, e.time));
+                        open[ev.worker] = None;
+                    }
+                    _ => {} // redundant flip: already in that state
+                }
+            }
+        }
+        for (w, o) in open.into_iter().enumerate() {
+            if let Some(start) = o {
+                windows[w].push((start, f64::INFINITY));
+            }
+        }
+        TraceProcess { windows }
+    }
+
+    /// Total slow time across the fleet up to `horizon` (diagnostics).
+    pub fn total_slow_time(&self, horizon: f64) -> f64 {
+        self.windows
+            .iter()
+            .flatten()
+            .map(|&(s, e)| (e.min(horizon) - s.min(horizon)).max(0.0))
+            .sum()
+    }
+}
+
+impl StragglerProcess for TraceProcess {
+    fn name(&self) -> &'static str {
+        "trace"
+    }
+
+    fn is_slow(&mut self, w: WorkerId, now: f64, _rng: &mut Rng64) -> bool {
+        let Some(ws) = self.windows.get(w) else {
+            return false;
+        };
+        let idx = ws.partition_point(|&(start, _)| start <= now);
+        idx > 0 && now < ws[idx - 1].1
+    }
+}
+
+/// Materialize the slow/fast evolution a time-correlated process would
+/// produce up to `horizon` virtual seconds, as a saveable
+/// [`StragglerTimeline`].  The per-worker streams are drawn in exactly
+/// the order the live process draws them, so replaying the result through
+/// a [`TraceProcess`] reproduces the generator's decisions bit for bit at
+/// every `now < horizon`.  Bernoulli is per-sample (not a function of
+/// time) and cannot be traced; a trace of a trace is its identity.
+pub fn materialize_trace(
+    cfg: &StragglerModel,
+    n: usize,
+    derived_seed: u64,
+    horizon: f64,
+) -> Result<StragglerTimeline> {
+    cfg.validate()?;
+    let seed = cfg.seed.unwrap_or(derived_seed);
+    let mut flips: Vec<(f64, StragglerEvent)> = Vec::new();
+    match &cfg.kind {
+        StragglerKind::GilbertElliott { mean_fast, mean_slow } => {
+            for w in 0..n {
+                let mut rng = worker_rng(seed, w);
+                let until = rng.exponential(*mean_fast);
+                let mut gw = GeWorker { rng, slow: false, until };
+                while gw.until <= horizon {
+                    let (t, slow) = gw.flip(*mean_fast, *mean_slow);
+                    flips.push((t, StragglerEvent { worker: w, slow }));
+                }
+            }
+        }
+        StragglerKind::WeibullBursts { shape, scale, mean_burst } => {
+            for w in 0..n {
+                let mut rng = worker_rng(seed, w);
+                let next_fail = rng.weibull(*shape, *scale);
+                let mut wb = WbWorker { rng, slow_until: 0.0, next_fail };
+                while wb.next_fail <= horizon {
+                    let (start, end) = wb.next_burst(*shape, *scale, *mean_burst);
+                    flips.push((start, StragglerEvent { worker: w, slow: true }));
+                    flips.push((end, StragglerEvent { worker: w, slow: false }));
+                }
+            }
+        }
+        StragglerKind::Bernoulli => {
+            bail!("bernoulli is i.i.d. per sample — no time trace to materialize")
+        }
+        StragglerKind::Trace { path } => return StragglerTimeline::load(Path::new(path)),
+    }
+    // stable by-time sort: a worker's own same-time recover-then-fail
+    // pair (zero inter-arrival) keeps its order
+    flips.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite flip times"));
+    let mut tl = StragglerTimeline::new();
+    for (t, ev) in flips {
+        tl.push(t, vec![ev]);
+    }
+    Ok(tl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::straggler::{GilbertElliottProcess, WeibullBurstProcess};
+
+    fn ge_model() -> StragglerModel {
+        StragglerModel {
+            kind: StragglerKind::GilbertElliott { mean_fast: 3.0, mean_slow: 1.0 },
+            seed: Some(17),
+            ..StragglerModel::default()
+        }
+    }
+
+    fn wb_model() -> StragglerModel {
+        StragglerModel {
+            kind: StragglerKind::WeibullBursts { shape: 0.7, scale: 4.0, mean_burst: 1.0 },
+            seed: Some(23),
+            ..StragglerModel::default()
+        }
+    }
+
+    #[test]
+    fn timeline_json_and_file_roundtrip() {
+        let mut tl = StragglerTimeline::new();
+        tl.push(0.5, vec![StragglerEvent { worker: 2, slow: true }]);
+        tl.push(
+            1.75,
+            vec![
+                StragglerEvent { worker: 2, slow: false },
+                StragglerEvent { worker: 0, slow: true },
+            ],
+        );
+        let back = StragglerTimeline::from_json(&tl.to_json()).unwrap();
+        assert_eq!(back, tl);
+        assert_eq!(back.num_events(), 3);
+
+        let path = std::env::temp_dir()
+            .join(format!("dsgd_straggler_trace_{}.json", std::process::id()));
+        tl.save(&path).unwrap();
+        assert_eq!(StragglerTimeline::load(&path).unwrap(), tl);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn from_json_sorts_and_rejects_garbage() {
+        let text = r#"{"updates": [
+            {"time": 2.0, "events": [{"worker": 0, "slow": true}]},
+            {"time": 1.0, "events": [{"worker": 1, "slow": true}]}
+        ]}"#;
+        let tl = StragglerTimeline::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(tl.entries[0].time, 1.0);
+        assert_eq!(tl.entries[1].time, 2.0);
+
+        for bad in [
+            r#"{"updates": [{"time": -1.0, "events": []}]}"#,
+            r#"{"updates": [{"time": 1.0, "events": [{"worker": 0}]}]}"#,
+            r#"{"updates": [{"time": 1.0, "events": [{"worker": 0, "slow": "yes"}]}]}"#,
+            r#"{"entries": []}"#,
+        ] {
+            assert!(
+                StragglerTimeline::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn trace_windows_from_flips() {
+        let mut tl = StragglerTimeline::new();
+        tl.push(1.0, vec![StragglerEvent { worker: 0, slow: true }]);
+        tl.push(2.0, vec![StragglerEvent { worker: 0, slow: false }]);
+        tl.push(3.0, vec![StragglerEvent { worker: 1, slow: true }]); // never recovers
+        let mut p = TraceProcess::from_timeline(&tl, 2);
+        let mut rng = Rng64::seed_from_u64(0);
+        assert!(!p.is_slow(0, 0.5, &mut rng));
+        assert!(p.is_slow(0, 1.0, &mut rng), "window start is inclusive");
+        assert!(p.is_slow(0, 1.9, &mut rng));
+        assert!(!p.is_slow(0, 2.0, &mut rng), "window end is exclusive");
+        assert!(p.is_slow(1, 100.0, &mut rng), "open window extends forever");
+        assert!(!p.is_slow(7, 1.5, &mut rng), "unknown workers are never slow");
+    }
+
+    #[test]
+    fn materialized_ge_trace_matches_live_process() {
+        let n = 6;
+        let horizon = 60.0;
+        let tl = materialize_trace(&ge_model(), n, 0, horizon).unwrap();
+        assert!(!tl.is_empty(), "GE must flip within the horizon");
+        let mut replay = TraceProcess::from_timeline(&tl, n);
+        let mut live = GilbertElliottProcess::new(n, 3.0, 1.0, 17);
+        let mut rng = Rng64::seed_from_u64(0);
+        // monotone per-worker query grid strictly inside the horizon
+        for i in 0..5_000 {
+            let t = i as f64 * (horizon * 0.99 / 5_000.0);
+            for w in 0..n {
+                assert_eq!(
+                    live.is_slow(w, t, &mut rng),
+                    replay.is_slow(w, t, &mut rng),
+                    "w={w} t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn materialized_weibull_trace_matches_live_process() {
+        let n = 5;
+        let horizon = 80.0;
+        let tl = materialize_trace(&wb_model(), n, 0, horizon).unwrap();
+        assert!(!tl.is_empty(), "Weibull must fail within the horizon");
+        let mut replay = TraceProcess::from_timeline(&tl, n);
+        let mut live = WeibullBurstProcess::new(n, 0.7, 4.0, 1.0, 23);
+        let mut rng = Rng64::seed_from_u64(0);
+        for i in 0..5_000 {
+            let t = i as f64 * (horizon * 0.99 / 5_000.0);
+            for w in 0..n {
+                assert_eq!(
+                    live.is_slow(w, t, &mut rng),
+                    replay.is_slow(w, t, &mut rng),
+                    "w={w} t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bernoulli_has_no_trace() {
+        assert!(materialize_trace(&StragglerModel::default(), 4, 0, 10.0).is_err());
+    }
+
+    #[test]
+    fn trace_kind_materializes_to_itself() {
+        let tl = materialize_trace(&ge_model(), 3, 0, 20.0).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("dsgd_trace_identity_{}.json", std::process::id()));
+        tl.save(&path).unwrap();
+        let cfg = StragglerModel {
+            kind: StragglerKind::Trace { path: path.display().to_string() },
+            ..StragglerModel::default()
+        };
+        let back = materialize_trace(&cfg, 3, 0, 20.0).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back, tl);
+    }
+}

@@ -107,6 +107,20 @@ impl Rng64 {
         (sigma * self.normal()).exp()
     }
 
+    /// Exponential with the given `mean` (inverse-CDF transform).
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        debug_assert!(mean > 0.0);
+        -mean * (1.0 - self.gen_f64()).ln()
+    }
+
+    /// Weibull with `shape` k and `scale` λ (inverse-CDF transform);
+    /// `shape < 1` gives the heavy-tailed inter-failure times observed in
+    /// real cluster traces.
+    pub fn weibull(&mut self, shape: f64, scale: f64) -> f64 {
+        debug_assert!(shape > 0.0 && scale > 0.0);
+        scale * (-(1.0 - self.gen_f64()).ln()).powf(1.0 / shape)
+    }
+
     /// Fisher-Yates in-place shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
@@ -187,6 +201,33 @@ mod tests {
         let median = samples[2500];
         assert!((median - 1.0).abs() < 0.1, "median {median}");
         assert!(samples.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn exponential_mean_and_positivity() {
+        let mut r = Rng64::seed_from_u64(9);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let v = r.exponential(2.0);
+            assert!(v >= 0.0);
+            sum += v;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 2.0).abs() < 0.1, "mean {mean}");
+    }
+
+    #[test]
+    fn weibull_shape_one_is_exponential() {
+        // k = 1 reduces to Exp(scale); check the mean.
+        let mut r = Rng64::seed_from_u64(10);
+        let n = 20_000;
+        let mean = (0..n).map(|_| r.weibull(1.0, 3.0)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.15, "mean {mean}");
+        // heavy-tailed shape < 1 still yields non-negative samples
+        for _ in 0..1000 {
+            assert!(r.weibull(0.5, 1.0) >= 0.0);
+        }
     }
 
     #[test]

@@ -1,0 +1,253 @@
+//! Integration: the pluggable straggler-process subsystem end to end —
+//! every process is deterministic per seed, correlated slowness shows up
+//! as bursts, JSON traces replay the generator's run exactly, DSGD-AAU
+//! beats fixed-k wall-clock under persistent slow states (the paper's
+//! core claim, now testable under correlated stragglers), and the
+//! DSGD-AAU liveness guard keeps churn runs from quiescing early.
+
+use dsgd_aau::algorithms::AlgorithmKind;
+use dsgd_aau::churn::{materialize, ChurnConfig, ChurnKind};
+use dsgd_aau::config::{BackendKind, ExperimentConfig};
+use dsgd_aau::coordinator::run_experiment;
+use dsgd_aau::sim::{materialize_trace, StragglerKind, StragglerModel};
+use dsgd_aau::topology::TopologyKind;
+
+fn ge_model(mean_fast: f64, mean_slow: f64) -> StragglerModel {
+    StragglerModel {
+        kind: StragglerKind::GilbertElliott { mean_fast, mean_slow },
+        seed: Some(31),
+        ..StragglerModel::default()
+    }
+}
+
+fn base_cfg(alg: AlgorithmKind, straggler: StragglerModel) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.num_workers = 10;
+    cfg.algorithm = alg;
+    cfg.backend = BackendKind::Quadratic;
+    cfg.topology = TopologyKind::Random { p: 0.3, seed: 11 };
+    cfg.straggler = straggler;
+    cfg.max_iterations = 300;
+    cfg.eval_every = 60;
+    cfg.mean_compute = 0.01;
+    cfg
+}
+
+// Process time constants are matched to the workload scale: with
+// mean_compute = 0.01 s a slow window of ~0.1 s spans ~10 consecutive
+// samples — persistent relative to an iteration, yet short enough that
+// even the fastest algorithms (whose 300-iteration runs span well under
+// a virtual second) sample both states.
+fn processes() -> Vec<(&'static str, StragglerModel)> {
+    vec![
+        ("bernoulli", StragglerModel::default()),
+        ("gilbert_elliott", ge_model(0.3, 0.1)),
+        (
+            "weibull",
+            StragglerModel {
+                kind: StragglerKind::WeibullBursts { shape: 0.7, scale: 0.3, mean_burst: 0.1 },
+                seed: Some(31),
+                ..StragglerModel::default()
+            },
+        ),
+    ]
+}
+
+#[test]
+fn runs_are_deterministic_for_every_process() {
+    for (label, straggler) in processes() {
+        let cfg = base_cfg(AlgorithmKind::DsgdAau, straggler);
+        let a = run_experiment(&cfg).unwrap();
+        let b = run_experiment(&cfg).unwrap();
+        assert_eq!(a.iterations, b.iterations, "{label}");
+        assert_eq!(a.final_loss(), b.final_loss(), "{label}");
+        assert_eq!(a.virtual_time, b.virtual_time, "{label}");
+        assert_eq!(a.straggler_fraction, b.straggler_fraction, "{label}");
+        assert!(a.final_loss() < a.recorder.curve.first().unwrap().loss, "{label}: must learn");
+    }
+}
+
+#[test]
+fn every_algorithm_learns_under_correlated_stragglers() {
+    for (label, straggler) in processes() {
+        for alg in AlgorithmKind::all() {
+            let cfg = base_cfg(alg, straggler.clone());
+            let s = run_experiment(&cfg).unwrap();
+            let first = s.recorder.curve.first().unwrap().loss;
+            assert!(
+                s.final_loss() < first,
+                "{label}/{}: loss {first} -> {}",
+                alg.label(),
+                s.final_loss()
+            );
+            assert!(s.straggler_fraction > 0.0, "{label}/{}: no slow samples", alg.label());
+        }
+    }
+}
+
+#[test]
+fn correlated_slowness_is_bursty_in_engine_runs() {
+    // The run summary exposes which process drove the run, and the
+    // correlated processes must actually inject a nontrivial slow share.
+    let s = run_experiment(&base_cfg(AlgorithmKind::AdPsgd, ge_model(0.3, 0.1))).unwrap();
+    assert_eq!(s.straggler_process, "gilbert_elliott");
+    // stationary slow fraction is 0.1/(0.3+0.1) = 0.25 of *time*; sampled
+    // at compute starts the observed share is in a broad band around it
+    assert!(
+        s.straggler_fraction > 0.03 && s.straggler_fraction < 0.7,
+        "fraction {}",
+        s.straggler_fraction
+    );
+    let s = run_experiment(&base_cfg(AlgorithmKind::AdPsgd, StragglerModel::default())).unwrap();
+    assert_eq!(s.straggler_process, "bernoulli");
+}
+
+#[test]
+fn engine_trace_replay_reproduces_the_generator_run() {
+    // Engine A runs the live Gilbert–Elliott process; engine B replays
+    // its materialized JSON trace.  The slow/fast decisions — and hence
+    // the entire virtual-time trajectory — must match exactly.
+    let cfg_ge = base_cfg(AlgorithmKind::DsgdAau, ge_model(0.3, 0.1));
+    let tl = materialize_trace(
+        &cfg_ge.straggler,
+        cfg_ge.num_workers,
+        cfg_ge.seed_for("compute"),
+        200.0, // far past any 300-iteration run's virtual time
+    )
+    .unwrap();
+    let path = std::env::temp_dir()
+        .join(format!("dsgd_straggler_replay_{}.json", std::process::id()));
+    tl.save(&path).unwrap();
+
+    let mut cfg_replay = cfg_ge.clone();
+    cfg_replay.straggler = StragglerModel {
+        kind: StragglerKind::Trace { path: path.display().to_string() },
+        ..StragglerModel::default()
+    };
+
+    let a = run_experiment(&cfg_ge).unwrap();
+    let b = run_experiment(&cfg_replay).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(a.iterations, b.iterations);
+    assert_eq!(a.virtual_time, b.virtual_time);
+    assert_eq!(a.final_loss(), b.final_loss());
+    assert_eq!(a.straggler_fraction, b.straggler_fraction);
+    assert_eq!(a.recorder.total_bytes(), b.recorder.total_bytes());
+    assert_eq!(a.straggler_process, "gilbert_elliott");
+    assert_eq!(b.straggler_process, "trace");
+}
+
+#[test]
+fn dsgd_aau_beats_fixed_k_wall_clock_under_persistent_slowness() {
+    // The paper's core claim, under the regime that actually stresses it:
+    // with persistent slow states a full-barrier fixed-k pays the slow
+    // workers every round, while DSGD-AAU waits only as long as Pathsearch
+    // needs.  Compare virtual time per gossip iteration.
+    let n = 10;
+    let straggler = ge_model(0.3, 0.15); // slow 1/3 of the time, 10x slowdown
+    let mut aau = base_cfg(AlgorithmKind::DsgdAau, straggler.clone());
+    aau.max_iterations = 150;
+    let mut fixed = base_cfg(AlgorithmKind::FixedK { k: n }, straggler);
+    fixed.max_iterations = 150;
+
+    let a = run_experiment(&aau).unwrap();
+    let f = run_experiment(&fixed).unwrap();
+    let t_aau = a.virtual_time / a.iterations.max(1) as f64;
+    let t_fixed = f.virtual_time / f.iterations.max(1) as f64;
+    assert!(
+        t_fixed > 1.4 * t_aau,
+        "fixed-k {t_fixed:.4}s/iter should clearly exceed DSGD-AAU {t_aau:.4}s/iter"
+    );
+}
+
+#[test]
+fn dsgd_aau_never_quiesces_early_under_churn() {
+    // Liveness regression for the full-fleet stall: an adversarial
+    // partition/heal schedule repeatedly prunes Pathsearch's visited
+    // edges mid-epoch.  The run must still complete max_iterations —
+    // before the on_ready fallback, a waiting set covering the whole
+    // fleet with no novel pair would silently drain the event queue.
+    // (A finite *schedule* churn is used so a regression fails fast as
+    // a short run instead of hanging on generator churn.)
+    let churn = ChurnConfig {
+        kind: ChurnKind::PartitionHeal { period: 0.4, downtime: 0.15 },
+        seed: Some(13),
+    };
+    let mut cfg = base_cfg(AlgorithmKind::DsgdAau, ge_model(0.3, 0.1));
+    cfg.max_iterations = 500;
+    let g0 = cfg.topology.build(cfg.num_workers);
+    let tl = materialize(&churn, cfg.num_workers, cfg.seed_for("churn"), &g0, 200.0).unwrap();
+    assert!(!tl.is_empty());
+    let path = std::env::temp_dir()
+        .join(format!("dsgd_stall_schedule_{}.json", std::process::id()));
+    tl.save(&path).unwrap();
+    cfg.churn = ChurnConfig {
+        kind: ChurnKind::Schedule { path: path.display().to_string() },
+        seed: None,
+    };
+
+    let s = run_experiment(&cfg).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert!(
+        s.iterations >= cfg.max_iterations,
+        "run quiesced at k={} before max_iterations={} (topology changes: {})",
+        s.iterations,
+        cfg.max_iterations,
+        s.recorder.topology_changes
+    );
+    assert!(s.recorder.topology_changes > 0, "scenario must exercise churn");
+}
+
+#[test]
+fn time_based_eval_ticks_record_points_and_terminate() {
+    let mut cfg = base_cfg(AlgorithmKind::DsgdAau, StragglerModel::default());
+    cfg.eval_every = 1_000_000; // iteration-based eval effectively off
+    cfg.eval_every_seconds = Some(0.5);
+    cfg.max_iterations = 300;
+    let s = run_experiment(&cfg).unwrap();
+    // baseline + several ticks + final point, times non-decreasing
+    assert!(s.recorder.curve.len() >= 4, "only {} curve points", s.recorder.curve.len());
+    let mut last = -1.0f64;
+    for p in &s.recorder.curve {
+        assert!(p.time >= last, "time went backwards");
+        last = p.time;
+    }
+    // the self-re-arming tick must not keep a finished run alive
+    assert!(s.iterations >= cfg.max_iterations);
+}
+
+#[test]
+fn curves_have_no_duplicate_trailing_points() {
+    for alg in AlgorithmKind::all() {
+        let cfg = base_cfg(alg, StragglerModel::default());
+        let s = run_experiment(&cfg).unwrap();
+        for pair in s.recorder.curve.windows(2) {
+            assert!(
+                !(pair[0].iteration == pair[1].iteration && pair[0].time == pair[1].time),
+                "{}: duplicate curve point at k={} t={}",
+                alg.label(),
+                pair[1].iteration,
+                pair[1].time
+            );
+        }
+    }
+}
+
+#[test]
+fn invalid_straggler_configs_are_rejected_before_running() {
+    let mut cfg = base_cfg(
+        AlgorithmKind::DsgdAau,
+        StragglerModel {
+            kind: StragglerKind::GilbertElliott { mean_fast: -1.0, mean_slow: 1.0 },
+            ..StragglerModel::default()
+        },
+    );
+    assert!(run_experiment(&cfg).is_err());
+    // a missing trace file is an error, not a panic
+    cfg.straggler = StragglerModel {
+        kind: StragglerKind::Trace { path: "/definitely/not/a/trace.json".into() },
+        ..StragglerModel::default()
+    };
+    assert!(run_experiment(&cfg).is_err());
+}
