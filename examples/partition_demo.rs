@@ -1,0 +1,117 @@
+//! Partition playground: what happens when the network *really* splits.
+//!
+//! 1. Cuts a ring fleet in half on an explicit schedule (no connectivity
+//!    repair), shows the `PartitionMonitor` tracking ground-truth
+//!    components and the lagged observed view workers act on.
+//! 2. Runs DSGD-AAU through the same partition/heal cycle in three
+//!    modes — repair (PR 1), partition-blind (PR 2 baseline) and
+//!    partition-aware — and prints the adaptivity ledger: stalls,
+//!    component epochs, heal restarts, time spent partitioned.
+//!
+//! ```text
+//! cargo run --release --example partition_demo
+//! ```
+
+use dsgd_aau::adapt::{component_labels, AdaptConfig, PartitionMonitor};
+use dsgd_aau::algorithms::AlgorithmKind;
+use dsgd_aau::churn::{
+    apply_mutations_unrepaired, ChurnConfig, ChurnKind, TopologyMutation, TopologyTimeline,
+};
+use dsgd_aau::config::{BackendKind, ExperimentConfig};
+use dsgd_aau::coordinator::run_experiment;
+use dsgd_aau::topology::TopologyKind;
+
+fn main() -> anyhow::Result<()> {
+    let n = 12;
+
+    // --- 1. component tracking on a real cut ---------------------------
+    let mut g = TopologyKind::Ring.build(n);
+    let mut monitor = PartitionMonitor::new(&g, 0.5); // 500 ms detection
+    let cut = vec![
+        TopologyMutation::RemoveEdge(5, 6),
+        TopologyMutation::RemoveEdge(0, 11),
+    ];
+    apply_mutations_unrepaired(&mut g, &cut);
+    monitor.apply_mutations(&g, &cut);
+    monitor.queue_observation(1.0); // views catch up at 1.0 + 0.5
+    println!(
+        "t=1.0  cut applied: ground truth {} components, workers still see {}",
+        monitor.num_components(),
+        monitor.num_observed_components()
+    );
+    monitor.promote_due(1.5);
+    println!(
+        "t=1.5  detection: workers now see {} components, labels {:?}",
+        monitor.num_observed_components(),
+        component_labels(&g)
+    );
+
+    // --- 2. training through a partition/heal cycle --------------------
+    let mut tl = TopologyTimeline::new();
+    tl.push(1.0, cut.clone());
+    tl.push(
+        9.0,
+        vec![TopologyMutation::AddEdge(5, 6), TopologyMutation::AddEdge(0, 11)],
+    );
+    let path = std::env::temp_dir().join("partition_demo_schedule.json");
+    tl.save(&path)?;
+
+    let modes: Vec<(&str, AdaptConfig)> = vec![
+        ("repair (PR 1)", AdaptConfig::default()),
+        (
+            "blind (PR 2)",
+            AdaptConfig { allow_partitions: true, ..AdaptConfig::default() },
+        ),
+        (
+            "aware",
+            AdaptConfig {
+                allow_partitions: true,
+                partition_aware: true,
+                detection_latency: 0.1,
+                heal_restart: true,
+            },
+        ),
+    ];
+
+    println!(
+        "\n{:<14} {:>8} {:>9} {:>8} {:>8} {:>11} {:>9}",
+        "mode", "iters", "loss", "stalls", "splits", "comp_epochs", "restarts"
+    );
+    for (label, adapt) in &modes {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = format!("partition_demo_{label}");
+        cfg.num_workers = n;
+        cfg.topology = TopologyKind::Ring;
+        cfg.algorithm = AlgorithmKind::DsgdAau;
+        cfg.backend = BackendKind::Quadratic;
+        cfg.churn = ChurnConfig {
+            kind: ChurnKind::Schedule { path: path.display().to_string() },
+            seed: None,
+        };
+        cfg.adapt = adapt.clone();
+        cfg.max_iterations = u64::MAX / 2;
+        cfg.time_budget = Some(12.0);
+        cfg.eval_every = 500;
+        cfg.mean_compute = 0.01;
+        let s = run_experiment(&cfg)?;
+        println!(
+            "{:<14} {:>8} {:>9.4} {:>8} {:>8} {:>11} {:>9}",
+            label,
+            s.iterations,
+            s.final_loss(),
+            s.recorder.stall_fallbacks,
+            s.recorder.partition_splits,
+            s.recorder.component_epochs,
+            s.recorder.epoch_restarts,
+        );
+    }
+    std::fs::remove_file(&path).ok();
+    println!(
+        "\nReading: with repair the cut never lands (one bridge survives); \
+         blind mode lets it land and DSGD-AAU's epoch can no longer span \
+         the graph — only the stall fallback keeps it alive; aware mode \
+         retargets the epoch to each component, so stalls vanish, component \
+         epochs fire throughout the cut, and the heal restarts accumulation."
+    );
+    Ok(())
+}

@@ -1,0 +1,191 @@
+//! Partition-aware adaptivity: component tracking + the `adapt` config.
+//!
+//! The paper assumes the communication graph stays connected, and the
+//! churn subsystem's *connectivity repair* enforces that by deferring any
+//! removal that would disconnect the graph.  Real partitions do happen,
+//! though — and DSGD-AAU's whole point is to adapt *how many neighbors a
+//! worker waits for* to what the network can actually deliver.  This
+//! module makes that adaptivity partition-aware:
+//!
+//! * [`PartitionMonitor`] maintains connected-component membership
+//!   incrementally as topology mutations apply: an engine-level **ground
+//!   truth** view plus a lagged **observed** view modeling the detection
+//!   latency with which workers learn about splits and heals
+//!   (timeout/heartbeat time, not zero);
+//! * [`AdaptConfig`] is the strict-parsed `adapt` config section that
+//!   switches the behavior on.  With everything at its default the
+//!   simulator is bit-for-bit the legacy (always-connected, repair-on)
+//!   system.
+//!
+//! With `partition_aware` on, every update rule retargets to the live
+//! component structure: DSGD-AAU's Pathsearch epoch completes when the
+//! accumulated subgraph spans the worker's *component* (and restarts when
+//! a heal merges components, instead of leaning on the stall-fallback
+//! liveness guard), synchronous DSGD barriers per component, fixed-k
+//! clamps its group to the component, and Prague/AD-PSGD/AGP stop
+//! sampling peers their component cannot reach.
+//!
+//! ## Config reference (`adapt` section)
+//!
+//! ```json
+//! {
+//!   "adapt": {
+//!     "allow_partitions": true,       // disable connectivity repair:
+//!                                     // removals apply even when they
+//!                                     // disconnect the graph
+//!     "partition_aware": true,        // component-aware update rules
+//!                                     // (implies allow_partitions)
+//!     "detection_latency": 0.5,       // seconds until workers observe a
+//!                                     // component change (0 = instant)
+//!     "heal_restart": true            // restart the Pathsearch epoch when
+//!                                     // the observed view sees a merge
+//!   }
+//! }
+//! ```
+//!
+//! Like the `churn` and `straggler` sections, unknown keys and
+//! wrongly-typed values are rejected rather than silently defaulted, and
+//! omitting the section (or any key) keeps the legacy behavior:
+//! `allow_partitions = false`, `partition_aware = false`,
+//! `detection_latency = 0`, `heal_restart = true`.
+
+mod monitor;
+
+pub use monitor::{component_labels, PartitionMonitor, ViewDelta};
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// The `adapt` section of the experiment config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptConfig {
+    /// Disable connectivity repair so removals can genuinely partition
+    /// the graph (legacy default: `false`, repair on).
+    pub allow_partitions: bool,
+    /// Component-aware update rules (implies [`Self::allow_partitions`]).
+    pub partition_aware: bool,
+    /// Seconds between a ground-truth component change and the moment
+    /// workers' local views observe it.
+    pub detection_latency: f64,
+    /// When the observed view reports a merge (heal), restart the
+    /// Pathsearch epoch so `P, V` re-accumulate over the merged graph.
+    pub heal_restart: bool,
+}
+
+impl Default for AdaptConfig {
+    fn default() -> Self {
+        AdaptConfig {
+            allow_partitions: false,
+            partition_aware: false,
+            detection_latency: 0.0,
+            heal_restart: true,
+        }
+    }
+}
+
+impl AdaptConfig {
+    /// Whether the engine must apply mutations without connectivity
+    /// repair (`partition_aware` forces it: component retargeting is
+    /// meaningless while repair keeps the graph connected).
+    pub fn partitions_allowed(&self) -> bool {
+        self.allow_partitions || self.partition_aware
+    }
+
+    /// Parse the config form, rejecting unknown keys and wrong types
+    /// (mirrors `ChurnConfig::from_json`).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let obj = j.as_obj().context("adapt must be an object")?;
+        let mut cfg = AdaptConfig::default();
+        for (key, v) in obj {
+            match key.as_str() {
+                "allow_partitions" => {
+                    cfg.allow_partitions =
+                        v.as_bool().context("adapt allow_partitions must be a bool")?
+                }
+                "partition_aware" => {
+                    cfg.partition_aware =
+                        v.as_bool().context("adapt partition_aware must be a bool")?
+                }
+                "detection_latency" => {
+                    cfg.detection_latency =
+                        v.as_f64().context("adapt detection_latency must be a number")?
+                }
+                "heal_restart" => {
+                    cfg.heal_restart =
+                        v.as_bool().context("adapt heal_restart must be a bool")?
+                }
+                other => bail!("unknown adapt key {other:?}"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Inverse of [`Self::from_json`].
+    pub fn to_json(&self) -> Json {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("allow_partitions".into(), Json::Bool(self.allow_partitions));
+        m.insert("partition_aware".into(), Json::Bool(self.partition_aware));
+        m.insert("detection_latency".into(), Json::Num(self.detection_latency));
+        m.insert("heal_restart".into(), Json::Bool(self.heal_restart));
+        Json::Obj(m)
+    }
+
+    /// Parameter sanity checks (called from `ExperimentConfig::validate`).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.detection_latency.is_finite() && self.detection_latency >= 0.0,
+            "adapt detection_latency must be finite and >= 0"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_legacy() {
+        let cfg = AdaptConfig::default();
+        assert!(!cfg.partitions_allowed());
+        assert!(!cfg.partition_aware);
+        assert_eq!(cfg.detection_latency, 0.0);
+        assert!(cfg.heal_restart);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn partition_aware_implies_allow() {
+        let cfg = AdaptConfig { partition_aware: true, ..AdaptConfig::default() };
+        assert!(cfg.partitions_allowed());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = AdaptConfig {
+            allow_partitions: true,
+            partition_aware: true,
+            detection_latency: 0.75,
+            heal_restart: false,
+        };
+        let back = AdaptConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn strict_parsing_rejects_typos_and_wrong_types() {
+        let j = Json::parse(r#"{"partition_awre": true}"#).unwrap();
+        assert!(AdaptConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"detection_latency": "fast"}"#).unwrap();
+        assert!(AdaptConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"partition_aware": 1}"#).unwrap();
+        assert!(AdaptConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"detection_latency": -1.0}"#).unwrap();
+        assert!(AdaptConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"partition_aware": true, "detection_latency": 0.25}"#).unwrap();
+        let cfg = AdaptConfig::from_json(&j).unwrap();
+        assert!(cfg.partition_aware && cfg.detection_latency == 0.25);
+    }
+}

@@ -1,0 +1,453 @@
+//! Connected-component tracking for partition-aware adaptivity.
+//!
+//! [`PartitionMonitor`] maintains two views of the live graph's component
+//! structure:
+//!
+//! * **ground truth** — updated incrementally as every topology-mutation
+//!   batch applies (the engine is the single writer), with canonical
+//!   labels (each vertex is labeled by the smallest vertex id in its
+//!   component) so labels are comparable against a from-scratch BFS;
+//! * **observed** — what the *workers* believe, which lags ground truth
+//!   by a configurable detection latency.  Real deployments learn about
+//!   a partition via timeouts/heartbeats, not instantaneously; update
+//!   rules therefore consult the observed view only.
+//!
+//! The incremental update recomputes labels only for components touched
+//! by a mutation batch (plus any component an added edge bridges into):
+//! on fleets where churn touches a few links at a time this is O(size of
+//! the affected components), not O(N + E).
+
+use crate::churn::TopologyMutation;
+use crate::topology::Graph;
+use crate::WorkerId;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+/// Canonical component labels of `g`: `labels[v]` is the smallest vertex
+/// id in `v`'s connected component.  The reference implementation the
+/// incremental monitor is tested against.
+pub fn component_labels(g: &Graph) -> Vec<usize> {
+    let n = g.num_vertices();
+    let mut labels = vec![usize::MAX; n];
+    for s in 0..n {
+        if labels[s] != usize::MAX {
+            continue;
+        }
+        // `s` is the smallest unlabeled id, hence the smallest id in its
+        // component: it is the canonical label.
+        labels[s] = s;
+        let mut stack = vec![s];
+        while let Some(v) = stack.pop() {
+            for &u in g.neighbors(v) {
+                if labels[u] == usize::MAX {
+                    labels[u] = s;
+                    stack.push(u);
+                }
+            }
+        }
+    }
+    labels
+}
+
+/// Number of distinct components in a canonical label vector.
+fn count_components(labels: &[usize]) -> usize {
+    labels.iter().enumerate().filter(|&(v, &l)| v == l).count()
+}
+
+/// Split/merge events between two label vectors (old → new).
+fn diff_labels(old: &[usize], new: &[usize]) -> ViewDelta {
+    debug_assert_eq!(old.len(), new.len());
+    // old label -> set of new labels its members ended up in (splits),
+    // new label -> set of old labels its members came from (merges).
+    let mut fwd: BTreeMap<usize, BTreeSet<usize>> = BTreeMap::new();
+    let mut bwd: BTreeMap<usize, BTreeSet<usize>> = BTreeMap::new();
+    for (&o, &nw) in old.iter().zip(new.iter()) {
+        fwd.entry(o).or_default().insert(nw);
+        bwd.entry(nw).or_default().insert(o);
+    }
+    ViewDelta {
+        splits: fwd.values().map(|s| (s.len() - 1) as u64).sum(),
+        merges: bwd.values().map(|s| (s.len() - 1) as u64).sum(),
+    }
+}
+
+/// What changed between two component views.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ViewDelta {
+    /// Components that broke apart (per extra piece).
+    pub splits: u64,
+    /// Components that fused (per absorbed piece).
+    pub merges: u64,
+}
+
+impl ViewDelta {
+    /// Whether any membership changed.  Canonical labels change iff some
+    /// component gained or lost members, so this is exact.
+    pub fn changed(&self) -> bool {
+        self.splits + self.merges > 0
+    }
+
+    /// Accumulate another delta.
+    pub fn absorb(&mut self, other: ViewDelta) {
+        self.splits += other.splits;
+        self.merges += other.merges;
+    }
+}
+
+/// A pending observed-view update (ground truth snapshot awaiting its
+/// detection latency).
+#[derive(Debug, Clone)]
+struct PendingView {
+    due: f64,
+    labels: Vec<usize>,
+}
+
+/// Incremental connected-component monitor with lagged per-worker views.
+///
+/// All workers share one detection latency, so the observed view is a
+/// single label vector every worker queries for *its own* component —
+/// the per-worker API (`component_of`, `component_members`) keeps update
+/// rules honest about which view they are allowed to act on.
+#[derive(Debug, Clone)]
+pub struct PartitionMonitor {
+    detection_latency: f64,
+    truth: Vec<usize>,
+    truth_components: usize,
+    observed: Vec<usize>,
+    observed_components: usize,
+    observed_merges: u64,
+    observed_splits: u64,
+    pending: VecDeque<PendingView>,
+    /// Members of components formed by observed merges, accumulated until
+    /// a rule drains them (scopes DSGD-AAU's heal restart to the merged
+    /// components instead of wiping unrelated accumulation).
+    merge_members: BTreeSet<WorkerId>,
+}
+
+impl PartitionMonitor {
+    /// Monitor for the initial graph; truth and observed views coincide.
+    pub fn new(g: &Graph, detection_latency: f64) -> Self {
+        let labels = component_labels(g);
+        let components = count_components(&labels);
+        PartitionMonitor {
+            detection_latency,
+            truth: labels.clone(),
+            truth_components: components,
+            observed: labels,
+            observed_components: components,
+            observed_merges: 0,
+            observed_splits: 0,
+            pending: VecDeque::new(),
+            merge_members: BTreeSet::new(),
+        }
+    }
+
+    /// Update ground truth after `muts` were applied to `g` (the graph is
+    /// the *post-application* state).  Only components containing a
+    /// mutation endpoint — plus components an added edge bridges into —
+    /// are relabeled.  Returns the ground-truth delta.
+    pub fn apply_mutations(&mut self, g: &Graph, muts: &[TopologyMutation]) -> ViewDelta {
+        let n = g.num_vertices();
+        debug_assert_eq!(self.truth.len(), n, "monitor sized for a different fleet");
+        let mut touched: BTreeSet<usize> = BTreeSet::new();
+        for m in muts {
+            match m {
+                TopologyMutation::AddEdge(i, j) | TopologyMutation::RemoveEdge(i, j) => {
+                    touched.insert(*i);
+                    touched.insert(*j);
+                }
+                TopologyMutation::Isolate(w) => {
+                    touched.insert(*w);
+                }
+                TopologyMutation::Attach(w, ns) => {
+                    touched.insert(*w);
+                    touched.extend(ns.iter().copied());
+                }
+            }
+        }
+        touched.retain(|&v| v < n);
+        if touched.is_empty() {
+            return ViewDelta::default();
+        }
+        // Affected = every member of a component containing a touched
+        // vertex (an Isolate/RemoveEdge can strand parts of the old
+        // component that contain no mutation endpoint).
+        let affected_labels: BTreeSet<usize> =
+            touched.iter().map(|&v| self.truth[v]).collect();
+        let old = self.truth.clone();
+        let mut fresh = vec![false; n];
+        for v in 0..n {
+            if !affected_labels.contains(&old[v]) || fresh[v] {
+                continue;
+            }
+            // Ascending scan: `v` is the smallest not-yet-relabeled vertex
+            // of its (new) component, so it is the canonical label.  The
+            // flood may walk into previously unaffected components via
+            // added edges; relabeling them keeps labels canonical.
+            let mut stack = vec![v];
+            self.truth[v] = v;
+            fresh[v] = true;
+            while let Some(x) = stack.pop() {
+                for &u in g.neighbors(x) {
+                    if !fresh[u] {
+                        fresh[u] = true;
+                        self.truth[u] = v;
+                        stack.push(u);
+                    }
+                }
+            }
+        }
+        self.truth_components = count_components(&self.truth);
+        diff_labels(&old, &self.truth)
+    }
+
+    /// Stage the current ground truth to become the observed view once
+    /// the detection latency elapses: due at `now + detection_latency`.
+    pub fn queue_observation(&mut self, now: f64) {
+        self.pending.push_back(PendingView {
+            due: now + self.detection_latency,
+            labels: self.truth.clone(),
+        });
+    }
+
+    /// Promote every pending view whose detection time has arrived,
+    /// accumulating observed split/merge counters.  Returns the combined
+    /// delta (zero when nothing was due).
+    pub fn promote_due(&mut self, now: f64) -> ViewDelta {
+        let mut total = ViewDelta::default();
+        while let Some(front) = self.pending.front() {
+            if front.due > now + 1e-9 {
+                break;
+            }
+            let view = self.pending.pop_front().expect("front exists");
+            total.absorb(self.set_observed(view.labels));
+        }
+        total
+    }
+
+    /// Make the observed view equal to ground truth immediately (used
+    /// when `detection_latency == 0`).
+    pub fn promote_now(&mut self) -> ViewDelta {
+        self.pending.clear();
+        let labels = self.truth.clone();
+        self.set_observed(labels)
+    }
+
+    fn set_observed(&mut self, labels: Vec<usize>) -> ViewDelta {
+        let delta = diff_labels(&self.observed, &labels);
+        if delta.merges > 0 {
+            // Record every member of a freshly merged component (a new
+            // label fed by more than one old label) so rules can scope
+            // their heal reaction to exactly these workers.
+            let mut sources: BTreeMap<usize, BTreeSet<usize>> = BTreeMap::new();
+            for (&o, &nw) in self.observed.iter().zip(labels.iter()) {
+                sources.entry(nw).or_default().insert(o);
+            }
+            for (v, &l) in labels.iter().enumerate() {
+                if sources.get(&l).map_or(false, |s| s.len() > 1) {
+                    self.merge_members.insert(v);
+                }
+            }
+        }
+        self.observed = labels;
+        self.observed_components = count_components(&self.observed);
+        self.observed_merges += delta.merges;
+        self.observed_splits += delta.splits;
+        delta
+    }
+
+    /// Number of ground-truth components.
+    pub fn num_components(&self) -> usize {
+        self.truth_components
+    }
+
+    /// Number of components in the workers' observed view.
+    pub fn num_observed_components(&self) -> usize {
+        self.observed_components
+    }
+
+    /// Ground-truth canonical labels (engine diagnostics / tests).
+    pub fn labels(&self) -> &[usize] {
+        &self.truth
+    }
+
+    /// Observed canonical labels.
+    pub fn observed_labels(&self) -> &[usize] {
+        &self.observed
+    }
+
+    /// Observed component label of worker `w` (what `w` believes).
+    pub fn component_of(&self, w: WorkerId) -> usize {
+        self.observed[w]
+    }
+
+    /// Whether `a` and `b` are in the same component per the observed view.
+    pub fn same_component_observed(&self, a: WorkerId, b: WorkerId) -> bool {
+        self.observed[a] == self.observed[b]
+    }
+
+    /// Every worker in `w`'s observed component, ascending (includes `w`).
+    pub fn component_members(&self, w: WorkerId) -> Vec<WorkerId> {
+        let label = self.observed[w];
+        (0..self.observed.len()).filter(|&v| self.observed[v] == label).collect()
+    }
+
+    /// Cumulative component-merge events the observed view has seen
+    /// (update rules use this to notice heals).
+    pub fn observed_merges(&self) -> u64 {
+        self.observed_merges
+    }
+
+    /// Drain the members of components formed by observed merges since
+    /// the last call (ascending).  DSGD-AAU resets exactly these workers'
+    /// Pathsearch accumulation on a heal, leaving uninvolved components'
+    /// progress intact.
+    pub fn take_merge_members(&mut self) -> Vec<WorkerId> {
+        let out: Vec<WorkerId> = self.merge_members.iter().copied().collect();
+        self.merge_members.clear();
+        out
+    }
+
+    /// Cumulative component-split events the observed view has seen.
+    pub fn observed_splits(&self) -> u64 {
+        self.observed_splits
+    }
+
+    /// Views whose detection latency has not yet elapsed.
+    pub fn pending_views(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::churn::apply_mutations_unrepaired;
+    use crate::topology::generators::{complete, random_connected, ring};
+
+    #[test]
+    fn labels_are_canonical_bfs() {
+        let g = ring(5);
+        assert_eq!(component_labels(&g), vec![0, 0, 0, 0, 0]);
+        let mut g = ring(6);
+        g.remove_edge(0, 1);
+        g.remove_edge(3, 4);
+        // components {1,2,3} and {4,5,0}
+        assert_eq!(component_labels(&g), vec![0, 1, 1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn split_and_heal_tracked_incrementally() {
+        let mut g = ring(6);
+        let mut mon = PartitionMonitor::new(&g, 0.0);
+        assert_eq!(mon.num_components(), 1);
+
+        let cut = [
+            TopologyMutation::RemoveEdge(0, 1),
+            TopologyMutation::RemoveEdge(3, 4),
+        ];
+        apply_mutations_unrepaired(&mut g, &cut);
+        let delta = mon.apply_mutations(&g, &cut);
+        assert_eq!(delta, ViewDelta { splits: 1, merges: 0 });
+        assert_eq!(mon.num_components(), 2);
+        assert_eq!(mon.labels(), component_labels(&g).as_slice());
+
+        let heal = [TopologyMutation::AddEdge(0, 1)];
+        apply_mutations_unrepaired(&mut g, &heal);
+        let delta = mon.apply_mutations(&g, &heal);
+        assert_eq!(delta, ViewDelta { splits: 0, merges: 1 });
+        assert_eq!(mon.num_components(), 1);
+        assert_eq!(mon.labels(), component_labels(&g).as_slice());
+    }
+
+    #[test]
+    fn zero_latency_promotes_observed_immediately() {
+        let mut g = complete(4);
+        let mut mon = PartitionMonitor::new(&g, 0.0);
+        let muts = [TopologyMutation::Isolate(3)];
+        apply_mutations_unrepaired(&mut g, &muts);
+        mon.apply_mutations(&g, &muts);
+        mon.promote_now();
+        assert_eq!(mon.num_observed_components(), 2);
+        assert_eq!(mon.component_members(3), vec![3]);
+        assert_eq!(mon.component_members(0), vec![0, 1, 2]);
+        assert_eq!(mon.observed_splits(), 1);
+    }
+
+    #[test]
+    fn detection_latency_delays_the_observed_view() {
+        let mut g = ring(4);
+        let mut mon = PartitionMonitor::new(&g, 1.5);
+        let cut = [
+            TopologyMutation::RemoveEdge(0, 1),
+            TopologyMutation::RemoveEdge(2, 3),
+        ];
+        apply_mutations_unrepaired(&mut g, &cut);
+        mon.apply_mutations(&g, &cut);
+        mon.queue_observation(10.0); // due at 10.0 + latency 1.5
+        // truth split, workers have not noticed yet
+        assert_eq!(mon.num_components(), 2);
+        assert_eq!(mon.num_observed_components(), 1);
+        assert!(mon.same_component_observed(0, 1));
+        assert_eq!(mon.promote_due(10.2), ViewDelta::default());
+        assert_eq!(mon.num_observed_components(), 1);
+        let delta = mon.promote_due(11.5);
+        assert_eq!(delta.splits, 1);
+        assert_eq!(mon.num_observed_components(), 2);
+        assert!(!mon.same_component_observed(0, 1));
+        assert_eq!(mon.pending_views(), 0);
+    }
+
+    #[test]
+    fn merge_members_scoped_to_the_healed_components() {
+        // comps {0,1} {2,3} {4,5}; a heal merges the first two — the
+        // drained member list must exclude the untouched {4,5}
+        let mut g = Graph::from_edges(6, &[(0, 1), (2, 3), (4, 5)]);
+        let mut mon = PartitionMonitor::new(&g, 0.0);
+        assert!(mon.take_merge_members().is_empty());
+        let heal = [TopologyMutation::AddEdge(1, 2)];
+        apply_mutations_unrepaired(&mut g, &heal);
+        mon.apply_mutations(&g, &heal);
+        mon.promote_now();
+        assert_eq!(mon.take_merge_members(), vec![0, 1, 2, 3]);
+        assert!(mon.take_merge_members().is_empty(), "drained after the take");
+        assert_eq!(mon.observed_merges(), 1);
+    }
+
+    #[test]
+    fn attach_merges_components() {
+        let mut g = Graph::from_edges(5, &[(0, 1), (2, 3)]);
+        let mut mon = PartitionMonitor::new(&g, 0.0);
+        assert_eq!(mon.num_components(), 3); // {0,1} {2,3} {4}
+        let muts = [TopologyMutation::Attach(4, vec![1, 2])];
+        apply_mutations_unrepaired(&mut g, &muts);
+        let delta = mon.apply_mutations(&g, &muts);
+        assert_eq!(mon.num_components(), 1);
+        assert_eq!(delta.merges, 2);
+        assert_eq!(mon.labels(), component_labels(&g).as_slice());
+    }
+
+    #[test]
+    fn seeded_random_mutations_match_scratch_labels() {
+        use crate::util::Rng64;
+        for seed in 0..20u64 {
+            let mut g = random_connected(12, 0.2, seed);
+            let mut mon = PartitionMonitor::new(&g, 0.0);
+            let mut rng = Rng64::seed_from_u64(seed ^ 0x5eed);
+            for _ in 0..8 {
+                let muts = [
+                    TopologyMutation::RemoveEdge(rng.gen_range(12), rng.gen_range(12)),
+                    TopologyMutation::AddEdge(rng.gen_range(12), rng.gen_range(12)),
+                    TopologyMutation::Isolate(rng.gen_range(12)),
+                ];
+                apply_mutations_unrepaired(&mut g, &muts);
+                mon.apply_mutations(&g, &muts);
+                assert_eq!(
+                    mon.labels(),
+                    component_labels(&g).as_slice(),
+                    "seed {seed}: incremental labels diverged"
+                );
+                assert_eq!(mon.num_components(), count_components(mon.labels()));
+            }
+        }
+    }
+}

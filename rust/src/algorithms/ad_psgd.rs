@@ -38,8 +38,20 @@ impl UpdateRule for AdPsgd {
 
     fn on_ready(&mut self, w: WorkerId, core: &mut EngineCore) {
         core.apply_gradient(w);
-        let nbrs = core.graph.neighbors(w);
+        // Live-graph neighbors are same-component by construction; under
+        // partition-aware adaptivity the *observed* view additionally
+        // filters peers the worker believes unreachable (a heal not yet
+        // detected), so no averaging partner is sampled across a cut the
+        // worker still assumes exists.
+        let nbrs = core.observed_neighbors(w);
         if nbrs.is_empty() {
+            // Solitary (or fully unreachable) worker: keep training alone.
+            // The solo step still advances k — otherwise a fully shattered
+            // fleet would freeze the iteration counter below
+            // max_iterations and the run would never terminate.
+            // (Unreachable in legacy mode: a connected graph with N >= 2
+            // leaves no worker without neighbors.)
+            core.advance_iteration();
             core.restart_after(w, 0.0);
             return;
         }

@@ -68,8 +68,11 @@ impl UpdateRule for Agp {
         self.absorb_inbox(w, core);
         // 2. local gradient on the de-biased estimate
         core.apply_gradient(w);
-        // 3. push half of the mass to a random neighbor
-        let nbrs = core.graph.neighbors(w);
+        // 3. push half of the mass to a random neighbor (under
+        // partition-aware adaptivity, only to peers the worker's observed
+        // component view says are reachable — pushing mass across an
+        // undetected cut would strand it)
+        let nbrs = core.observed_neighbors(w);
         if !nbrs.is_empty() {
             let r = nbrs[self.rng.gen_range(nbrs.len())];
             let delta = self.weight[w] / 2.0;

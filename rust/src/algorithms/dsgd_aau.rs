@@ -12,6 +12,18 @@
 //! workers triggers (small groups, no straggler waiting); as `P` fills,
 //! only genuinely new edges fire, so fast workers wait just long enough
 //! for information from the slow part of the graph to flow — never longer.
+//!
+//! **Partition-aware mode** (`adapt.partition_aware`): Pathsearch
+//! retargets to the worker's *observed component*.  The epoch completes
+//! when `G' = (V_c, P)` spans the component, component epochs retire
+//! locally (other components keep accumulating), and when a heal merges
+//! components the merged members' accumulation restarts (uninvolved
+//! components keep theirs) instead of leaning on the stall
+//! fallback.  With accurate views a spanning waiting set always holds a
+//! novel or unvisited edge (or the component epoch already completed),
+//! so `stall_fallbacks` stays at zero during partitioned phases — the
+//! fallback remains only as a guard while detection latency makes a
+//! worker's view lag the live graph.
 
 use super::UpdateRule;
 use crate::consensus::GroupWeights;
@@ -23,12 +35,98 @@ use crate::WorkerId;
 #[derive(Debug, Default)]
 pub struct DsgdAau {
     waiting: Vec<WorkerId>,
+    /// Observed merge events already acted on (heal-restart policy).
+    seen_merges: u64,
 }
 
 impl DsgdAau {
     /// Fresh rule.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Fire one gossip iteration over `group` (Alg. 2 lines 4-9): absorb
+    /// into Pathsearch, apply gradients, Metropolis-average, restart.
+    fn fire(&mut self, group: Vec<WorkerId>, core: &mut EngineCore) {
+        let new_edges = core.pathsearch.absorb_group(&core.graph, &group);
+        core.recorder.control_bytes +=
+            PathSearch::broadcast_bytes(core.num_workers(), new_edges);
+        for &m in &group {
+            core.apply_gradient(m); // w̃_j = w_j − η g_j
+        }
+        let gw = GroupWeights::metropolis(&core.graph, &group);
+        core.gossip(&gw); // w_j = Σ_i w̃_i P_ij over N_j(k)
+        core.advance_iteration();
+        let delay = core.gossip_delay(group.len());
+        for &m in &group {
+            core.restart_after(m, delay);
+        }
+    }
+
+    /// React to an observed component merge (heal): the merged
+    /// components' accumulated subgraph proves nothing about the merged
+    /// graph, so *their members'* `P, V` entries reset and re-accumulate —
+    /// instead of the PR 2 stall fallback eventually papering over the
+    /// mismatch.  Components uninvolved in the heal keep their progress.
+    fn check_heal(&mut self, core: &mut EngineCore) {
+        if core.monitor.observed_merges() > self.seen_merges {
+            self.seen_merges = core.monitor.observed_merges();
+            let members = core.monitor.take_merge_members();
+            if core.heal_restart() && !members.is_empty() {
+                core.pathsearch.reset_component(&members);
+                core.recorder.epoch_restarts += 1;
+            }
+        }
+    }
+
+    /// Retire the epoch if the accumulated subgraph already spans `comp`.
+    /// Called after every fire *and* on entry: a split can shrink the
+    /// epoch target onto a component whose accumulation is already
+    /// complete, and without the entry check that completion would
+    /// masquerade as a stall (no novel pair, fallback gated off).
+    fn retire_if_complete(&mut self, comp: &[WorkerId], core: &mut EngineCore) {
+        if comp.len() == core.num_workers() {
+            if core.pathsearch.is_complete(&core.graph) {
+                core.pathsearch.reset_epoch();
+            }
+        } else if core.pathsearch.is_complete_within(&core.graph, comp) {
+            core.pathsearch.reset_component(comp);
+            // a solitary worker trivially "spans" itself every round —
+            // only multi-worker completions count as component epochs
+            if comp.len() > 1 {
+                core.recorder.component_epochs += 1;
+            }
+        }
+    }
+
+    /// Component-retargeted firing test for `rep`'s observed component.
+    /// Fires one iteration when the waiting members hold a novel edge, or
+    /// when the entire component is waiting.  Returns whether it fired.
+    fn try_fire_component(&mut self, rep: WorkerId, core: &mut EngineCore) -> bool {
+        let comp = core.monitor.component_members(rep);
+        self.retire_if_complete(&comp, core);
+        let ready: Vec<WorkerId> =
+            self.waiting.iter().copied().filter(|x| comp.contains(x)).collect();
+        if ready.is_empty() {
+            return false;
+        }
+        if core.pathsearch.find_novel_pair_within(&core.graph, &ready, &comp).is_none() {
+            if ready.len() < comp.len() {
+                return false; // keep waiting for the rest of the component
+            }
+            // The whole component is waiting with no usable edge.  With an
+            // accurate view this is unreachable (see module docs); it can
+            // happen only while detection latency leaves the observed
+            // component stale.  Fire the liveness fallback, except for a
+            // solitary worker, which simply keeps training alone.
+            if comp.len() > 1 {
+                core.recorder.stall_fallbacks += 1;
+            }
+        }
+        self.waiting.retain(|x| !ready.contains(x));
+        self.fire(ready, core);
+        self.retire_if_complete(&comp, core);
+        true
     }
 }
 
@@ -40,6 +138,12 @@ impl UpdateRule for DsgdAau {
     fn on_ready(&mut self, w: WorkerId, core: &mut EngineCore) {
         debug_assert!(!self.waiting.contains(&w), "worker {w} ready twice");
         self.waiting.push(w);
+
+        if core.partition_aware() {
+            self.check_heal(core);
+            self.try_fire_component(w, core);
+            return;
+        }
 
         // Alg. 3: does the waiting set now contain a novel edge?
         if core.pathsearch.find_novel_pair(&core.graph, &self.waiting).is_none() {
@@ -60,24 +164,25 @@ impl UpdateRule for DsgdAau {
         // The iteration fires: all waiting workers participate (Alg. 2
         // lines 4-9 — j_k plus every i_k that finished during Pathsearch).
         let group = std::mem::take(&mut self.waiting);
-        let new_edges = core.pathsearch.absorb_group(&core.graph, &group);
-        core.recorder.control_bytes +=
-            PathSearch::broadcast_bytes(core.num_workers(), new_edges);
-
-        for &m in &group {
-            core.apply_gradient(m); // w̃_j = w_j − η g_j
-        }
-        let gw = GroupWeights::metropolis(&core.graph, &group);
-        core.gossip(&gw); // w_j = Σ_i w̃_i P_ij over N_j(k)
-        core.advance_iteration();
+        self.fire(group, core);
 
         if core.pathsearch.is_complete(&core.graph) {
             core.pathsearch.reset_epoch();
         }
+    }
 
-        let delay = core.gossip_delay(group.len());
-        for &m in &group {
-            core.restart_after(m, delay);
+    fn on_view_changed(&mut self, core: &mut EngineCore) {
+        if !core.partition_aware() {
+            return;
         }
+        self.check_heal(core);
+        // A split may have left an entire (smaller) component waiting; a
+        // merge may have created the novel edge a waiting set lacked.
+        // Walk the distinct observed components of the waiting workers in
+        // arrival order (deterministic) and fire whichever can.
+        let snapshot = self.waiting.clone();
+        super::for_each_distinct_component(&snapshot, core, |x, core| {
+            self.try_fire_component(x, core);
+        });
     }
 }

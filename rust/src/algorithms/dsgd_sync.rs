@@ -21,6 +21,34 @@ impl DsgdSync {
     pub fn new() -> Self {
         Self::default()
     }
+
+    /// Component barrier (partition-aware mode): fire when every member
+    /// of `rep`'s observed component is done.  Returns whether it fired.
+    fn try_fire_component(&mut self, rep: WorkerId, core: &mut EngineCore) -> bool {
+        let comp = core.monitor.component_members(rep);
+        if !comp.iter().all(|m| self.done.contains(m)) {
+            return false;
+        }
+        for &m in &comp {
+            self.done.remove(&m);
+            core.apply_gradient(m);
+        }
+        if comp.len() == core.num_workers() {
+            // whole fleet in one component (the common state between
+            // partition episodes): reuse the cached full-graph weights
+            core.gossip_all();
+        } else {
+            let gw = crate::consensus::GroupWeights::metropolis(&core.graph, &comp);
+            core.gossip(&gw);
+        }
+        core.advance_iteration();
+        let max_deg = comp.iter().map(|&m| core.graph.degree(m)).max().unwrap_or(0);
+        let delay = core.comm.gossip_time(max_deg + 1, core.param_bytes());
+        for &m in &comp {
+            core.restart_after(m, delay);
+        }
+        true
+    }
 }
 
 impl UpdateRule for DsgdSync {
@@ -30,6 +58,16 @@ impl UpdateRule for DsgdSync {
 
     fn on_ready(&mut self, w: WorkerId, core: &mut EngineCore) {
         self.done.insert(w);
+
+        if core.partition_aware() {
+            // Component barrier: an unreachable worker cannot join a
+            // global barrier, so each observed component synchronizes on
+            // its own — the straggler bound shrinks to the slowest worker
+            // *of the component*.
+            self.try_fire_component(w, core);
+            return;
+        }
+
         if self.done.len() < core.num_workers() {
             return; // barrier: wait for everyone, stragglers included
         }
@@ -52,5 +90,20 @@ impl UpdateRule for DsgdSync {
         for &m in &all {
             core.restart_after(m, delay);
         }
+    }
+
+    fn on_view_changed(&mut self, core: &mut EngineCore) {
+        if !core.partition_aware() {
+            return;
+        }
+        // After a split, a smaller component may consist entirely of
+        // already-done workers; its barrier must fire now (iterate in
+        // sorted worker order so the event stream stays deterministic —
+        // `done` is a hash set).
+        let mut done_sorted: Vec<WorkerId> = self.done.iter().copied().collect();
+        done_sorted.sort_unstable();
+        super::for_each_distinct_component(&done_sorted, core, |x, core| {
+            self.try_fire_component(x, core);
+        });
     }
 }

@@ -28,6 +28,42 @@ impl FixedFastest {
     }
 }
 
+impl FixedFastest {
+    /// One round over `group`: gradients, Metropolis consensus, restart.
+    fn fire(group: &[WorkerId], core: &mut EngineCore) {
+        for &m in group {
+            core.apply_gradient(m);
+        }
+        let gw = GroupWeights::metropolis(&core.graph, group);
+        core.gossip(&gw);
+        core.advance_iteration();
+        let delay = core.gossip_delay(group.len());
+        for &m in group {
+            core.restart_after(m, delay);
+        }
+    }
+
+    /// Component-clamped round (partition-aware mode): fire the first
+    /// `min(k, |component|)` finishers of `rep`'s observed component.
+    /// Returns whether it fired.
+    fn try_fire_component(&mut self, rep: WorkerId, core: &mut EngineCore) -> bool {
+        let comp = core.monitor.component_members(rep);
+        let mut ready: Vec<WorkerId> =
+            self.waiting.iter().copied().filter(|x| comp.contains(x)).collect();
+        let k_eff = self.k.min(comp.len());
+        if ready.is_empty() || ready.len() < k_eff {
+            return false;
+        }
+        // A merge can pool more than k waiting workers at once; the group
+        // stays at the fixed size — that is the algorithm under test —
+        // and the rest fire on subsequent rounds.
+        ready.truncate(k_eff);
+        self.waiting.retain(|x| !ready.contains(x));
+        Self::fire(&ready, core);
+        true
+    }
+}
+
 impl UpdateRule for FixedFastest {
     fn name(&self) -> &'static str {
         "Fixed-k"
@@ -35,20 +71,31 @@ impl UpdateRule for FixedFastest {
 
     fn on_ready(&mut self, w: WorkerId, core: &mut EngineCore) {
         self.waiting.push(w);
+        if core.partition_aware() {
+            // Wait for the first k finishers *of w's component* — an
+            // unreachable straggler must not hold the round hostage, and
+            // k clamps to the component size so small components (down
+            // to a solitary worker) keep making progress.
+            self.try_fire_component(w, core);
+            return;
+        }
         if self.waiting.len() < self.k.min(core.num_workers()) {
             return;
         }
         let group = std::mem::take(&mut self.waiting);
-        for &m in &group {
-            core.apply_gradient(m);
+        Self::fire(&group, core);
+    }
+
+    fn on_view_changed(&mut self, core: &mut EngineCore) {
+        if !core.partition_aware() {
+            return;
         }
-        let gw = GroupWeights::metropolis(&core.graph, &group);
-        core.gossip(&gw);
-        core.advance_iteration();
-        let delay = core.gossip_delay(group.len());
-        for &m in &group {
-            core.restart_after(m, delay);
-        }
+        // After a split, min(k, |component|) may already be satisfied by
+        // workers that were waiting on peers now unreachable.
+        let snapshot = self.waiting.clone();
+        super::for_each_distinct_component(&snapshot, core, |x, core| {
+            self.try_fire_component(x, core);
+        });
     }
 }
 

@@ -126,6 +126,29 @@ impl AlgorithmKind {
     }
 }
 
+/// Walk `pending` in order and invoke `f` once per distinct *observed*
+/// component, represented by its first pending member.  The shared shape
+/// of every waiting rule's `on_view_changed` re-evaluation: after a
+/// detected split or heal, each affected component must be re-tested for
+/// firing exactly once, in a deterministic order.
+pub(crate) fn for_each_distinct_component<F>(
+    pending: &[WorkerId],
+    core: &mut EngineCore,
+    mut f: F,
+) where
+    F: FnMut(WorkerId, &mut EngineCore),
+{
+    let mut labels_seen: Vec<usize> = Vec::new();
+    for &x in pending {
+        let label = core.monitor.component_of(x);
+        if labels_seen.contains(&label) {
+            continue;
+        }
+        labels_seen.push(label);
+        f(x, core);
+    }
+}
+
 /// Event-driven decentralized update rule.
 pub trait UpdateRule {
     /// Algorithm label.
@@ -137,6 +160,13 @@ pub trait UpdateRule {
 
     /// Called once before the run starts (after all workers are scheduled).
     fn on_start(&mut self, _core: &mut EngineCore) {}
+
+    /// The workers' observed component view changed — a split or heal was
+    /// detected (partition-aware adaptivity).  Rules that *wait* must
+    /// re-evaluate their pending sets here: after a split, a waiting set
+    /// or barrier may already cover its entire (now smaller) component,
+    /// and no further `ComputeDone` event will arrive to trigger it.
+    fn on_view_changed(&mut self, _core: &mut EngineCore) {}
 }
 
 #[cfg(test)]

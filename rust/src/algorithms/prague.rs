@@ -38,11 +38,20 @@ impl Prague {
         }
     }
 
-    fn alloc_group(&mut self, seed_worker: WorkerId, n: usize) -> usize {
+    fn alloc_group(&mut self, seed_worker: WorkerId, core: &EngineCore) -> usize {
+        let n = core.num_workers();
         // sample distinct unassigned peers (the generator doesn't know who
-        // is slow — that is the point)
-        let mut candidates: Vec<WorkerId> =
-            (0..n).filter(|&x| x != seed_worker && self.assignment[x].is_none()).collect();
+        // is slow — that is the point).  Under partition-aware adaptivity
+        // the generator stops sampling peers outside the seed worker's
+        // observed component: a group spanning a cut could never complete
+        // its all-reduce, so membership stays component-local (and the
+        // group size degrades gracefully to what the component can offer).
+        let mut candidates: Vec<WorkerId> = (0..n)
+            .filter(|&x| x != seed_worker && self.assignment[x].is_none())
+            .filter(|&x| {
+                !core.partition_aware() || core.monitor.same_component_observed(seed_worker, x)
+            })
+            .collect();
         self.rng.shuffle(&mut candidates);
         let mut members = vec![seed_worker];
         members.extend(candidates.into_iter().take(self.group_size - 1));
@@ -74,7 +83,7 @@ impl UpdateRule for Prague {
     fn on_ready(&mut self, w: WorkerId, core: &mut EngineCore) {
         let gid = match self.assignment[w] {
             Some(g) => g,
-            None => self.alloc_group(w, core.num_workers()),
+            None => self.alloc_group(w, core),
         };
         let complete = {
             let group = self.groups[gid].as_mut().expect("group exists");
@@ -90,19 +99,38 @@ impl UpdateRule for Prague {
             core.apply_gradient(m);
         }
         // Partial all-reduce = uniform average over the group (Prague's
-        // groups ignore the topology; its all-reduce is logical).
-        let gw = GroupWeights::uniform(&group.members);
-        // ring all-reduce: 2(m-1) parameter-sized message steps
-        let m_len = group.members.len() as u64;
-        let bytes = 2 * (m_len - 1) * core.param_bytes();
-        core.gossip_costed(&gw, bytes);
+        // groups ignore the topology; its all-reduce is logical).  Under
+        // partition-aware adaptivity a group allocated before a cut may
+        // now straddle it — the all-reduce then runs per reachable
+        // sub-group, never averaging across a detected partition.
+        let subgroups: Vec<Vec<WorkerId>> = if core.partition_aware() {
+            let mut by_label: std::collections::BTreeMap<usize, Vec<WorkerId>> =
+                std::collections::BTreeMap::new();
+            for &m in &group.members {
+                by_label.entry(core.monitor.component_of(m)).or_default().push(m);
+            }
+            by_label.into_values().collect()
+        } else {
+            vec![group.members]
+        };
+        for sub in &subgroups {
+            // ring all-reduce: 2(m-1) parameter-sized message steps
+            // (a stranded singleton skips the collective entirely)
+            if sub.len() >= 2 {
+                let gw = GroupWeights::uniform(sub);
+                let bytes = 2 * (sub.len() as u64 - 1) * core.param_bytes();
+                core.gossip_costed(&gw, bytes);
+            }
+        }
         core.advance_iteration();
 
-        // Ring all-reduce cost: 2(m−1) message steps.
-        let m = group.members.len();
-        let delay = 2.0 * (m as f64 - 1.0) * core.comm.transfer_time(core.param_bytes());
-        for &mb in &group.members {
-            core.restart_after(mb, delay);
+        // Ring all-reduce cost: 2(m−1) message steps per sub-group.
+        for sub in &subgroups {
+            let delay =
+                2.0 * (sub.len() as f64 - 1.0) * core.comm.transfer_time(core.param_bytes());
+            for &mb in sub {
+                core.restart_after(mb, delay);
+            }
         }
     }
 }

@@ -232,6 +232,23 @@ impl ApplyOutcome {
 /// connected graph stays connected after *every* mutation.  Out-of-range
 /// ids, self-loops and redundant adds/removes are skipped.
 pub fn apply_mutations(g: &mut Graph, mutations: &[TopologyMutation]) -> ApplyOutcome {
+    apply_mutations_impl(g, mutations, true)
+}
+
+/// Apply a mutation batch *without* connectivity repair: removals apply
+/// even when they disconnect the graph, so partitions are real.  Used by
+/// the engine when the `adapt` config allows partitions; the
+/// [`crate::adapt::PartitionMonitor`] then tracks the resulting
+/// component structure.  `deferred` is always 0 in the outcome.
+pub fn apply_mutations_unrepaired(g: &mut Graph, mutations: &[TopologyMutation]) -> ApplyOutcome {
+    apply_mutations_impl(g, mutations, false)
+}
+
+fn apply_mutations_impl(
+    g: &mut Graph,
+    mutations: &[TopologyMutation],
+    repair: bool,
+) -> ApplyOutcome {
     let n = g.num_vertices();
     let mut out = ApplyOutcome::default();
     for m in mutations {
@@ -244,13 +261,13 @@ pub fn apply_mutations(g: &mut Graph, mutations: &[TopologyMutation]) -> ApplyOu
             }
             TopologyMutation::RemoveEdge(i, j) => {
                 if *i < n && *j < n {
-                    try_remove(g, *i, *j, &mut out);
+                    try_remove(g, *i, *j, repair, &mut out);
                 }
             }
             TopologyMutation::Isolate(w) => {
                 if *w < n {
                     for nb in g.neighbors(*w).to_vec() {
-                        try_remove(g, *w, nb, &mut out);
+                        try_remove(g, *w, nb, repair, &mut out);
                     }
                 }
             }
@@ -267,12 +284,12 @@ pub fn apply_mutations(g: &mut Graph, mutations: &[TopologyMutation]) -> ApplyOu
     out
 }
 
-/// Remove `(i, j)` unless absent or a bridge (deferred).
-fn try_remove(g: &mut Graph, i: usize, j: usize, out: &mut ApplyOutcome) {
+/// Remove `(i, j)` unless absent; with `repair`, bridges are deferred.
+fn try_remove(g: &mut Graph, i: usize, j: usize, repair: bool, out: &mut ApplyOutcome) {
     if !g.has_edge(i, j) {
         return;
     }
-    if g.would_disconnect(i, j) {
+    if repair && g.would_disconnect(i, j) {
         out.deferred += 1;
     } else {
         g.remove_edge(i, j);
@@ -349,6 +366,24 @@ mod tests {
         assert!(g.has_edge(0, 2) && g.has_edge(0, 3));
         assert!(!g.has_edge(0, 1) && !g.has_edge(0, 5));
         assert!(g.is_connected());
+    }
+
+    #[test]
+    fn unrepaired_apply_allows_real_partitions() {
+        let mut g = ring(4);
+        let out = apply_mutations_unrepaired(
+            &mut g,
+            &[TopologyMutation::RemoveEdge(0, 1), TopologyMutation::RemoveEdge(2, 3)],
+        );
+        assert_eq!(out, ApplyOutcome { applied: 2, deferred: 0 });
+        assert!(!g.is_connected(), "without repair the cut is real");
+
+        // isolate strips every incident link, no lifeline
+        let mut g = star(5);
+        let out = apply_mutations_unrepaired(&mut g, &[TopologyMutation::Isolate(3)]);
+        assert_eq!(out, ApplyOutcome { applied: 1, deferred: 0 });
+        assert_eq!(g.degree(3), 0);
+        assert!(!g.is_connected());
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! field is optional and defaults to the paper's settings (§6: η0 = 0.1,
 //! δ = 0.95, 10 % stragglers at 10×, batch 128-equivalent workloads).
 
+use crate::adapt::AdaptConfig;
 use crate::algorithms::AlgorithmKind;
 use crate::churn::ChurnConfig;
 use crate::sim::{CommModel, StragglerModel};
@@ -87,6 +88,10 @@ pub struct ExperimentConfig {
     /// Dynamic-topology churn scenario applied on top of `topology`
     /// (kind, rate parameters, seed override or schedule path).
     pub churn: ChurnConfig,
+    /// Partition-aware adaptivity: allow real partitions (no connectivity
+    /// repair), component-aware update rules, detection latency and the
+    /// heal-restart policy.  Defaults preserve the legacy behavior.
+    pub adapt: AdaptConfig,
     /// Update rule under test.
     pub algorithm: AlgorithmKind,
     /// Gradient backend.
@@ -142,6 +147,7 @@ impl Default for ExperimentConfig {
             num_workers: 16,
             topology: TopologyKind::default(),
             churn: ChurnConfig::default(),
+            adapt: AdaptConfig::default(),
             algorithm: AlgorithmKind::DsgdAau,
             backend: BackendKind::Quadratic,
             model: "mlp_small".into(),
@@ -185,6 +191,7 @@ impl ExperimentConfig {
                 "num_workers" => cfg.num_workers = need_usize(key, v)?,
                 "topology" => cfg.topology = TopologyKind::from_json(v)?,
                 "churn" => cfg.churn = ChurnConfig::from_json(v)?,
+                "adapt" => cfg.adapt = AdaptConfig::from_json(v)?,
                 "algorithm" => {
                     cfg.algorithm =
                         AlgorithmKind::parse(v.as_str().unwrap_or_default())?
@@ -237,6 +244,7 @@ impl ExperimentConfig {
         m.insert("num_workers".into(), Json::from(self.num_workers));
         m.insert("topology".into(), self.topology.to_json());
         m.insert("churn".into(), self.churn.to_json());
+        m.insert("adapt".into(), self.adapt.to_json());
         m.insert("algorithm".into(), Json::from(self.algorithm.token()));
         m.insert("backend".into(), Json::from(self.backend.token()));
         m.insert("model".into(), Json::from(self.model.as_str()));
@@ -289,6 +297,7 @@ impl ExperimentConfig {
         anyhow::ensure!(self.prague_group >= 2, "prague group must be >= 2");
         self.straggler.validate()?;
         self.churn.validate()?;
+        self.adapt.validate()?;
         Ok(())
     }
 }
@@ -367,6 +376,33 @@ mod tests {
         assert_eq!(cfg.straggler.probability, 0.3);
         assert_eq!(cfg.straggler.slowdown, 6.0);
         assert_eq!(cfg.straggler.kind, crate::sim::StragglerKind::Bernoulli);
+    }
+
+    #[test]
+    fn adapt_section_parses_strictly_and_roundtrips() {
+        let cfg = ExperimentConfig::from_json(
+            &Json::parse(
+                r#"{"adapt": {"partition_aware": true, "detection_latency": 0.5,
+                     "heal_restart": false}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert!(cfg.adapt.partition_aware && cfg.adapt.partitions_allowed());
+        assert_eq!(cfg.adapt.detection_latency, 0.5);
+        assert!(!cfg.adapt.heal_restart);
+        let back =
+            ExperimentConfig::from_json(&Json::parse(&cfg.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back.adapt, cfg.adapt);
+        // unknown adapt keys are rejected, not defaulted
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"adapt": {"partition_awareness": true}}"#).unwrap()
+        )
+        .is_err());
+        // omitting the section keeps legacy behavior
+        let legacy = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(legacy.adapt, crate::adapt::AdaptConfig::default());
     }
 
     #[test]

@@ -56,27 +56,73 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunSummary> {
 /// single-threaded and CPU-bound; scale-out is per-experiment).
 pub fn run_sweep(configs: Vec<ExperimentConfig>) -> Vec<(ExperimentConfig, Result<RunSummary>)> {
     let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
-    let configs = std::sync::Arc::new(std::sync::Mutex::new(
-        configs.into_iter().enumerate().collect::<Vec<_>>(),
-    ));
-    let results = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
-    let mut handles = Vec::new();
-    for _ in 0..threads {
-        let configs = configs.clone();
-        let results = results.clone();
-        handles.push(std::thread::spawn(move || loop {
-            let next = configs.lock().unwrap().pop();
-            let Some((idx, cfg)) = next else { break };
-            let out = run_experiment(&cfg);
-            results.lock().unwrap().push((idx, cfg, out));
-        }));
-    }
-    for h in handles {
-        h.join().expect("sweep worker panicked");
-    }
-    let mut out = std::sync::Arc::try_unwrap(results).unwrap().into_inner().unwrap();
+    run_sweep_with_threads(configs, threads)
+}
+
+/// [`run_sweep`] with an explicit worker-thread count.  Results are in
+/// input order and independent of `threads` (the determinism suite
+/// asserts byte-identical metrics across thread counts).
+///
+/// A panicking experiment is contained: it surfaces as an `Err` in that
+/// experiment's slot instead of poisoning the shared queues and aborting
+/// the whole sweep.
+pub fn run_sweep_with_threads(
+    configs: Vec<ExperimentConfig>,
+    threads: usize,
+) -> Vec<(ExperimentConfig, Result<RunSummary>)> {
+    sweep_jobs(configs, threads, run_experiment)
+}
+
+/// Generic panic-contained work-stealing sweep: run `f` over `jobs` on
+/// `threads` OS threads, returning `(job, result)` in input order.
+fn sweep_jobs<T, R, F>(jobs: Vec<T>, threads: usize, f: F) -> Vec<(T, Result<R>)>
+where
+    T: Send,
+    R: Send,
+    F: Fn(&T) -> Result<R> + Send + Sync,
+{
+    let threads = threads.max(1);
+    let queue = std::sync::Mutex::new(jobs.into_iter().enumerate().rev().collect::<Vec<_>>());
+    let results = std::sync::Mutex::new(Vec::new());
+    let f = &f;
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                // A panic below never happens while a lock is held, but
+                // recover from poisoning anyway: the data is a job queue /
+                // result list, both valid at every lock release.
+                let next = lock_ok(&queue).pop();
+                let Some((idx, job)) = next else { break };
+                // Contain per-experiment panics: one poisoned config must
+                // not sink the other results (the old `h.join().expect`
+                // aborted the entire sweep).
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&job)))
+                    .unwrap_or_else(|payload| {
+                        Err(anyhow::anyhow!("experiment panicked: {}", panic_message(&payload)))
+                    });
+                lock_ok(&results).push((idx, job, out));
+            });
+        }
+    });
+    let mut out = results.into_inner().unwrap_or_else(|e| e.into_inner());
     out.sort_by_key(|(idx, _, _)| *idx);
-    out.into_iter().map(|(_, cfg, res)| (cfg, res)).collect()
+    out.into_iter().map(|(_, job, res)| (job, res)).collect()
+}
+
+/// Recover the guard even from a poisoned mutex (see `sweep_jobs`).
+fn lock_ok<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Best-effort text of a panic payload (`&str` / `String` or a marker).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// Mean ± population-std helper for table cells over repeated seeds.
@@ -162,6 +208,48 @@ mod tests {
             assert_eq!(cfg.algorithm, expect.algorithm);
             assert!(res.is_ok());
         }
+    }
+
+    #[test]
+    fn panicking_job_does_not_sink_the_sweep() {
+        // one poisoned job among four: its slot surfaces the panic as an
+        // Err, every other slot completes, order is preserved — across
+        // thread counts, including the single-thread worker that runs the
+        // poisoned job and must survive to drain the queue.
+        for threads in [1usize, 4] {
+            let jobs: Vec<usize> = vec![0, 1, 2, 3];
+            let results = sweep_jobs(jobs, threads, |&j| -> Result<usize> {
+                if j == 2 {
+                    panic!("poisoned config {j}");
+                }
+                Ok(j * 10)
+            });
+            assert_eq!(results.len(), 4, "threads={threads}");
+            for (j, res) in &results {
+                match *j {
+                    2 => {
+                        let msg = res.as_ref().unwrap_err().to_string();
+                        assert!(msg.contains("panicked"), "threads={threads}: {msg}");
+                        assert!(msg.contains("poisoned config 2"), "{msg}");
+                    }
+                    _ => assert_eq!(*res.as_ref().unwrap(), j * 10, "threads={threads}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn erroring_config_does_not_sink_the_sweep() {
+        let good = quick_cfg(AlgorithmKind::DsgdAau);
+        let mut bad = quick_cfg(AlgorithmKind::DsgdAau);
+        bad.churn = crate::churn::ChurnConfig {
+            kind: crate::churn::ChurnKind::FlakyLinks { rate: 0.0, mean_downtime: 1.0 },
+            seed: None,
+        };
+        let results = run_sweep_with_threads(vec![good, bad.clone(), bad], 2);
+        assert_eq!(results.len(), 3);
+        assert!(results[0].1.is_ok(), "good config must survive its bad neighbors");
+        assert!(results[1].1.is_err() && results[2].1.is_err());
     }
 
     #[test]

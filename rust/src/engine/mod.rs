@@ -7,9 +7,10 @@
 //! *values* are real (produced by the [`Backend`]); *durations* come from
 //! the [`ComputeModel`] so straggler dynamics match the paper's testbed.
 
+use crate::adapt::{AdaptConfig, PartitionMonitor};
 use crate::algorithms::UpdateRule;
 use crate::backend::{Backend, GradOutput};
-use crate::churn::{self, ApplyOutcome, ChurnModel};
+use crate::churn::{self, ApplyOutcome, ChurnModel, TopologyMutation};
 use crate::config::{ExperimentConfig, LrSchedule};
 use crate::consensus::GroupWeights;
 use crate::metrics::Recorder;
@@ -31,10 +32,16 @@ pub struct EngineCore {
     pub comm: CommModel,
     /// Pathsearch consensus sets (used by DSGD-AAU).
     pub pathsearch: PathSearch,
+    /// Connected-component tracking: engine-level ground truth plus the
+    /// lagged observed view update rules consult under partition-aware
+    /// adaptivity.  Kept current even in legacy mode (where repair keeps
+    /// the graph connected and the monitor stays at one component).
+    pub monitor: PartitionMonitor,
     /// Metrics.
     pub recorder: Recorder,
     /// Gossip-iteration counter k.
     pub k: u64,
+    adapt: AdaptConfig,
     compute: ComputeModel,
     backend: Box<dyn Backend>,
     params: Vec<ParamVec>,
@@ -73,6 +80,41 @@ impl EngineCore {
     /// Whether worker `w` has a stashed (un-applied) gradient.
     pub fn has_stash(&self, w: WorkerId) -> bool {
         self.stash[w].is_some()
+    }
+
+    /// Whether update rules must retarget to the live component structure
+    /// (the `adapt.partition_aware` switch).
+    pub fn partition_aware(&self) -> bool {
+        self.adapt.partition_aware
+    }
+
+    /// Whether topology mutations apply without connectivity repair.
+    pub fn partitions_allowed(&self) -> bool {
+        self.adapt.partitions_allowed()
+    }
+
+    /// Whether an observed component merge restarts the Pathsearch epoch.
+    pub fn heal_restart(&self) -> bool {
+        self.adapt.heal_restart
+    }
+
+    /// Seconds until workers' local views observe a component change.
+    pub fn detection_latency(&self) -> f64 {
+        self.adapt.detection_latency
+    }
+
+    /// Neighbors of `w` that `w` believes reachable: the live-graph
+    /// neighbor list, filtered by the observed component view when
+    /// partition-aware adaptivity is on (identity filter otherwise).
+    /// The sampling pool for AD-PSGD's averaging partner and AGP's
+    /// push target.
+    pub fn observed_neighbors(&self, w: WorkerId) -> Vec<WorkerId> {
+        self.graph
+            .neighbors(w)
+            .iter()
+            .copied()
+            .filter(|&r| !self.partition_aware() || self.monitor.same_component_observed(w, r))
+            .collect()
     }
 
     /// Begin a local computation for `w` *now*: the gradient is evaluated
@@ -141,6 +183,7 @@ impl EngineCore {
         // all-reduce) use `gossip_costed` instead.
         let bytes = 2 * gw.active_edges() as u64 * self.param_bytes;
         self.recorder.record_gossip(m, bytes);
+        self.recorder.note_gossip_components(self.monitor.num_components());
     }
 
     /// Like [`Self::gossip`] but with an explicit byte charge (collectives
@@ -156,6 +199,7 @@ impl EngineCore {
             std::mem::swap(&mut self.params[mb], &mut self.scratch[a]);
         }
         self.recorder.record_gossip(m, bytes);
+        self.recorder.note_gossip_components(self.monitor.num_components());
     }
 
     /// Compute every member's weighted average into the scratch buffers
@@ -199,10 +243,17 @@ impl EngineCore {
 
     /// Bookkeeping after a topology mutation batch: invalidate the cached
     /// full-graph Metropolis weights, restore Pathsearch's `P ⊆ E`
-    /// invariant, and charge the membership broadcast to the control
-    /// plane (each applied mutation floods two endpoint IDs, the same
-    /// O(2N) accounting as Pathsearch's Remark 4).
-    pub fn on_topology_changed(&mut self, outcome: ApplyOutcome) {
+    /// invariant, charge the membership broadcast to the control plane
+    /// (each applied mutation floods two endpoint IDs, the same O(2N)
+    /// accounting as Pathsearch's Remark 4), and update the partition
+    /// monitor's ground truth incrementally.  Returns `true` when a
+    /// component change must be detected later — the caller schedules a
+    /// `PartitionDetect` event `adapt.detection_latency` seconds out.
+    pub fn on_topology_changed(
+        &mut self,
+        outcome: ApplyOutcome,
+        muts: &[TopologyMutation],
+    ) -> bool {
         self.full_weights = None;
         self.pathsearch.prune_missing(&self.graph);
         self.recorder.control_bytes +=
@@ -210,6 +261,21 @@ impl EngineCore {
         self.recorder.topology_changes += 1;
         self.recorder.mutations_applied += outcome.applied as u64;
         self.recorder.mutations_deferred += outcome.deferred as u64;
+
+        let delta = self.monitor.apply_mutations(&self.graph, muts);
+        if !delta.changed() {
+            return false;
+        }
+        self.recorder.partition_splits += delta.splits;
+        self.recorder.partition_merges += delta.merges;
+        self.recorder.max_components =
+            self.recorder.max_components.max(self.monitor.num_components());
+        // Even a zero detection latency routes through a PartitionDetect
+        // event: promotion then happens at the same timestamp but after
+        // the mutation batch, and the update rule's `on_view_changed`
+        // hook runs from the event loop, never mid-mutation.
+        self.monitor.queue_observation(self.now());
+        true
     }
 
     /// Pairwise average with explicit byte accounting (AD-PSGD's atomic
@@ -221,6 +287,7 @@ impl EngineCore {
             std::mem::swap(&mut self.params[mb], &mut self.scratch[a]);
         }
         self.recorder.record_gossip(2, 2 * self.param_bytes);
+        self.recorder.note_gossip_components(self.monitor.num_components());
     }
 
     /// Overwrite worker `w`'s parameters (push-sum style rules).
@@ -408,13 +475,18 @@ impl Engine {
         let init = backend.init_params(cfg.seed_for("init"));
         assert_eq!(init.len(), dim);
         let param_bytes = backend.param_bytes();
+        let monitor = PartitionMonitor::new(&graph, cfg.adapt.detection_latency);
+        let mut recorder = Recorder::new();
+        recorder.max_components = monitor.num_components();
         let core = EngineCore {
             graph,
             queue: EventQueue::new(),
             comm: cfg.comm,
             pathsearch: PathSearch::new(),
-            recorder: Recorder::new(),
+            monitor,
+            recorder,
             k: 0,
+            adapt: cfg.adapt.clone(),
             compute,
             backend,
             params: vec![init; n],
@@ -477,15 +549,32 @@ impl Engine {
                     let now = self.core.queue.now();
                     let muts = self.churn.step(now, &self.core.graph);
                     if !muts.is_empty() {
-                        let outcome = churn::apply_mutations(&mut self.core.graph, &muts);
-                        debug_assert!(
-                            self.core.graph.is_connected(),
-                            "connectivity repair failed at t={now}"
-                        );
-                        self.core.on_topology_changed(outcome);
+                        let outcome = if self.core.partitions_allowed() {
+                            churn::apply_mutations_unrepaired(&mut self.core.graph, &muts)
+                        } else {
+                            let outcome = churn::apply_mutations(&mut self.core.graph, &muts);
+                            debug_assert!(
+                                self.core.graph.is_connected(),
+                                "connectivity repair failed at t={now}"
+                            );
+                            outcome
+                        };
+                        if self.core.on_topology_changed(outcome, &muts) {
+                            let latency = self.core.detection_latency();
+                            self.core.queue.schedule_in(latency, EventKind::PartitionDetect);
+                        }
                     }
                     if let Some(t) = self.churn.next_change() {
                         self.core.queue.schedule(t, EventKind::TopologyChange);
+                    }
+                }
+                EventKind::PartitionDetect => {
+                    let now = self.core.queue.now();
+                    let delta = self.core.monitor.promote_due(now);
+                    if delta.changed() {
+                        // Waiting sets may already satisfy their new
+                        // (smaller or merged) components — fire them now.
+                        self.rule.on_view_changed(&mut self.core);
                     }
                 }
             }

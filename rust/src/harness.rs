@@ -13,6 +13,9 @@ use std::path::{Path, PathBuf};
 pub struct BenchArgs {
     /// Paper-scale run (`--full`) vs CI-scale (default).
     pub full: bool,
+    /// Smoke-grid run (`--quick`): the smallest sweep that still covers
+    /// every axis — what CI runs to keep the perf trajectory populated.
+    pub quick: bool,
     /// Seeds per table cell.
     pub seeds: u64,
     /// Output directory for CSVs.
@@ -27,6 +30,7 @@ impl Default for BenchArgs {
     fn default() -> Self {
         BenchArgs {
             full: false,
+            quick: false,
             seeds: 3,
             out_dir: PathBuf::from("results"),
             backend: None,
@@ -43,6 +47,7 @@ impl BenchArgs {
         while let Some(a) = it.next() {
             match a.as_str() {
                 "--full" => out.full = true,
+                "--quick" => out.quick = true,
                 "--seeds" => {
                     out.seeds = it.next().context("--seeds value")?.parse()?;
                 }
@@ -52,7 +57,9 @@ impl BenchArgs {
                     if let Some((k, v)) = other.strip_prefix("--").and_then(|s| s.split_once('=')) {
                         out.extra.insert(k.to_string(), v.to_string());
                     } else {
-                        bail!("unknown flag {other} (--full --seeds K --out DIR --backend B --k=v)");
+                        bail!(
+                            "unknown flag {other} (--full --quick --seeds K --out DIR --backend B --k=v)"
+                        );
                     }
                 }
             }

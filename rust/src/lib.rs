@@ -13,9 +13,13 @@
 //!   Weibull-renewal bursts, JSON trace replay), a dynamic-topology
 //!   [`churn`] subsystem (time-varying graphs: flaky links, mobile
 //!   workers, partition/heal cycles, JSON schedules — applied live with
-//!   connectivity repair), and the experiment harness regenerating every
-//!   table/figure of the paper's evaluation plus churn and straggler
-//!   sweeps (`bench_churn`, `bench_straggler`).
+//!   connectivity repair, or without it when the [`adapt`] section allows
+//!   real partitions), partition-aware adaptivity ([`adapt`]: incremental
+//!   connected-component tracking with configurable detection latency;
+//!   every update rule retargets to the live component), and the
+//!   experiment harness regenerating every table/figure of the paper's
+//!   evaluation plus churn, straggler and partition sweeps
+//!   (`bench_churn`, `bench_straggler`, `bench_partition`).
 //! * **L2 (python/compile/model.py)** — the worker model fwd/bwd in JAX,
 //!   AOT-lowered once to HLO text.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (fused linear
@@ -37,6 +41,7 @@
 //! println!("final loss {:.4}", result.final_loss());
 //! ```
 
+pub mod adapt;
 pub mod algorithms;
 pub mod backend;
 pub mod churn;

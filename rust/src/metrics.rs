@@ -1,7 +1,6 @@
 //! Training metrics: loss/accuracy curves over iteration and virtual time,
 //! communication accounting, and CSV export for the figure harnesses.
 
-use std::io::Write;
 use std::path::Path;
 
 /// One point on the training curve.
@@ -45,6 +44,24 @@ pub struct Recorder {
     /// Full-fleet stall fallbacks fired by DSGD-AAU (liveness guard:
     /// every worker was waiting with no novel edge available).
     pub stall_fallbacks: u64,
+    /// Ground-truth component splits (partition events) over the run.
+    pub partition_splits: u64,
+    /// Ground-truth component merges (heal events) over the run.
+    pub partition_merges: u64,
+    /// Largest number of simultaneous components the graph reached.
+    pub max_components: usize,
+    /// Pathsearch epochs abandoned because an observed heal merged
+    /// components (partition-aware DSGD-AAU's restart policy).
+    pub epoch_restarts: u64,
+    /// Pathsearch epochs completed scoped to a strict sub-component
+    /// (counted separately from `PathSearch::epochs_completed`).
+    pub component_epochs: u64,
+    /// Gossip rounds executed while the graph was partitioned (> 1
+    /// ground-truth component).
+    pub partitioned_gossips: u64,
+    /// Gossip rounds bucketed by the ground-truth component count at the
+    /// time of the round — the per-component progress profile.
+    pub gossips_by_components: std::collections::BTreeMap<usize, u64>,
 }
 
 impl Recorder {
@@ -77,6 +94,15 @@ impl Recorder {
         self.gossip_rounds += 1;
         self.group_size_sum += group_size as u64;
         self.param_bytes += bytes;
+    }
+
+    /// Note the ground-truth component count at a gossip round (the
+    /// engine calls this right after [`Self::record_gossip`]).
+    pub fn note_gossip_components(&mut self, components: usize) {
+        *self.gossips_by_components.entry(components).or_insert(0) += 1;
+        if components > 1 {
+            self.partitioned_gossips += 1;
+        }
     }
 
     /// Total bytes (parameters + control plane).
@@ -118,21 +144,28 @@ impl Recorder {
         self.curve.iter().find(|p| p.loss <= target).map(|p| p.time)
     }
 
-    /// Write the curve as CSV (`iteration,time,loss,accuracy`).
+    /// The curve as CSV text (`iteration,time,loss,accuracy,bytes`).
+    /// Byte-stable for identical runs — the golden-run determinism suite
+    /// compares these strings directly.
+    pub fn csv_string(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::from("iteration,time,loss,accuracy,bytes\n");
+        for p in &self.curve {
+            let _ = writeln!(
+                out,
+                "{},{:.6},{:.6},{:.6},{}",
+                p.iteration, p.time, p.loss, p.accuracy, p.bytes
+            );
+        }
+        out
+    }
+
+    /// Write the curve as CSV (`iteration,time,loss,accuracy,bytes`).
     pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        let mut f = std::fs::File::create(path)?;
-        writeln!(f, "iteration,time,loss,accuracy,bytes")?;
-        for p in &self.curve {
-            writeln!(
-                f,
-                "{},{:.6},{:.6},{:.6},{}",
-                p.iteration, p.time, p.loss, p.accuracy, p.bytes
-            )?;
-        }
-        Ok(())
+        std::fs::write(path, self.csv_string())
     }
 }
 
@@ -195,6 +228,22 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.starts_with("iteration,time,loss,accuracy,bytes"));
         assert_eq!(text.lines().count(), 4);
+        assert_eq!(text, r.csv_string(), "file bytes = in-memory CSV");
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn partition_counters_and_component_buckets() {
+        let mut r = Recorder::new();
+        r.record_gossip(2, 10);
+        r.note_gossip_components(1);
+        r.record_gossip(3, 10);
+        r.note_gossip_components(3);
+        r.record_gossip(2, 10);
+        r.note_gossip_components(3);
+        assert_eq!(r.partitioned_gossips, 2);
+        assert_eq!(r.gossips_by_components.get(&1), Some(&1));
+        assert_eq!(r.gossips_by_components.get(&3), Some(&2));
+        assert_eq!(r.gossips_by_components.get(&2), None);
     }
 }

@@ -125,6 +125,80 @@ impl PathSearch {
         self.epochs_completed += 1;
     }
 
+    /// Component-scoped epoch-completion test: every worker in `members`
+    /// is in `V` and the visited edges *among* `members` connect them.
+    /// With `members` = all of `N` this coincides with [`Self::is_complete`].
+    pub fn is_complete_within(&self, g: &Graph, members: &[WorkerId]) -> bool {
+        if members.is_empty() {
+            return false;
+        }
+        if !members.iter().all(|m| self.vertices.contains(m)) {
+            return false;
+        }
+        let vset: HashSet<usize> = members.iter().copied().collect();
+        // Edges with an endpoint outside the component cannot help it
+        // span (and may exist transiently while observed views lag).
+        let edges: HashSet<(usize, usize)> = self
+            .edges
+            .iter()
+            .copied()
+            .filter(|&(i, j)| vset.contains(&i) && vset.contains(&j))
+            .collect();
+        Graph::subgraph_connected(g.num_vertices(), &vset, &edges)
+    }
+
+    /// Component-scoped variant of [`Self::find_novel_pair`]: the epoch
+    /// target is `universe` (the worker's live component) instead of the
+    /// whole vertex set, so the unvisited-edge fallback unlocks as soon
+    /// as `V` covers the component.
+    pub fn find_novel_pair_within(
+        &self,
+        g: &Graph,
+        ready: &[WorkerId],
+        universe: &[WorkerId],
+    ) -> Option<(WorkerId, WorkerId)> {
+        for (ai, &a) in ready.iter().enumerate() {
+            for &b in &ready[ai + 1..] {
+                if self.is_novel_edge(g, a, b) {
+                    return Some((a, b));
+                }
+            }
+        }
+        if universe.iter().all(|v| self.vertices.contains(v))
+            && !self.is_complete_within(g, universe)
+        {
+            for (ai, &a) in ready.iter().enumerate() {
+                for &b in &ready[ai + 1..] {
+                    if self.is_unvisited_edge(g, a, b) {
+                        return Some((a, b));
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Retire a completed *component* epoch: remove `members` from `V`
+    /// and every visited edge touching them, leaving other components'
+    /// accumulation untouched.  The caller counts component epochs.
+    pub fn reset_component(&mut self, members: &[WorkerId]) {
+        let vset: HashSet<usize> = members.iter().copied().collect();
+        self.edges.retain(|&(i, j)| !vset.contains(&i) && !vset.contains(&j));
+        for m in members {
+            self.vertices.remove(m);
+        }
+    }
+
+    /// Iterator over the visited edges `P` (invariant tests).
+    pub fn edges(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.edges.iter().copied()
+    }
+
+    /// Whether worker `w` is in the visited-vertex set `V`.
+    pub fn contains_vertex(&self, w: WorkerId) -> bool {
+        self.vertices.contains(&w)
+    }
+
     /// Dynamic-topology hook: drop visited edges that no longer exist in
     /// `g`, restoring the invariant `P ⊆ E` after a churn mutation.
     /// Visited vertices stay — their information already diffused — so an
@@ -260,6 +334,55 @@ mod tests {
         g.add_edge(2, 3); // lifeline
         ps.prune_missing(&g);
         assert!(ps.is_complete(&g), "surviving subgraph still spans via (2,3)");
+    }
+
+    #[test]
+    fn component_scoped_epoch_completes_and_resets_locally() {
+        // two components: path 0-1-2 and edge 3-4
+        let g = Graph::from_edges(5, &[(0, 1), (1, 2), (3, 4)]);
+        let mut ps = PathSearch::new();
+        ps.absorb_group(&g, &[0, 1]);
+        ps.absorb_group(&g, &[3, 4]);
+        assert!(!ps.is_complete_within(&g, &[0, 1, 2]), "2 not visited yet");
+        assert!(ps.is_complete_within(&g, &[3, 4]));
+        // component {3,4} retires without touching {0,1,2}'s progress
+        ps.reset_component(&[3, 4]);
+        assert!(!ps.contains_vertex(3) && !ps.contains_vertex(4));
+        assert!(ps.contains_vertex(0) && ps.contains_vertex(1));
+        ps.absorb_group(&g, &[1, 2]);
+        assert!(ps.is_complete_within(&g, &[0, 1, 2]));
+        // the global epoch is NOT complete (3,4 were retired from V)
+        assert!(!ps.is_complete(&g));
+    }
+
+    #[test]
+    fn component_scoped_fallback_unlocks_on_component_coverage() {
+        // component {0,1,2,3} is a 4-ring; component {4,5} an edge.
+        let g = Graph::from_edges(6, &[(0, 1), (1, 2), (2, 3), (3, 0), (4, 5)]);
+        let comp: Vec<usize> = vec![0, 1, 2, 3];
+        let mut ps = PathSearch::new();
+        ps.absorb_group(&g, &[0, 1]);
+        ps.absorb_group(&g, &[2, 3]);
+        // V covers the component but G'=(V_c,P) is split: the global
+        // fallback would stay locked (V != N), the component one fires.
+        assert_eq!(ps.find_novel_pair(&g, &[1, 2]), None);
+        let pair = ps.find_novel_pair_within(&g, &[1, 2], &comp).expect("fallback");
+        ps.absorb_group(&g, &[pair.0, pair.1]);
+        assert!(ps.is_complete_within(&g, &comp));
+    }
+
+    #[test]
+    fn reset_component_of_everything_clears_without_counting() {
+        // the heal-restart path resets the merged members; resetting the
+        // whole fleet must clear P, V without bumping epochs_completed
+        let g = complete(3);
+        let mut ps = PathSearch::new();
+        ps.absorb_group(&g, &[0, 1, 2]);
+        assert!(ps.is_complete(&g));
+        ps.reset_component(&[0, 1, 2]);
+        assert_eq!(ps.epochs_completed, 0);
+        assert_eq!(ps.num_edges(), 0);
+        assert_eq!(ps.num_vertices(), 0);
     }
 
     #[test]

@@ -19,8 +19,13 @@ pub enum EventKind {
     EvalTick,
     /// The communication graph mutates now (churn subsystem): the engine
     /// asks its `ChurnModel` for the due mutations and applies them with
-    /// connectivity repair.
+    /// connectivity repair (or without it when the `adapt` config allows
+    /// real partitions).
     TopologyChange,
+    /// Workers' local component views catch up with ground truth: the
+    /// engine promotes the `PartitionMonitor` observations staged
+    /// `detection_latency` seconds ago (partition-aware adaptivity).
+    PartitionDetect,
 }
 
 /// A scheduled event.

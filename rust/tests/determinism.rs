@@ -1,0 +1,121 @@
+//! Golden-run determinism: the same `ExperimentConfig` + seed must
+//! produce byte-identical metrics across sequential reruns and across
+//! `run_sweep` thread counts, for every algorithm, under churn +
+//! Gilbert–Elliott stragglers + partition-aware adaptivity.  This is the
+//! regression net under every future RNG or refactor change: any hidden
+//! nondeterminism (hash-order iteration, thread scheduling, uninitialized
+//! state) shows up as a byte diff here.
+
+use dsgd_aau::adapt::AdaptConfig;
+use dsgd_aau::algorithms::AlgorithmKind;
+use dsgd_aau::churn::{ChurnConfig, ChurnKind};
+use dsgd_aau::config::{BackendKind, ExperimentConfig};
+use dsgd_aau::coordinator::{run_experiment, run_sweep_with_threads};
+use dsgd_aau::sim::{StragglerKind, StragglerModel};
+use dsgd_aau::topology::TopologyKind;
+
+/// The adversarial setting: churn + correlated stragglers + partitions.
+fn cfg(alg: AlgorithmKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = format!("determinism_{}", alg.token());
+    cfg.num_workers = 10;
+    cfg.algorithm = alg;
+    cfg.backend = BackendKind::Quadratic;
+    cfg.topology = TopologyKind::Random { p: 0.3, seed: 11 };
+    cfg.churn = ChurnConfig {
+        kind: ChurnKind::PartitionHeal { period: 2.0, downtime: 0.75 },
+        seed: Some(5),
+    };
+    cfg.adapt = AdaptConfig {
+        allow_partitions: true,
+        partition_aware: true,
+        detection_latency: 0.1,
+        heal_restart: true,
+    };
+    cfg.straggler = StragglerModel {
+        kind: StragglerKind::GilbertElliott { mean_fast: 2.0, mean_slow: 0.5 },
+        slowdown: 8.0,
+        seed: Some(4),
+        ..StragglerModel::default()
+    };
+    cfg.max_iterations = u64::MAX / 2;
+    cfg.time_budget = Some(6.0);
+    cfg.eval_every = 25;
+    cfg.eval_every_seconds = Some(0.5);
+    cfg.mean_compute = 0.01;
+    cfg.seed = 4242;
+    cfg
+}
+
+#[test]
+fn sequential_reruns_are_byte_identical_for_all_algorithms() {
+    for alg in AlgorithmKind::all() {
+        let c = cfg(alg);
+        let a = run_experiment(&c).unwrap();
+        let b = run_experiment(&c).unwrap();
+        assert_eq!(
+            a.recorder.csv_string(),
+            b.recorder.csv_string(),
+            "{}: metrics CSV must be byte-identical across reruns",
+            alg.label()
+        );
+        assert_eq!(a.iterations, b.iterations, "{}", alg.label());
+        assert_eq!(a.virtual_time, b.virtual_time, "{}", alg.label());
+        assert_eq!(a.recorder.total_bytes(), b.recorder.total_bytes(), "{}", alg.label());
+        assert_eq!(a.recorder.stall_fallbacks, b.recorder.stall_fallbacks, "{}", alg.label());
+        assert_eq!(
+            a.recorder.partition_splits,
+            b.recorder.partition_splits,
+            "{}",
+            alg.label()
+        );
+        assert_eq!(
+            a.recorder.gossips_by_components,
+            b.recorder.gossips_by_components,
+            "{}",
+            alg.label()
+        );
+        // the scenario must actually exercise partitions, otherwise this
+        // suite guards far less than it claims
+        assert!(a.recorder.partition_splits > 0, "{}: no partitions fired", alg.label());
+    }
+}
+
+#[test]
+fn sweep_thread_count_does_not_change_results() {
+    let cfgs: Vec<ExperimentConfig> = AlgorithmKind::all().into_iter().map(cfg).collect();
+    let one = run_sweep_with_threads(cfgs.clone(), 1);
+    let four = run_sweep_with_threads(cfgs.clone(), 4);
+    let seven = run_sweep_with_threads(cfgs, 7);
+    assert_eq!(one.len(), four.len());
+    assert_eq!(one.len(), seven.len());
+    for (((c1, r1), (c4, r4)), (c7, r7)) in one.iter().zip(&four).zip(&seven) {
+        assert_eq!(c1.algorithm, c4.algorithm, "order must be input order");
+        assert_eq!(c1.algorithm, c7.algorithm);
+        let (s1, s4, s7) = (
+            r1.as_ref().unwrap(),
+            r4.as_ref().unwrap(),
+            r7.as_ref().unwrap(),
+        );
+        let csv = s1.recorder.csv_string();
+        assert_eq!(csv, s4.recorder.csv_string(), "{}: 1 vs 4 threads", c1.algorithm.label());
+        assert_eq!(csv, s7.recorder.csv_string(), "{}: 1 vs 7 threads", c1.algorithm.label());
+        assert_eq!(s1.iterations, s4.iterations);
+        assert_eq!(s1.iterations, s7.iterations);
+        assert_eq!(s1.recorder.total_bytes(), s4.recorder.total_bytes());
+        assert_eq!(s1.recorder.total_bytes(), s7.recorder.total_bytes());
+    }
+}
+
+#[test]
+fn legacy_mode_reruns_are_byte_identical_too() {
+    // the pre-adapt configuration (repair on, no awareness) stays on the
+    // golden path as well — churn + stragglers, legacy defaults
+    let mut c = cfg(AlgorithmKind::DsgdAau);
+    c.adapt = AdaptConfig::default();
+    let a = run_experiment(&c).unwrap();
+    let b = run_experiment(&c).unwrap();
+    assert_eq!(a.recorder.csv_string(), b.recorder.csv_string());
+    assert_eq!(a.recorder.mutations_deferred, b.recorder.mutations_deferred);
+    assert_eq!(a.recorder.partition_splits, 0, "repair must prevent real splits");
+}

@@ -1,0 +1,199 @@
+//! Randomized invariant tests (seeded, ~100 cases each): the structural
+//! properties every proof in the paper leans on must survive arbitrary
+//! churn-mutation sequences.
+//!
+//! * `GroupWeights::metropolis` stays symmetric, non-negative and doubly
+//!   stochastic for random waiting sets on randomly churn-mutated graphs
+//!   (Assumption 1 — the convergence proof needs it of every `P(k)`);
+//! * Pathsearch's visited-edge set keeps `P ⊆ E` across mutations +
+//!   pruning (epoch completion would otherwise count dead edges);
+//! * `PartitionMonitor`'s incremental component labels match a
+//!   from-scratch BFS after arbitrary mutation sequences.
+
+use dsgd_aau::adapt::{component_labels, PartitionMonitor};
+use dsgd_aau::churn::{
+    apply_mutations, apply_mutations_unrepaired, TopologyMutation,
+};
+use dsgd_aau::consensus::GroupWeights;
+use dsgd_aau::pathsearch::PathSearch;
+use dsgd_aau::topology::generators::random_connected;
+use dsgd_aau::topology::Graph;
+use dsgd_aau::util::Rng64;
+
+const CASES: u64 = 100;
+
+/// One random mutation batch over an `n`-vertex graph.
+fn random_batch(rng: &mut Rng64, n: usize) -> Vec<TopologyMutation> {
+    let mut muts = Vec::new();
+    for _ in 0..1 + rng.gen_range(4) {
+        let a = rng.gen_range(n);
+        let b = rng.gen_range(n);
+        match rng.gen_range(4) {
+            0 => muts.push(TopologyMutation::AddEdge(a, b)),
+            1 => muts.push(TopologyMutation::RemoveEdge(a, b)),
+            2 => muts.push(TopologyMutation::Isolate(a)),
+            _ => muts.push(TopologyMutation::Attach(a, vec![b, rng.gen_range(n)])),
+        }
+    }
+    muts
+}
+
+/// Random non-empty subset of `0..n` (the waiting set of some iteration).
+fn random_subset(rng: &mut Rng64, n: usize) -> Vec<usize> {
+    let k = 1 + rng.gen_range(n);
+    let pool: Vec<usize> = (0..n).collect();
+    rng.sample(&pool, k)
+}
+
+#[test]
+fn metropolis_stays_doubly_stochastic_on_churned_graphs() {
+    let n = 12;
+    for seed in 0..CASES {
+        let mut g = random_connected(n, 0.25, seed);
+        let mut rng = Rng64::seed_from_u64(seed ^ 0xD0B1);
+        for step in 0..6 {
+            let muts = random_batch(&mut rng, n);
+            // alternate repaired and unrepaired application so both the
+            // connected and genuinely partitioned regimes are covered
+            if step % 2 == 0 {
+                apply_mutations(&mut g, &muts);
+            } else {
+                apply_mutations_unrepaired(&mut g, &muts);
+            }
+            let members = random_subset(&mut rng, n);
+            let gw = GroupWeights::metropolis(&g, &members);
+            assert!(
+                gw.stochasticity_error() < 1e-4,
+                "seed {seed} step {step}: row/col sums off by {}",
+                gw.stochasticity_error()
+            );
+            assert!(gw.is_non_negative(), "seed {seed} step {step}: negative weight");
+            let m = gw.len();
+            for a in 0..m {
+                for b in 0..m {
+                    assert!(
+                        (gw.weights[a][b] - gw.weights[b][a]).abs() < 1e-7,
+                        "seed {seed} step {step}: asymmetric at ({a},{b})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pathsearch_edges_stay_subset_of_live_graph() {
+    let n = 12;
+    for seed in 0..CASES {
+        let mut g = random_connected(n, 0.3, seed);
+        let mut ps = PathSearch::new();
+        let mut rng = Rng64::seed_from_u64(seed ^ 0xBEEF);
+        for step in 0..8 {
+            ps.absorb_group(&g, &random_subset(&mut rng, n));
+            let muts = random_batch(&mut rng, n);
+            apply_mutations_unrepaired(&mut g, &muts);
+            // the engine prunes after every mutation batch; mirror it
+            ps.prune_missing(&g);
+            for (i, j) in ps.edges() {
+                assert!(
+                    g.has_edge(i, j),
+                    "seed {seed} step {step}: P not ⊆ E (({i},{j}) is dead)"
+                );
+            }
+            // epoch completion must agree with the subset invariant: a
+            // complete component is spanned by *live* edges only
+            let comp_of_0: Vec<usize> = {
+                let labels = component_labels(&g);
+                (0..n).filter(|&v| labels[v] == labels[0]).collect()
+            };
+            if ps.is_complete_within(&g, &comp_of_0) {
+                assert!(comp_of_0.iter().all(|&v| ps.contains_vertex(v)));
+            }
+        }
+    }
+}
+
+#[test]
+fn monitor_labels_match_scratch_bfs_after_arbitrary_mutations() {
+    let n = 14;
+    for seed in 0..CASES {
+        let mut g = random_connected(n, 0.2, seed);
+        let mut mon = PartitionMonitor::new(&g, 0.0);
+        let mut rng = Rng64::seed_from_u64(seed ^ 0xCAFE);
+        for step in 0..10 {
+            let muts = random_batch(&mut rng, n);
+            // cover both application modes: repair only defers removals,
+            // the monitor must track whatever the graph actually did
+            if rng.gen_bool(0.5) {
+                apply_mutations(&mut g, &muts);
+            } else {
+                apply_mutations_unrepaired(&mut g, &muts);
+            }
+            mon.apply_mutations(&g, &muts);
+            let scratch = component_labels(&g);
+            assert_eq!(
+                mon.labels(),
+                scratch.as_slice(),
+                "seed {seed} step {step}: incremental labels diverged from BFS"
+            );
+            let distinct =
+                scratch.iter().enumerate().filter(|&(v, &l)| v == l).count();
+            assert_eq!(mon.num_components(), distinct, "seed {seed} step {step}");
+            // observed view promotes to exactly the truth
+            mon.promote_now();
+            assert_eq!(mon.observed_labels(), mon.labels());
+            let w = rng.gen_range(n);
+            let members = mon.component_members(w);
+            assert!(members.contains(&w), "seed {seed}: w in its own component");
+            for &m in &members {
+                assert!(mon.same_component_observed(w, m));
+            }
+        }
+    }
+}
+
+#[test]
+fn graph_edge_set_and_adjacency_stay_consistent_under_mutation() {
+    // riding along: the Graph's two representations (edge set + adjacency
+    // lists) must agree after arbitrary mutation sequences — everything
+    // above silently depends on it.
+    let n = 10;
+    for seed in 0..CASES {
+        let mut g = random_connected(n, 0.3, seed);
+        let mut rng = Rng64::seed_from_u64(seed ^ 0xFADE);
+        for _ in 0..6 {
+            apply_mutations_unrepaired(&mut g, &random_batch(&mut rng, n));
+            let mut from_adj: Vec<(usize, usize)> = Vec::new();
+            for v in 0..n {
+                for &u in g.neighbors(v) {
+                    if v < u {
+                        from_adj.push((v, u));
+                    }
+                }
+            }
+            from_adj.sort_unstable();
+            let mut from_set: Vec<(usize, usize)> = g.edges().collect();
+            from_set.sort_unstable();
+            assert_eq!(from_adj, from_set, "seed {seed}: adjacency vs edge set");
+        }
+    }
+}
+
+#[test]
+fn monitor_edge_cases() {
+    // empty mutation batches and out-of-range ids must be no-ops
+    let g = random_connected(8, 0.3, 1);
+    let mut mon = PartitionMonitor::new(&g, 0.0);
+    let before = mon.labels().to_vec();
+    assert!(!mon.apply_mutations(&g, &[]).changed());
+    assert!(!mon
+        .apply_mutations(&g, &[TopologyMutation::AddEdge(100, 200)])
+        .changed());
+    assert_eq!(mon.labels(), before.as_slice());
+
+    // fully disconnected graph: every vertex its own component
+    let empty = Graph::empty(5);
+    let mon = PartitionMonitor::new(&empty, 0.0);
+    assert_eq!(mon.num_components(), 5);
+    assert_eq!(mon.component_members(3), vec![3]);
+}
