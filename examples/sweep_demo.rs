@@ -1,0 +1,55 @@
+//! Declare-your-own sweep: the `sweep` API that powers every `bench`
+//! suite, used directly for a custom grid — topology density x
+//! algorithm on the quadratic workload, with the standard sinks
+//! (aligned table, CSV, machine-readable `BENCH_demo.json`).
+//!
+//! ```text
+//! cargo run --release --example sweep_demo
+//! ```
+//!
+//! Re-running with `args.resume = true` (or `--resume` on any `bench`
+//! suite) skips every cell already recorded in the JSON and rewrites
+//! byte-identical artifacts.
+
+use dsgd_aau::algorithms::AlgorithmKind;
+use dsgd_aau::config::ExperimentConfig;
+use dsgd_aau::sweep::cli::BenchArgs;
+use dsgd_aau::sweep::{run_suite, Axis, AxisValue, Column, Fmt, SweepSpec, TableSpec};
+use dsgd_aau::topology::TopologyKind;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = BenchArgs::default();
+    args.out_dir = std::path::PathBuf::from("results/sweep_demo");
+
+    let spec = SweepSpec::new("demo", "Custom sweep — consensus by topology density", |cfg| {
+        cfg.num_workers = 8;
+        cfg.max_iterations = 300;
+        cfg.eval_every = 50;
+        cfg.mean_compute = 0.01;
+    })
+    .axis(Axis::from_numbers("p", &[0.3], &[0.3, 0.6], &[0.3, 0.6, 0.9], |cfg, p| {
+        cfg.topology = TopologyKind::Random { p, seed: 11 }
+    }))
+    .axis(Axis::list(
+        "algorithm",
+        AlgorithmKind::all()
+            .iter()
+            .map(|&a| {
+                AxisValue::new(a.label(), move |cfg: &mut ExperimentConfig| cfg.algorithm = a)
+            })
+            .collect(),
+    ))
+    .table(TableSpec::long(
+        "",
+        vec![
+            Column::new("iters", "iterations", Fmt::Int),
+            Column::new("loss", "final_loss", Fmt::F4),
+            Column::new("gap", "consensus_gap", Fmt::Sci2),
+        ],
+    ));
+
+    let run = run_suite(&spec, &args)?;
+    println!("\nran {} cell(s), {} resumed; summary at {}", run.ran, run.skipped,
+        run.json_path.display());
+    Ok(())
+}

@@ -36,14 +36,24 @@ impl MlpShape {
         MlpShape { dims: vec![3072, 256, 256, 10], batch: 32 }
     }
 
-    /// Look up by variant name.
+    /// Look up by variant name.  An optional `@b<K>` suffix overrides
+    /// the mini-batch size (e.g. `mlp_small@b64` — how the ablation
+    /// suite sweeps batch without leaving the config surface).
     pub fn by_name(name: &str) -> Option<Self> {
-        match name {
-            "mlp_tiny" => Some(Self::tiny()),
-            "mlp_small" => Some(Self::small()),
-            "mlp2nn" => Some(Self::mlp2nn()),
-            _ => None,
+        let (base, batch) = match name.split_once("@b") {
+            Some((base, b)) => (base, Some(b.parse::<usize>().ok().filter(|&b| b > 0)?)),
+            None => (name, None),
+        };
+        let mut shape = match base {
+            "mlp_tiny" => Self::tiny(),
+            "mlp_small" => Self::small(),
+            "mlp2nn" => Self::mlp2nn(),
+            _ => return None,
+        };
+        if let Some(b) = batch {
+            shape.batch = b;
         }
+        Some(shape)
     }
 
     /// Flat parameter count.
@@ -313,6 +323,17 @@ mod tests {
         let s = MlpShape::mlp2nn();
         assert_eq!(s.dim(), 855_050);
         assert_eq!(s.padded_dim(), 855_296);
+    }
+
+    #[test]
+    fn by_name_batch_suffix() {
+        let s = MlpShape::by_name("mlp_small@b64").unwrap();
+        assert_eq!(s.dims, MlpShape::small().dims);
+        assert_eq!(s.batch, 64);
+        assert_eq!(MlpShape::by_name("mlp_small").unwrap().batch, MlpShape::small().batch);
+        assert!(MlpShape::by_name("mlp_small@b0").is_none());
+        assert!(MlpShape::by_name("mlp_small@bx").is_none());
+        assert!(MlpShape::by_name("nope@b32").is_none());
     }
 
     #[test]

@@ -1,0 +1,14 @@
+//! The `bench` multiplexer: every paper table/figure suite (plus the
+//! churn/straggler/partition grids) behind one binary, driven by
+//! declarative `SweepSpec`s.
+//!
+//! ```text
+//! bench list                 # suites and their paper mapping
+//! bench accuracy --full      # one suite at paper scale
+//! bench all --quick          # every suite's CI smoke grid
+//! bench partition --resume   # re-run only the missing cells
+//! ```
+
+fn main() -> anyhow::Result<()> {
+    dsgd_aau::sweep::cli::bench_main()
+}

@@ -1,178 +1,16 @@
-//! Figures 9–12 harness: ablations over batch size, straggler probability
-//! and straggler slowdown — final accuracy (Figs. 9/11) and accuracy under
-//! a fixed time budget (Figs. 10/12), IID via `--iid=1`.
-//!
-//! Paper shape: all algorithms degrade as straggler probability/slowdown
-//! grow, DSGD-AAU stays on top throughout; batch size has a sweet spot.
+//! Deprecated shim for `bench ablation` (Figures 9-12) and, with the
+//! historical `--fixedk=1` flag, `bench fixedk` — kept for one release;
+//! same flags; canonical artifact names.
 
-use anyhow::Result;
-use dsgd_aau::algorithms::AlgorithmKind;
-use dsgd_aau::backend::{MlpShape, NativeMlpBackend};
-use dsgd_aau::config::{BackendKind, ExperimentConfig};
-use dsgd_aau::coordinator::run_sweep;
-use dsgd_aau::engine::Engine;
-use dsgd_aau::harness::{pct, BenchArgs, Table};
+use dsgd_aau::sweep::cli::{run_named, BenchArgs};
 
-fn base_cfg(args: &BenchArgs, alg: AlgorithmKind, iid: bool, budget: Option<f64>) -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::default();
-    cfg.num_workers = if args.full { 128 } else { 32 };
-    cfg.algorithm = alg;
-    cfg.backend = BackendKind::NativeMlp;
-    cfg.model = "mlp_small".into();
-    cfg.iid = iid;
-    cfg.max_iterations = if budget.is_some() { u64::MAX / 2 } else if args.full { 3000 } else { 800 };
-    cfg.time_budget = budget;
-    cfg.eval_every = 25;
-    cfg.seed = 5000;
-    cfg
-}
-
-fn sweep_axis(
-    args: &BenchArgs,
-    iid: bool,
-    budget: Option<f64>,
-    axis: &str,
-    values: &[f64],
-    mutate: impl Fn(&mut ExperimentConfig, f64),
-) -> Result<Table> {
-    let mut table = Table::new(&{
-        let mut h = vec![axis];
-        h.extend(AlgorithmKind::paper_table().iter().map(|a| a.label()));
-        h
-    });
-    for &v in values {
-        let cfgs: Vec<ExperimentConfig> = AlgorithmKind::paper_table()
-            .into_iter()
-            .map(|alg| {
-                let mut cfg = base_cfg(args, alg, iid, budget);
-                cfg.name = format!("abl_{axis}_{v}_{}", alg.token());
-                mutate(&mut cfg, v);
-                args.apply(&mut cfg).unwrap();
-                cfg
-            })
-            .collect();
-        let mut row = vec![format!("{v}")];
-        for (_, res) in run_sweep(cfgs) {
-            let s = res.expect("run failed");
-            let acc =
-                if budget.is_some() { s.final_accuracy() } else { s.recorder.best_accuracy() };
-            row.push(pct(acc as f64));
-        }
-        table.row(row);
-        println!("[bench_ablation] {axis}={v} done");
-    }
-    Ok(table)
-}
-
-/// Batch-size ablation runs the native backend directly with a modified
-/// `MlpShape` (batch is baked into the shape).
-fn batch_ablation(args: &BenchArgs, iid: bool, budget: Option<f64>) -> Result<Table> {
-    let batches = if args.full { vec![32, 64, 128, 256] } else { vec![16, 32, 64] };
-    let mut table = Table::new(&{
-        let mut h = vec!["batch"];
-        h.extend(AlgorithmKind::paper_table().iter().map(|a| a.label()));
-        h
-    });
-    for &b in &batches {
-        let mut row = vec![b.to_string()];
-        for alg in AlgorithmKind::paper_table() {
-            let cfg = base_cfg(args, alg, iid, budget);
-            let mut shape = MlpShape::small();
-            shape.batch = b;
-            let backend = NativeMlpBackend::new(
-                shape,
-                cfg.num_workers,
-                cfg.dataset_samples,
-                cfg.separation,
-                cfg.iid,
-                cfg.classes_per_worker,
-                cfg.seed_for("data"),
-            );
-            let mut engine = Engine::from_config(&cfg, Box::new(backend));
-            let s = engine.run();
-            let acc =
-                if budget.is_some() { s.final_accuracy() } else { s.recorder.best_accuracy() };
-            row.push(pct(acc as f64));
-        }
-        table.row(row);
-        println!("[bench_ablation] batch={b} done");
-    }
-    Ok(table)
-}
-
-/// Design-choice ablation (DESIGN.md §5): DSGD-AAU's *adaptive* group
-/// sizing vs the manually-tuned fixed-fastest-k prior art, under a fixed
-/// virtual-time budget with stragglers.
-fn fixed_k_ablation(args: &BenchArgs) -> Result<Table> {
-    let n = if args.full { 64 } else { 32 };
-    let ks = if args.full { vec![2, 4, 8, 16, 32] } else { vec![2, 4, 8, 16] };
-    let mut algos: Vec<(String, AlgorithmKind)> = ks
-        .iter()
-        .map(|&k| (format!("Fixed-k={k}"), AlgorithmKind::FixedK { k }))
-        .collect();
-    algos.push(("DSGD-AAU (adaptive)".into(), AlgorithmKind::DsgdAau));
-    let mut table = Table::new(&["rule", "acc@budget", "iters", "mean_group"]);
-    for (label, alg) in algos {
-        let mut cfg = base_cfg(args, alg, false, Some(25.0));
-        cfg.num_workers = n;
-        cfg.name = format!("abl_fixedk_{}", label);
-        args.apply(&mut cfg)?;
-        let backend = dsgd_aau::coordinator::build_backend(&cfg)?;
-        let mut engine = Engine::from_config(&cfg, backend);
-        let s = engine.run();
-        table.row(vec![
-            label,
-            pct(s.final_accuracy() as f64),
-            s.iterations.to_string(),
-            format!("{:.1}", s.recorder.mean_group_size()),
-        ]);
-    }
-    Ok(table)
-}
-
-fn main() -> Result<()> {
+fn main() -> anyhow::Result<()> {
     let args = BenchArgs::parse()?;
-    if args.extra.get("fixedk").map(|v| v == "1").unwrap_or(false) {
-        let t = fixed_k_ablation(&args)?;
-        println!("\nAdaptivity ablation — fixed-k vs DSGD-AAU (25s budget, 10% stragglers):\n");
-        print!("{}", t.render());
-        t.write_csv(&args.out_dir, "ablation_fixed_k")?;
-        return Ok(());
-    }
-    let iid = args.extra.get("iid").map(|v| v == "1").unwrap_or(false);
-    let budget =
-        if args.extra.get("budget").map(|v| v == "1").unwrap_or(false) { Some(25.0) } else { None };
-    let figure = match (iid, budget.is_some()) {
-        (false, false) => "Figure 9",
-        (false, true) => "Figure 10",
-        (true, false) => "Figure 11",
-        (true, true) => "Figure 12",
+    let suite = if args.extra.get("fixedk").map(|v| v == "1").unwrap_or(false) {
+        "fixedk"
+    } else {
+        "ablation"
     };
-    let tag_base = figure.to_lowercase().replace(' ', "");
-
-    // (b) straggler probability sweep — paper: 5% -> 40%
-    let probs = if args.full { vec![0.05, 0.10, 0.20, 0.40] } else { vec![0.05, 0.20, 0.40] };
-    let t_prob = sweep_axis(&args, iid, budget, "straggler_prob", &probs, |cfg, v| {
-        cfg.straggler.probability = v;
-    })?;
-    println!("\n{figure}(b) analogue — accuracy vs straggler probability:\n");
-    print!("{}", t_prob.render());
-    t_prob.write_csv(&args.out_dir, &format!("{tag_base}_straggler_prob"))?;
-
-    // (c) slowdown sweep — paper: 5x -> 40x
-    let slows = if args.full { vec![5.0, 10.0, 20.0, 40.0] } else { vec![5.0, 20.0, 40.0] };
-    let t_slow = sweep_axis(&args, iid, budget, "slowdown", &slows, |cfg, v| {
-        cfg.straggler.slowdown = v;
-    })?;
-    println!("\n{figure}(c) analogue — accuracy vs straggler slowdown:\n");
-    print!("{}", t_slow.render());
-    t_slow.write_csv(&args.out_dir, &format!("{tag_base}_slowdown"))?;
-
-    // (a) batch-size sweep
-    let t_batch = batch_ablation(&args, iid, budget)?;
-    println!("\n{figure}(a) analogue — accuracy vs batch size:\n");
-    print!("{}", t_batch.render());
-    t_batch.write_csv(&args.out_dir, &format!("{tag_base}_batch"))?;
-
-    Ok(())
+    eprintln!("[bench_ablation] deprecated shim — use `bench {suite}` (same flags)");
+    run_named(suite, &args).map(|_| ())
 }

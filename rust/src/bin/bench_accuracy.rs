@@ -1,77 +1,6 @@
-//! Table 1 / Table 8 / Table 10 harness: final test accuracy of every
-//! algorithm across model variants at a fixed worker count.
-//!
-//! Paper shape to reproduce: DSGD-AAU's final accuracy beats AGP, AD-PSGD
-//! and Prague on every model, on both non-IID (Tables 1/8) and IID
-//! (Table 10) data; AD-PSGD trails the field under stragglers.
-//!
-//! ```text
-//! cargo run --release --bin bench_accuracy            # CI scale (N=32)
-//! cargo run --release --bin bench_accuracy -- --full  # paper scale (N=128)
-//! cargo run --release --bin bench_accuracy -- --iid=1
-//! ```
+//! Deprecated shim for `bench accuracy` (Tables 1/8/10) — kept for one release; same
+//! flags, same outputs.
 
-use anyhow::Result;
-use dsgd_aau::algorithms::AlgorithmKind;
-use dsgd_aau::config::{BackendKind, ExperimentConfig};
-use dsgd_aau::coordinator::{mean_std, run_sweep};
-use dsgd_aau::harness::{pm, BenchArgs, Table};
-
-fn main() -> Result<()> {
-    let args = BenchArgs::parse()?;
-    let iid = args.extra.get("iid").map(|v| v == "1").unwrap_or(false);
-    let n = if args.full { 128 } else { 32 };
-    // Equal virtual-time budget per cell (the paper trains every algorithm
-    // on the same wall-clock testbed); iteration budgets would be unfair
-    // across iteration semantics.
-    let budget = if args.full { 300.0 } else { 120.0 };
-    // Model ladder standing in for the paper's 2-NN/AlexNet/VGG/ResNet
-    // (DESIGN.md §3): same 4-algorithm comparison per row.
-    let models = ["mlp_tiny", "mlp_small", "mlp2nn"];
-    let models: &[&str] = if args.full { &models } else { &models[..2] };
-
-    let mut table = Table::new(&{
-        let mut h = vec!["model"];
-        h.extend(AlgorithmKind::paper_table().iter().map(|a| a.label()));
-        h
-    });
-
-    for model in models {
-        let mut cells = vec![model.to_string()];
-        for alg in AlgorithmKind::paper_table() {
-            let cfgs: Vec<ExperimentConfig> = (0..args.seeds)
-                .map(|s| {
-                    let mut cfg = ExperimentConfig::default();
-                    cfg.name = format!("t1_{model}_{}_{s}", alg.token());
-                    cfg.num_workers = n;
-                    cfg.algorithm = alg;
-                    cfg.backend = BackendKind::NativeMlp;
-                    cfg.model = model.to_string();
-                    cfg.iid = iid;
-                    cfg.max_iterations = u64::MAX / 2;
-                    cfg.time_budget = Some(budget);
-                    cfg.eval_every = 50;
-                    cfg.dataset_samples = if args.full { 16384 } else { 4096 };
-                    cfg.seed = 1000 + s;
-                    args.apply(&mut cfg).unwrap();
-                    cfg
-                })
-                .collect();
-            let accs: Vec<f64> = run_sweep(cfgs)
-                .into_iter()
-                .map(|(_, r)| 100.0 * r.expect("run failed").recorder.best_accuracy() as f64)
-                .collect();
-            let (m, s) = mean_std(&accs);
-            cells.push(pm(m, s));
-        }
-        table.row(cells);
-        println!("[bench_accuracy] finished {model}");
-    }
-
-    let tag = if iid { "table10_accuracy_iid" } else { "table1_accuracy_noniid" };
-    println!("\nTable 1/8 analogue — final accuracy, N={n}, {} data:\n", if iid { "IID" } else { "non-IID" });
-    print!("{}", table.render());
-    let path = table.write_csv(&args.out_dir, tag)?;
-    println!("\nwrote {}", path.display());
-    Ok(())
+fn main() -> anyhow::Result<()> {
+    dsgd_aau::sweep::cli::shim_main("accuracy")
 }

@@ -1,109 +1,6 @@
-//! Churn sweep: how DSGD-AAU and the four baselines cope with
-//! time-varying communication graphs.
-//!
-//! Sweeps churn scenario × rate × algorithm on the quadratic workload and
-//! reports iterations, final loss and the churn accounting (change
-//! events, applied mutations, repair-deferred removals).  Scenarios:
-//!
-//! * `static`            — the paper's fixed graph (baseline)
-//! * `flaky(r)`          — random link failures at r events/s
-//! * `mobile`            — a cohort of workers re-wiring on an interval
-//! * `partition/heal`    — periodic bisection cuts with later healing
-//!
-//! Run: `cargo run --release --bin bench_churn` (add `--full` for the
-//! paper-scale fleet).
+//! Deprecated shim for `bench churn` (dynamic-topology sweep) — kept for one release; same
+//! flags, same outputs.
 
-use anyhow::Result;
-use dsgd_aau::algorithms::AlgorithmKind;
-use dsgd_aau::churn::{ChurnConfig, ChurnKind};
-use dsgd_aau::config::{BackendKind, ExperimentConfig};
-use dsgd_aau::coordinator::run_sweep;
-use dsgd_aau::harness::{BenchArgs, Table};
-use dsgd_aau::topology::TopologyKind;
-
-fn scenarios(full: bool) -> Vec<(String, ChurnConfig)> {
-    let mut out = vec![("static".to_string(), ChurnConfig::default())];
-    let rates: &[f64] = if full { &[0.5, 2.0, 8.0] } else { &[0.5, 2.0] };
-    for &rate in rates {
-        out.push((
-            format!("flaky(r={rate})"),
-            ChurnConfig {
-                kind: ChurnKind::FlakyLinks { rate, mean_downtime: 1.0 },
-                seed: None,
-            },
-        ));
-    }
-    out.push((
-        "mobile".to_string(),
-        ChurnConfig {
-            kind: ChurnKind::Mobile { movers: 3, interval: 0.5, degree: 3 },
-            seed: None,
-        },
-    ));
-    out.push((
-        "partition/heal".to_string(),
-        ChurnConfig {
-            kind: ChurnKind::PartitionHeal { period: 4.0, downtime: 1.5 },
-            seed: None,
-        },
-    ));
-    out
-}
-
-fn main() -> Result<()> {
-    let args = BenchArgs::parse()?;
-    let n = if args.full { 32 } else { 12 };
-    let iters = if args.full { 3000 } else { 800 };
-
-    let mut table = Table::new(&[
-        "scenario", "algorithm", "iters", "vtime(s)", "loss", "gap", "changes", "applied",
-        "deferred",
-    ]);
-
-    for (label, churn) in scenarios(args.full) {
-        let cfgs: Vec<ExperimentConfig> = AlgorithmKind::all()
-            .into_iter()
-            .map(|alg| {
-                let mut cfg = ExperimentConfig::default();
-                cfg.name = format!("churn_{label}_{}", alg.token());
-                cfg.num_workers = n;
-                cfg.algorithm = alg;
-                cfg.backend = BackendKind::Quadratic;
-                cfg.topology = TopologyKind::Random { p: 0.3, seed: 11 };
-                cfg.churn = churn.clone();
-                cfg.max_iterations = iters;
-                cfg.eval_every = iters / 10;
-                cfg.mean_compute = 0.01;
-                cfg.seed = 7000;
-                args.apply(&mut cfg).unwrap();
-                cfg
-            })
-            .collect();
-        for (cfg, res) in run_sweep(cfgs) {
-            let s = res?;
-            table.row(vec![
-                label.clone(),
-                cfg.algorithm.label().to_string(),
-                s.iterations.to_string(),
-                format!("{:.2}", s.virtual_time),
-                format!("{:.4}", s.final_loss()),
-                format!("{:.2e}", s.consensus_gap),
-                s.recorder.topology_changes.to_string(),
-                s.recorder.mutations_applied.to_string(),
-                s.recorder.mutations_deferred.to_string(),
-            ]);
-        }
-        println!("[bench_churn] finished scenario {label}");
-    }
-
-    println!("\nChurn sweep — {n} workers, quadratic workload, {iters} iterations:\n");
-    print!("{}", table.render());
-    println!(
-        "\nReading: the static rows reproduce the fixed-graph setting; under \
-         churn every algorithm keeps converging because connectivity repair \
-         preserves the paper's assumption, while `deferred` counts how often \
-         a removal had to be held back to do so."
-    );
-    table.write_csv(&args.out_dir, "churn_sweep")?;
-    Ok(())
+fn main() -> anyhow::Result<()> {
+    dsgd_aau::sweep::cli::shim_main("churn")
 }

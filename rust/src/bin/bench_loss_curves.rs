@@ -1,72 +1,6 @@
-//! Figure 3 + Figure 4 harness: training-loss curves vs iteration and vs
-//! virtual wall-clock for all five algorithms on one workload.
-//!
-//! Paper shape: per *iteration* (Fig. 3) DSGD-AAU tracks or beats Prague
-//! and clearly beats AD-PSGD/AGP; per *wall-clock* (Fig. 4) the gap
-//! widens because DSGD-AAU's iterations don't wait for stragglers.
-//!
-//! Writes `results/fig3_fig4_<algo>.csv` (iteration,time,loss,accuracy)
-//! and prints loss checkpoints.
+//! Deprecated shim for `bench loss_curves` (Figures 3-4) — kept for one release; same
+//! flags, same outputs.
 
-use anyhow::Result;
-use dsgd_aau::algorithms::AlgorithmKind;
-use dsgd_aau::config::{BackendKind, ExperimentConfig};
-use dsgd_aau::coordinator::run_sweep;
-use dsgd_aau::harness::{BenchArgs, Table};
-
-fn main() -> Result<()> {
-    let args = BenchArgs::parse()?;
-    let n = if args.full { 128 } else { 32 };
-    let iterations = if args.full { 6000 } else { 1500 };
-
-    let cfgs: Vec<ExperimentConfig> = AlgorithmKind::all()
-        .into_iter()
-        .map(|alg| {
-            let mut cfg = ExperimentConfig::default();
-            cfg.name = format!("f34_{}", alg.token());
-            cfg.num_workers = n;
-            cfg.algorithm = alg;
-            cfg.backend = BackendKind::NativeMlp;
-            cfg.model = "mlp_small".into();
-            cfg.max_iterations = iterations;
-            cfg.eval_every = (iterations / 60).max(1);
-            cfg.seed = 3000;
-            args.apply(&mut cfg).unwrap();
-            cfg
-        })
-        .collect();
-
-    let mut table = Table::new(&[
-        "algorithm",
-        "loss@25%",
-        "loss@50%",
-        "loss@100%",
-        "vtime(s)",
-        "iters/s(virt)",
-    ]);
-    std::fs::create_dir_all(&args.out_dir)?;
-    for (cfg, res) in run_sweep(cfgs) {
-        let s = res.expect("run failed");
-        let curve = &s.recorder.curve;
-        let at = |frac: f64| -> f32 {
-            let idx = ((curve.len() - 1) as f64 * frac) as usize;
-            curve[idx].loss
-        };
-        table.row(vec![
-            cfg.algorithm.label().to_string(),
-            format!("{:.4}", at(0.25)),
-            format!("{:.4}", at(0.5)),
-            format!("{:.4}", at(1.0)),
-            format!("{:.1}", s.virtual_time),
-            format!("{:.1}", s.iterations as f64 / s.virtual_time.max(1e-9)),
-        ]);
-        let path = args.out_dir.join(format!("fig3_fig4_{}.csv", cfg.algorithm.token()));
-        s.recorder.write_csv(&path)?;
-        println!("[bench_loss_curves] {} -> {}", cfg.algorithm.label(), path.display());
-    }
-
-    println!("\nFigure 3/4 analogue — loss checkpoints (N={n}, non-IID):\n");
-    print!("{}", table.render());
-    table.write_csv(&args.out_dir, "fig3_fig4_summary")?;
-    Ok(())
+fn main() -> anyhow::Result<()> {
+    dsgd_aau::sweep::cli::shim_main("loss_curves")
 }

@@ -1,188 +1,7 @@
-//! Partition sweep: what real partitions cost each update rule, and what
-//! partition-aware adaptivity buys back.
-//!
-//! Sweeps partition scenario × adapt mode × algorithm on the quadratic
-//! workload.  Modes:
-//!
-//! * `repair`  — PR 1 connectivity repair (the cut keeps one bridge)
-//! * `blind`   — real partitions, partition-blind rules (the PR 2
-//!               baseline: DSGD-AAU survives on stall fallbacks)
-//! * `aware`   — real partitions, component-retargeted rules
-//!
-//! Output: an aligned table + `partition_sweep.csv` (like the other
-//! benches) **plus machine-readable `BENCH_partition.json`** — summary
-//! rows CI uploads as an artifact so the perf trajectory is queryable.
-//!
-//! Run: `cargo run --release --bin bench_partition` (`--quick` for the
-//! CI smoke grid, `--full` for the paper-scale fleet).
+//! Deprecated shim for `bench partition` (repair/blind/aware sweep)
+//! — kept for one release; same flags; artifacts now use the
+//! canonical <suite>.csv + BENCH_<suite>.json names.
 
-use anyhow::Result;
-use dsgd_aau::adapt::AdaptConfig;
-use dsgd_aau::algorithms::AlgorithmKind;
-use dsgd_aau::churn::{ChurnConfig, ChurnKind};
-use dsgd_aau::config::{BackendKind, ExperimentConfig};
-use dsgd_aau::coordinator::run_sweep;
-use dsgd_aau::engine::RunSummary;
-use dsgd_aau::harness::{BenchArgs, Table};
-use dsgd_aau::topology::TopologyKind;
-use dsgd_aau::util::json::Json;
-use std::collections::BTreeMap;
-
-fn modes() -> Vec<(&'static str, AdaptConfig)> {
-    vec![
-        ("repair", AdaptConfig::default()),
-        (
-            "blind",
-            AdaptConfig { allow_partitions: true, ..AdaptConfig::default() },
-        ),
-        (
-            "aware",
-            AdaptConfig {
-                allow_partitions: true,
-                partition_aware: true,
-                detection_latency: 0.1,
-                heal_restart: true,
-            },
-        ),
-    ]
-}
-
-fn scenarios(quick: bool, full: bool) -> Vec<(String, ChurnConfig)> {
-    let mut out = Vec::new();
-    let grids: &[(f64, f64)] = if quick {
-        &[(3.0, 1.5)]
-    } else if full {
-        &[(8.0, 3.0), (4.0, 2.0), (2.0, 1.0)]
-    } else {
-        &[(4.0, 2.0), (2.0, 1.0)]
-    };
-    for &(period, downtime) in grids {
-        out.push((
-            format!("partition(p={period},d={downtime})"),
-            ChurnConfig {
-                kind: ChurnKind::PartitionHeal { period, downtime },
-                seed: Some(13),
-            },
-        ));
-    }
-    out
-}
-
-fn summary_row(
-    scenario: &str,
-    mode: &str,
-    cfg: &ExperimentConfig,
-    s: &RunSummary,
-) -> Json {
-    let mut m: BTreeMap<String, Json> = BTreeMap::new();
-    m.insert("scenario".into(), Json::from(scenario));
-    m.insert("mode".into(), Json::from(mode));
-    m.insert("algorithm".into(), Json::from(cfg.algorithm.label()));
-    m.insert("iterations".into(), Json::from(s.iterations as usize));
-    m.insert("virtual_time".into(), Json::Num(s.virtual_time));
-    m.insert("final_loss".into(), Json::Num(s.final_loss() as f64));
-    m.insert("consensus_gap".into(), Json::Num(s.consensus_gap as f64));
-    m.insert("total_bytes".into(), Json::from(s.recorder.total_bytes() as usize));
-    m.insert("stall_fallbacks".into(), Json::from(s.recorder.stall_fallbacks as usize));
-    m.insert("partition_splits".into(), Json::from(s.recorder.partition_splits as usize));
-    m.insert("partition_merges".into(), Json::from(s.recorder.partition_merges as usize));
-    m.insert("max_components".into(), Json::from(s.recorder.max_components));
-    m.insert("component_epochs".into(), Json::from(s.recorder.component_epochs as usize));
-    m.insert("epoch_restarts".into(), Json::from(s.recorder.epoch_restarts as usize));
-    m.insert(
-        "partitioned_gossips".into(),
-        Json::from(s.recorder.partitioned_gossips as usize),
-    );
-    m.insert(
-        "mutations_deferred".into(),
-        Json::from(s.recorder.mutations_deferred as usize),
-    );
-    Json::Obj(m)
-}
-
-fn main() -> Result<()> {
-    let args = BenchArgs::parse()?;
-    let n = if args.full { 32 } else { 12 };
-    let budget = if args.quick { 4.0 } else if args.full { 40.0 } else { 15.0 };
-
-    let mut table = Table::new(&[
-        "scenario", "mode", "algorithm", "iters", "loss", "stalls", "splits", "merges",
-        "comp_epochs", "restarts",
-    ]);
-    let mut rows: Vec<Json> = Vec::new();
-
-    for (label, churn) in scenarios(args.quick, args.full) {
-        for (mode, adapt) in modes() {
-            let cfgs: Vec<ExperimentConfig> = AlgorithmKind::all()
-                .into_iter()
-                .map(|alg| {
-                    let mut cfg = ExperimentConfig::default();
-                    cfg.name = format!("partition_{label}_{mode}_{}", alg.token());
-                    cfg.num_workers = n;
-                    cfg.algorithm = alg;
-                    cfg.backend = BackendKind::Quadratic;
-                    cfg.topology = TopologyKind::Random { p: 0.3, seed: 11 };
-                    cfg.churn = churn.clone();
-                    cfg.adapt = adapt.clone();
-                    cfg.max_iterations = u64::MAX / 2;
-                    cfg.time_budget = Some(budget);
-                    cfg.eval_every = 200;
-                    cfg.mean_compute = 0.01;
-                    cfg.seed = 8000;
-                    args.apply(&mut cfg).unwrap();
-                    cfg
-                })
-                .collect();
-            for (cfg, res) in run_sweep(cfgs) {
-                let s = res?;
-                table.row(vec![
-                    label.clone(),
-                    mode.to_string(),
-                    cfg.algorithm.label().to_string(),
-                    s.iterations.to_string(),
-                    format!("{:.4}", s.final_loss()),
-                    s.recorder.stall_fallbacks.to_string(),
-                    s.recorder.partition_splits.to_string(),
-                    s.recorder.partition_merges.to_string(),
-                    s.recorder.component_epochs.to_string(),
-                    s.recorder.epoch_restarts.to_string(),
-                ]);
-                rows.push(summary_row(&label, mode, &cfg, &s));
-            }
-            println!("[bench_partition] finished {label} / {mode}");
-        }
-    }
-
-    println!("\nPartition sweep — {n} workers, quadratic workload, {budget}s budget:\n");
-    print!("{}", table.render());
-    println!(
-        "\nReading: `repair` keeps the paper's connectivity assumption by \
-         deferring the last bridge; `blind` lets the cut happen and the \
-         partition-blind rules crawl (DSGD-AAU only via stall fallbacks); \
-         `aware` retargets every rule to the live component — stalls drop \
-         to zero and iterations recover."
-    );
-    table.write_csv(&args.out_dir, "partition_sweep")?;
-
-    // machine-readable summary for the CI artifact
-    let mut root: BTreeMap<String, Json> = BTreeMap::new();
-    root.insert("bench".into(), Json::from("partition"));
-    root.insert("workers".into(), Json::from(n));
-    root.insert("time_budget".into(), Json::Num(budget));
-    root.insert(
-        "grid".into(),
-        Json::from(if args.quick {
-            "quick"
-        } else if args.full {
-            "full"
-        } else {
-            "default"
-        }),
-    );
-    root.insert("rows".into(), Json::Arr(rows));
-    std::fs::create_dir_all(&args.out_dir)?;
-    let json_path = args.out_dir.join("BENCH_partition.json");
-    std::fs::write(&json_path, Json::Obj(root).to_string_compact())?;
-    println!("wrote {}", json_path.display());
-    Ok(())
+fn main() -> anyhow::Result<()> {
+    dsgd_aau::sweep::cli::shim_main("partition")
 }

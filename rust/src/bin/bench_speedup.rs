@@ -1,92 +1,8 @@
-//! Figure 5(a)+(b) harness: speedup over synchronous DSGD and total
-//! communication, vs the number of workers.
-//!
-//! Speedup is the paper's metric: time for synchronous full-participation
-//! DSGD to reach a target accuracy divided by each algorithm's time to the
-//! same accuracy (larger is better; DSGD itself = 1.0).
-//!
-//! Paper shape: DSGD-AAU has the best speedup at every N and its advantage
-//! grows with N, at no extra communication versus the baselines (Fig 5b).
+//! Deprecated shim for `bench speedup` (Figure 5) — kept for one
+//! release; same flags, canonical artifact names.  The sweep executor renders a
+//! failed cell as `err`/`n/a` and keeps going (the old binary aborted
+//! the whole table on one failed run).
 
-use anyhow::Result;
-use dsgd_aau::algorithms::AlgorithmKind;
-use dsgd_aau::config::{BackendKind, ExperimentConfig};
-use dsgd_aau::coordinator::run_sweep;
-use dsgd_aau::harness::{BenchArgs, Table};
-
-fn main() -> Result<()> {
-    let args = BenchArgs::parse()?;
-    let worker_counts: Vec<usize> =
-        if args.full { vec![32, 64, 128, 256] } else { vec![8, 16, 32] };
-    let target_acc: f32 =
-        args.extra.get("target").and_then(|v| v.parse().ok()).unwrap_or(0.45);
-
-    let mut speedup_table = Table::new(&{
-        let mut h = vec!["N"];
-        h.extend(AlgorithmKind::all().iter().map(|a| a.label()));
-        h
-    });
-    let mut comm_table = speedup_table_clone_headers(&speedup_table);
-
-    for &n in &worker_counts {
-        let cfgs: Vec<ExperimentConfig> = AlgorithmKind::all()
-            .into_iter()
-            .map(|alg| {
-                let mut cfg = ExperimentConfig::default();
-                cfg.name = format!("f5_n{n}_{}", alg.token());
-                cfg.num_workers = n;
-                cfg.algorithm = alg;
-                cfg.backend = BackendKind::NativeMlp;
-                cfg.model = "mlp_small".into();
-                cfg.max_iterations = u64::MAX / 2;
-                cfg.time_budget = Some(if args.full { 400.0 } else { 200.0 });
-                cfg.eval_every = 20;
-                cfg.seed = 4000;
-                args.apply(&mut cfg).unwrap();
-                cfg
-            })
-            .collect();
-        let results = run_sweep(cfgs);
-        let t_sync = results
-            .iter()
-            .find(|(cfg, _)| cfg.algorithm == AlgorithmKind::DsgdSync)
-            .and_then(|(_, r)| r.as_ref().ok())
-            .and_then(|s| s.recorder.time_to_accuracy(target_acc));
-        let mut srow = vec![n.to_string()];
-        let mut crow = vec![n.to_string()];
-        for (cfg, res) in &results {
-            let s = res.as_ref().expect("run failed");
-            let t = s.recorder.time_to_accuracy(target_acc);
-            let speedup = match (t_sync, t) {
-                (Some(ts), Some(ta)) if ta > 0.0 => format!("{:.2}x", ts / ta),
-                _ => "n/a".into(),
-            };
-            srow.push(speedup);
-            // Fig 5b framing: communication *to reach the target accuracy*
-            // (falls back to total traffic when the target was never hit).
-            let bytes = s
-                .recorder
-                .bytes_to_accuracy(target_acc)
-                .unwrap_or(s.recorder.total_bytes());
-            crow.push(format!("{:.1}", bytes as f64 / 1e6));
-            let _ = cfg;
-        }
-        speedup_table.row(srow);
-        comm_table.row(crow);
-        println!("[bench_speedup] finished N={n}");
-    }
-
-    println!("\nFigure 5(a) analogue — speedup to {target_acc:.0}% acc (rel. sync DSGD):\n",
-             target_acc = 100.0 * target_acc);
-    print!("{}", speedup_table.render());
-    println!("\nFigure 5(b) analogue — communication (MB) within the budget:\n");
-    print!("{}", comm_table.render());
-    speedup_table.write_csv(&args.out_dir, "fig5a_speedup")?;
-    comm_table.write_csv(&args.out_dir, "fig5b_communication")?;
-    Ok(())
-}
-
-fn speedup_table_clone_headers(t: &Table) -> Table {
-    let headers: Vec<&str> = t.headers.iter().map(|s| s.as_str()).collect();
-    Table::new(&headers)
+fn main() -> anyhow::Result<()> {
+    dsgd_aau::sweep::cli::shim_main("speedup")
 }

@@ -1,147 +1,7 @@
-//! Straggler-process × churn × algorithm sweep (the ROADMAP's joint
-//! churn-rate × straggler-rate grid).
-//!
-//! Sweeps the four straggler processes (i.i.d. Bernoulli, Gilbert–Elliott
-//! persistent slow states, Weibull-renewal bursts, and a materialized
-//! trace replay of the Gilbert–Elliott scenario) against churn scenarios
-//! (static graph, flaky links at increasing rates) for all five
-//! algorithms on the quadratic workload.  Every run is deterministic per
-//! seed; the `trace` rows replay the exact slow/fast evolution of the
-//! `gilbert_elliott` rows, so matching numbers double as a round-trip
-//! check of the trace subsystem.
-//!
-//! Run: `cargo run --release --bin bench_straggler` (add `--full` for the
-//! paper-scale fleet).
+//! Deprecated shim for `bench straggler` (process x churn sweep)
+//! — kept for one release; same flags; artifacts now use the
+//! canonical <suite>.csv + BENCH_<suite>.json names.
 
-use anyhow::Result;
-use dsgd_aau::algorithms::AlgorithmKind;
-use dsgd_aau::churn::{ChurnConfig, ChurnKind};
-use dsgd_aau::config::{BackendKind, ExperimentConfig};
-use dsgd_aau::coordinator::run_sweep;
-use dsgd_aau::harness::{BenchArgs, Table};
-use dsgd_aau::sim::{materialize_trace, StragglerKind, StragglerModel};
-use dsgd_aau::topology::TopologyKind;
-
-const STRAGGLER_SEED: u64 = 5;
-
-// Time constants sit at the workload scale (mean_compute = 0.01 s): slow
-// windows of ~0.1 s span ~10 consecutive samples — persistent slowness,
-// visible even to the fastest algorithms' short virtual-time runs.
-fn ge_model() -> StragglerModel {
-    StragglerModel {
-        kind: StragglerKind::GilbertElliott { mean_fast: 0.4, mean_slow: 0.1 },
-        seed: Some(STRAGGLER_SEED),
-        ..StragglerModel::default()
-    }
-}
-
-fn processes(n: usize, trace_path: &std::path::Path) -> Result<Vec<(String, StragglerModel)>> {
-    // Materialize the Gilbert–Elliott evolution once so the trace rows
-    // replay it bit for bit (horizon far past any run's virtual time —
-    // even the paper-scale synchronous runs stay well under 600 s).
-    let tl = materialize_trace(&ge_model(), n, 0, 600.0)?;
-    tl.save(trace_path)?;
-    Ok(vec![
-        ("bernoulli".to_string(), StragglerModel::default()),
-        ("gilbert_elliott".to_string(), ge_model()),
-        (
-            "weibull".to_string(),
-            StragglerModel {
-                kind: StragglerKind::WeibullBursts { shape: 0.7, scale: 0.4, mean_burst: 0.1 },
-                seed: Some(STRAGGLER_SEED),
-                ..StragglerModel::default()
-            },
-        ),
-        (
-            "trace(ge)".to_string(),
-            StragglerModel {
-                kind: StragglerKind::Trace { path: trace_path.display().to_string() },
-                ..StragglerModel::default()
-            },
-        ),
-    ])
-}
-
-fn churn_scenarios(full: bool) -> Vec<(String, ChurnConfig)> {
-    let mut out = vec![("static".to_string(), ChurnConfig::default())];
-    let rates: &[f64] = if full { &[0.5, 2.0, 8.0] } else { &[0.5, 2.0] };
-    for &rate in rates {
-        out.push((
-            format!("flaky(r={rate})"),
-            ChurnConfig {
-                kind: ChurnKind::FlakyLinks { rate, mean_downtime: 1.0 },
-                seed: None,
-            },
-        ));
-    }
-    out
-}
-
-fn main() -> Result<()> {
-    let args = BenchArgs::parse()?;
-    let n = if args.full { 32 } else { 12 };
-    let iters = if args.full { 3000 } else { 600 };
-
-    let trace_path = std::env::temp_dir()
-        .join(format!("bench_straggler_trace_{}.json", std::process::id()));
-    let procs = processes(n, &trace_path)?;
-
-    let mut table = Table::new(&[
-        "process", "churn", "algorithm", "iters", "vtime(s)", "loss", "strag%", "stalls",
-    ]);
-
-    for (proc_label, straggler) in &procs {
-        for (churn_label, churn) in churn_scenarios(args.full) {
-            let cfgs: Vec<ExperimentConfig> = AlgorithmKind::all()
-                .into_iter()
-                .map(|alg| {
-                    let mut cfg = ExperimentConfig::default();
-                    cfg.name = format!("straggler_{proc_label}_{churn_label}_{}", alg.token());
-                    cfg.num_workers = n;
-                    cfg.algorithm = alg;
-                    cfg.backend = BackendKind::Quadratic;
-                    cfg.topology = TopologyKind::Random { p: 0.3, seed: 11 };
-                    cfg.churn = churn.clone();
-                    cfg.straggler = straggler.clone();
-                    cfg.max_iterations = iters;
-                    cfg.eval_every = iters / 10;
-                    cfg.mean_compute = 0.01;
-                    cfg.seed = 9000;
-                    args.apply(&mut cfg).unwrap();
-                    cfg
-                })
-                .collect();
-            for (cfg, res) in run_sweep(cfgs) {
-                let s = res?;
-                table.row(vec![
-                    proc_label.clone(),
-                    churn_label.clone(),
-                    cfg.algorithm.label().to_string(),
-                    s.iterations.to_string(),
-                    format!("{:.2}", s.virtual_time),
-                    format!("{:.4}", s.final_loss()),
-                    format!("{:.1}", 100.0 * s.straggler_fraction),
-                    s.recorder.stall_fallbacks.to_string(),
-                ]);
-            }
-        }
-        println!("[bench_straggler] finished process {proc_label}");
-    }
-    std::fs::remove_file(&trace_path).ok();
-
-    println!(
-        "\nStraggler-process sweep — {n} workers, quadratic workload, {iters} iterations:\n"
-    );
-    print!("{}", table.render());
-    println!(
-        "\nReading: under the correlated processes the same average straggler \
-         budget hits the barrier algorithms much harder than the i.i.d. coin \
-         (persistent slow workers sit in every round), which is exactly the \
-         regime DSGD-AAU's adaptive waiting targets.  The trace(ge) rows \
-         replay the gilbert_elliott rows' slow/fast evolution from JSON and \
-         must match them; `stalls` counts DSGD-AAU's full-fleet liveness \
-         fallbacks under churn."
-    );
-    table.write_csv(&args.out_dir, "straggler_sweep")?;
-    Ok(())
+fn main() -> anyhow::Result<()> {
+    dsgd_aau::sweep::cli::shim_main("straggler")
 }

@@ -1,75 +1,6 @@
-//! Table 2 / Table 9 / Table 11 harness: accuracy after a fixed virtual
-//! wall-clock budget across worker counts.
-//!
-//! Paper shape: at every N, DSGD-AAU reaches the highest accuracy within
-//! the budget; AD-PSGD improves with N (staleness amortizes) but stays
-//! behind; synchronous effects leave AGP between them; all algorithms
-//! improve as N grows (more parallel SGD).
-//!
-//! ```text
-//! cargo run --release --bin bench_timebudget             # N ∈ {8..64}
-//! cargo run --release --bin bench_timebudget -- --full   # N ∈ {32..256}
-//! ```
+//! Deprecated shim for `bench timebudget` (Tables 2/9/11) — kept for one release; same
+//! flags, same outputs.
 
-use anyhow::Result;
-use dsgd_aau::algorithms::AlgorithmKind;
-use dsgd_aau::config::{BackendKind, ExperimentConfig};
-use dsgd_aau::coordinator::{mean_std, run_sweep};
-use dsgd_aau::harness::{pm, BenchArgs, Table};
-
-fn main() -> Result<()> {
-    let args = BenchArgs::parse()?;
-    let iid = args.extra.get("iid").map(|v| v == "1").unwrap_or(false);
-    let worker_counts: Vec<usize> =
-        if args.full { vec![32, 64, 128, 256] } else { vec![8, 16, 32, 64] };
-    // Budget chosen so the fastest algorithm roughly plateaus (the paper
-    // trains ResNet-18 for 50 s; our virtual compute step is 0.05 s).
-    let budget = if args.full { 60.0 } else { 25.0 };
-
-    let mut table = Table::new(&{
-        let mut h = vec!["N"];
-        h.extend(AlgorithmKind::paper_table().iter().map(|a| a.label()));
-        h
-    });
-
-    for &n in &worker_counts {
-        let mut cells = vec![n.to_string()];
-        for alg in AlgorithmKind::paper_table() {
-            let cfgs: Vec<ExperimentConfig> = (0..args.seeds)
-                .map(|s| {
-                    let mut cfg = ExperimentConfig::default();
-                    cfg.name = format!("t2_n{n}_{}_{s}", alg.token());
-                    cfg.num_workers = n;
-                    cfg.algorithm = alg;
-                    cfg.backend = BackendKind::NativeMlp;
-                    cfg.model = "mlp_small".into();
-                    cfg.iid = iid;
-                    cfg.max_iterations = u64::MAX / 2;
-                    cfg.time_budget = Some(budget);
-                    cfg.eval_every = 25;
-                    cfg.seed = 2000 + s;
-                    args.apply(&mut cfg).unwrap();
-                    cfg
-                })
-                .collect();
-            let accs: Vec<f64> = run_sweep(cfgs)
-                .into_iter()
-                .map(|(_, r)| 100.0 * r.expect("run failed").final_accuracy() as f64)
-                .collect();
-            let (m, s) = mean_std(&accs);
-            cells.push(pm(m, s));
-        }
-        table.row(cells);
-        println!("[bench_timebudget] finished N={n}");
-    }
-
-    let tag = if iid { "table11_timebudget_iid" } else { "table2_timebudget_noniid" };
-    println!(
-        "\nTable 2/9 analogue — accuracy after {budget:.0}s virtual budget, {} data:\n",
-        if iid { "IID" } else { "non-IID" }
-    );
-    print!("{}", table.render());
-    let path = table.write_csv(&args.out_dir, tag)?;
-    println!("\nwrote {}", path.display());
-    Ok(())
+fn main() -> anyhow::Result<()> {
+    dsgd_aau::sweep::cli::shim_main("timebudget")
 }

@@ -186,55 +186,65 @@ impl ExperimentConfig {
         let mut cfg = ExperimentConfig::default();
         let obj = j.as_obj().ok_or_else(|| anyhow::anyhow!("config must be an object"))?;
         for (key, v) in obj {
-            match key.as_str() {
-                "name" => cfg.name = v.as_str().unwrap_or(&cfg.name).to_string(),
-                "num_workers" => cfg.num_workers = need_usize(key, v)?,
-                "topology" => cfg.topology = TopologyKind::from_json(v)?,
-                "churn" => cfg.churn = ChurnConfig::from_json(v)?,
-                "adapt" => cfg.adapt = AdaptConfig::from_json(v)?,
-                "algorithm" => {
-                    cfg.algorithm =
-                        AlgorithmKind::parse(v.as_str().unwrap_or_default())?
-                }
-                "backend" => cfg.backend = BackendKind::parse(v.as_str().unwrap_or_default())?,
-                "model" => cfg.model = v.as_str().unwrap_or(&cfg.model).to_string(),
-                "iid" => cfg.iid = v.as_bool().unwrap_or(cfg.iid),
-                "classes_per_worker" => cfg.classes_per_worker = need_usize(key, v)?,
-                "dataset_samples" => cfg.dataset_samples = need_usize(key, v)?,
-                "separation" => cfg.separation = need_f64(key, v)? as f32,
-                "max_iterations" => cfg.max_iterations = need_usize(key, v)? as u64,
-                "time_budget" => {
-                    cfg.time_budget = if matches!(v, Json::Null) { None } else { Some(need_f64(key, v)?) }
-                }
-                "eval_every" => cfg.eval_every = need_usize(key, v)? as u64,
-                "eval_every_seconds" => {
-                    cfg.eval_every_seconds =
-                        if matches!(v, Json::Null) { None } else { Some(need_f64(key, v)?) }
-                }
-                "mean_compute" => cfg.mean_compute = need_f64(key, v)?,
-                "hetero_sigma" => cfg.hetero_sigma = need_f64(key, v)?,
-                // the full straggler section (process kind + parameters)
-                "straggler" => cfg.straggler = StragglerModel::from_json(v)?,
-                // legacy flat knobs, kept for config compatibility
-                "straggler_probability" => cfg.straggler.probability = need_f64(key, v)?,
-                "straggler_slowdown" => cfg.straggler.slowdown = need_f64(key, v)?,
-                "comm_latency" => cfg.comm.latency = need_f64(key, v)?,
-                "comm_bandwidth" => cfg.comm.bandwidth = need_f64(key, v)?,
-                "lr_eta0" => cfg.lr.eta0 = need_f64(key, v)?,
-                "lr_decay" => cfg.lr.decay = need_f64(key, v)?,
-                "lr_decay_every" => cfg.lr.decay_every = need_usize(key, v)? as u64,
-                "lr_min" => cfg.lr.min_lr = need_f64(key, v)?,
-                "lr_per_round" => cfg.lr_per_round = v.as_bool().unwrap_or(false),
-                "prague_group" => cfg.prague_group = need_usize(key, v)?,
-                "seed" => cfg.seed = need_usize(key, v)? as u64,
-                "pjrt_gossip" => cfg.pjrt_gossip = v.as_bool().unwrap_or(false),
-                "artifacts_dir" => {
-                    cfg.artifacts_dir = v.as_str().unwrap_or(&cfg.artifacts_dir).to_string()
-                }
-                other => bail!("unknown config key {other:?}"),
-            }
+            cfg.apply_kv(key, v)?;
         }
         Ok(cfg)
+    }
+
+    /// Apply one config key (the unit [`Self::from_json`] loops over;
+    /// also how the sweep layer routes generic `--key=value` overrides
+    /// into a config).  Unknown keys are rejected.
+    pub fn apply_kv(&mut self, key: &str, v: &Json) -> Result<()> {
+        match key {
+            "name" => self.name = v.as_str().unwrap_or(&self.name).to_string(),
+            "num_workers" => self.num_workers = need_usize(key, v)?,
+            "topology" => self.topology = TopologyKind::from_json(v)?,
+            "churn" => self.churn = ChurnConfig::from_json(v)?,
+            "adapt" => self.adapt = AdaptConfig::from_json(v)?,
+            "algorithm" => {
+                self.algorithm = AlgorithmKind::parse(v.as_str().unwrap_or_default())?
+            }
+            "backend" => self.backend = BackendKind::parse(v.as_str().unwrap_or_default())?,
+            "model" => self.model = v.as_str().unwrap_or(&self.model).to_string(),
+            "iid" => self.iid = v.as_bool().unwrap_or(self.iid),
+            "classes_per_worker" => self.classes_per_worker = need_usize(key, v)?,
+            "dataset_samples" => self.dataset_samples = need_usize(key, v)?,
+            "separation" => self.separation = need_f64(key, v)? as f32,
+            "max_iterations" => self.max_iterations = need_usize(key, v)? as u64,
+            "time_budget" => {
+                self.time_budget =
+                    if matches!(v, Json::Null) { None } else { Some(need_f64(key, v)?) }
+            }
+            "eval_every" => self.eval_every = need_usize(key, v)? as u64,
+            "eval_every_seconds" => {
+                self.eval_every_seconds =
+                    if matches!(v, Json::Null) { None } else { Some(need_f64(key, v)?) }
+            }
+            "mean_compute" => self.mean_compute = need_f64(key, v)?,
+            "hetero_sigma" => self.hetero_sigma = need_f64(key, v)?,
+            // the full straggler section (process kind + parameters)
+            "straggler" => self.straggler = StragglerModel::from_json(v)?,
+            // the structured link-model section
+            "comm" => self.comm = CommModel::from_json(v)?,
+            // legacy flat knobs, kept for config compatibility
+            "straggler_probability" => self.straggler.probability = need_f64(key, v)?,
+            "straggler_slowdown" => self.straggler.slowdown = need_f64(key, v)?,
+            "comm_latency" => self.comm.latency = need_f64(key, v)?,
+            "comm_bandwidth" => self.comm.bandwidth = need_f64(key, v)?,
+            "lr_eta0" => self.lr.eta0 = need_f64(key, v)?,
+            "lr_decay" => self.lr.decay = need_f64(key, v)?,
+            "lr_decay_every" => self.lr.decay_every = need_usize(key, v)? as u64,
+            "lr_min" => self.lr.min_lr = need_f64(key, v)?,
+            "lr_per_round" => self.lr_per_round = v.as_bool().unwrap_or(false),
+            "prague_group" => self.prague_group = need_usize(key, v)?,
+            "seed" => self.seed = need_usize(key, v)? as u64,
+            "pjrt_gossip" => self.pjrt_gossip = v.as_bool().unwrap_or(false),
+            "artifacts_dir" => {
+                self.artifacts_dir = v.as_str().unwrap_or(&self.artifacts_dir).to_string()
+            }
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
     }
 
     /// Serialize to a JSON value (round-trips through [`Self::from_json`]).
@@ -263,8 +273,7 @@ impl ExperimentConfig {
         m.insert("mean_compute".into(), Json::Num(self.mean_compute));
         m.insert("hetero_sigma".into(), Json::Num(self.hetero_sigma));
         m.insert("straggler".into(), self.straggler.to_json());
-        m.insert("comm_latency".into(), Json::Num(self.comm.latency));
-        m.insert("comm_bandwidth".into(), Json::Num(self.comm.bandwidth));
+        m.insert("comm".into(), self.comm.to_json());
         m.insert("lr_eta0".into(), Json::Num(self.lr.eta0));
         m.insert("lr_decay".into(), Json::Num(self.lr.decay));
         m.insert("lr_decay_every".into(), Json::from(self.lr.decay_every as usize));
@@ -296,6 +305,7 @@ impl ExperimentConfig {
         }
         anyhow::ensure!(self.prague_group >= 2, "prague group must be >= 2");
         self.straggler.validate()?;
+        self.comm.validate()?;
         self.churn.validate()?;
         self.adapt.validate()?;
         Ok(())
@@ -403,6 +413,45 @@ mod tests {
         // omitting the section keeps legacy behavior
         let legacy = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
         assert_eq!(legacy.adapt, crate::adapt::AdaptConfig::default());
+    }
+
+    #[test]
+    fn comm_section_parses_strictly_and_roundtrips() {
+        let cfg = ExperimentConfig::from_json(
+            &Json::parse(r#"{"comm": {"latency": 0.001, "bandwidth": 1e9}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.comm.latency, 0.001);
+        assert_eq!(cfg.comm.bandwidth, 1e9);
+        let back =
+            ExperimentConfig::from_json(&Json::parse(&cfg.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back.comm, cfg.comm);
+        // unknown comm keys are rejected, not defaulted
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"comm": {"latency": 0.001, "bandwith": 1e9}}"#).unwrap()
+        )
+        .is_err());
+        // the legacy flat knobs still parse and target the same model
+        let legacy = ExperimentConfig::from_json(
+            &Json::parse(r#"{"comm_latency": 0.002, "comm_bandwidth": 5e8}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(legacy.comm.latency, 0.002);
+        assert_eq!(legacy.comm.bandwidth, 5e8);
+        // omitting the section keeps the paper's measured fabric
+        let default = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(default.comm, crate::sim::CommModel::default());
+    }
+
+    #[test]
+    fn apply_kv_routes_single_overrides() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_kv("num_workers", &Json::from(64usize)).unwrap();
+        assert_eq!(cfg.num_workers, 64);
+        cfg.apply_kv("model", &Json::from("mlp_tiny")).unwrap();
+        assert_eq!(cfg.model, "mlp_tiny");
+        assert!(cfg.apply_kv("no_such_key", &Json::from(1usize)).is_err());
     }
 
     #[test]

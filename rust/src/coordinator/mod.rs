@@ -73,6 +73,22 @@ pub fn run_sweep_with_threads(
     sweep_jobs(configs, threads, run_experiment)
 }
 
+/// [`run_sweep_with_threads`] that additionally streams every finished
+/// experiment to `on_done` — called once per config (index within
+/// `configs`, the config, its contained result) from the worker thread
+/// that ran it, as soon as it finishes.  The `sweep` executor uses this
+/// to feed `ResultSink`s without waiting for the whole grid.
+pub fn run_sweep_streaming<F>(
+    configs: Vec<ExperimentConfig>,
+    threads: usize,
+    on_done: F,
+) -> Vec<(ExperimentConfig, Result<RunSummary>)>
+where
+    F: Fn(usize, &ExperimentConfig, &Result<RunSummary>) + Sync,
+{
+    sweep_jobs_observed(configs, threads, run_experiment, on_done)
+}
+
 /// Generic panic-contained work-stealing sweep: run `f` over `jobs` on
 /// `threads` OS threads, returning `(job, result)` in input order.
 fn sweep_jobs<T, R, F>(jobs: Vec<T>, threads: usize, f: F) -> Vec<(T, Result<R>)>
@@ -81,10 +97,28 @@ where
     R: Send,
     F: Fn(&T) -> Result<R> + Send + Sync,
 {
+    sweep_jobs_observed(jobs, threads, f, |_, _, _| ())
+}
+
+/// [`sweep_jobs`] with a per-job observer invoked right after each job
+/// finishes (even when it panicked — the observer sees the `Err`).
+fn sweep_jobs_observed<T, R, F, O>(
+    jobs: Vec<T>,
+    threads: usize,
+    f: F,
+    obs: O,
+) -> Vec<(T, Result<R>)>
+where
+    T: Send,
+    R: Send,
+    F: Fn(&T) -> Result<R> + Send + Sync,
+    O: Fn(usize, &T, &Result<R>) + Sync,
+{
     let threads = threads.max(1);
     let queue = std::sync::Mutex::new(jobs.into_iter().enumerate().rev().collect::<Vec<_>>());
     let results = std::sync::Mutex::new(Vec::new());
     let f = &f;
+    let obs = &obs;
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
@@ -100,6 +134,7 @@ where
                     .unwrap_or_else(|payload| {
                         Err(anyhow::anyhow!("experiment panicked: {}", panic_message(&payload)))
                     });
+                obs(idx, &job, &out);
                 lock_ok(&results).push((idx, job, out));
             });
         }
@@ -109,8 +144,9 @@ where
     out.into_iter().map(|(_, job, res)| (job, res)).collect()
 }
 
-/// Recover the guard even from a poisoned mutex (see `sweep_jobs`).
-fn lock_ok<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+/// Recover the guard even from a poisoned mutex (see `sweep_jobs`; also
+/// reused by the sweep executor's record/sink mutexes).
+pub(crate) fn lock_ok<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
@@ -250,6 +286,33 @@ mod tests {
         assert_eq!(results.len(), 3);
         assert!(results[0].1.is_ok(), "good config must survive its bad neighbors");
         assert!(results[1].1.is_err() && results[2].1.is_err());
+    }
+
+    #[test]
+    fn streaming_observer_sees_every_job_once() {
+        let jobs: Vec<usize> = vec![0, 1, 2, 3];
+        let seen = std::sync::Mutex::new(Vec::new());
+        let results = sweep_jobs_observed(
+            jobs,
+            2,
+            |&j| -> Result<usize> {
+                if j == 1 {
+                    panic!("boom");
+                }
+                Ok(j)
+            },
+            |idx, job, res| {
+                seen.lock().unwrap().push((idx, *job, res.is_ok()));
+            },
+        );
+        assert_eq!(results.len(), 4);
+        let mut seen = seen.into_inner().unwrap();
+        seen.sort();
+        assert_eq!(
+            seen,
+            vec![(0, 0, true), (1, 1, false), (2, 2, true), (3, 3, true)],
+            "observer fires exactly once per job, panics included"
+        );
     }
 
     #[test]

@@ -1,180 +1,8 @@
-//! Shared experiment-harness utilities for the table/figure binaries
-//! (`rust/src/bin/bench_*.rs`): flag parsing, table formatting and CSV
-//! output under `results/`.
+//! Legacy shim: the experiment harness moved into the declarative sweep
+//! layer — flag parsing lives in [`crate::sweep::cli`] and table/CSV
+//! rendering in [`crate::sweep::table`].  These re-exports keep old
+//! imports compiling for one release; new code should declare a
+//! [`crate::sweep::SweepSpec`] and let the executor drive the sweep.
 
-use crate::config::ExperimentConfig;
-use anyhow::{bail, Context, Result};
-use std::collections::BTreeMap;
-use std::io::Write as _;
-use std::path::{Path, PathBuf};
-
-/// Common bench flags.
-#[derive(Debug, Clone)]
-pub struct BenchArgs {
-    /// Paper-scale run (`--full`) vs CI-scale (default).
-    pub full: bool,
-    /// Smoke-grid run (`--quick`): the smallest sweep that still covers
-    /// every axis — what CI runs to keep the perf trajectory populated.
-    pub quick: bool,
-    /// Seeds per table cell.
-    pub seeds: u64,
-    /// Output directory for CSVs.
-    pub out_dir: PathBuf,
-    /// Backend override (`native_mlp` default; `pjrt` exercises artifacts).
-    pub backend: Option<String>,
-    /// Extra `key=value` overrides.
-    pub extra: BTreeMap<String, String>,
-}
-
-impl Default for BenchArgs {
-    fn default() -> Self {
-        BenchArgs {
-            full: false,
-            quick: false,
-            seeds: 3,
-            out_dir: PathBuf::from("results"),
-            backend: None,
-            extra: BTreeMap::new(),
-        }
-    }
-}
-
-impl BenchArgs {
-    /// Parse `std::env::args().skip(1)`.
-    pub fn parse() -> Result<Self> {
-        let mut out = BenchArgs::default();
-        let mut it = std::env::args().skip(1);
-        while let Some(a) = it.next() {
-            match a.as_str() {
-                "--full" => out.full = true,
-                "--quick" => out.quick = true,
-                "--seeds" => {
-                    out.seeds = it.next().context("--seeds value")?.parse()?;
-                }
-                "--out" => out.out_dir = it.next().context("--out value")?.into(),
-                "--backend" => out.backend = Some(it.next().context("--backend value")?),
-                other => {
-                    if let Some((k, v)) = other.strip_prefix("--").and_then(|s| s.split_once('=')) {
-                        out.extra.insert(k.to_string(), v.to_string());
-                    } else {
-                        bail!(
-                            "unknown flag {other} (--full --quick --seeds K --out DIR --backend B --k=v)"
-                        );
-                    }
-                }
-            }
-        }
-        Ok(out)
-    }
-
-    /// Apply the backend override to a config.
-    pub fn apply(&self, cfg: &mut ExperimentConfig) -> Result<()> {
-        if let Some(b) = &self.backend {
-            cfg.backend = crate::config::BackendKind::parse(b)?;
-        }
-        Ok(())
-    }
-}
-
-/// A printable results table (paper-style rows).
-#[derive(Debug, Default)]
-pub struct Table {
-    /// Column headers.
-    pub headers: Vec<String>,
-    /// Row cells.
-    pub rows: Vec<Vec<String>>,
-}
-
-impl Table {
-    /// New table with headers.
-    pub fn new(headers: &[&str]) -> Self {
-        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
-    }
-
-    /// Append a row.
-    pub fn row(&mut self, cells: Vec<String>) {
-        self.rows.push(cells);
-    }
-
-    /// Render with aligned columns.
-    pub fn render(&self) -> String {
-        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
-        for row in &self.rows {
-            for (i, c) in row.iter().enumerate() {
-                if i < widths.len() {
-                    widths[i] = widths[i].max(c.len());
-                } else {
-                    widths.push(c.len());
-                }
-            }
-        }
-        let line = |cells: &[String]| {
-            cells
-                .iter()
-                .enumerate()
-                .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8) + 2))
-                .collect::<String>()
-        };
-        let mut out = line(&self.headers);
-        out.push('\n');
-        out.push_str(&"-".repeat(widths.iter().map(|w| w + 2).sum::<usize>().min(120)));
-        out.push('\n');
-        for row in &self.rows {
-            out.push_str(&line(row));
-            out.push('\n');
-        }
-        out
-    }
-
-    /// Write as CSV into `dir/name.csv`.
-    pub fn write_csv(&self, dir: &Path, name: &str) -> Result<PathBuf> {
-        std::fs::create_dir_all(dir)?;
-        let path = dir.join(format!("{name}.csv"));
-        let mut f = std::fs::File::create(&path)?;
-        writeln!(f, "{}", self.headers.join(","))?;
-        for row in &self.rows {
-            writeln!(f, "{}", row.join(","))?;
-        }
-        Ok(path)
-    }
-}
-
-/// `mean ± std` cell formatting matching the paper's tables.
-pub fn pm(mean: f64, std: f64) -> String {
-    format!("{:.2} ± {:.2}", mean, std)
-}
-
-/// Percent formatting.
-pub fn pct(v: f64) -> String {
-    format!("{:.2}%", 100.0 * v)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn table_renders_aligned() {
-        let mut t = Table::new(&["model", "AGP", "DSGD-AAU"]);
-        t.row(vec!["2-NN".into(), "43.87".into(), "45.43".into()]);
-        let s = t.render();
-        assert!(s.contains("model"));
-        assert!(s.lines().count() == 3);
-    }
-
-    #[test]
-    fn csv_written() {
-        let mut t = Table::new(&["a", "b"]);
-        t.row(vec!["1".into(), "2".into()]);
-        let dir = std::env::temp_dir().join("dsgd_harness_test");
-        let p = t.write_csv(&dir, "t").unwrap();
-        assert!(std::fs::read_to_string(p).unwrap().contains("a,b"));
-        std::fs::remove_dir_all(dir).ok();
-    }
-
-    #[test]
-    fn pm_and_pct() {
-        assert_eq!(pm(45.432, 0.158), "45.43 ± 0.16");
-        assert_eq!(pct(0.4543), "45.43%");
-    }
-}
+pub use crate::sweep::cli::BenchArgs;
+pub use crate::sweep::table::{pct, pm, Table};

@@ -17,9 +17,10 @@
 //!   real partitions), partition-aware adaptivity ([`adapt`]: incremental
 //!   connected-component tracking with configurable detection latency;
 //!   every update rule retargets to the live component), and the
-//!   experiment harness regenerating every table/figure of the paper's
-//!   evaluation plus churn, straggler and partition sweeps
-//!   (`bench_churn`, `bench_straggler`, `bench_partition`).
+//!   declarative [`sweep`] layer: every table/figure of the paper's
+//!   evaluation plus the churn/straggler/partition grids is a
+//!   [`sweep::SweepSpec`] declaration registered in the single `bench`
+//!   multiplexer binary (`bench list` maps suites to paper artifacts).
 //! * **L2 (python/compile/model.py)** — the worker model fwd/bwd in JAX,
 //!   AOT-lowered once to HLO text.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (fused linear
@@ -30,6 +31,8 @@
 //!
 //! ## Quick start
 //!
+//! One experiment:
+//!
 //! ```no_run
 //! use dsgd_aau::config::ExperimentConfig;
 //! use dsgd_aau::coordinator;
@@ -39,6 +42,27 @@
 //! cfg.algorithm = dsgd_aau::algorithms::AlgorithmKind::DsgdAau;
 //! let result = coordinator::run_experiment(&cfg).unwrap();
 //! println!("final loss {:.4}", result.final_loss());
+//! ```
+//!
+//! A declarative sweep (exactly how every `bench <suite>` is defined —
+//! axes cross-multiply, cells run in parallel with per-cell panic
+//! containment, results stream to table/CSV/JSON sinks, and `--resume`
+//! skips cells already present in `BENCH_<suite>.json`):
+//!
+//! ```no_run
+//! use dsgd_aau::sweep::cli::BenchArgs;
+//! use dsgd_aau::sweep::{run_suite, Axis, Column, Fmt, SweepSpec, TableSpec};
+//!
+//! let spec = SweepSpec::new("demo", "final loss by fleet size", |cfg| {
+//!     cfg.max_iterations = 200;
+//!     cfg.mean_compute = 0.01;
+//! })
+//! .axis(Axis::from_numbers("N", &[4usize], &[4, 8], &[8, 16], |cfg, n| {
+//!     cfg.num_workers = n
+//! }))
+//! .table(TableSpec::long("", vec![Column::new("loss", "final_loss", Fmt::F4)]));
+//! let run = run_suite(&spec, &BenchArgs::default()).unwrap();
+//! println!("{} cells ({} resumed)", run.records.len(), run.skipped);
 //! ```
 
 pub mod adapt;
@@ -56,6 +80,7 @@ pub mod model;
 pub mod pathsearch;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod topology;
 pub mod util;
 

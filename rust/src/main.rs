@@ -27,6 +27,9 @@ USAGE:
   dsgd-aau inspect [--dir D]     summarize the AOT artifact manifest
   dsgd-aau default-config        print the default config as JSON
 
+Paper tables/figures are driven by the separate `bench` multiplexer
+binary (`bench list` maps every suite to its paper artifact).
+
 OPTIONS (train/compare):
   --config FILE          JSON config (flags below override it)
   --algorithm A          dsgd_aau | dsgd_sync | ad_psgd | prague | agp

@@ -144,6 +144,22 @@ impl Recorder {
         self.curve.iter().find(|p| p.loss <= target).map(|p| p.time)
     }
 
+    /// Earliest gossip iteration at which `target` accuracy was reached.
+    pub fn iterations_to_accuracy(&self, target: f32) -> Option<u64> {
+        self.curve.iter().find(|p| p.accuracy >= target).map(|p| p.iteration)
+    }
+
+    /// Loss at a fractional position along the recorded curve (0.0 =
+    /// first eval, 1.0 = last; the loss-curve suite's checkpoint query).
+    /// NaN when no eval happened.
+    pub fn loss_at_fraction(&self, frac: f64) -> f32 {
+        if self.curve.is_empty() {
+            return f32::NAN;
+        }
+        let idx = ((self.curve.len() - 1) as f64 * frac.clamp(0.0, 1.0)) as usize;
+        self.curve[idx].loss
+    }
+
     /// The curve as CSV text (`iteration,time,loss,accuracy,bytes`).
     /// Byte-stable for identical runs — the golden-run determinism suite
     /// compares these strings directly.
@@ -190,6 +206,18 @@ mod tests {
         assert_eq!(r.time_to_accuracy(0.4), Some(1.0));
         assert_eq!(r.time_to_accuracy(0.9), None);
         assert_eq!(r.time_to_loss(1.5), Some(1.0));
+        assert_eq!(r.iterations_to_accuracy(0.4), Some(10));
+        assert_eq!(r.iterations_to_accuracy(0.9), None);
+    }
+
+    #[test]
+    fn loss_at_fraction_checkpoints() {
+        let r = recorder();
+        assert_eq!(r.loss_at_fraction(0.0), 2.3);
+        assert_eq!(r.loss_at_fraction(0.5), 1.5);
+        assert_eq!(r.loss_at_fraction(1.0), 0.9);
+        assert_eq!(r.loss_at_fraction(2.0), 0.9, "fraction clamps to the curve");
+        assert!(Recorder::new().loss_at_fraction(0.5).is_nan());
     }
 
     #[test]

@@ -27,8 +27,11 @@ pub use straggler::{
 /// Point-to-point link model: `latency + bytes / bandwidth` seconds.
 ///
 /// Paper Appendix C.4 measures communication at 0.14–4 % of total time on a
-/// 20 GB/s fabric; the defaults mirror that regime.
-#[derive(Debug, Clone, Copy)]
+/// 20 GB/s fabric; the defaults mirror that regime.  Configured via the
+/// structured `"comm": {"latency": s, "bandwidth": B/s}` section (strict
+/// parsing like `straggler`/`churn`/`adapt`; the legacy flat
+/// `comm_latency`/`comm_bandwidth` keys still work).
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CommModel {
     /// Per-message latency in (virtual) seconds.
     pub latency: f64,
@@ -44,6 +47,45 @@ impl Default for CommModel {
 }
 
 impl CommModel {
+    /// Parse the `comm` config section.  Like the other sections,
+    /// unknown keys and wrongly-typed values are rejected rather than
+    /// silently defaulted.
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<Self> {
+        use crate::util::json::Json;
+        let mut out = CommModel::default();
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("comm section must be an object"))?;
+        for (key, v) in obj {
+            let num = |v: &Json| {
+                v.as_f64().ok_or_else(|| anyhow::anyhow!("comm {key} must be a number"))
+            };
+            match key.as_str() {
+                "latency" => out.latency = num(v)?,
+                "bandwidth" => out.bandwidth = num(v)?,
+                other => anyhow::bail!("unknown comm key {other:?} (latency|bandwidth)"),
+            }
+        }
+        out.validate()?;
+        Ok(out)
+    }
+
+    /// Inverse of [`Self::from_json`].
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("latency".to_string(), Json::Num(self.latency));
+        m.insert("bandwidth".to_string(), Json::Num(self.bandwidth));
+        Json::Obj(m)
+    }
+
+    /// Sanity checks (non-negative latency, positive bandwidth).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.latency >= 0.0, "comm latency must be non-negative");
+        anyhow::ensure!(self.bandwidth > 0.0, "comm bandwidth must be positive");
+        Ok(())
+    }
+
     /// Transfer time for one message of `bytes`.
     pub fn transfer_time(&self, bytes: u64) -> f64 {
         self.latency + bytes as f64 / self.bandwidth
@@ -78,5 +120,18 @@ mod tests {
         let c = CommModel::default();
         assert_eq!(c.gossip_time(1, 1 << 20), 0.0);
         assert!(c.gossip_time(4, 1 << 20) > c.gossip_time(2, 1 << 20));
+    }
+
+    #[test]
+    fn comm_json_roundtrip_and_strict_keys() {
+        use crate::util::json::Json;
+        let c = CommModel { latency: 0.002, bandwidth: 1.5e9 };
+        let back = CommModel::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        assert!(CommModel::from_json(&Json::parse(r#"{"latency": 0.1, "lag": 2}"#).unwrap())
+            .is_err());
+        assert!(CommModel::from_json(&Json::parse(r#"{"latency": "fast"}"#).unwrap()).is_err());
+        assert!(CommModel::from_json(&Json::parse(r#"{"bandwidth": 0}"#).unwrap()).is_err());
+        assert!(CommModel::from_json(&Json::parse("[]").unwrap()).is_err());
     }
 }

@@ -1,0 +1,303 @@
+//! Bench CLI: shared flag parsing (the old `harness::BenchArgs`, grown
+//! `--resume`/`--threads`), the suite registry mapping every paper
+//! table/figure to its [`SweepSpec`], and the entry points behind the
+//! `bench` multiplexer binary and the legacy `bench_*` shims.
+
+use crate::config::ExperimentConfig;
+use crate::sweep::exec::{run_suite, SuiteRun};
+use crate::sweep::spec::{SweepSpec, Tier};
+use crate::sweep::suites;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+bench — declarative sweep driver for the paper's tables and figures
+
+USAGE:
+  bench <suite> [OPTIONS]   run one suite from its SweepSpec declaration
+  bench all [OPTIONS]       run every suite (CI runs `bench all --quick`)
+  bench list                list the suites and their paper mapping
+
+OPTIONS:
+  --quick          smallest grid still covering every axis (CI smoke tier)
+  --full           paper-scale grid
+  --seeds K        seeds per cell where the suite declares a seed axis
+  --out DIR        output directory (default results/)
+  --backend B      backend override (pjrt|native_mlp|quadratic)
+  --resume         skip cells already recorded in BENCH_<suite>.json
+  --threads T      sweep worker threads (default: available parallelism)
+  --key=value      extra overrides: suite-specific (e.g. --iid=1) or any
+                   ExperimentConfig key (e.g. --num_workers=64)
+";
+
+/// Common bench flags.
+#[derive(Debug, Clone)]
+pub struct BenchArgs {
+    /// Paper-scale run (`--full`).
+    pub full: bool,
+    /// Smoke-grid run (`--quick`): the smallest sweep that still covers
+    /// every axis — what CI runs to keep the perf trajectory populated.
+    pub quick: bool,
+    /// Seeds per table cell (suites opting into a seed axis).
+    pub seeds: u64,
+    /// Output directory for CSV/JSON artifacts.
+    pub out_dir: PathBuf,
+    /// Backend override (`native_mlp` default; `pjrt` exercises artifacts).
+    pub backend: Option<String>,
+    /// Skip cells whose config hash already exists in the suite JSON.
+    pub resume: bool,
+    /// Explicit sweep thread count (default: available parallelism).
+    pub threads: Option<usize>,
+    /// Extra `key=value` overrides.
+    pub extra: BTreeMap<String, String>,
+}
+
+impl Default for BenchArgs {
+    fn default() -> Self {
+        BenchArgs {
+            full: false,
+            quick: false,
+            seeds: 3,
+            out_dir: PathBuf::from("results"),
+            backend: None,
+            resume: false,
+            threads: None,
+            extra: BTreeMap::new(),
+        }
+    }
+}
+
+impl BenchArgs {
+    /// Parse `std::env::args().skip(1)`.
+    pub fn parse() -> Result<Self> {
+        Self::parse_from(std::env::args().skip(1).collect())
+    }
+
+    /// Parse an explicit argument list (exercised directly by tests).
+    pub fn parse_from(args: Vec<String>) -> Result<Self> {
+        let mut out = BenchArgs::default();
+        let mut it = args.into_iter();
+        while let Some(a) = it.next() {
+            match a.as_str() {
+                "--full" => out.full = true,
+                "--quick" => out.quick = true,
+                "--resume" => out.resume = true,
+                "--seeds" => {
+                    out.seeds = it.next().context("--seeds value")?.parse()?;
+                }
+                "--threads" => {
+                    out.threads = Some(it.next().context("--threads value")?.parse()?);
+                }
+                "--out" => out.out_dir = it.next().context("--out value")?.into(),
+                "--backend" => out.backend = Some(it.next().context("--backend value")?),
+                other => {
+                    if let Some((k, v)) = other.strip_prefix("--").and_then(|s| s.split_once('='))
+                    {
+                        out.extra.insert(k.to_string(), v.to_string());
+                    } else {
+                        bail!(
+                            "unknown flag {other} (--full --quick --resume --seeds K \
+                             --out DIR --backend B --threads T --k=v)"
+                        );
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Grid tier selected by the flags.
+    pub fn tier(&self) -> Result<Tier> {
+        ensure!(!(self.quick && self.full), "--quick and --full are mutually exclusive");
+        Ok(if self.quick {
+            Tier::Quick
+        } else if self.full {
+            Tier::Full
+        } else {
+            Tier::Default
+        })
+    }
+
+    /// Apply the backend override to a config.
+    pub fn apply(&self, cfg: &mut ExperimentConfig) -> Result<()> {
+        if let Some(b) = &self.backend {
+            cfg.backend = crate::config::BackendKind::parse(b)?;
+        }
+        Ok(())
+    }
+}
+
+/// A registered bench suite.
+pub struct Suite {
+    /// `bench <name>`.
+    pub name: &'static str,
+    /// Which paper table/figure the suite regenerates.
+    pub paper: &'static str,
+    /// One-line description.
+    pub summary: &'static str,
+    /// Build the spec for the given flags.
+    pub build: fn(&BenchArgs) -> Result<SweepSpec>,
+}
+
+/// The nine suites, in paper order.
+pub fn registry() -> Vec<Suite> {
+    vec![
+        Suite {
+            name: "accuracy",
+            paper: "Tables 1/8/10",
+            summary: "final accuracy per model variant (non-IID; --iid=1)",
+            build: suites::accuracy,
+        },
+        Suite {
+            name: "timebudget",
+            paper: "Tables 2/9/11",
+            summary: "accuracy after a fixed virtual-time budget, per N",
+            build: suites::timebudget,
+        },
+        Suite {
+            name: "loss_curves",
+            paper: "Figures 3-4",
+            summary: "loss vs iteration and vs wall-clock, per algorithm",
+            build: suites::loss_curves,
+        },
+        Suite {
+            name: "speedup",
+            paper: "Figure 5",
+            summary: "speedup over sync DSGD and communication to target",
+            build: suites::speedup,
+        },
+        Suite {
+            name: "ablation",
+            paper: "Figures 9-12",
+            summary: "straggler probability/slowdown/batch ablations",
+            build: suites::ablation,
+        },
+        Suite {
+            name: "fixedk",
+            paper: "DESIGN.md ablation",
+            summary: "adaptive group sizing vs fixed-fastest-k",
+            build: suites::fixedk,
+        },
+        Suite {
+            name: "churn",
+            paper: "ROADMAP churn grid",
+            summary: "dynamic-topology scenarios vs every algorithm",
+            build: suites::churn,
+        },
+        Suite {
+            name: "straggler",
+            paper: "ROADMAP joint grid",
+            summary: "straggler process x churn x algorithm",
+            build: suites::straggler,
+        },
+        Suite {
+            name: "partition",
+            paper: "ROADMAP partition grid",
+            summary: "repair/blind/aware partition handling per algorithm",
+            build: suites::partition,
+        },
+    ]
+}
+
+/// Look up a suite by name.
+pub fn find_suite(name: &str) -> Option<Suite> {
+    registry().into_iter().find(|s| s.name == name)
+}
+
+/// Build and run one registered suite.
+pub fn run_named(name: &str, args: &BenchArgs) -> Result<SuiteRun> {
+    let suite = find_suite(name).ok_or_else(|| {
+        let names: Vec<&str> = registry().iter().map(|s| s.name).collect();
+        anyhow::anyhow!("unknown suite {name:?} (try: {})", names.join(", "))
+    })?;
+    let spec = (suite.build)(args)?;
+    run_suite(&spec, args)
+}
+
+/// Entry point of the `bench` multiplexer binary.
+pub fn bench_main() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv.remove(0);
+    match cmd.as_str() {
+        "-h" | "--help" | "help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        "list" => {
+            let mut t = crate::sweep::table::Table::new(&["suite", "paper", "summary"]);
+            for s in registry() {
+                t.row(vec![s.name.to_string(), s.paper.to_string(), s.summary.to_string()]);
+            }
+            print!("{}", t.render());
+            Ok(())
+        }
+        "all" => {
+            let args = BenchArgs::parse_from(argv)?;
+            let mut failed: Vec<&'static str> = Vec::new();
+            for s in registry() {
+                println!("\n=== bench {} ===", s.name);
+                if let Err(e) = run_named(s.name, &args) {
+                    eprintln!("[bench {}] FAILED: {e:#}", s.name);
+                    failed.push(s.name);
+                }
+            }
+            ensure!(failed.is_empty(), "suites failed: {}", failed.join(", "));
+            Ok(())
+        }
+        name => {
+            let args = BenchArgs::parse_from(argv)?;
+            run_named(name, &args).map(|_| ())
+        }
+    }
+}
+
+/// Entry point of the legacy `bench_<suite>` shim binaries (kept for one
+/// release; they parse the same flags and defer to the registry).
+/// Artifacts use the canonical names now: `<suite>*.csv` and
+/// `BENCH_<suite>.json` replace the per-binary file names.
+pub fn shim_main(suite: &str) -> Result<()> {
+    eprintln!(
+        "[bench_{suite}] deprecated shim — use `bench {suite}` (same flags; artifacts now \
+         {suite}*.csv + BENCH_{suite}.json)"
+    );
+    let args = BenchArgs::parse()?;
+    run_named(suite, &args).map(|_| ())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_nine_unique_suites() {
+        let names: Vec<&str> = registry().iter().map(|s| s.name).collect();
+        assert_eq!(names.len(), 9);
+        let set: std::collections::BTreeSet<&str> = names.iter().copied().collect();
+        assert_eq!(set.len(), names.len(), "suite names must be unique");
+        assert!(find_suite("partition").is_some());
+        assert!(find_suite("nope").is_none());
+    }
+
+    #[test]
+    fn every_suite_builds_and_lowers_at_every_tier() {
+        for quick in [true, false] {
+            let mut args = BenchArgs::default();
+            args.quick = quick;
+            args.seeds = 2;
+            for s in registry() {
+                let spec = (s.build)(&args).unwrap_or_else(|e| panic!("{}: {e}", s.name));
+                assert_eq!(spec.suite, s.name);
+                let cells = spec.lower(&args).unwrap_or_else(|e| panic!("{}: {e}", s.name));
+                assert!(!cells.is_empty(), "{} lowers to an empty grid", s.name);
+                for c in &cells {
+                    c.cfg.validate().unwrap_or_else(|e| panic!("{}: {}: {e}", s.name, c.cfg.name));
+                }
+            }
+        }
+    }
+}

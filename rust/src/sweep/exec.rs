@@ -1,0 +1,164 @@
+//! The sweep executor: lowers a [`SweepSpec`] onto the panic-contained
+//! parallel sweep, streams finished cells to the sinks, computes shared
+//! derived metrics once, and resumes deterministically by skipping cells
+//! whose config hash already exists in `BENCH_<suite>.json`.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{self, lock_ok};
+use crate::sweep::cli::BenchArgs;
+use crate::sweep::record::{attach_speedup, RunRecord};
+use crate::sweep::sink::{JsonSink, ProgressSink, ResultSink, SinkCtx, TableSink};
+use crate::sweep::spec::SweepSpec;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Outcome of one suite execution.
+pub struct SuiteRun {
+    /// Every cell's record in deterministic cell order.
+    pub records: Vec<RunRecord>,
+    /// Cells actually executed this invocation.
+    pub ran: usize,
+    /// Cells skipped via `--resume`.
+    pub skipped: usize,
+    /// Path of the machine-readable summary.
+    pub json_path: PathBuf,
+}
+
+/// Canonical summary path: `<out_dir>/BENCH_<suite>.json`.
+pub fn json_path(out_dir: &Path, suite: &str) -> PathBuf {
+    out_dir.join(format!("BENCH_{suite}.json"))
+}
+
+/// The standard sink stack: progress lines, aligned tables + CSVs, and
+/// the `BENCH_<suite>.json` summary.
+pub fn default_sinks(spec: &SweepSpec, args: &BenchArgs) -> Vec<Box<dyn ResultSink>> {
+    vec![
+        Box::new(ProgressSink::for_suite(&spec.suite)),
+        Box::new(TableSink),
+        Box::new(JsonSink::at(json_path(&args.out_dir, &spec.suite))),
+    ]
+}
+
+/// Run a suite with the standard sinks.
+pub fn run_suite(spec: &SweepSpec, args: &BenchArgs) -> Result<SuiteRun> {
+    run_suite_with_sinks(spec, args, default_sinks(spec, args))
+}
+
+/// Run a suite with a custom sink stack.
+pub fn run_suite_with_sinks(
+    spec: &SweepSpec,
+    args: &BenchArgs,
+    sinks: Vec<Box<dyn ResultSink>>,
+) -> Result<SuiteRun> {
+    spec.run_setup(args)?;
+    let tier = args.tier()?;
+    let cells = spec.lower(args)?;
+    let path = json_path(&args.out_dir, &spec.suite);
+
+    let prior = if args.resume && path.exists() {
+        load_prior(&path).with_context(|| format!("resume from {}", path.display()))?
+    } else {
+        BTreeMap::new()
+    };
+    let mut slots: Vec<Option<RunRecord>> = Vec::with_capacity(cells.len());
+    let mut to_run: Vec<usize> = Vec::new();
+    for (i, cell) in cells.iter().enumerate() {
+        match prior.get(&cell.hash) {
+            Some(row) => slots.push(Some(RunRecord::from_json(cell, row)?)),
+            None => {
+                slots.push(None);
+                to_run.push(i);
+            }
+        }
+    }
+    let skipped = cells.len() - to_run.len();
+    if skipped > 0 {
+        println!("[bench {}] resume: skipping {skipped} completed cell(s)", spec.suite);
+    }
+
+    let configs: Vec<ExperimentConfig> = to_run.iter().map(|&i| cells[i].cfg.clone()).collect();
+    let threads = args
+        .threads
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4));
+    let targets = spec.targets;
+    let curve_csvs = spec.curve_csvs;
+    let suite = spec.suite.clone();
+    let out_dir = args.out_dir.clone();
+    let slots_m = Mutex::new(slots);
+    let sinks_m = Mutex::new(sinks);
+    coordinator::run_sweep_streaming(configs, threads, |j, _cfg, res| {
+        let i = to_run[j];
+        let cell = &cells[i];
+        let rec = match res {
+            Ok(s) => {
+                if curve_csvs {
+                    let p = out_dir.join(curve_csv_name(&suite, &cell.labels));
+                    if let Err(e) = s.recorder.write_csv(&p) {
+                        eprintln!("[bench {suite}] curve csv {}: {e}", p.display());
+                    }
+                }
+                RunRecord::from_summary(cell, targets, s)
+            }
+            Err(e) => RunRecord::from_error(cell, &format!("{e}")),
+        };
+        {
+            let mut sinks = lock_ok(&sinks_m);
+            for s in sinks.iter_mut() {
+                if let Err(e) = s.on_record(&rec) {
+                    eprintln!("[bench {suite}] sink error: {e}");
+                }
+            }
+        }
+        lock_ok(&slots_m)[i] = Some(rec);
+    });
+
+    let slots = into_inner_ok(slots_m);
+    let mut sinks = into_inner_ok(sinks_m);
+    let mut records: Vec<RunRecord> = Vec::with_capacity(cells.len());
+    for (i, slot) in slots.into_iter().enumerate() {
+        records.push(slot.ok_or_else(|| anyhow::anyhow!("cell {i} produced no record"))?);
+    }
+    if let Some((axis, baseline)) = &spec.speedup_baseline {
+        attach_speedup(&mut records, axis, baseline);
+    }
+    let ctx = SinkCtx { spec, tier, out_dir: &args.out_dir };
+    for s in sinks.iter_mut() {
+        s.finish(&ctx, &records)?;
+    }
+    Ok(SuiteRun { records, ran: to_run.len(), skipped, json_path: path })
+}
+
+fn into_inner_ok<T>(m: Mutex<T>) -> T {
+    m.into_inner().unwrap_or_else(|e| e.into_inner())
+}
+
+fn curve_csv_name(suite: &str, labels: &[(String, String)]) -> String {
+    fn sanitize(s: &str) -> String {
+        s.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }).collect()
+    }
+    let parts: Vec<String> = labels.iter().map(|(_, v)| sanitize(v)).collect();
+    format!("{suite}_curve_{}.csv", parts.join("_"))
+}
+
+/// Index a prior `BENCH_<suite>.json` by config hash for `--resume`.
+/// Only `status: "ok"` rows count as completed — a cell that previously
+/// failed (panic, transient error) is re-run rather than pinned to `err`
+/// forever.  Deterministic failures re-fail identically, so resumed
+/// output stays byte-identical to a cold run either way.
+fn load_prior(path: &Path) -> Result<BTreeMap<String, Json>> {
+    let text = std::fs::read_to_string(path)?;
+    let j = Json::parse(&text)?;
+    let rows = j.req("rows")?.as_arr().context("rows must be an array")?;
+    let mut out = BTreeMap::new();
+    for row in rows {
+        if row.get("status").and_then(Json::as_str) != Some("ok") {
+            continue;
+        }
+        let h = row.req("config_hash")?.as_str().context("config_hash must be a string")?;
+        out.insert(h.to_string(), row.clone());
+    }
+    Ok(out)
+}

@@ -1,0 +1,57 @@
+//! Declarative sweep & results API — the single experiment-driving layer
+//! behind every `bench` suite.
+//!
+//! A [`SweepSpec`] declares named [`Axis`] values (algorithm, workers,
+//! straggler process, churn scenario, adapt mode, seeds, or arbitrary
+//! [`crate::config::ExperimentConfig`] patches) with cross-product and
+//! [`Axis::zip`] combinators and built-in `--quick`/`--full` tier
+//! scaling.  The executor ([`run_suite`]) lowers the spec onto the
+//! panic-contained parallel sweep
+//! ([`crate::coordinator::run_sweep_with_threads`]), streams each
+//! finished cell to pluggable [`ResultSink`]s (aligned tables, CSV, and
+//! a canonical machine-readable `BENCH_<suite>.json` per suite),
+//! computes the shared derived metrics once (`time_to_target`,
+//! `mb_to_target`, `speedup` vs a baseline cell), and supports
+//! deterministic `--resume` by skipping cells whose config hash already
+//! exists in the output JSON.  A failed cell becomes an `err` record and
+//! renders as `err`/`n/a` — it never aborts the sweep.
+//!
+//! ## Suite reference
+//!
+//! Every paper table/figure is one registered suite of the `bench`
+//! multiplexer binary (`bench list` prints the same mapping):
+//!
+//! ```text
+//! paper artifact            invocation            notes
+//! ------------------------  --------------------  --------------------------------
+//! Tables 1/8 (Table 10)     bench accuracy        --iid=1 for Table 10
+//! Tables 2/9 (Table 11)     bench timebudget      --iid=1 for Table 11
+//! Figures 3-4               bench loss_curves     also writes per-cell curve CSVs
+//! Figure 5(a)+(b)           bench speedup         --target=0.45 sets the accuracy
+//! Figures 9-12              bench ablation        --iid=1 / --budget=1 pick the fig
+//! DESIGN.md §5 ablation     bench fixedk          fixed-k vs adaptive group sizing
+//! churn grid (ROADMAP)      bench churn           scenario x algorithm
+//! joint grid (ROADMAP)      bench straggler       process x churn x algorithm
+//! partition grid (ROADMAP)  bench partition       repair/blind/aware x algorithm
+//! ```
+//!
+//! `bench all --quick` runs every suite's smoke grid (the CI perf
+//! trajectory); `--resume` re-runs only the missing cells and produces
+//! byte-identical artifacts to a cold run.  The legacy `bench_*`
+//! binaries remain as thin shims for one release.
+
+pub mod cli;
+mod exec;
+mod record;
+mod sink;
+mod spec;
+pub mod suites;
+pub mod table;
+
+pub use exec::{default_sinks, json_path, run_suite, run_suite_with_sinks, SuiteRun};
+pub use record::{attach_speedup, RunRecord};
+pub use sink::{JsonSink, ProgressSink, ResultSink, SinkCtx, TableSink, SCHEMA};
+pub use spec::{
+    config_hash, Axis, AxisValue, Cell, Column, Fmt, Patch, SweepSpec, TableShape, TableSpec,
+    Targets, Tier,
+};

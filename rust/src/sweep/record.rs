@@ -1,0 +1,230 @@
+//! Canonical per-cell result records: the serializable unit every
+//! [`crate::sweep::ResultSink`] consumes and `BENCH_<suite>.json` stores.
+//!
+//! A [`RunRecord`] is either a metrics map distilled from a
+//! [`RunSummary`] (status `ok`) or a contained failure (status `err`) —
+//! one failed cell renders as `err`/`n/a` and never aborts the sweep.
+//! Records round-trip through JSON byte-identically, which is what makes
+//! `--resume` produce output indistinguishable from a cold run.
+
+use crate::engine::RunSummary;
+use crate::sweep::spec::{Cell, Targets};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// One sweep cell's outcome.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    /// `(axis name, value label)` in axis order.
+    pub labels: Vec<(String, String)>,
+    /// The cell's stable config hash (the resume key).
+    pub config_hash: String,
+    /// `None` for a completed run; the error text otherwise.
+    pub error: Option<String>,
+    /// Named metrics (`Json::Null` for unreached targets).
+    pub metrics: BTreeMap<String, Json>,
+}
+
+/// Finite numbers serialize as numbers; NaN/inf (empty curves) as null.
+fn num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+fn opt(v: Option<f64>) -> Json {
+    match v {
+        Some(v) => num(v),
+        None => Json::Null,
+    }
+}
+
+impl RunRecord {
+    /// Did the cell complete?
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
+
+    /// Label of a named axis.
+    pub fn label(&self, axis: &str) -> Option<&str> {
+        self.labels.iter().find(|(n, _)| n == axis).map(|(_, v)| v.as_str())
+    }
+
+    /// Numeric metric lookup (`None` for missing/null/err).
+    pub fn metric_f64(&self, key: &str) -> Option<f64> {
+        self.metrics.get(key).and_then(Json::as_f64)
+    }
+
+    /// Distill a completed run into the shared metric set, computing the
+    /// derived target metrics once for every suite.
+    pub fn from_summary(cell: &Cell, targets: Targets, s: &RunSummary) -> Self {
+        let r = &s.recorder;
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("iterations".into(), num(s.iterations as f64));
+        m.insert("virtual_time".into(), num(s.virtual_time));
+        m.insert("final_loss".into(), num(s.final_loss() as f64));
+        m.insert("final_accuracy".into(), num(s.final_accuracy() as f64));
+        m.insert("best_accuracy".into(), num(r.best_accuracy() as f64));
+        m.insert("consensus_gap".into(), num(s.consensus_gap as f64));
+        m.insert("total_bytes".into(), num(r.total_bytes() as f64));
+        m.insert("mean_group_size".into(), num(r.mean_group_size()));
+        m.insert("straggler_pct".into(), num(100.0 * s.straggler_fraction));
+        m.insert("stall_fallbacks".into(), num(r.stall_fallbacks as f64));
+        m.insert("epochs_completed".into(), num(s.epochs_completed as f64));
+        m.insert("topology_changes".into(), num(r.topology_changes as f64));
+        m.insert("mutations_applied".into(), num(r.mutations_applied as f64));
+        m.insert("mutations_deferred".into(), num(r.mutations_deferred as f64));
+        m.insert("partition_splits".into(), num(r.partition_splits as f64));
+        m.insert("partition_merges".into(), num(r.partition_merges as f64));
+        m.insert("max_components".into(), num(r.max_components as f64));
+        m.insert("component_epochs".into(), num(r.component_epochs as f64));
+        m.insert("epoch_restarts".into(), num(r.epoch_restarts as f64));
+        m.insert("partitioned_gossips".into(), num(r.partitioned_gossips as f64));
+        m.insert("loss_q25".into(), num(r.loss_at_fraction(0.25) as f64));
+        m.insert("loss_q50".into(), num(r.loss_at_fraction(0.5) as f64));
+        m.insert("loss_q100".into(), num(r.loss_at_fraction(1.0) as f64));
+        m.insert(
+            "iters_per_vsec".into(),
+            num(s.iterations as f64 / s.virtual_time.max(1e-9)),
+        );
+        if let Some(target) = targets.accuracy {
+            m.insert("time_to_target".into(), opt(r.time_to_accuracy(target)));
+            // Fig 5b framing: communication *to reach the target*, falling
+            // back to total traffic when the target was never hit.
+            let bytes = r.bytes_to_accuracy(target).unwrap_or_else(|| r.total_bytes());
+            m.insert("mb_to_target".into(), num(bytes as f64 / 1e6));
+        }
+        if let Some(target) = targets.loss {
+            m.insert("time_to_loss_target".into(), opt(r.time_to_loss(target)));
+        }
+        RunRecord {
+            labels: cell.labels.clone(),
+            config_hash: cell.hash.clone(),
+            error: None,
+            metrics: m,
+        }
+    }
+
+    /// Record a contained per-cell failure.
+    pub fn from_error(cell: &Cell, msg: &str) -> Self {
+        RunRecord {
+            labels: cell.labels.clone(),
+            config_hash: cell.hash.clone(),
+            error: Some(msg.to_string()),
+            metrics: BTreeMap::new(),
+        }
+    }
+
+    /// Serialize as one `rows[]` entry of `BENCH_<suite>.json`.
+    pub fn to_json(&self) -> Json {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("config_hash".into(), Json::from(self.config_hash.as_str()));
+        let mut lm: BTreeMap<String, Json> = BTreeMap::new();
+        for (k, v) in &self.labels {
+            lm.insert(k.clone(), Json::from(v.as_str()));
+        }
+        m.insert("labels".into(), Json::Obj(lm));
+        match &self.error {
+            None => {
+                m.insert("status".into(), Json::from("ok"));
+            }
+            Some(e) => {
+                m.insert("status".into(), Json::from("err"));
+                m.insert("error".into(), Json::from(e.as_str()));
+            }
+        }
+        m.insert("metrics".into(), Json::Obj(self.metrics.clone()));
+        Json::Obj(m)
+    }
+
+    /// Rebuild a record from a stored row for the matching `cell`
+    /// (labels and hash come from the cell — the hash match is what
+    /// paired them up).
+    pub fn from_json(cell: &Cell, row: &Json) -> Result<Self> {
+        let status = row.req("status")?.as_str().context("status must be a string")?;
+        let error = match status {
+            "ok" => None,
+            "err" => Some(
+                row.get("error").and_then(Json::as_str).unwrap_or("unknown error").to_string(),
+            ),
+            other => bail!("unknown record status {other:?}"),
+        };
+        let metrics = row
+            .req("metrics")?
+            .as_obj()
+            .context("metrics must be an object")?
+            .clone();
+        Ok(RunRecord {
+            labels: cell.labels.clone(),
+            config_hash: cell.hash.clone(),
+            error,
+            metrics,
+        })
+    }
+}
+
+/// Attach the `speedup` derived metric: for every record, the baseline
+/// is the record sharing all labels except `axis`, where it reads
+/// `baseline`; `speedup = t_baseline / t_cell` on `time_to_target`.
+/// Cells (or baselines) that never reached the target get `null`.
+pub fn attach_speedup(records: &mut [RunRecord], axis: &str, baseline: &str) {
+    fn group_key(labels: &[(String, String)], axis: &str) -> Vec<(String, String)> {
+        labels.iter().filter(|(n, _)| n != axis).cloned().collect()
+    }
+    let baselines: Vec<(Vec<(String, String)>, Option<f64>)> = records
+        .iter()
+        .filter(|r| r.label(axis) == Some(baseline))
+        .map(|r| (group_key(&r.labels, axis), r.metric_f64("time_to_target")))
+        .collect();
+    for r in records.iter_mut() {
+        let key = group_key(&r.labels, axis);
+        let t_base = baselines.iter().find(|(k, _)| *k == key).and_then(|(_, t)| *t);
+        let t_cell = r.metric_f64("time_to_target");
+        let v = match (t_base, t_cell) {
+            (Some(tb), Some(tc)) if tc > 0.0 => Json::Num(tb / tc),
+            _ => Json::Null,
+        };
+        r.metrics.insert("speedup".into(), v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(alg: &str, n: &str, t: Option<f64>) -> RunRecord {
+        let mut metrics = BTreeMap::new();
+        metrics.insert("time_to_target".into(), opt(t));
+        RunRecord {
+            labels: vec![("N".into(), n.into()), ("algorithm".into(), alg.into())],
+            config_hash: format!("{alg}-{n}"),
+            error: None,
+            metrics,
+        }
+    }
+
+    #[test]
+    fn speedup_vs_baseline_per_group() {
+        let mut records = vec![
+            rec("DSGD", "8", Some(10.0)),
+            rec("DSGD-AAU", "8", Some(2.0)),
+            rec("DSGD", "16", Some(8.0)),
+            rec("DSGD-AAU", "16", None),
+        ];
+        attach_speedup(&mut records, "algorithm", "DSGD");
+        assert_eq!(records[0].metric_f64("speedup"), Some(1.0));
+        assert_eq!(records[1].metric_f64("speedup"), Some(5.0));
+        assert_eq!(records[2].metric_f64("speedup"), Some(1.0));
+        assert_eq!(records[3].metric_f64("speedup"), None, "unreached target stays null");
+    }
+
+    #[test]
+    fn non_finite_metrics_serialize_as_null() {
+        assert_eq!(num(f64::NAN), Json::Null);
+        assert_eq!(num(f64::INFINITY), Json::Null);
+        assert_eq!(num(1.5), Json::Num(1.5));
+    }
+}

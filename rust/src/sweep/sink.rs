@@ -1,0 +1,280 @@
+//! Pluggable result sinks: each finished cell streams to every sink, and
+//! `finish` renders the suite artifacts — aligned tables, CSVs and the
+//! canonical machine-readable `BENCH_<suite>.json`.
+
+use crate::sweep::record::RunRecord;
+use crate::sweep::spec::{Column, Fmt, SweepSpec, TableShape, TableSpec, Tier};
+use crate::sweep::table::{pm, Table};
+use crate::util::json::Json;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Schema tag of `BENCH_<suite>.json` documents.
+pub const SCHEMA: &str = "dsgd-aau/bench/v1";
+
+/// Context handed to [`ResultSink::finish`].
+pub struct SinkCtx<'a> {
+    /// The suite's spec (tables, notes, titles).
+    pub spec: &'a SweepSpec,
+    /// Grid tier the sweep ran at.
+    pub tier: Tier,
+    /// Output directory for CSV/JSON artifacts.
+    pub out_dir: &'a Path,
+}
+
+/// A consumer of sweep results.
+pub trait ResultSink: Send {
+    /// Called once per freshly finished cell, from the worker thread
+    /// that ran it (resumed cells are not re-streamed).
+    fn on_record(&mut self, record: &RunRecord) -> Result<()> {
+        let _ = record;
+        Ok(())
+    }
+
+    /// Called once after the whole sweep with every record (resumed and
+    /// fresh) in deterministic cell order, derived metrics attached.
+    fn finish(&mut self, ctx: &SinkCtx<'_>, records: &[RunRecord]) -> Result<()>;
+}
+
+/// Streams one progress line per finished cell.
+pub struct ProgressSink {
+    prefix: String,
+}
+
+impl ProgressSink {
+    /// Progress lines tagged `[bench <suite>]`.
+    pub fn for_suite(suite: &str) -> Self {
+        ProgressSink { prefix: format!("[bench {suite}]") }
+    }
+}
+
+impl ResultSink for ProgressSink {
+    fn on_record(&mut self, record: &RunRecord) -> Result<()> {
+        let labels: Vec<String> =
+            record.labels.iter().map(|(n, v)| format!("{n}={v}")).collect();
+        match &record.error {
+            None => println!("{} done {}", self.prefix, labels.join(" ")),
+            Some(e) => println!("{} FAILED {} ({e})", self.prefix, labels.join(" ")),
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self, _ctx: &SinkCtx<'_>, _records: &[RunRecord]) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Renders the spec's tables to stdout and writes their CSVs.
+pub struct TableSink;
+
+impl ResultSink for TableSink {
+    fn finish(&mut self, ctx: &SinkCtx<'_>, records: &[RunRecord]) -> Result<()> {
+        println!("\n{}\n", ctx.spec.title);
+        for ts in &ctx.spec.tables {
+            let table = render_table(ts, records);
+            print!("{}", table.render());
+            let csv_name = if ts.name.is_empty() {
+                ctx.spec.suite.clone()
+            } else {
+                format!("{}_{}", ctx.spec.suite, ts.name)
+            };
+            let path = table.write_csv(ctx.out_dir, &csv_name)?;
+            println!("wrote {}\n", path.display());
+        }
+        if let Some(notes) = &ctx.spec.notes {
+            println!("{notes}");
+        }
+        Ok(())
+    }
+}
+
+/// Writes the canonical machine-readable `BENCH_<suite>.json`.
+pub struct JsonSink {
+    path: PathBuf,
+}
+
+impl JsonSink {
+    /// Sink writing to `path`.
+    pub fn at(path: PathBuf) -> Self {
+        JsonSink { path }
+    }
+}
+
+impl ResultSink for JsonSink {
+    fn finish(&mut self, ctx: &SinkCtx<'_>, records: &[RunRecord]) -> Result<()> {
+        let mut root: BTreeMap<String, Json> = BTreeMap::new();
+        root.insert("schema".into(), Json::from(SCHEMA));
+        root.insert("bench".into(), Json::from(ctx.spec.suite.as_str()));
+        root.insert("tier".into(), Json::from(ctx.tier.token()));
+        root.insert("rows".into(), Json::Arr(records.iter().map(|r| r.to_json()).collect()));
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(&self.path, Json::Obj(root).to_string_compact())?;
+        println!("wrote {}", self.path.display());
+        Ok(())
+    }
+}
+
+/// Render one table spec over the records.
+pub fn render_table(ts: &TableSpec, records: &[RunRecord]) -> Table {
+    match &ts.shape {
+        TableShape::Long(columns) => render_long(columns, records),
+        TableShape::Pivot { row_axis, col_axis, metric, fmt, scale } => {
+            render_pivot(row_axis, col_axis, metric, *fmt, *scale, records)
+        }
+    }
+}
+
+fn fmt_opt(fmt: Fmt, v: Option<f64>, scale: f64) -> String {
+    match v {
+        Some(v) if v.is_finite() => fmt.format(v * scale),
+        _ => "n/a".into(),
+    }
+}
+
+fn render_long(columns: &[Column], records: &[RunRecord]) -> Table {
+    let mut headers: Vec<String> = records
+        .first()
+        .map(|r| r.labels.iter().map(|(n, _)| n.clone()).collect())
+        .unwrap_or_default();
+    headers.extend(columns.iter().map(|c| c.header.clone()));
+    let mut t = Table::from_headers(headers);
+    for r in records {
+        let mut row: Vec<String> = r.labels.iter().map(|(_, v)| v.clone()).collect();
+        for c in columns {
+            if r.is_ok() {
+                row.push(fmt_opt(c.fmt, r.metric_f64(&c.metric), 1.0));
+            } else {
+                row.push("err".into());
+            }
+        }
+        t.row(row);
+    }
+    t
+}
+
+fn render_pivot(
+    row_axis: &str,
+    col_axis: &str,
+    metric: &str,
+    fmt: Fmt,
+    scale: f64,
+    records: &[RunRecord],
+) -> Table {
+    let mut row_labels: Vec<String> = Vec::new();
+    let mut col_labels: Vec<String> = Vec::new();
+    let mut buckets: BTreeMap<(String, String), Vec<&RunRecord>> = BTreeMap::new();
+    for r in records {
+        let (Some(rl), Some(cl)) = (r.label(row_axis), r.label(col_axis)) else { continue };
+        if !row_labels.iter().any(|l| l == rl) {
+            row_labels.push(rl.to_string());
+        }
+        if !col_labels.iter().any(|l| l == cl) {
+            col_labels.push(cl.to_string());
+        }
+        buckets.entry((rl.to_string(), cl.to_string())).or_default().push(r);
+    }
+    let mut headers = vec![row_axis.to_string()];
+    headers.extend(col_labels.iter().cloned());
+    let mut t = Table::from_headers(headers);
+    for rl in &row_labels {
+        let mut row = vec![rl.clone()];
+        for cl in &col_labels {
+            let cell = match buckets.get(&(rl.clone(), cl.clone())) {
+                None => String::new(),
+                Some(recs) => pivot_cell(recs, metric, fmt, scale),
+            };
+            row.push(cell);
+        }
+        t.row(row);
+    }
+    t
+}
+
+fn pivot_cell(recs: &[&RunRecord], metric: &str, fmt: Fmt, scale: f64) -> String {
+    if recs.iter().any(|r| !r.is_ok()) {
+        return "err".into();
+    }
+    let mut vals = Vec::with_capacity(recs.len());
+    for r in recs {
+        match r.metric_f64(metric) {
+            Some(v) if v.is_finite() => vals.push(v),
+            _ => return "n/a".into(),
+        }
+    }
+    match vals.len() {
+        0 => "n/a".into(),
+        1 => fmt.format(vals[0] * scale),
+        _ => {
+            let (m, s) = crate::coordinator::mean_std(&vals);
+            pm(m * scale, s * scale)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::spec::TableSpec;
+
+    fn rec(scn: &str, alg: &str, loss: f64, acc: Option<f64>) -> RunRecord {
+        let mut metrics = BTreeMap::new();
+        metrics.insert("final_loss".into(), Json::Num(loss));
+        metrics.insert(
+            "best_accuracy".into(),
+            acc.map(Json::Num).unwrap_or(Json::Null),
+        );
+        RunRecord {
+            labels: vec![("scenario".into(), scn.into()), ("algorithm".into(), alg.into())],
+            config_hash: format!("{scn}/{alg}"),
+            error: None,
+            metrics,
+        }
+    }
+
+    #[test]
+    fn long_table_renders_labels_metrics_and_err_cells() {
+        let mut records = vec![rec("a", "AGP", 0.5, Some(0.4)), rec("b", "AGP", 0.25, None)];
+        records.push(RunRecord {
+            labels: vec![("scenario".into(), "c".into()), ("algorithm".into(), "AGP".into())],
+            config_hash: "c/AGP".into(),
+            error: Some("boom".into()),
+            metrics: BTreeMap::new(),
+        });
+        let ts = TableSpec::long(
+            "",
+            vec![
+                Column::new("loss", "final_loss", Fmt::F4),
+                Column::new("acc", "best_accuracy", Fmt::Pct),
+            ],
+        );
+        let t = render_table(&ts, &records);
+        assert_eq!(t.headers, vec!["scenario", "algorithm", "loss", "acc"]);
+        assert_eq!(t.rows[0], vec!["a", "AGP", "0.5000", "40.00%"]);
+        assert_eq!(t.rows[1][3], "n/a", "null metric renders n/a");
+        assert_eq!(t.rows[2][2], "err", "failed cell renders err, sweep continues");
+    }
+
+    #[test]
+    fn pivot_aggregates_mean_std_over_extra_axes() {
+        let mut records = Vec::new();
+        for (seed, loss) in [("0", 1.0), ("1", 3.0)] {
+            let mut r = rec("a", "AGP", loss, None);
+            r.labels.push(("seed".into(), seed.into()));
+            r.config_hash = format!("a/AGP/{seed}");
+            records.push(r);
+        }
+        let mut single = rec("a", "Prague", 0.125, None);
+        single.labels.push(("seed".into(), "0".into()));
+        records.push(single);
+        let ts = TableSpec::pivot("", "scenario", "algorithm", "final_loss", Fmt::F4, 1.0);
+        let t = render_table(&ts, &records);
+        assert_eq!(t.headers, vec!["scenario", "AGP", "Prague"]);
+        assert_eq!(t.rows[0][1], "2.00 ± 1.00", "multi-record bucket uses mean ± std");
+        assert_eq!(t.rows[0][2], "0.1250", "singleton bucket uses the column format");
+    }
+}

@@ -1,0 +1,572 @@
+//! Declarative sweep specifications: named [`Axis`] values over
+//! [`ExperimentConfig`] patches, cross-product and zip combinators, and
+//! built-in `--quick`/`--full` tier scaling.
+//!
+//! A [`SweepSpec`] is the declaration the executor
+//! ([`crate::sweep::run_suite`]) lowers onto the panic-contained
+//! parallel sweep: every combination of axis values (plus an optional
+//! seed axis) becomes one [`Cell`] — a fully patched config, its ordered
+//! axis labels and a stable config hash used for `--resume`.
+
+use crate::config::ExperimentConfig;
+use crate::sweep::cli::BenchArgs;
+use crate::util::json::Json;
+use anyhow::{ensure, Result};
+use std::rc::Rc;
+
+/// A config mutation attached to one axis value (or the spec base).
+pub type Patch = Rc<dyn Fn(&mut ExperimentConfig)>;
+
+/// Grid tier selected by `--quick`/`--full` (default: neither).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Smallest grid that still covers every axis (the CI smoke tier).
+    Quick,
+    /// The development-scale grid (no flag).
+    Default,
+    /// Paper-scale grid (`--full`).
+    Full,
+}
+
+impl Tier {
+    /// Stable token used in the `BENCH_<suite>.json` header.
+    pub fn token(self) -> &'static str {
+        match self {
+            Tier::Quick => "quick",
+            Tier::Default => "default",
+            Tier::Full => "full",
+        }
+    }
+
+    /// Pick a per-tier scalar (budget, fleet size, iteration count...).
+    pub fn pick<T>(self, quick: T, default_: T, full: T) -> T {
+        match self {
+            Tier::Quick => quick,
+            Tier::Default => default_,
+            Tier::Full => full,
+        }
+    }
+}
+
+fn tier_index(t: Tier) -> usize {
+    match t {
+        Tier::Quick => 0,
+        Tier::Default => 1,
+        Tier::Full => 2,
+    }
+}
+
+/// One labelled value on an axis.
+#[derive(Clone)]
+pub struct AxisValue {
+    /// Display label (table cell / JSON `labels` entry).
+    pub label: String,
+    patch: Patch,
+}
+
+impl AxisValue {
+    /// New value: `label` plus the config mutation it stands for.
+    pub fn new(label: impl Into<String>, f: impl Fn(&mut ExperimentConfig) + 'static) -> Self {
+        AxisValue { label: label.into(), patch: Rc::new(f) }
+    }
+
+    /// Apply the value's config patch.
+    pub fn apply(&self, cfg: &mut ExperimentConfig) {
+        (self.patch.as_ref())(cfg)
+    }
+}
+
+/// A named sweep axis with per-tier value lists.
+#[derive(Clone)]
+pub struct Axis {
+    /// Axis name (table label column / pivot selector).
+    pub name: String,
+    /// Value lists indexed by tier (quick, default, full).
+    lists: [Vec<AxisValue>; 3],
+}
+
+impl Axis {
+    /// Axis with the same values at every tier.
+    pub fn list(name: &str, values: Vec<AxisValue>) -> Axis {
+        Axis { name: name.to_string(), lists: [values.clone(), values.clone(), values] }
+    }
+
+    /// Axis with explicitly declared per-tier value lists.
+    pub fn tiered(
+        name: &str,
+        quick: Vec<AxisValue>,
+        default_: Vec<AxisValue>,
+        full: Vec<AxisValue>,
+    ) -> Axis {
+        Axis { name: name.to_string(), lists: [quick, default_, full] }
+    }
+
+    /// Numeric axis: per-tier value slices sharing one `f(cfg, v)` patch.
+    pub fn from_numbers<T, F>(name: &str, quick: &[T], default_: &[T], full: &[T], f: F) -> Axis
+    where
+        T: Copy + std::fmt::Display + 'static,
+        F: Fn(&mut ExperimentConfig, T) + Clone + 'static,
+    {
+        let mk = |vals: &[T]| -> Vec<AxisValue> {
+            vals.iter()
+                .map(|&v| {
+                    let g = f.clone();
+                    AxisValue::new(v.to_string(), move |cfg: &mut ExperimentConfig| g(cfg, v))
+                })
+                .collect()
+        };
+        Axis { name: name.to_string(), lists: [mk(quick), mk(default_), mk(full)] }
+    }
+
+    /// The axis values at `tier`.
+    pub fn values(&self, tier: Tier) -> &[AxisValue] {
+        &self.lists[tier_index(tier)]
+    }
+
+    /// Zip combinator: advance two axes in lockstep (labels joined with
+    /// `|`, both patches applied).  Errors when any tier's lists differ
+    /// in length.
+    pub fn zip(self, other: Axis) -> Result<Axis> {
+        let mut lists = [Vec::new(), Vec::new(), Vec::new()];
+        for (i, out) in lists.iter_mut().enumerate() {
+            ensure!(
+                self.lists[i].len() == other.lists[i].len(),
+                "zip: axes {} ({}) and {} ({}) differ in length",
+                self.name,
+                self.lists[i].len(),
+                other.name,
+                other.lists[i].len()
+            );
+            for (a, b) in self.lists[i].iter().zip(&other.lists[i]) {
+                let pa = a.patch.clone();
+                let pb = b.patch.clone();
+                out.push(AxisValue {
+                    label: format!("{}|{}", a.label, b.label),
+                    patch: Rc::new(move |cfg: &mut ExperimentConfig| {
+                        (pa.as_ref())(cfg);
+                        (pb.as_ref())(cfg);
+                    }),
+                });
+            }
+        }
+        Ok(Axis { name: format!("{}+{}", self.name, other.name), lists })
+    }
+}
+
+/// Derived-metric targets shared by the whole suite (computed once by the
+/// executor instead of per-binary).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Targets {
+    /// Accuracy threshold for `time_to_target` / `mb_to_target`.
+    pub accuracy: Option<f32>,
+    /// Loss threshold for `time_to_loss_target`.
+    pub loss: Option<f32>,
+}
+
+/// Numeric cell formatting for rendered tables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fmt {
+    /// Integer.
+    Int,
+    /// One decimal.
+    F1,
+    /// Two decimals.
+    F2,
+    /// Four decimals.
+    F4,
+    /// Scientific, two decimals.
+    Sci2,
+    /// Percent of a [0, 1] fraction (`45.43%`).
+    Pct,
+    /// Speedup factor (`1.23x`).
+    Speedup,
+}
+
+impl Fmt {
+    /// Render one value.
+    pub fn format(self, v: f64) -> String {
+        match self {
+            Fmt::Int => format!("{}", v as i64),
+            Fmt::F1 => format!("{:.1}", v),
+            Fmt::F2 => format!("{:.2}", v),
+            Fmt::F4 => format!("{:.4}", v),
+            Fmt::Sci2 => format!("{:.2e}", v),
+            Fmt::Pct => crate::sweep::table::pct(v),
+            Fmt::Speedup => format!("{:.2}x", v),
+        }
+    }
+}
+
+/// One metric column of a long-form table.
+#[derive(Debug, Clone)]
+pub struct Column {
+    /// Column header.
+    pub header: String,
+    /// [`crate::sweep::RunRecord`] metric key.
+    pub metric: String,
+    /// Cell formatting.
+    pub fmt: Fmt,
+}
+
+impl Column {
+    /// New column.
+    pub fn new(header: &str, metric: &str, fmt: Fmt) -> Self {
+        Column { header: header.to_string(), metric: metric.to_string(), fmt }
+    }
+}
+
+/// Shape of a rendered results table.
+#[derive(Clone)]
+pub enum TableShape {
+    /// One row per cell: axis label columns plus metric columns.
+    Long(Vec<Column>),
+    /// Paper-style pivot: `row_axis` values down, `col_axis` values
+    /// across, one metric per cell.  Buckets holding several records
+    /// (e.g. a seed axis) render as `mean ± std` (scaled); singleton
+    /// buckets use `fmt`.
+    Pivot {
+        /// Axis providing the row labels.
+        row_axis: String,
+        /// Axis providing the column headers.
+        col_axis: String,
+        /// Metric key aggregated into each cell.
+        metric: String,
+        /// Singleton-bucket formatting.
+        fmt: Fmt,
+        /// Multiplier applied before formatting (e.g. 100 for percent).
+        scale: f64,
+    },
+}
+
+/// A named table of a suite (the CSV is `<suite>_<name>.csv`, or
+/// `<suite>.csv` when the name is empty).
+#[derive(Clone)]
+pub struct TableSpec {
+    /// Table name (suffix of the CSV file).
+    pub name: String,
+    /// Rendered shape.
+    pub shape: TableShape,
+}
+
+impl TableSpec {
+    /// Long-form table.
+    pub fn long(name: &str, columns: Vec<Column>) -> Self {
+        TableSpec { name: name.to_string(), shape: TableShape::Long(columns) }
+    }
+
+    /// Pivot table.
+    pub fn pivot(
+        name: &str,
+        row_axis: &str,
+        col_axis: &str,
+        metric: &str,
+        fmt: Fmt,
+        scale: f64,
+    ) -> Self {
+        TableSpec {
+            name: name.to_string(),
+            shape: TableShape::Pivot {
+                row_axis: row_axis.to_string(),
+                col_axis: col_axis.to_string(),
+                metric: metric.to_string(),
+                fmt,
+                scale,
+            },
+        }
+    }
+}
+
+/// One lowered grid cell: ordered axis labels, the patched config and a
+/// stable hash of its JSON form (the `--resume` key).
+#[derive(Clone)]
+pub struct Cell {
+    /// `(axis name, value label)` in axis-declaration order.
+    pub labels: Vec<(String, String)>,
+    /// Fully patched experiment config.
+    pub cfg: ExperimentConfig,
+    /// FNV-1a hash of `cfg.to_json()` (16 hex digits).
+    pub hash: String,
+}
+
+/// Declarative sweep: base config, axes, targets and result tables.
+pub struct SweepSpec {
+    /// Suite name (`bench <suite>`, `BENCH_<suite>.json`).
+    pub suite: String,
+    /// Heading printed above the tables.
+    pub title: String,
+    base: Patch,
+    axes: Vec<Axis>,
+    seed_base: Option<u64>,
+    /// Derived-metric targets.
+    pub targets: Targets,
+    /// Compute a `speedup` metric vs the cell with this `(axis, label)`
+    /// in each group of otherwise-identical labels.
+    pub speedup_baseline: Option<(String, String)>,
+    /// Tables rendered (and CSV'd) from the records.
+    pub tables: Vec<TableSpec>,
+    /// Free-form reading notes printed after the tables.
+    pub notes: Option<String>,
+    /// Write each fresh cell's loss curve as `<suite>_curve_<labels>.csv`.
+    pub curve_csvs: bool,
+    #[allow(clippy::type_complexity)]
+    setup: Option<Box<dyn Fn(&BenchArgs) -> Result<()>>>,
+    consumed: Vec<String>,
+}
+
+impl SweepSpec {
+    /// New spec with a base config patch applied before any axis value.
+    pub fn new(suite: &str, title: &str, base: impl Fn(&mut ExperimentConfig) + 'static) -> Self {
+        SweepSpec {
+            suite: suite.to_string(),
+            title: title.to_string(),
+            base: Rc::new(base),
+            axes: Vec::new(),
+            seed_base: None,
+            targets: Targets::default(),
+            speedup_baseline: None,
+            tables: Vec::new(),
+            notes: None,
+            curve_csvs: false,
+            setup: None,
+            consumed: Vec::new(),
+        }
+    }
+
+    /// Append an axis (first axis varies slowest).
+    pub fn axis(mut self, a: Axis) -> Self {
+        self.axes.push(a);
+        self
+    }
+
+    /// Append an innermost `seed` axis: `--seeds K` cells with
+    /// `cfg.seed = base + s`.
+    pub fn with_seeds(mut self, base: u64) -> Self {
+        self.seed_base = Some(base);
+        self
+    }
+
+    /// Accuracy target for the shared derived metrics.
+    pub fn target_accuracy(mut self, t: f32) -> Self {
+        self.targets.accuracy = Some(t);
+        self
+    }
+
+    /// Loss target for the shared derived metrics.
+    pub fn target_loss(mut self, t: f32) -> Self {
+        self.targets.loss = Some(t);
+        self
+    }
+
+    /// Derive `speedup` against the `(axis, label)` baseline cell.
+    pub fn speedup_vs(mut self, axis: &str, label: &str) -> Self {
+        self.speedup_baseline = Some((axis.to_string(), label.to_string()));
+        self
+    }
+
+    /// Append a result table.
+    pub fn table(mut self, t: TableSpec) -> Self {
+        self.tables.push(t);
+        self
+    }
+
+    /// Reading notes printed after the tables.
+    pub fn notes(mut self, s: &str) -> Self {
+        self.notes = Some(s.to_string());
+        self
+    }
+
+    /// Write per-cell loss-curve CSVs.
+    pub fn curves(mut self) -> Self {
+        self.curve_csvs = true;
+        self
+    }
+
+    /// One-time setup hook run before the sweep (e.g. materializing a
+    /// straggler trace into the output directory).
+    pub fn setup(mut self, f: impl Fn(&BenchArgs) -> Result<()> + 'static) -> Self {
+        self.setup = Some(Box::new(f));
+        self
+    }
+
+    /// Declare `--key=value` extras the suite interprets itself; any
+    /// other extra must name an [`ExperimentConfig`] key.
+    pub fn consumes(mut self, keys: &[&str]) -> Self {
+        self.consumed.extend(keys.iter().map(|k| k.to_string()));
+        self
+    }
+
+    /// Run the setup hook, if any.
+    pub fn run_setup(&self, args: &BenchArgs) -> Result<()> {
+        if let Some(setup) = &self.setup {
+            (setup.as_ref())(args)?;
+        }
+        Ok(())
+    }
+
+    /// Lower the spec into its ordered cell grid for `args`' tier:
+    /// row-major cross product over the axes (first axis outermost, the
+    /// seed axis innermost), deterministic and order-stable.
+    pub fn lower(&self, args: &BenchArgs) -> Result<Vec<Cell>> {
+        let tier = args.tier()?;
+        let mut axes: Vec<Axis> = self.axes.clone();
+        if let Some(base) = self.seed_base {
+            ensure!(args.seeds >= 1, "--seeds must be at least 1");
+            let vals: Vec<AxisValue> = (0..args.seeds)
+                .map(|s| {
+                    AxisValue::new(s.to_string(), move |cfg: &mut ExperimentConfig| {
+                        cfg.seed = base + s
+                    })
+                })
+                .collect();
+            axes.push(Axis::list("seed", vals));
+        }
+        ensure!(!axes.is_empty(), "spec {} declares no axes", self.suite);
+        {
+            let mut names = std::collections::BTreeSet::new();
+            for ax in &axes {
+                ensure!(names.insert(ax.name.clone()), "duplicate axis name {}", ax.name);
+                ensure!(
+                    !ax.values(tier).is_empty(),
+                    "axis {} has no values at tier {}",
+                    ax.name,
+                    tier.token()
+                );
+            }
+        }
+
+        let k = axes.len();
+        let mut idx = vec![0usize; k];
+        let mut cells = Vec::new();
+        'grid: loop {
+            let mut cfg = ExperimentConfig::default();
+            (self.base.as_ref())(&mut cfg);
+            let mut labels = Vec::with_capacity(k);
+            for (a, ax) in axes.iter().enumerate() {
+                let v = &ax.values(tier)[idx[a]];
+                v.apply(&mut cfg);
+                labels.push((ax.name.clone(), v.label.clone()));
+            }
+            for (key, raw) in &args.extra {
+                if self.consumed.iter().any(|c| c == key) {
+                    continue;
+                }
+                let v = Json::parse(raw).unwrap_or_else(|_| Json::Str(raw.clone()));
+                cfg.apply_kv(key, &v)
+                    .map_err(|e| anyhow::anyhow!("override --{key}={raw}: {e}"))?;
+            }
+            args.apply(&mut cfg)?;
+            cfg.name = cell_name(&self.suite, &labels);
+            let hash = config_hash(&cfg);
+            cells.push(Cell { labels, cfg, hash });
+
+            // odometer: last axis increments fastest
+            let mut a = k;
+            loop {
+                if a == 0 {
+                    break 'grid;
+                }
+                a -= 1;
+                idx[a] += 1;
+                if idx[a] < axes[a].values(tier).len() {
+                    break;
+                }
+                idx[a] = 0;
+            }
+        }
+
+        // Two cells with identical configs (ignoring the label-bearing
+        // name) mean an axis collapsed — usually a `--key=value` override
+        // clobbering an axis-set field, which would silently render a
+        // fake table of N identical experiments.
+        let mut seen = std::collections::BTreeMap::new();
+        for c in &cells {
+            let mut anon = c.cfg.clone();
+            anon.name.clear();
+            if let Some(first) = seen.insert(config_hash(&anon), c.cfg.name.clone()) {
+                anyhow::bail!(
+                    "cells {:?} and {:?} lower to identical experiments — \
+                     an override (--key=value) probably collapsed an axis",
+                    first,
+                    c.cfg.name
+                );
+            }
+        }
+        Ok(cells)
+    }
+}
+
+fn cell_name(suite: &str, labels: &[(String, String)]) -> String {
+    let parts: Vec<String> = labels.iter().map(|(n, v)| format!("{n}={v}")).collect();
+    format!("{suite}:{}", parts.join(","))
+}
+
+/// Stable config hash: FNV-1a over the compact JSON form.
+pub fn config_hash(cfg: &ExperimentConfig) -> String {
+    let text = cfg.to_json().to_string_compact();
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in text.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    format!("{h:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_pick_and_tokens() {
+        assert_eq!(Tier::Quick.pick(1, 2, 3), 1);
+        assert_eq!(Tier::Default.pick(1, 2, 3), 2);
+        assert_eq!(Tier::Full.pick(1, 2, 3), 3);
+        assert_eq!(Tier::Quick.token(), "quick");
+        assert_eq!(Tier::Full.token(), "full");
+    }
+
+    #[test]
+    fn numeric_axis_tiers() {
+        let ax = Axis::from_numbers("N", &[4usize], &[4, 8], &[8, 16, 32], |cfg, n| {
+            cfg.num_workers = n
+        });
+        assert_eq!(ax.values(Tier::Quick).len(), 1);
+        assert_eq!(ax.values(Tier::Default).len(), 2);
+        assert_eq!(ax.values(Tier::Full).len(), 3);
+        let mut cfg = ExperimentConfig::default();
+        ax.values(Tier::Full)[2].apply(&mut cfg);
+        assert_eq!(cfg.num_workers, 32);
+        assert_eq!(ax.values(Tier::Full)[2].label, "32");
+    }
+
+    #[test]
+    fn zip_combines_labels_and_patches() {
+        let a = Axis::from_numbers("N", &[4usize, 8], &[4, 8], &[4, 8], |cfg, n| {
+            cfg.num_workers = n
+        });
+        let b = Axis::from_numbers("eval", &[5u64, 10], &[5, 10], &[5, 10], |cfg, e| {
+            cfg.eval_every = e
+        });
+        let z = a.zip(b).unwrap();
+        assert_eq!(z.name, "N+eval");
+        assert_eq!(z.values(Tier::Default).len(), 2);
+        assert_eq!(z.values(Tier::Default)[1].label, "8|10");
+        let mut cfg = ExperimentConfig::default();
+        z.values(Tier::Default)[1].apply(&mut cfg);
+        assert_eq!((cfg.num_workers, cfg.eval_every), (8, 10));
+        // mismatched lengths are rejected
+        let a = Axis::from_numbers("N", &[4usize], &[4], &[4], |cfg, n| cfg.num_workers = n);
+        let b = Axis::from_numbers("eval", &[5u64, 10], &[5, 10], &[5, 10], |cfg, e| {
+            cfg.eval_every = e
+        });
+        assert!(a.zip(b).is_err());
+    }
+
+    #[test]
+    fn config_hash_stable_and_name_sensitive() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(config_hash(&cfg), config_hash(&cfg));
+        let mut other = ExperimentConfig::default();
+        other.name = "different".into();
+        assert_ne!(config_hash(&cfg), config_hash(&other));
+    }
+}

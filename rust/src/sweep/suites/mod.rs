@@ -1,0 +1,31 @@
+//! The registered bench suites: each paper table/figure (plus the
+//! ROADMAP's churn/straggler/partition grids) as a ~30-line [`SweepSpec`]
+//! declaration.  The registry lives in [`crate::sweep::cli`].
+
+mod paper;
+mod scenarios;
+
+pub use paper::{ablation, accuracy, fixedk, loss_curves, speedup, timebudget};
+pub use scenarios::{churn, partition, straggler};
+
+use crate::algorithms::AlgorithmKind;
+use crate::config::ExperimentConfig;
+use crate::sweep::cli::BenchArgs;
+use crate::sweep::spec::{Axis, AxisValue};
+
+/// Algorithm axis labelled with the paper's column names.
+pub(crate) fn alg_axis(algs: &[AlgorithmKind]) -> Axis {
+    Axis::list(
+        "algorithm",
+        algs.iter()
+            .map(|&a| {
+                AxisValue::new(a.label(), move |cfg: &mut ExperimentConfig| cfg.algorithm = a)
+            })
+            .collect(),
+    )
+}
+
+/// `--key=1` boolean extras (e.g. `--iid=1`).
+pub(crate) fn flag(args: &BenchArgs, key: &str) -> bool {
+    args.extra.get(key).map(|v| v == "1").unwrap_or(false)
+}

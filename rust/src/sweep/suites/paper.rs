@@ -1,0 +1,277 @@
+//! Paper-evaluation suites (§6): accuracy/timebudget tables, loss
+//! curves, the speedup figure and the ablation grids — each one a
+//! declarative [`SweepSpec`] over the shared executor.
+
+use super::{alg_axis, flag};
+use crate::algorithms::AlgorithmKind;
+use crate::config::{BackendKind, ExperimentConfig};
+use crate::sweep::cli::BenchArgs;
+use crate::sweep::spec::{Axis, AxisValue, Column, Fmt, SweepSpec, TableSpec};
+use anyhow::Result;
+
+fn model_values(names: &[&str]) -> Vec<AxisValue> {
+    names
+        .iter()
+        .map(|&name| {
+            let name = name.to_string();
+            let set = name.clone();
+            AxisValue::new(name, move |cfg: &mut ExperimentConfig| cfg.model = set.clone())
+        })
+        .collect()
+}
+
+/// Tables 1/8 (non-IID) and 10 (`--iid=1`): final accuracy of every
+/// algorithm across the model ladder at a fixed worker count.
+pub fn accuracy(args: &BenchArgs) -> Result<SweepSpec> {
+    let tier = args.tier()?;
+    let iid = flag(args, "iid");
+    let n = tier.pick(8usize, 32, 128);
+    let budget = tier.pick(15.0, 120.0, 300.0);
+    let samples = tier.pick(2048usize, 4096, 16384);
+    Ok(SweepSpec::new(
+        "accuracy",
+        &format!(
+            "Table 1/8/10 analogue — best accuracy (%), N={n}, {} data",
+            if iid { "IID" } else { "non-IID" }
+        ),
+        move |cfg| {
+            cfg.num_workers = n;
+            cfg.backend = BackendKind::NativeMlp;
+            cfg.iid = iid;
+            cfg.max_iterations = u64::MAX / 2;
+            cfg.time_budget = Some(budget);
+            cfg.eval_every = 50;
+            cfg.dataset_samples = samples;
+        },
+    )
+    .axis(Axis::tiered(
+        "model",
+        model_values(&["mlp_tiny"]),
+        model_values(&["mlp_tiny", "mlp_small"]),
+        model_values(&["mlp_tiny", "mlp_small", "mlp2nn"]),
+    ))
+    .axis(alg_axis(&AlgorithmKind::paper_table()))
+    .with_seeds(1000)
+    .consumes(&["iid"])
+    .table(TableSpec::pivot("", "model", "algorithm", "best_accuracy", Fmt::F2, 100.0)))
+}
+
+/// Tables 2/9 (non-IID) and 11 (`--iid=1`): accuracy after a fixed
+/// virtual wall-clock budget across worker counts.
+pub fn timebudget(args: &BenchArgs) -> Result<SweepSpec> {
+    let tier = args.tier()?;
+    let iid = flag(args, "iid");
+    let budget = tier.pick(8.0, 25.0, 60.0);
+    Ok(SweepSpec::new(
+        "timebudget",
+        &format!(
+            "Table 2/9/11 analogue — accuracy (%) after {budget:.0}s virtual budget, {} data",
+            if iid { "IID" } else { "non-IID" }
+        ),
+        move |cfg| {
+            cfg.backend = BackendKind::NativeMlp;
+            cfg.model = "mlp_small".into();
+            cfg.iid = iid;
+            cfg.max_iterations = u64::MAX / 2;
+            cfg.time_budget = Some(budget);
+            cfg.eval_every = 25;
+        },
+    )
+    .axis(Axis::from_numbers(
+        "N",
+        &[8usize, 16],
+        &[8, 16, 32, 64],
+        &[32, 64, 128, 256],
+        |cfg, n| cfg.num_workers = n,
+    ))
+    .axis(alg_axis(&AlgorithmKind::paper_table()))
+    .with_seeds(2000)
+    .consumes(&["iid"])
+    .table(TableSpec::pivot("", "N", "algorithm", "final_accuracy", Fmt::F2, 100.0)))
+}
+
+/// Figures 3–4: loss checkpoints per algorithm, plus per-cell curve CSVs
+/// (loss vs iteration and vs virtual wall-clock).
+pub fn loss_curves(args: &BenchArgs) -> Result<SweepSpec> {
+    let tier = args.tier()?;
+    let n = tier.pick(8usize, 32, 128);
+    let iters = tier.pick(200u64, 1500, 6000);
+    Ok(SweepSpec::new(
+        "loss_curves",
+        &format!("Figure 3/4 analogue — loss checkpoints (N={n}, non-IID)"),
+        move |cfg| {
+            cfg.num_workers = n;
+            cfg.backend = BackendKind::NativeMlp;
+            cfg.model = "mlp_small".into();
+            cfg.max_iterations = iters;
+            cfg.eval_every = (iters / 60).max(1);
+            cfg.seed = 3000;
+        },
+    )
+    .axis(alg_axis(&AlgorithmKind::all()))
+    .curves()
+    .table(TableSpec::long(
+        "",
+        vec![
+            Column::new("loss@25%", "loss_q25", Fmt::F4),
+            Column::new("loss@50%", "loss_q50", Fmt::F4),
+            Column::new("loss@100%", "loss_q100", Fmt::F4),
+            Column::new("vtime(s)", "virtual_time", Fmt::F1),
+            Column::new("iters/s(virt)", "iters_per_vsec", Fmt::F1),
+        ],
+    )))
+}
+
+/// Figure 5(a)+(b): speedup over synchronous DSGD to a target accuracy,
+/// and the communication spent reaching it, vs the number of workers.
+pub fn speedup(args: &BenchArgs) -> Result<SweepSpec> {
+    let tier = args.tier()?;
+    let target: f32 = args.extra.get("target").and_then(|v| v.parse().ok()).unwrap_or(0.45);
+    let budget = tier.pick(40.0, 200.0, 400.0);
+    Ok(SweepSpec::new(
+        "speedup",
+        &format!(
+            "Figure 5 analogue — speedup to {:.0}% accuracy (rel. sync DSGD) and MB to target",
+            100.0 * target
+        ),
+        move |cfg| {
+            cfg.backend = BackendKind::NativeMlp;
+            cfg.model = "mlp_small".into();
+            cfg.max_iterations = u64::MAX / 2;
+            cfg.time_budget = Some(budget);
+            cfg.eval_every = 20;
+            cfg.seed = 4000;
+        },
+    )
+    .axis(Axis::from_numbers("N", &[8usize], &[8, 16, 32], &[32, 64, 128, 256], |cfg, n| {
+        cfg.num_workers = n
+    }))
+    .axis(alg_axis(&AlgorithmKind::all()))
+    .consumes(&["target"])
+    .target_accuracy(target)
+    .speedup_vs("algorithm", AlgorithmKind::DsgdSync.label())
+    .table(TableSpec::pivot("speedup", "N", "algorithm", "speedup", Fmt::Speedup, 1.0))
+    .table(TableSpec::pivot("communication", "N", "algorithm", "mb_to_target", Fmt::F1, 1.0)))
+}
+
+fn ablation_params(probs: &[f64], slows: &[f64], batches: &[usize]) -> Vec<AxisValue> {
+    let mut out = Vec::new();
+    for &p in probs {
+        out.push(AxisValue::new(format!("straggler_prob={p}"), move |cfg: &mut ExperimentConfig| {
+            cfg.straggler.probability = p
+        }));
+    }
+    for &s in slows {
+        out.push(AxisValue::new(format!("slowdown={s}"), move |cfg: &mut ExperimentConfig| {
+            cfg.straggler.slowdown = s
+        }));
+    }
+    for &b in batches {
+        out.push(AxisValue::new(format!("batch={b}"), move |cfg: &mut ExperimentConfig| {
+            cfg.model = format!("mlp_small@b{b}")
+        }));
+    }
+    out
+}
+
+/// Figures 9–12: straggler probability, straggler slowdown and batch
+/// size ablations (IID via `--iid=1`, fixed time budget via
+/// `--budget=1`; batch rides on the `mlp_small@b<K>` model variants).
+pub fn ablation(args: &BenchArgs) -> Result<SweepSpec> {
+    let tier = args.tier()?;
+    let iid = flag(args, "iid");
+    let budget_mode = flag(args, "budget");
+    let metric = if budget_mode { "final_accuracy" } else { "best_accuracy" };
+    let iters = tier.pick(300u64, 800, 3000);
+    let n = tier.pick(8usize, 32, 128);
+    let figure = match (iid, budget_mode) {
+        (false, false) => "Figure 9",
+        (false, true) => "Figure 10",
+        (true, false) => "Figure 11",
+        (true, true) => "Figure 12",
+    };
+    Ok(SweepSpec::new(
+        "ablation",
+        &format!("{figure} analogue — accuracy (%) vs straggler probability / slowdown / batch"),
+        move |cfg| {
+            cfg.num_workers = n;
+            cfg.backend = BackendKind::NativeMlp;
+            cfg.model = "mlp_small".into();
+            cfg.iid = iid;
+            if budget_mode {
+                cfg.max_iterations = u64::MAX / 2;
+                cfg.time_budget = Some(25.0);
+            } else {
+                cfg.max_iterations = iters;
+            }
+            cfg.eval_every = 25;
+            cfg.seed = 5000;
+        },
+    )
+    .axis(Axis::tiered(
+        "param",
+        ablation_params(&[0.2], &[20.0], &[32]),
+        ablation_params(&[0.05, 0.2, 0.4], &[5.0, 20.0, 40.0], &[16, 32, 64]),
+        ablation_params(&[0.05, 0.1, 0.2, 0.4], &[5.0, 10.0, 20.0, 40.0], &[32, 64, 128, 256]),
+    ))
+    .axis(alg_axis(&AlgorithmKind::paper_table()))
+    // `fixedk` is the legacy routing flag of the bench_ablation shim
+    .consumes(&["iid", "budget", "fixedk"])
+    .table(TableSpec::pivot("", "param", "algorithm", metric, Fmt::Pct, 1.0)))
+}
+
+fn fixedk_values(ks: &[usize]) -> Vec<AxisValue> {
+    let mut out: Vec<AxisValue> = ks
+        .iter()
+        .map(|&k| {
+            AxisValue::new(format!("Fixed-k={k}"), move |cfg: &mut ExperimentConfig| {
+                cfg.algorithm = AlgorithmKind::FixedK { k }
+            })
+        })
+        .collect();
+    out.push(AxisValue::new("DSGD-AAU (adaptive)", |cfg: &mut ExperimentConfig| {
+        cfg.algorithm = AlgorithmKind::DsgdAau
+    }));
+    out
+}
+
+/// Design-choice ablation (DESIGN.md §5): DSGD-AAU's adaptive group
+/// sizing vs the manually-tuned fixed-fastest-k prior art, under a fixed
+/// virtual-time budget with stragglers.
+pub fn fixedk(args: &BenchArgs) -> Result<SweepSpec> {
+    let tier = args.tier()?;
+    let n = tier.pick(8usize, 32, 64);
+    let budget = tier.pick(6.0, 25.0, 25.0);
+    Ok(SweepSpec::new(
+        "fixedk",
+        &format!(
+            "Adaptivity ablation — fixed-k vs DSGD-AAU \
+             ({budget:.0}s budget, 10% stragglers, N={n})"
+        ),
+        move |cfg| {
+            cfg.num_workers = n;
+            cfg.backend = BackendKind::NativeMlp;
+            cfg.model = "mlp_small".into();
+            cfg.max_iterations = u64::MAX / 2;
+            cfg.time_budget = Some(budget);
+            cfg.eval_every = 25;
+            cfg.seed = 5000;
+        },
+    )
+    .axis(Axis::tiered(
+        "rule",
+        fixedk_values(&[2, 4]),
+        fixedk_values(&[2, 4, 8, 16]),
+        fixedk_values(&[2, 4, 8, 16, 32]),
+    ))
+    // `fixedk` is the legacy routing flag of the bench_ablation shim
+    .consumes(&["fixedk"])
+    .table(TableSpec::long(
+        "",
+        vec![
+            Column::new("acc@budget", "final_accuracy", Fmt::Pct),
+            Column::new("iters", "iterations", Fmt::Int),
+            Column::new("mean_group", "mean_group_size", Fmt::F1),
+        ],
+    )))
+}

@@ -1,0 +1,140 @@
+//! Aligned results tables and paper-style cell formatting (moved here
+//! from the old `harness` module, which now re-exports these names).
+
+use anyhow::Result;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// A printable results table (paper-style rows).
+#[derive(Debug, Default)]
+pub struct Table {
+    /// Column headers.
+    pub headers: Vec<String>,
+    /// Row cells.
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with headers.
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// New table from owned headers (sink rendering convenience).
+    pub fn from_headers(headers: Vec<String>) -> Self {
+        Table { headers, rows: Vec::new() }
+    }
+
+    /// Append a row.
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                } else {
+                    widths.push(c.len());
+                }
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8) + 2))
+                .collect::<String>()
+        };
+        let mut out = line(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().map(|w| w + 2).sum::<usize>().min(120)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write as CSV into `dir/name.csv` (RFC-4180 quoting: cells
+    /// containing commas, quotes or newlines are quoted — scenario
+    /// labels like `partition(p=4,d=2)` stay one column).
+    pub fn write_csv(&self, dir: &Path, name: &str) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        let mut f = std::fs::File::create(&path)?;
+        let line = |cells: &[String]| {
+            cells.iter().map(|c| csv_escape(c)).collect::<Vec<_>>().join(",")
+        };
+        writeln!(f, "{}", line(&self.headers))?;
+        for row in &self.rows {
+            writeln!(f, "{}", line(row))?;
+        }
+        Ok(path)
+    }
+}
+
+fn csv_escape(cell: &str) -> String {
+    if cell.chars().any(|c| matches!(c, ',' | '"' | '\n' | '\r')) {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+/// `mean ± std` cell formatting matching the paper's tables.
+pub fn pm(mean: f64, std: f64) -> String {
+    format!("{:.2} ± {:.2}", mean, std)
+}
+
+/// Percent formatting.
+pub fn pct(v: f64) -> String {
+    format!("{:.2}%", 100.0 * v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["model", "AGP", "DSGD-AAU"]);
+        t.row(vec!["2-NN".into(), "43.87".into(), "45.43".into()]);
+        let s = t.render();
+        assert!(s.contains("model"));
+        assert!(s.lines().count() == 3);
+    }
+
+    #[test]
+    fn csv_written() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let dir = std::env::temp_dir().join("dsgd_harness_test");
+        let p = t.write_csv(&dir, "t").unwrap();
+        assert!(std::fs::read_to_string(p).unwrap().contains("a,b"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn csv_quotes_comma_labels() {
+        let mut t = Table::new(&["scenario", "loss"]);
+        t.row(vec!["partition(p=4,d=2)".into(), "0.5".into()]);
+        let dir = std::env::temp_dir().join("dsgd_csv_quote_test");
+        let p = t.write_csv(&dir, "q").unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert!(text.contains("\"partition(p=4,d=2)\",0.5"), "{text}");
+        std::fs::remove_dir_all(dir).ok();
+        assert_eq!(csv_escape("plain"), "plain");
+        assert_eq!(csv_escape("a\"b"), "\"a\"\"b\"");
+    }
+
+    #[test]
+    fn pm_and_pct() {
+        assert_eq!(pm(45.432, 0.158), "45.43 ± 0.16");
+        assert_eq!(pct(0.4543), "45.43%");
+    }
+}

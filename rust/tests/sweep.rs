@@ -1,0 +1,248 @@
+//! Sweep-layer integration tests: deterministic, order-stable spec
+//! lowering; tier scaling; `--resume` skipping exactly the completed
+//! cells with byte-identical final artifacts; flag parsing (including
+//! `--k=v` overrides reaching the lowered configs); and the default
+//! err-cell policy (one failed cell never sinks the sweep).
+
+use dsgd_aau::algorithms::AlgorithmKind;
+use dsgd_aau::config::ExperimentConfig;
+use dsgd_aau::sweep::cli::BenchArgs;
+use dsgd_aau::sweep::{run_suite, Axis, AxisValue, Column, Fmt, SweepSpec, TableSpec, Tier};
+use dsgd_aau::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// A fast quadratic-backend suite: scenario x algorithm (quick tier
+/// drops to one scenario, full tier adds a third).
+fn tiny_spec() -> SweepSpec {
+    fn seeds(vals: &[u64]) -> Vec<AxisValue> {
+        vals.iter()
+            .map(|&s| {
+                AxisValue::new(format!("s{s}"), move |cfg: &mut ExperimentConfig| cfg.seed = s)
+            })
+            .collect()
+    }
+    SweepSpec::new("tiny", "tiny sweep", |cfg| {
+        cfg.num_workers = 4;
+        cfg.max_iterations = 40;
+        cfg.eval_every = 10;
+        cfg.mean_compute = 0.01;
+    })
+    .axis(Axis::tiered("scenario", seeds(&[1]), seeds(&[1, 2]), seeds(&[1, 2, 3])))
+    .axis(Axis::list(
+        "algorithm",
+        [AlgorithmKind::DsgdAau, AlgorithmKind::AdPsgd]
+            .iter()
+            .map(|&a| {
+                AxisValue::new(a.label(), move |cfg: &mut ExperimentConfig| cfg.algorithm = a)
+            })
+            .collect(),
+    ))
+    .table(TableSpec::long(
+        "",
+        vec![
+            Column::new("iters", "iterations", Fmt::Int),
+            Column::new("loss", "final_loss", Fmt::F4),
+        ],
+    ))
+}
+
+fn args_in(dir: &Path) -> BenchArgs {
+    let mut args = BenchArgs::default();
+    args.out_dir = dir.to_path_buf();
+    args.threads = Some(2);
+    args
+}
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dsgd_sweep_test_{name}"));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn lowering_is_deterministic_order_stable_and_tier_scaled() {
+    let spec = tiny_spec();
+    let args = args_in(Path::new("results"));
+    let a = spec.lower(&args).unwrap();
+    let b = spec.lower(&args).unwrap();
+    assert_eq!(a.len(), 4, "default tier: 2 scenarios x 2 algorithms");
+    let sig = |cells: &[dsgd_aau::sweep::Cell]| -> Vec<(Vec<(String, String)>, String)> {
+        cells.iter().map(|c| (c.labels.clone(), c.hash.clone())).collect()
+    };
+    assert_eq!(sig(&a), sig(&b), "lowering must be deterministic and order-stable");
+    // row-major: first axis outermost
+    assert_eq!(a[0].labels[0].1, "s1");
+    assert_eq!(a[1].labels[0].1, "s1");
+    assert_eq!(a[2].labels[0].1, "s2");
+    assert_eq!(a[0].labels[1].1, "DSGD-AAU");
+    assert_eq!(a[1].labels[1].1, "AD-PSGD");
+    // tier scaling picks the declared quick/full axis values
+    let mut quick = args.clone();
+    quick.quick = true;
+    assert_eq!(spec.lower(&quick).unwrap().len(), 2);
+    let mut full = args.clone();
+    full.full = true;
+    assert_eq!(spec.lower(&full).unwrap().len(), 6);
+}
+
+#[test]
+fn resume_skips_completed_cells_and_outputs_are_byte_identical() {
+    let dir_a = temp_dir("cold");
+    let dir_b = temp_dir("resume");
+
+    // cold run in A: the reference artifacts
+    let run_a = run_suite(&tiny_spec(), &args_in(&dir_a)).unwrap();
+    assert_eq!((run_a.ran, run_a.skipped), (4, 0));
+    let json_a = std::fs::read_to_string(dir_a.join("BENCH_tiny.json")).unwrap();
+    let csv_a = std::fs::read_to_string(dir_a.join("tiny.csv")).unwrap();
+    assert!(json_a.contains("\"schema\":\"dsgd-aau/bench/v1\""));
+
+    // cold run in B, then truncate the JSON to its first two rows and
+    // resume: exactly the two missing cells re-run, and the merged
+    // artifacts match the cold run byte for byte.
+    run_suite(&tiny_spec(), &args_in(&dir_b)).unwrap();
+    let j = Json::parse(&std::fs::read_to_string(dir_b.join("BENCH_tiny.json")).unwrap()).unwrap();
+    let mut doc = j.as_obj().unwrap().clone();
+    let rows = doc.get("rows").unwrap().as_arr().unwrap().to_vec();
+    doc.insert("rows".into(), Json::Arr(rows[..2].to_vec()));
+    std::fs::write(dir_b.join("BENCH_tiny.json"), Json::Obj(doc).to_string_compact()).unwrap();
+
+    let mut args_b = args_in(&dir_b);
+    args_b.resume = true;
+    let run_b = run_suite(&tiny_spec(), &args_b).unwrap();
+    assert_eq!((run_b.ran, run_b.skipped), (2, 2), "resume skips exactly the completed cells");
+    assert_eq!(
+        std::fs::read_to_string(dir_b.join("BENCH_tiny.json")).unwrap(),
+        json_a,
+        "resumed JSON must be byte-identical to the cold run"
+    );
+    assert_eq!(
+        std::fs::read_to_string(dir_b.join("tiny.csv")).unwrap(),
+        csv_a,
+        "resumed CSV must be byte-identical to the cold run"
+    );
+
+    // a second resume with the complete file runs nothing and rewrites
+    // the same bytes
+    let run_c = run_suite(&tiny_spec(), &args_b).unwrap();
+    assert_eq!((run_c.ran, run_c.skipped), (0, 4));
+    assert_eq!(std::fs::read_to_string(dir_b.join("BENCH_tiny.json")).unwrap(), json_a);
+
+    std::fs::remove_dir_all(dir_a).ok();
+    std::fs::remove_dir_all(dir_b).ok();
+}
+
+#[test]
+fn bench_args_parse_from_flags_and_extras() {
+    let args = BenchArgs::parse_from(
+        ["--quick", "--seeds", "5", "--out", "outdir", "--resume", "--threads", "3", "--iid=1"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    )
+    .unwrap();
+    assert!(args.quick && args.resume);
+    assert_eq!(args.seeds, 5);
+    assert_eq!(args.out_dir, PathBuf::from("outdir"));
+    assert_eq!(args.threads, Some(3));
+    assert_eq!(args.extra.get("iid").map(String::as_str), Some("1"));
+    assert_eq!(args.tier().unwrap(), Tier::Quick);
+
+    assert!(BenchArgs::parse_from(vec!["--bogus".into()]).is_err());
+    let both = BenchArgs::parse_from(vec!["--quick".into(), "--full".into()]).unwrap();
+    assert!(both.tier().is_err(), "--quick and --full are mutually exclusive");
+}
+
+#[test]
+fn extra_overrides_reach_the_lowered_configs() {
+    let spec = tiny_spec();
+    let mut args = args_in(Path::new("results"));
+    args.extra.insert("max_iterations".into(), "17".into());
+    args.extra.insert("model".into(), "mlp_tiny".into());
+    for cell in spec.lower(&args).unwrap() {
+        assert_eq!(cell.cfg.max_iterations, 17, "--max_iterations=17 must reach every cell");
+        assert_eq!(cell.cfg.model, "mlp_tiny", "string overrides parse as strings");
+    }
+    // a consumed extra is left to the suite and not applied as a config key
+    let consuming = tiny_spec().consumes(&["iid"]);
+    let mut args = args_in(Path::new("results"));
+    args.extra.insert("iid".into(), "1".into());
+    for cell in consuming.lower(&args).unwrap() {
+        assert!(!cell.cfg.iid, "consumed extras are not force-applied to the config");
+    }
+    // unknown keys are rejected, not silently dropped
+    let mut args = args_in(Path::new("results"));
+    args.extra.insert("typo_key".into(), "1".into());
+    assert!(spec.lower(&args).is_err());
+    // an override that collapses an axis (here: the scenario axis sets
+    // the seed, and --seed clobbers it in every cell) is an error, not a
+    // silent table of identical experiments
+    let mut args = args_in(Path::new("results"));
+    args.extra.insert("seed".into(), "5".into());
+    let err = tiny_spec().lower(&args).unwrap_err().to_string();
+    assert!(err.contains("identical experiments"), "{err}");
+}
+
+#[test]
+fn failed_cells_become_err_records_and_render_as_err() {
+    let dir = temp_dir("errcell");
+    // the b scenario injects an invalid churn config (rate 0), which
+    // run_experiment rejects — the sweep must keep going
+    let spec = SweepSpec::new("errcell", "err-cell policy", |cfg| {
+        cfg.num_workers = 4;
+        cfg.max_iterations = 30;
+        cfg.eval_every = 10;
+        cfg.mean_compute = 0.01;
+    })
+    .axis(Axis::list(
+        "scenario",
+        vec![
+            AxisValue::new("good", |_cfg: &mut ExperimentConfig| {}),
+            AxisValue::new("bad", |cfg: &mut ExperimentConfig| {
+                cfg.churn = dsgd_aau::churn::ChurnConfig {
+                    kind: dsgd_aau::churn::ChurnKind::FlakyLinks { rate: 0.0, mean_downtime: 1.0 },
+                    seed: None,
+                }
+            }),
+        ],
+    ))
+    .table(TableSpec::long("", vec![Column::new("loss", "final_loss", Fmt::F4)]));
+    let run = run_suite(&spec, &args_in(&dir)).unwrap();
+    assert_eq!(run.records.len(), 2);
+    assert!(run.records[0].is_ok());
+    assert!(!run.records[1].is_ok(), "invalid cell surfaces as an err record");
+    let json = std::fs::read_to_string(dir.join("BENCH_errcell.json")).unwrap();
+    assert!(json.contains("\"status\":\"err\""));
+    assert!(json.contains("\"status\":\"ok\""));
+    let csv = std::fs::read_to_string(dir.join("errcell.csv")).unwrap();
+    assert!(csv.lines().any(|l| l.contains("bad") && l.contains("err")));
+
+    // --resume re-runs failed cells (only ok rows count as completed),
+    // and a deterministic failure re-fails to byte-identical output
+    let mut resume = args_in(&dir);
+    resume.resume = true;
+    let rerun = run_suite(&spec, &resume).unwrap();
+    assert_eq!((rerun.ran, rerun.skipped), (1, 1), "err cell must be retried on resume");
+    assert_eq!(std::fs::read_to_string(dir.join("BENCH_errcell.json")).unwrap(), json);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn zip_axis_drives_lockstep_values_through_lowering() {
+    let n_axis = Axis::from_numbers("N", &[4usize, 6], &[4, 6], &[4, 6], |cfg, n| {
+        cfg.num_workers = n
+    });
+    let seed_axis = Axis::from_numbers("seed", &[7u64, 9], &[7, 9], &[7, 9], |cfg, s| {
+        cfg.seed = s
+    });
+    let spec = SweepSpec::new("zipped", "zip lowering", |cfg| {
+        cfg.max_iterations = 10;
+    })
+    .axis(n_axis.zip(seed_axis).unwrap());
+    let cells = spec.lower(&args_in(Path::new("results"))).unwrap();
+    assert_eq!(cells.len(), 2, "zip advances in lockstep instead of cross-multiplying");
+    assert_eq!(cells[0].labels[0], ("N+seed".to_string(), "4|7".to_string()));
+    assert_eq!((cells[0].cfg.num_workers, cells[0].cfg.seed), (4, 7));
+    assert_eq!((cells[1].cfg.num_workers, cells[1].cfg.seed), (6, 9));
+}
