@@ -67,7 +67,7 @@ fn main() -> anyhow::Result<()> {
             AdaptConfig {
                 allow_partitions: true,
                 partition_aware: true,
-                detection_latency: 0.1,
+                detection_latency: 0.1.into(),
                 heal_restart: true,
             },
         ),

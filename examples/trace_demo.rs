@@ -1,0 +1,90 @@
+//! Real-cluster trace replay: ingest a Google Borg machine-event excerpt
+//! and an Alibaba utilization excerpt, inspect what the pipeline lowers
+//! them into, then train DSGD-AAU and synchronous DSGD through each.
+//!
+//! Run from the repository root (the bundled excerpts resolve relative
+//! to it):
+//!
+//! ```text
+//! cargo run --release --example trace_demo
+//! ```
+
+use dsgd_aau::algorithms::AlgorithmKind;
+use dsgd_aau::config::{BackendKind, ExperimentConfig};
+use dsgd_aau::coordinator::run_experiment;
+use dsgd_aau::topology::TopologyKind;
+use dsgd_aau::trace::{TraceConfig, TraceIngest, TraceKind};
+
+fn main() -> anyhow::Result<()> {
+    let n = 10;
+    let horizon = 8.0;
+    let sources = [
+        (TraceKind::Borg, "rust/testdata/traces/borg_machine_events.csv"),
+        (TraceKind::Alibaba, "rust/testdata/traces/alibaba_machine_usage.csv"),
+    ];
+
+    for (kind, path) in sources {
+        let tc = TraceConfig {
+            kind,
+            path: path.to_string(),
+            horizon,
+            ..TraceConfig::default()
+        };
+
+        // --- 1. what does ingestion see? -------------------------------
+        let ing = TraceIngest::load(&tc)?;
+        let graph = TopologyKind::Random { p: 0.3, seed: 11 }.build(n);
+        let lowered = ing.lower(n, &graph)?;
+        let (t0, t1) = lowered.window;
+        println!(
+            "\n=== {} ===\n{} events on {} machines over [{t0:.0}s, {t1:.0}s], \
+             mapped onto {n} workers ({} dropped)\n\
+             lowered: {} straggler flips, {} topology mutations over {horizon}s virtual",
+            path,
+            ing.num_events(),
+            ing.machines().len(),
+            lowered.machines_dropped,
+            lowered.straggler.num_events(),
+            lowered.topology.num_mutations(),
+        );
+
+        // --- 2. train through the replay -------------------------------
+        println!(
+            "{:<10} {:>8} {:>9} {:>8} {:>9} {:>8}",
+            "algorithm", "iters", "loss", "strag%", "changes", "applied"
+        );
+        for alg in [AlgorithmKind::DsgdAau, AlgorithmKind::DsgdSync] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.name = format!("trace_demo_{}_{}", kind.token(), alg.token());
+            cfg.num_workers = n;
+            cfg.topology = TopologyKind::Random { p: 0.3, seed: 11 };
+            cfg.algorithm = alg;
+            cfg.backend = BackendKind::Quadratic;
+            cfg.trace = Some(tc.clone());
+            cfg.max_iterations = u64::MAX / 2;
+            cfg.time_budget = Some(horizon);
+            cfg.eval_every = 200;
+            cfg.mean_compute = 0.01;
+            let s = run_experiment(&cfg)?;
+            println!(
+                "{:<10} {:>8} {:>9.4} {:>8.1} {:>9} {:>8}",
+                s.algorithm,
+                s.iterations,
+                s.final_loss(),
+                100.0 * s.straggler_fraction,
+                s.recorder.topology_changes,
+                s.recorder.mutations_applied,
+            );
+        }
+    }
+
+    println!(
+        "\nReading: the Borg excerpt carries machine churn (REMOVE/ADD \
+         lower to isolate/attach mutations; connectivity repair keeps a \
+         lifeline), the Alibaba excerpt carries utilization-driven slow \
+         windows (thresholded at 80% CPU with hysteresis) — the same \
+         adaptive-waiting advantage DSGD-AAU shows on synthetic \
+         processes carries over to real cluster history."
+    );
+    Ok(())
+}

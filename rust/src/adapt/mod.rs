@@ -9,7 +9,7 @@
 //!
 //! * [`PartitionMonitor`] maintains connected-component membership
 //!   incrementally as topology mutations apply: an engine-level **ground
-//!   truth** view plus a lagged **observed** view modeling the detection
+//!   truth** view plus lagged **observed** views modeling the detection
 //!   latency with which workers learn about splits and heals
 //!   (timeout/heartbeat time, not zero);
 //! * [`AdaptConfig`] is the strict-parsed `adapt` config section that
@@ -36,7 +36,10 @@
 //!     "partition_aware": true,        // component-aware update rules
 //!                                     // (implies allow_partitions)
 //!     "detection_latency": 0.5,       // seconds until workers observe a
-//!                                     // component change (0 = instant)
+//!                                     // component change (0 = instant);
+//!                                     // a per-worker array like
+//!                                     // [0.1, 0.1, 2.0, 2.0] gives each
+//!                                     // worker its own latency
 //!     "heal_restart": true            // restart the Pathsearch epoch when
 //!                                     // the observed view sees a merge
 //!   }
@@ -47,7 +50,11 @@
 //! wrongly-typed values are rejected rather than silently defaulted, and
 //! omitting the section (or any key) keeps the legacy behavior:
 //! `allow_partitions = false`, `partition_aware = false`,
-//! `detection_latency = 0`, `heal_restart = true`.
+//! `detection_latency = 0`, `heal_restart = true`.  The scalar
+//! `detection_latency` form is bit-compatible with the pre-array
+//! behavior; the per-worker array models heterogeneous failure detectors
+//! (fast heartbeats near the cut, slow timeouts elsewhere) and must have
+//! exactly one entry per worker.
 
 mod monitor;
 
@@ -56,6 +63,122 @@ pub use monitor::{component_labels, PartitionMonitor, ViewDelta};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
+
+/// How long workers take to observe a ground-truth component change:
+/// one shared latency (the legacy scalar config form) or one latency per
+/// worker (heterogeneous failure detectors).
+#[derive(Debug, Clone, PartialEq)]
+pub enum DetectionLatency {
+    /// Every worker shares one latency (scalar config form;
+    /// bit-compatible with the pre-array behavior).
+    Uniform(f64),
+    /// Worker `w` observes changes `latencies[w]` seconds late; the
+    /// vector must hold exactly one entry per worker (checked when the
+    /// engine is assembled, where the fleet size is known).
+    PerWorker(Vec<f64>),
+}
+
+impl Default for DetectionLatency {
+    fn default() -> Self {
+        DetectionLatency::Uniform(0.0)
+    }
+}
+
+impl From<f64> for DetectionLatency {
+    fn from(v: f64) -> Self {
+        DetectionLatency::Uniform(v)
+    }
+}
+
+/// Scalar comparisons keep legacy call sites readable:
+/// `cfg.adapt.detection_latency == 0.5` matches only the uniform form.
+impl PartialEq<f64> for DetectionLatency {
+    fn eq(&self, other: &f64) -> bool {
+        matches!(self, DetectionLatency::Uniform(v) if v == other)
+    }
+}
+
+impl DetectionLatency {
+    /// The largest configured latency (an upper bound on how stale any
+    /// worker's view can be).
+    pub fn max_latency(&self) -> f64 {
+        match self {
+            DetectionLatency::Uniform(v) => *v,
+            DetectionLatency::PerWorker(v) => v.iter().copied().fold(0.0, f64::max),
+        }
+    }
+
+    /// Expand to one latency per worker for an `n`-worker fleet;
+    /// a per-worker array of any other length is an error.
+    pub fn resolve(&self, n: usize) -> Result<Vec<f64>> {
+        match self {
+            DetectionLatency::Uniform(v) => Ok(vec![*v; n]),
+            DetectionLatency::PerWorker(v) => {
+                anyhow::ensure!(
+                    v.len() == n,
+                    "adapt detection_latency array has {} entries for {} workers",
+                    v.len(),
+                    n
+                );
+                Ok(v.clone())
+            }
+        }
+    }
+
+    /// Parse the config form: a number, or an array of per-worker numbers.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        if let Some(v) = j.as_f64() {
+            return Ok(DetectionLatency::Uniform(v));
+        }
+        if let Some(a) = j.as_arr() {
+            let vals = a
+                .iter()
+                .map(|v| {
+                    v.as_f64()
+                        .context("adapt detection_latency array entries must be numbers")
+                })
+                .collect::<Result<Vec<f64>>>()?;
+            return Ok(DetectionLatency::PerWorker(vals));
+        }
+        bail!("adapt detection_latency must be a number or an array of per-worker numbers")
+    }
+
+    /// Inverse of [`Self::from_json`].
+    pub fn to_json(&self) -> Json {
+        match self {
+            DetectionLatency::Uniform(v) => Json::Num(*v),
+            DetectionLatency::PerWorker(v) => {
+                Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
+            }
+        }
+    }
+
+    /// Sanity checks: every latency finite and non-negative, per-worker
+    /// arrays non-empty.
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            DetectionLatency::Uniform(v) => {
+                anyhow::ensure!(
+                    v.is_finite() && *v >= 0.0,
+                    "adapt detection_latency must be finite and >= 0"
+                );
+            }
+            DetectionLatency::PerWorker(vals) => {
+                anyhow::ensure!(
+                    !vals.is_empty(),
+                    "adapt detection_latency array must not be empty"
+                );
+                for v in vals {
+                    anyhow::ensure!(
+                        v.is_finite() && *v >= 0.0,
+                        "adapt detection_latency entries must be finite and >= 0"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
 
 /// The `adapt` section of the experiment config.
 #[derive(Debug, Clone, PartialEq)]
@@ -66,8 +189,9 @@ pub struct AdaptConfig {
     /// Component-aware update rules (implies [`Self::allow_partitions`]).
     pub partition_aware: bool,
     /// Seconds between a ground-truth component change and the moment
-    /// workers' local views observe it.
-    pub detection_latency: f64,
+    /// workers' local views observe it — one shared scalar or a
+    /// per-worker array ([`DetectionLatency`]).
+    pub detection_latency: DetectionLatency,
     /// When the observed view reports a merge (heal), restart the
     /// Pathsearch epoch so `P, V` re-accumulate over the merged graph.
     pub heal_restart: bool,
@@ -78,7 +202,7 @@ impl Default for AdaptConfig {
         AdaptConfig {
             allow_partitions: false,
             partition_aware: false,
-            detection_latency: 0.0,
+            detection_latency: DetectionLatency::default(),
             heal_restart: true,
         }
     }
@@ -108,8 +232,7 @@ impl AdaptConfig {
                         v.as_bool().context("adapt partition_aware must be a bool")?
                 }
                 "detection_latency" => {
-                    cfg.detection_latency =
-                        v.as_f64().context("adapt detection_latency must be a number")?
+                    cfg.detection_latency = DetectionLatency::from_json(v)?;
                 }
                 "heal_restart" => {
                     cfg.heal_restart =
@@ -127,18 +250,14 @@ impl AdaptConfig {
         let mut m: BTreeMap<String, Json> = BTreeMap::new();
         m.insert("allow_partitions".into(), Json::Bool(self.allow_partitions));
         m.insert("partition_aware".into(), Json::Bool(self.partition_aware));
-        m.insert("detection_latency".into(), Json::Num(self.detection_latency));
+        m.insert("detection_latency".into(), self.detection_latency.to_json());
         m.insert("heal_restart".into(), Json::Bool(self.heal_restart));
         Json::Obj(m)
     }
 
     /// Parameter sanity checks (called from `ExperimentConfig::validate`).
     pub fn validate(&self) -> Result<()> {
-        anyhow::ensure!(
-            self.detection_latency.is_finite() && self.detection_latency >= 0.0,
-            "adapt detection_latency must be finite and >= 0"
-        );
-        Ok(())
+        self.detection_latency.validate()
     }
 }
 
@@ -167,11 +286,43 @@ mod tests {
         let cfg = AdaptConfig {
             allow_partitions: true,
             partition_aware: true,
-            detection_latency: 0.75,
+            detection_latency: 0.75.into(),
             heal_restart: false,
         };
         let back = AdaptConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back, cfg);
+        // per-worker array form round-trips too
+        let cfg = AdaptConfig {
+            partition_aware: true,
+            detection_latency: DetectionLatency::PerWorker(vec![0.1, 0.1, 2.0]),
+            ..AdaptConfig::default()
+        };
+        let back = AdaptConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn detection_latency_scalar_and_array_forms() {
+        let lat = DetectionLatency::from_json(&Json::Num(0.5)).unwrap();
+        assert_eq!(lat, DetectionLatency::Uniform(0.5));
+        assert_eq!(lat.max_latency(), 0.5);
+        assert_eq!(lat.resolve(3).unwrap(), vec![0.5, 0.5, 0.5]);
+
+        let j = Json::parse("[0.1, 0.2, 0.3]").unwrap();
+        let lat = DetectionLatency::from_json(&j).unwrap();
+        assert_eq!(lat, DetectionLatency::PerWorker(vec![0.1, 0.2, 0.3]));
+        assert_eq!(lat.max_latency(), 0.3);
+        assert_eq!(lat.resolve(3).unwrap(), vec![0.1, 0.2, 0.3]);
+        assert!(lat.resolve(4).is_err(), "array length must match the fleet");
+
+        for bad in ["\"fast\"", "[0.1, \"x\"]", "[]", "[-1.0]", "-2"] {
+            let j = Json::parse(bad).unwrap();
+            let parsed = DetectionLatency::from_json(&j);
+            assert!(
+                parsed.is_err() || parsed.unwrap().validate().is_err(),
+                "{bad} should be rejected"
+            );
+        }
     }
 
     #[test]
@@ -184,8 +335,14 @@ mod tests {
         assert!(AdaptConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"detection_latency": -1.0}"#).unwrap();
         assert!(AdaptConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"detection_latency": [0.5, -1.0]}"#).unwrap();
+        assert!(AdaptConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"partition_aware": true, "detection_latency": 0.25}"#).unwrap();
         let cfg = AdaptConfig::from_json(&j).unwrap();
         assert!(cfg.partition_aware && cfg.detection_latency == 0.25);
+        let j = Json::parse(r#"{"partition_aware": true, "detection_latency": [0.25, 1.0]}"#)
+            .unwrap();
+        let cfg = AdaptConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.detection_latency, DetectionLatency::PerWorker(vec![0.25, 1.0]));
     }
 }

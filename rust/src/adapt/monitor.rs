@@ -1,21 +1,32 @@
 //! Connected-component tracking for partition-aware adaptivity.
 //!
-//! [`PartitionMonitor`] maintains two views of the live graph's component
-//! structure:
+//! [`PartitionMonitor`] maintains two kinds of views of the live graph's
+//! component structure:
 //!
 //! * **ground truth** — updated incrementally as every topology-mutation
 //!   batch applies (the engine is the single writer), with canonical
 //!   labels (each vertex is labeled by the smallest vertex id in its
 //!   component) so labels are comparable against a from-scratch BFS;
 //! * **observed** — what the *workers* believe, which lags ground truth
-//!   by a configurable detection latency.  Real deployments learn about
-//!   a partition via timeouts/heartbeats, not instantaneously; update
-//!   rules therefore consult the observed view only.
+//!   by a per-worker detection latency.  Real deployments learn about a
+//!   partition via timeouts/heartbeats, not instantaneously — and not at
+//!   the same moment everywhere: each worker adopts a queued ground-truth
+//!   snapshot only once its own latency has elapsed.  Update rules
+//!   therefore consult the observed view only, always *from some
+//!   worker's perspective* (`component_of`, `component_members`,
+//!   `same_component_observed`).
 //!
-//! The incremental update recomputes labels only for components touched
-//! by a mutation batch (plus any component an added edge bridges into):
-//! on fleets where churn touches a few links at a time this is O(size of
-//! the affected components), not O(N + E).
+//! With one shared latency (the legacy scalar config) every worker adopts
+//! each snapshot at the same instant and the behavior is bit-compatible
+//! with the fleet-wide view this monitor used to keep.  With heterogeneous
+//! latencies, fast detectors act on the new component structure while
+//! slow ones still see the old one — exactly the disagreement window the
+//! stall-fallback liveness guard exists for.
+//!
+//! The incremental ground-truth update recomputes labels only for
+//! components touched by a mutation batch (plus any component an added
+//! edge bridges into): on fleets where churn touches a few links at a
+//! time this is O(size of the affected components), not O(N + E).
 
 use crate::churn::TopologyMutation;
 use crate::topology::Graph;
@@ -51,6 +62,14 @@ pub fn component_labels(g: &Graph) -> Vec<usize> {
 /// Number of distinct components in a canonical label vector.
 fn count_components(labels: &[usize]) -> usize {
     labels.iter().enumerate().filter(|&(v, &l)| v == l).count()
+}
+
+/// Number of distinct labels in any label vector.  Equals
+/// [`count_components`] on canonical vectors, but also correct for the
+/// composite per-worker observed vector, where a component's canonical
+/// representative may hold a newer view than its members.
+fn distinct_labels(labels: &[usize]) -> usize {
+    labels.iter().collect::<BTreeSet<_>>().len()
 }
 
 /// Split/merge events between two label vectors (old → new).
@@ -93,30 +112,51 @@ impl ViewDelta {
     }
 }
 
-/// A pending observed-view update (ground truth snapshot awaiting its
-/// detection latency).
+/// One queued ground-truth snapshot awaiting per-worker detection.
 #[derive(Debug, Clone)]
-struct PendingView {
-    due: f64,
+struct Snapshot {
+    /// Virtual time the snapshot was queued; worker `w` adopts it once
+    /// `queued_at + latency[w]` has passed.
+    queued_at: f64,
     labels: Vec<usize>,
 }
 
 /// Incremental connected-component monitor with lagged per-worker views.
 ///
-/// All workers share one detection latency, so the observed view is a
-/// single label vector every worker queries for *its own* component —
-/// the per-worker API (`component_of`, `component_members`) keeps update
-/// rules honest about which view they are allowed to act on.
+/// Ground truth updates synchronously with every mutation batch; each
+/// worker adopts queued snapshots only once its own detection latency
+/// elapses.  The per-worker API (`component_of`, `component_members`,
+/// `same_component_observed`) keeps update rules honest about which view
+/// they are allowed to act on; `observed_labels` and
+/// `num_observed_components` summarize the composite fleet view (each
+/// worker's own belief about itself), while the split/merge counters
+/// fold every ground-truth transition in exactly once, when its first
+/// worker adopts it.
 #[derive(Debug, Clone)]
 pub struct PartitionMonitor {
-    detection_latency: f64,
+    /// Per-worker detection latencies.
+    latencies: Vec<f64>,
+    /// Sorted distinct latency values (detect-event schedule).
+    distinct: Vec<f64>,
     truth: Vec<usize>,
     truth_components: usize,
+    /// Snapshot history; `hist[0]` has absolute index `base`.  Snapshots
+    /// stay alive while any worker's adopted view points at them.
+    hist: VecDeque<Snapshot>,
+    base: usize,
+    /// Absolute index (into the snapshot history) of each worker's
+    /// adopted view; always `>= base`.
+    view_idx: Vec<usize>,
+    /// Composite observed labels: `observed[w]` is `w`'s label in `w`'s
+    /// adopted view.
     observed: Vec<usize>,
     observed_components: usize,
+    /// Absolute index of the newest snapshot whose arrival transition has
+    /// been folded into the split/merge counters (each ground-truth
+    /// transition counts exactly once, when its first worker adopts it).
+    counted: usize,
     observed_merges: u64,
     observed_splits: u64,
-    pending: VecDeque<PendingView>,
     /// Members of components formed by observed merges, accumulated until
     /// a rule drains them (scopes DSGD-AAU's heal restart to the merged
     /// components instead of wiping unrelated accumulation).
@@ -124,21 +164,50 @@ pub struct PartitionMonitor {
 }
 
 impl PartitionMonitor {
-    /// Monitor for the initial graph; truth and observed views coincide.
+    /// Monitor for the initial graph with one shared detection latency;
+    /// truth and observed views coincide at the start.
     pub fn new(g: &Graph, detection_latency: f64) -> Self {
+        Self::with_latencies(g, vec![detection_latency; g.num_vertices()])
+    }
+
+    /// Monitor with an explicit per-worker latency vector (one entry per
+    /// vertex of `g`).
+    pub fn with_latencies(g: &Graph, latencies: Vec<f64>) -> Self {
+        assert_eq!(
+            latencies.len(),
+            g.num_vertices(),
+            "monitor needs one detection latency per worker"
+        );
         let labels = component_labels(g);
         let components = count_components(&labels);
+        let mut distinct = latencies.clone();
+        distinct.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        distinct.dedup();
+        let n = latencies.len();
+        let mut hist = VecDeque::new();
+        hist.push_back(Snapshot { queued_at: f64::NEG_INFINITY, labels: labels.clone() });
         PartitionMonitor {
-            detection_latency,
+            latencies,
+            distinct,
             truth: labels.clone(),
             truth_components: components,
+            hist,
+            base: 0,
+            view_idx: vec![0; n],
             observed: labels,
             observed_components: components,
+            counted: 0,
             observed_merges: 0,
             observed_splits: 0,
-            pending: VecDeque::new(),
             merge_members: BTreeSet::new(),
         }
+    }
+
+    /// Sorted distinct per-worker latencies: after a component change the
+    /// engine schedules one `PartitionDetect` event per entry, so every
+    /// worker's adoption instant gets a wake-up.
+    pub fn distinct_latencies(&self) -> Vec<f64> {
+        self.distinct.clone()
     }
 
     /// Update ground truth after `muts` were applied to `g` (the graph is
@@ -200,59 +269,114 @@ impl PartitionMonitor {
         diff_labels(&old, &self.truth)
     }
 
-    /// Stage the current ground truth to become the observed view once
-    /// the detection latency elapses: due at `now + detection_latency`.
+    /// Stage the current ground truth to become observed: worker `w`
+    /// adopts the snapshot once `now + latency[w]` has passed.
     pub fn queue_observation(&mut self, now: f64) {
-        self.pending.push_back(PendingView {
-            due: now + self.detection_latency,
-            labels: self.truth.clone(),
-        });
+        self.hist.push_back(Snapshot { queued_at: now, labels: self.truth.clone() });
     }
 
-    /// Promote every pending view whose detection time has arrived,
-    /// accumulating observed split/merge counters.  Returns the combined
-    /// delta (zero when nothing was due).
+    /// Advance every worker whose detection latency has elapsed onto the
+    /// queued snapshots.  Snapshots are adopted one step per round
+    /// fleet-wide, and each snapshot's arrival is folded into the
+    /// split/merge counters exactly once — when its *first* worker adopts
+    /// it.  Consecutive ground-truth snapshots are coherent label
+    /// vectors, so their diff is meaningful; diffing the composite view
+    /// instead would make a split adopted at different times masquerade
+    /// as a later merge (spuriously firing DSGD-AAU's heal restart).
+    /// With a uniform latency every worker adopts together and the
+    /// per-snapshot deltas match the legacy fleet-wide promotion exactly.
+    /// Returns the combined counted delta (zero when nothing new was
+    /// due, even if slower workers caught up to already-counted views).
     pub fn promote_due(&mut self, now: f64) -> ViewDelta {
         let mut total = ViewDelta::default();
-        while let Some(front) = self.pending.front() {
-            if front.due > now + 1e-9 {
+        loop {
+            let mut moved = false;
+            for w in 0..self.view_idx.len() {
+                let next = self.view_idx[w] + 1;
+                if next - self.base < self.hist.len()
+                    && self.hist[next - self.base].queued_at + self.latencies[w] <= now + 1e-9
+                {
+                    self.view_idx[w] = next;
+                    moved = true;
+                }
+            }
+            if !moved {
                 break;
             }
-            let view = self.pending.pop_front().expect("front exists");
-            total.absorb(self.set_observed(view.labels));
+            let newest = self.view_idx.iter().copied().max().unwrap_or(self.counted);
+            while self.counted < newest {
+                self.counted += 1;
+                let prev = self.hist[self.counted - 1 - self.base].labels.clone();
+                let next = self.hist[self.counted - self.base].labels.clone();
+                total.absorb(self.count_transition(&prev, &next));
+            }
+            self.refresh_composite();
         }
+        self.gc();
         total
     }
 
-    /// Make the observed view equal to ground truth immediately (used
-    /// when `detection_latency == 0`).
+    /// Make every worker's observed view equal to ground truth
+    /// immediately (used when all detection latencies are zero; the
+    /// transition is counted against the current composite view, which
+    /// under a uniform latency is the previously adopted snapshot).
     pub fn promote_now(&mut self) -> ViewDelta {
-        self.pending.clear();
-        let labels = self.truth.clone();
-        self.set_observed(labels)
+        let old = std::mem::take(&mut self.observed);
+        let new = self.truth.clone();
+        let delta = self.count_transition(&old, &new);
+        self.hist.clear();
+        self.hist.push_back(Snapshot { queued_at: f64::NEG_INFINITY, labels: new });
+        self.base = 0;
+        self.counted = 0;
+        for idx in self.view_idx.iter_mut() {
+            *idx = 0;
+        }
+        self.refresh_composite();
+        delta
     }
 
-    fn set_observed(&mut self, labels: Vec<usize>) -> ViewDelta {
-        let delta = diff_labels(&self.observed, &labels);
+    /// Fold one coherent label-vector transition (old → new) into the
+    /// observed split/merge counters and the merge-member set.
+    fn count_transition(&mut self, old: &[usize], new: &[usize]) -> ViewDelta {
+        let delta = diff_labels(old, new);
         if delta.merges > 0 {
             // Record every member of a freshly merged component (a new
             // label fed by more than one old label) so rules can scope
             // their heal reaction to exactly these workers.
             let mut sources: BTreeMap<usize, BTreeSet<usize>> = BTreeMap::new();
-            for (&o, &nw) in self.observed.iter().zip(labels.iter()) {
+            for (&o, &nw) in old.iter().zip(new.iter()) {
                 sources.entry(nw).or_default().insert(o);
             }
-            for (v, &l) in labels.iter().enumerate() {
+            for (v, &l) in new.iter().enumerate() {
                 if sources.get(&l).map_or(false, |s| s.len() > 1) {
                     self.merge_members.insert(v);
                 }
             }
         }
-        self.observed = labels;
-        self.observed_components = count_components(&self.observed);
         self.observed_merges += delta.merges;
         self.observed_splits += delta.splits;
         delta
+    }
+
+    /// Rebuild the composite observed vector (each worker's self-label
+    /// in its adopted view) and its distinct-component count.
+    fn refresh_composite(&mut self) {
+        let n = self.view_idx.len();
+        let mut labels = Vec::with_capacity(n);
+        for w in 0..n {
+            labels.push(self.hist[self.view_idx[w] - self.base].labels[w]);
+        }
+        self.observed = labels;
+        self.observed_components = distinct_labels(&self.observed);
+    }
+
+    /// Drop history no worker's view points at any longer.
+    fn gc(&mut self) {
+        let min_idx = self.view_idx.iter().copied().min().unwrap_or(self.base);
+        while self.base < min_idx {
+            self.hist.pop_front();
+            self.base += 1;
+        }
     }
 
     /// Number of ground-truth components.
@@ -260,7 +384,7 @@ impl PartitionMonitor {
         self.truth_components
     }
 
-    /// Number of components in the workers' observed view.
+    /// Number of distinct components in the composite observed view.
     pub fn num_observed_components(&self) -> usize {
         self.observed_components
     }
@@ -270,9 +394,15 @@ impl PartitionMonitor {
         &self.truth
     }
 
-    /// Observed canonical labels.
+    /// Composite observed labels: entry `w` is what worker `w` believes
+    /// its own component label to be.
     pub fn observed_labels(&self) -> &[usize] {
         &self.observed
+    }
+
+    /// The full label vector of `w`'s adopted view.
+    fn view_of(&self, w: WorkerId) -> &[usize] {
+        &self.hist[self.view_idx[w] - self.base].labels
     }
 
     /// Observed component label of worker `w` (what `w` believes).
@@ -280,19 +410,25 @@ impl PartitionMonitor {
         self.observed[w]
     }
 
-    /// Whether `a` and `b` are in the same component per the observed view.
+    /// Whether `a` believes `b` is in its component (evaluated in `a`'s
+    /// adopted view; with heterogeneous latencies the relation need not
+    /// be symmetric while views disagree).
     pub fn same_component_observed(&self, a: WorkerId, b: WorkerId) -> bool {
-        self.observed[a] == self.observed[b]
+        let view = self.view_of(a);
+        view[a] == view[b]
     }
 
-    /// Every worker in `w`'s observed component, ascending (includes `w`).
+    /// Every worker `w` believes shares its component, ascending
+    /// (includes `w`; evaluated in `w`'s adopted view).
     pub fn component_members(&self, w: WorkerId) -> Vec<WorkerId> {
-        let label = self.observed[w];
-        (0..self.observed.len()).filter(|&v| self.observed[v] == label).collect()
+        let view = self.view_of(w);
+        let label = view[w];
+        (0..view.len()).filter(|&v| view[v] == label).collect()
     }
 
-    /// Cumulative component-merge events the observed view has seen
-    /// (update rules use this to notice heals).
+    /// Cumulative component-merge events the workers' views have
+    /// observed — each ground-truth transition counted once, at first
+    /// adoption (update rules use this to notice heals).
     pub fn observed_merges(&self) -> u64 {
         self.observed_merges
     }
@@ -307,14 +443,17 @@ impl PartitionMonitor {
         out
     }
 
-    /// Cumulative component-split events the observed view has seen.
+    /// Cumulative component-split events the workers' views have
+    /// observed — each ground-truth transition counted once, at first
+    /// adoption.
     pub fn observed_splits(&self) -> u64 {
         self.observed_splits
     }
 
-    /// Views whose detection latency has not yet elapsed.
+    /// Queued snapshots the slowest worker has not yet adopted.
     pub fn pending_views(&self) -> usize {
-        self.pending.len()
+        let newest = self.base + self.hist.len() - 1;
+        newest - self.view_idx.iter().copied().min().unwrap_or(newest)
     }
 }
 
@@ -390,11 +529,53 @@ mod tests {
         assert!(mon.same_component_observed(0, 1));
         assert_eq!(mon.promote_due(10.2), ViewDelta::default());
         assert_eq!(mon.num_observed_components(), 1);
+        assert_eq!(mon.pending_views(), 1);
         let delta = mon.promote_due(11.5);
         assert_eq!(delta.splits, 1);
         assert_eq!(mon.num_observed_components(), 2);
         assert!(!mon.same_component_observed(0, 1));
         assert_eq!(mon.pending_views(), 0);
+    }
+
+    #[test]
+    fn per_worker_latencies_stagger_adoption() {
+        // ring(6) cut into {1,2,3} and {4,5,0}; workers 0-2 detect fast
+        // (0.5 s), workers 3-5 slowly (2.0 s)
+        let mut g = ring(6);
+        let lat = vec![0.5, 0.5, 0.5, 2.0, 2.0, 2.0];
+        let mut mon = PartitionMonitor::with_latencies(&g, lat);
+        assert_eq!(mon.distinct_latencies(), vec![0.5, 2.0]);
+        let cut = [
+            TopologyMutation::RemoveEdge(0, 1),
+            TopologyMutation::RemoveEdge(3, 4),
+        ];
+        apply_mutations_unrepaired(&mut g, &cut);
+        mon.apply_mutations(&g, &cut);
+        mon.queue_observation(10.0);
+
+        // t = 10.6: only the fast detectors have adopted the split view
+        let delta = mon.promote_due(10.6);
+        assert!(delta.changed());
+        assert_eq!(mon.pending_views(), 1, "slow workers still hold the old view");
+        // fast worker 1 sees the cut: its component is {1,2,3}
+        assert_eq!(mon.component_members(1), vec![1, 2, 3]);
+        assert!(!mon.same_component_observed(1, 0));
+        // slow worker 4 still believes the ring is whole
+        assert_eq!(mon.component_members(4), (0..6).collect::<Vec<_>>());
+        assert!(mon.same_component_observed(4, 1), "stale view: 4 still sees 1");
+
+        // t = 12.0: everyone has adopted; views agree again
+        let late = mon.promote_due(12.0);
+        assert_eq!(late, ViewDelta::default(), "the transition was already counted");
+        assert_eq!(mon.pending_views(), 0);
+        assert_eq!(mon.component_members(4), vec![0, 4, 5]);
+        assert_eq!(mon.num_observed_components(), 2);
+        assert_eq!(mon.observed_labels(), component_labels(&g).as_slice());
+        // one real split, and — crucially — no phantom merge from the
+        // slow workers catching up, so DSGD-AAU's heal restart stays off
+        assert_eq!(mon.observed_splits(), 1);
+        assert_eq!(mon.observed_merges(), 0);
+        assert!(mon.take_merge_members().is_empty());
     }
 
     #[test]
@@ -449,5 +630,28 @@ mod tests {
                 assert_eq!(mon.num_components(), count_components(mon.labels()));
             }
         }
+    }
+
+    #[test]
+    fn history_is_garbage_collected() {
+        let mut g = ring(4);
+        let mut mon = PartitionMonitor::new(&g, 1.0);
+        for i in 0..50 {
+            let t = i as f64;
+            let muts = if i % 2 == 0 {
+                [TopologyMutation::RemoveEdge(0, 1)]
+            } else {
+                [TopologyMutation::AddEdge(0, 1)]
+            };
+            apply_mutations_unrepaired(&mut g, &muts);
+            mon.apply_mutations(&g, &muts);
+            mon.queue_observation(t);
+            mon.promote_due(t); // adopts the snapshot queued at t - 1
+        }
+        assert!(
+            mon.hist.len() <= 3,
+            "adopted snapshots must be garbage-collected, kept {}",
+            mon.hist.len()
+        );
     }
 }

@@ -10,6 +10,7 @@ use crate::algorithms::AlgorithmKind;
 use crate::churn::ChurnConfig;
 use crate::sim::{CommModel, StragglerModel};
 use crate::topology::TopologyKind;
+use crate::trace::TraceConfig;
 use crate::util::json::Json;
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
@@ -92,6 +93,11 @@ pub struct ExperimentConfig {
     /// repair), component-aware update rules, detection latency and the
     /// heal-restart policy.  Defaults preserve the legacy behavior.
     pub adapt: AdaptConfig,
+    /// Real-cluster trace ingestion: when set, the named machine-event
+    /// log is lowered into the straggler *and* topology timelines (the
+    /// `churn` section must stay inactive and `straggler` on the default
+    /// Bernoulli kind — its `slowdown` still applies).
+    pub trace: Option<TraceConfig>,
     /// Update rule under test.
     pub algorithm: AlgorithmKind,
     /// Gradient backend.
@@ -148,6 +154,7 @@ impl Default for ExperimentConfig {
             topology: TopologyKind::default(),
             churn: ChurnConfig::default(),
             adapt: AdaptConfig::default(),
+            trace: None,
             algorithm: AlgorithmKind::DsgdAau,
             backend: BackendKind::Quadratic,
             model: "mlp_small".into(),
@@ -201,6 +208,10 @@ impl ExperimentConfig {
             "topology" => self.topology = TopologyKind::from_json(v)?,
             "churn" => self.churn = ChurnConfig::from_json(v)?,
             "adapt" => self.adapt = AdaptConfig::from_json(v)?,
+            "trace" => {
+                self.trace =
+                    if matches!(v, Json::Null) { None } else { Some(TraceConfig::from_json(v)?) }
+            }
             "algorithm" => {
                 self.algorithm = AlgorithmKind::parse(v.as_str().unwrap_or_default())?
             }
@@ -255,6 +266,9 @@ impl ExperimentConfig {
         m.insert("topology".into(), self.topology.to_json());
         m.insert("churn".into(), self.churn.to_json());
         m.insert("adapt".into(), self.adapt.to_json());
+        if let Some(tc) = &self.trace {
+            m.insert("trace".into(), tc.to_json());
+        }
         m.insert("algorithm".into(), Json::from(self.algorithm.token()));
         m.insert("backend".into(), Json::from(self.backend.token()));
         m.insert("model".into(), Json::from(self.model.as_str()));
@@ -308,6 +322,23 @@ impl ExperimentConfig {
         self.comm.validate()?;
         self.churn.validate()?;
         self.adapt.validate()?;
+        if let Some(tc) = &self.trace {
+            tc.validate()?;
+            anyhow::ensure!(
+                !self.churn.is_active(),
+                "the trace section drives the topology timeline — remove the churn section"
+            );
+            anyhow::ensure!(
+                !self.straggler.is_correlated(),
+                "the trace section drives the straggler process — keep the straggler section \
+                 on the default bernoulli kind (its slowdown still applies)"
+            );
+            anyhow::ensure!(
+                self.straggler.probability == StragglerModel::default().probability,
+                "the trace section drives the straggler process — the bernoulli probability \
+                 is unused, leave it unset (only the straggler slowdown applies)"
+            );
+        }
         Ok(())
     }
 }
@@ -442,6 +473,52 @@ mod tests {
         // omitting the section keeps the paper's measured fabric
         let default = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
         assert_eq!(default.comm, crate::sim::CommModel::default());
+    }
+
+    #[test]
+    fn trace_section_parses_strictly_and_roundtrips() {
+        let cfg = ExperimentConfig::from_json(
+            &Json::parse(
+                r#"{"trace": {"kind": "alibaba", "path": "traces/usage.csv",
+                     "map": "top_busiest", "window": [30, 900], "horizon": 20,
+                     "threshold": 0.85, "hysteresis": 0.15}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let tc = cfg.trace.as_ref().expect("trace section parsed");
+        assert_eq!(tc.kind, crate::trace::TraceKind::Alibaba);
+        assert_eq!(tc.map, crate::trace::MapPolicy::TopBusiest);
+        assert_eq!(tc.window, Some((30.0, 900.0)));
+        let back =
+            ExperimentConfig::from_json(&Json::parse(&cfg.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back.trace, cfg.trace);
+        // unknown trace keys are rejected, not defaulted
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"trace": {"kind": "borg", "path": "x.csv", "horzion": 5}}"#).unwrap()
+        )
+        .is_err());
+        // omitting the section keeps the synthetic generators
+        let legacy = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(legacy.trace.is_none());
+        // trace + active churn (or a correlated straggler) is ambiguous
+        let mut cfg = cfg;
+        cfg.churn = crate::churn::ChurnConfig {
+            kind: crate::churn::ChurnKind::FlakyLinks { rate: 1.0, mean_downtime: 1.0 },
+            seed: None,
+        };
+        assert!(cfg.validate().is_err(), "trace replaces churn");
+        cfg.churn = crate::churn::ChurnConfig::default();
+        cfg.straggler.kind =
+            crate::sim::StragglerKind::GilbertElliott { mean_fast: 1.0, mean_slow: 1.0 };
+        assert!(cfg.validate().is_err(), "trace replaces the straggler process");
+        cfg.straggler = StragglerModel::default();
+        cfg.straggler.probability = 0.4;
+        assert!(cfg.validate().is_err(), "an unused bernoulli probability is rejected");
+        cfg.straggler = StragglerModel::default();
+        cfg.straggler.slowdown = 15.0; // the slowdown DOES apply to trace slow states
+        cfg.validate().unwrap();
     }
 
     #[test]

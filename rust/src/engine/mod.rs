@@ -98,11 +98,6 @@ impl EngineCore {
         self.adapt.heal_restart
     }
 
-    /// Seconds until workers' local views observe a component change.
-    pub fn detection_latency(&self) -> f64 {
-        self.adapt.detection_latency
-    }
-
     /// Neighbors of `w` that `w` believes reachable: the live-graph
     /// neighbor list, filtered by the observed component view when
     /// partition-aware adaptivity is on (identity filter otherwise).
@@ -247,8 +242,8 @@ impl EngineCore {
     /// (each applied mutation floods two endpoint IDs, the same O(2N)
     /// accounting as Pathsearch's Remark 4), and update the partition
     /// monitor's ground truth incrementally.  Returns `true` when a
-    /// component change must be detected later — the caller schedules a
-    /// `PartitionDetect` event `adapt.detection_latency` seconds out.
+    /// component change must be detected later — the caller schedules one
+    /// `PartitionDetect` event per distinct detection latency.
     pub fn on_topology_changed(
         &mut self,
         outcome: ApplyOutcome,
@@ -464,18 +459,36 @@ impl Engine {
         let n = cfg.num_workers;
         let graph = cfg.topology.build(n);
         assert!(graph.is_connected(), "topology must be connected");
-        let compute = ComputeModel::new(
-            n,
-            cfg.mean_compute,
-            cfg.hetero_sigma,
-            &cfg.straggler,
-            cfg.seed_for("compute"),
-        )?;
+        // A trace section replaces both synthetic generators: the lowered
+        // straggler timeline drives the compute model and the lowered
+        // topology timeline replays through the churn path.
+        let lowered = match &cfg.trace {
+            Some(tc) => Some(crate::trace::TraceIngest::load(tc)?.lower(n, &graph)?),
+            None => None,
+        };
+        let compute = match &lowered {
+            Some(lt) => ComputeModel::with_process(
+                n,
+                cfg.mean_compute,
+                cfg.hetero_sigma,
+                cfg.straggler.slowdown,
+                Box::new(crate::sim::TraceProcess::from_timeline(&lt.straggler, n)),
+                cfg.seed_for("compute"),
+            ),
+            None => ComputeModel::new(
+                n,
+                cfg.mean_compute,
+                cfg.hetero_sigma,
+                &cfg.straggler,
+                cfg.seed_for("compute"),
+            )?,
+        };
         let dim = backend.dim();
         let init = backend.init_params(cfg.seed_for("init"));
         assert_eq!(init.len(), dim);
         let param_bytes = backend.param_bytes();
-        let monitor = PartitionMonitor::new(&graph, cfg.adapt.detection_latency);
+        let monitor =
+            PartitionMonitor::with_latencies(&graph, cfg.adapt.detection_latency.resolve(n)?);
         let mut recorder = Recorder::new();
         recorder.max_components = monitor.num_components();
         let core = EngineCore {
@@ -501,7 +514,10 @@ impl Engine {
             full_weights: None,
         };
         let rule = cfg.algorithm.build(cfg.prague_group, cfg.seed_for("algorithm"));
-        let churn = ChurnModel::from_config(&cfg.churn, n, cfg.seed_for("churn"))?;
+        let churn = match lowered {
+            Some(lt) => ChurnModel::replay(lt.topology),
+            None => ChurnModel::from_config(&cfg.churn, n, cfg.seed_for("churn"))?,
+        };
         Ok(Engine {
             core,
             rule,
@@ -560,8 +576,15 @@ impl Engine {
                             outcome
                         };
                         if self.core.on_topology_changed(outcome, &muts) {
-                            let latency = self.core.detection_latency();
-                            self.core.queue.schedule_in(latency, EventKind::PartitionDetect);
+                            // One detect wake-up per distinct latency, so
+                            // each worker's adoption instant gets a
+                            // `PartitionDetect` event even when detectors
+                            // are heterogeneous.
+                            for latency in self.core.monitor.distinct_latencies() {
+                                self.core
+                                    .queue
+                                    .schedule_in(latency, EventKind::PartitionDetect);
+                            }
                         }
                     }
                     if let Some(t) = self.churn.next_change() {

@@ -29,6 +29,23 @@
 //! Python never runs on the training path: the [`runtime`] module loads the
 //! AOT artifacts via PJRT and executes them from the rust event loop.
 //!
+//! Real cluster history plugs into the same machinery: the [`trace`]
+//! module ingests Google Borg / Alibaba machine-event logs (plus a
+//! documented generic CSV) and lowers them onto the replayable
+//! straggler/topology timelines via the `trace` config section.
+//!
+//! ## Guides
+//!
+//! Three long-form guides live in `docs/` at the repository root:
+//!
+//! * `docs/architecture.md` — layering (engine → sim/churn/adapt/trace →
+//!   sweep) and an event-loop walkthrough;
+//! * `docs/config.md` — the full `ExperimentConfig` reference, one
+//!   validated JSON example per strict-parsed section;
+//! * `docs/scenarios.md` — the scenario cookbook: writing, generating
+//!   and ingesting timelines, the three trace-file formats, and how to
+//!   add a sweep suite.
+//!
 //! ## Quick start
 //!
 //! One experiment:
@@ -65,6 +82,9 @@
 //! println!("{} cells ({} resumed)", run.records.len(), run.skipped);
 //! ```
 
+// `missing_docs` is denied module-by-module as coverage lands; the goal
+// is a crate-wide deny once the remaining seed modules are documented.
+#[deny(missing_docs)]
 pub mod adapt;
 pub mod algorithms;
 pub mod backend;
@@ -80,8 +100,11 @@ pub mod model;
 pub mod pathsearch;
 pub mod runtime;
 pub mod sim;
+#[deny(missing_docs)]
 pub mod sweep;
 pub mod topology;
+#[deny(missing_docs)]
+pub mod trace;
 pub mod util;
 
 /// Worker identifier: dense indices `0..N`.

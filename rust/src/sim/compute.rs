@@ -45,21 +45,41 @@ impl ComputeModel {
         straggler: &StragglerModel,
         seed: u64,
     ) -> Result<Self> {
+        let process = straggler.build(n, seed)?;
+        Ok(Self::with_process(n, mean_compute, hetero_sigma, straggler.slowdown, process, seed))
+    }
+
+    /// [`Self::new`] with an explicitly constructed straggler process —
+    /// the trace-ingestion path injects a lowered
+    /// [`TraceProcess`](super::straggler::TraceProcess) here without
+    /// routing it through a temp file.  `slowdown` is the multiplicative
+    /// inflation applied while the process reports a worker slow.  The
+    /// per-worker mean draws consume the same RNG stream as
+    /// [`Self::new`], so swapping a built process for its config form is
+    /// bit-compatible.
+    pub fn with_process(
+        n: usize,
+        mean_compute: f64,
+        hetero_sigma: f64,
+        slowdown: f64,
+        process: Box<dyn StragglerProcess>,
+        seed: u64,
+    ) -> Self {
         let mut rng = Rng64::seed_from_u64(seed ^ 0xBEEF);
         let base_mean = if hetero_sigma > 0.0 {
             (0..n).map(|_| mean_compute * rng.lognormal(hetero_sigma)).collect()
         } else {
             vec![mean_compute; n]
         };
-        Ok(ComputeModel {
+        ComputeModel {
             base_mean,
             jitter_sigma: 0.1,
-            slowdown: straggler.slowdown,
-            process: straggler.build(n, seed)?,
+            slowdown,
+            process,
             rng,
             straggler_events: 0,
             samples: 0,
-        })
+        }
     }
 
     /// Homogeneous fleet: every worker has the same `mean_compute` time.

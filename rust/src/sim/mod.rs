@@ -14,6 +14,7 @@
 
 mod compute;
 mod events;
+#[deny(missing_docs)]
 pub mod straggler;
 
 pub use compute::ComputeModel;

@@ -55,6 +55,18 @@ pub struct TraceEntry {
 }
 
 /// Timestamped slow/fast schedule (sorted by time).
+///
+/// ```
+/// use dsgd_aau::sim::straggler::{StragglerEvent, StragglerTimeline};
+///
+/// let mut tl = StragglerTimeline::new();
+/// tl.push(1.0, vec![StragglerEvent { worker: 0, slow: true }]);
+/// tl.push(2.5, vec![StragglerEvent { worker: 0, slow: false }]);
+/// // the JSON envelope matches the churn TopologyTimeline's
+/// let back = StragglerTimeline::from_json(&tl.to_json()).unwrap();
+/// assert_eq!(back, tl);
+/// assert_eq!(back.num_events(), 2);
+/// ```
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct StragglerTimeline {
     /// Schedule entries in non-decreasing time order.

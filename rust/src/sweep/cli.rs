@@ -140,7 +140,7 @@ pub struct Suite {
     pub build: fn(&BenchArgs) -> Result<SweepSpec>,
 }
 
-/// The nine suites, in paper order.
+/// The ten suites, in paper order.
 pub fn registry() -> Vec<Suite> {
     vec![
         Suite {
@@ -196,6 +196,12 @@ pub fn registry() -> Vec<Suite> {
             paper: "ROADMAP partition grid",
             summary: "repair/blind/aware partition handling per algorithm",
             build: suites::partition,
+        },
+        Suite {
+            name: "trace",
+            paper: "ROADMAP trace import",
+            summary: "real-cluster excerpts (Borg/Alibaba/generic) x algorithm",
+            build: suites::trace,
         },
     ]
 }
@@ -274,12 +280,13 @@ mod tests {
     use super::*;
 
     #[test]
-    fn registry_has_nine_unique_suites() {
+    fn registry_has_ten_unique_suites() {
         let names: Vec<&str> = registry().iter().map(|s| s.name).collect();
-        assert_eq!(names.len(), 9);
+        assert_eq!(names.len(), 10);
         let set: std::collections::BTreeSet<&str> = names.iter().copied().collect();
         assert_eq!(set.len(), names.len(), "suite names must be unique");
         assert!(find_suite("partition").is_some());
+        assert!(find_suite("trace").is_some());
         assert!(find_suite("nope").is_none());
     }
 

@@ -33,6 +33,7 @@
 //! churn grid (ROADMAP)      bench churn           scenario x algorithm
 //! joint grid (ROADMAP)      bench straggler       process x churn x algorithm
 //! partition grid (ROADMAP)  bench partition       repair/blind/aware x algorithm
+//! trace grid (ROADMAP)      bench trace           real-cluster excerpt x algorithm
 //! ```
 //!
 //! `bench all --quick` runs every suite's smoke grid (the CI perf

@@ -289,6 +289,20 @@ pub struct Cell {
 }
 
 /// Declarative sweep: base config, axes, targets and result tables.
+///
+/// ```
+/// use dsgd_aau::sweep::cli::BenchArgs;
+/// use dsgd_aau::sweep::{Axis, SweepSpec};
+///
+/// let spec = SweepSpec::new("doc", "demo sweep", |cfg| cfg.max_iterations = 10)
+///     .axis(Axis::from_numbers("N", &[4usize], &[4, 8], &[8, 16], |cfg, n| {
+///         cfg.num_workers = n
+///     }));
+/// let cells = spec.lower(&BenchArgs::default()).unwrap();
+/// assert_eq!(cells.len(), 2); // default tier: N in {4, 8}
+/// assert_eq!(cells[1].cfg.num_workers, 8);
+/// assert_eq!(cells[1].labels, vec![("N".to_string(), "8".to_string())]);
+/// ```
 pub struct SweepSpec {
     /// Suite name (`bench <suite>`, `BENCH_<suite>.json`).
     pub suite: String,
@@ -503,12 +517,7 @@ fn cell_name(suite: &str, labels: &[(String, String)]) -> String {
 /// Stable config hash: FNV-1a over the compact JSON form.
 pub fn config_hash(cfg: &ExperimentConfig) -> String {
     let text = cfg.to_json().to_string_compact();
-    let mut h: u64 = 0xcbf29ce484222325;
-    for b in text.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    format!("{h:016x}")
+    format!("{:016x}", crate::util::fnv1a(text.as_bytes()))
 }
 
 #[cfg(test)]

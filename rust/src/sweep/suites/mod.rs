@@ -1,12 +1,15 @@
 //! The registered bench suites: each paper table/figure (plus the
-//! ROADMAP's churn/straggler/partition grids) as a ~30-line [`SweepSpec`]
-//! declaration.  The registry lives in [`crate::sweep::cli`].
+//! ROADMAP's churn/straggler/partition grids and the real-cluster trace
+//! grid) as a ~30-line [`SweepSpec`] declaration.  The registry lives in
+//! [`crate::sweep::cli`].
 
 mod paper;
 mod scenarios;
+mod trace;
 
 pub use paper::{ablation, accuracy, fixedk, loss_curves, speedup, timebudget};
 pub use scenarios::{churn, partition, straggler};
+pub use trace::trace;
 
 use crate::algorithms::AlgorithmKind;
 use crate::config::ExperimentConfig;

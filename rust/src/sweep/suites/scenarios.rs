@@ -209,7 +209,7 @@ fn mode_values() -> Vec<AxisValue> {
             cfg.adapt = AdaptConfig {
                 allow_partitions: true,
                 partition_aware: true,
-                detection_latency: 0.1,
+                detection_latency: 0.1.into(),
                 heal_restart: true,
             }
         }),

@@ -1,0 +1,132 @@
+//! Alibaba cluster-trace parser (`machine_usage` + `machine_meta`).
+//!
+//! Two row layouts of the cluster-trace-v2018 release are accepted and
+//! may be mixed in one file:
+//!
+//! * **`machine_usage`** (9 columns):
+//!   `machine_id,time_stamp,cpu_util_percent,mem_util_percent,mem_gps,mkpi,net_in,net_out,disk_io_percent`
+//!   — each row yields a [`MachineEvent::Usage`] sample
+//!   (`cpu_util_percent / 100`); the ingestion pipeline thresholds the
+//!   samples into slow states with hysteresis.  Only the first three
+//!   columns are read; trailing columns may be empty but must be present.
+//! * **`machine_meta`** (exactly 7 columns, trailing non-numeric
+//!   `status`):
+//!   `machine_id,time_stamp,failure_domain_1,failure_domain_2,cpu_num,mem_size,status`
+//!   — the `status` transition yields availability events: `USING` is up,
+//!   any other status (`OFFLINE`, `OFF_LINE`, …) is down.  A 7-column row
+//!   whose last field is empty or numeric is treated as a (truncated)
+//!   usage row instead — statuses in the public trace are always words,
+//!   so a hand-trimmed usage row cannot silently become a machine-down
+//!   event.
+//!
+//! `time_stamp` is seconds since trace start.  Blank lines, `#` comments
+//! and a `machine_id,...` header row are skipped; anything else malformed
+//! is a row-numbered error.
+
+use super::{MachineEvent, TraceEvent};
+use anyhow::{anyhow, ensure, Result};
+
+pub(super) fn parse(text: &str) -> Result<Vec<TraceEvent>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let row = i + 1;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cols: Vec<&str> = line.split(',').map(str::trim).collect();
+        if cols[0].eq_ignore_ascii_case("machine_id") {
+            continue; // header
+        }
+        let machine = cols[0];
+        ensure!(!machine.is_empty(), "row {row}: empty machine id");
+        ensure!(
+            cols.len() >= 3,
+            "row {row}: expected a machine_usage (9-column) or machine_meta (7-column) row, \
+             got {} column(s)",
+            cols.len()
+        );
+        let time: f64 = cols[1]
+            .parse()
+            .map_err(|_| anyhow!("row {row}: bad time_stamp {:?}", cols[1]))?;
+        ensure!(
+            time.is_finite() && time >= 0.0,
+            "row {row}: time_stamp must be a non-negative number of seconds"
+        );
+        let is_meta =
+            cols.len() == 7 && !cols[6].is_empty() && cols[6].parse::<f64>().is_err();
+        let event = if is_meta {
+            // machine_meta: trailing status column drives availability
+            if cols[6].eq_ignore_ascii_case("using") {
+                MachineEvent::Up
+            } else {
+                MachineEvent::Down
+            }
+        } else {
+            // machine_usage: cpu_util_percent in [0, 100]
+            let util: f64 = cols[2]
+                .parse()
+                .map_err(|_| anyhow!("row {row}: bad cpu_util_percent {:?}", cols[2]))?;
+            ensure!(
+                (0.0..=100.0).contains(&util),
+                "row {row}: cpu_util_percent {util} outside [0, 100]"
+            );
+            MachineEvent::Usage(util / 100.0)
+        };
+        out.push(TraceEvent { time, machine: machine.to_string(), event });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_usage_and_meta_rows() {
+        let text = "machine_id,time_stamp,cpu_util_percent,mem_util_percent,mem_gps,mkpi,net_in,net_out,disk_io_percent\n\
+                    m_1932,30,22,56,,,,,\n\
+                    m_1932,60,91,60,,,,,\n\
+                    m_0718,30,1,1,1,1,1,1,1\n\
+                    m_0718,90,fd1,fd2,96,normalized,USING\n\
+                    m_0718,120,fd1,fd2,96,normalized,OFFLINE\n";
+        let evs = parse(text).unwrap();
+        assert_eq!(evs.len(), 5);
+        assert_eq!(evs[0].event, MachineEvent::Usage(0.22));
+        assert_eq!(evs[1].event, MachineEvent::Usage(0.91));
+        assert_eq!(evs[3].event, MachineEvent::Up, "7-column USING row is availability");
+        assert_eq!(evs[4].event, MachineEvent::Down);
+        assert_eq!(evs[4].time, 120.0);
+    }
+
+    #[test]
+    fn truncated_usage_rows_do_not_masquerade_as_meta() {
+        // 7 columns with a numeric tail: a hand-trimmed usage row — it
+        // must stay a utilization sample, never a machine-down event
+        let evs = parse("m_1,10,93,1,2,3,4\n").unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].event, MachineEvent::Usage(0.93));
+    }
+
+    #[test]
+    fn malformed_rows_are_row_numbered() {
+        let err = parse("m_1,abc,50,1,,,,,\n").unwrap_err().to_string();
+        assert!(err.contains("row 1") && err.contains("time_stamp"), "{err}");
+
+        let err = parse("m_1,10,140,1,,,,,\n").unwrap_err().to_string();
+        assert!(err.contains("row 1") && err.contains("[0, 100]"), "{err}");
+
+        let err = parse("m_1,10\n").unwrap_err().to_string();
+        assert!(err.contains("row 1") && err.contains("column"), "{err}");
+
+        // a 7-column row with an empty status is not silently meta: it
+        // falls through to the usage path and fails on the bad utilization
+        let err = parse("m_1,10,x,x,x,x,\n").unwrap_err().to_string();
+        assert!(err.contains("row 1") && err.contains("cpu_util_percent"), "{err}");
+
+        // the bad row is the third line (header counts)
+        let text = "machine_id,time_stamp,cpu_util_percent\nm_1,10,50,1,,,,,\nm_1,20,oops,1,,,,,\n";
+        let err = parse(text).unwrap_err().to_string();
+        assert!(err.contains("row 3"), "{err}");
+    }
+}

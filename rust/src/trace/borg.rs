@@ -1,0 +1,109 @@
+//! Google Borg / ClusterData `machine_events` parser.
+//!
+//! Row format (ClusterData v2 `machine_events` table):
+//!
+//! ```text
+//! timestamp,machine_id,event_type[,platform_id,cpus,memory]
+//! ```
+//!
+//! * `timestamp` — microseconds since trace start (converted to seconds);
+//! * `event_type` — the ClusterData codes `0` = ADD, `1` = REMOVE,
+//!   `2` = UPDATE; the words `ADD`/`REMOVE`/`UPDATE` are accepted too,
+//!   case-insensitively.  UPDATE rows carry capacity changes we do not
+//!   model and parse to nothing.
+//!
+//! Blank lines, `#` comments and a `timestamp,...` header row are
+//! skipped; anything else malformed is a row-numbered error.  Fields must
+//! not be quoted (the public trace files are plain CSV).
+
+use super::{MachineEvent, TraceEvent};
+use anyhow::{anyhow, bail, ensure, Result};
+
+pub(super) fn parse(text: &str) -> Result<Vec<TraceEvent>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let row = i + 1;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cols: Vec<&str> = line.split(',').map(str::trim).collect();
+        if cols[0].eq_ignore_ascii_case("timestamp") {
+            continue; // header
+        }
+        ensure!(
+            cols.len() >= 3,
+            "row {row}: expected `timestamp,machine_id,event_type`, got {} column(s)",
+            cols.len()
+        );
+        let us: f64 = cols[0]
+            .parse()
+            .map_err(|_| anyhow!("row {row}: bad timestamp {:?}", cols[0]))?;
+        ensure!(
+            us.is_finite() && us >= 0.0,
+            "row {row}: timestamp must be a non-negative number of microseconds"
+        );
+        let machine = cols[1];
+        ensure!(!machine.is_empty(), "row {row}: empty machine id");
+        let event = match cols[2].to_ascii_lowercase().as_str() {
+            "0" | "add" => Some(MachineEvent::Up),
+            "1" | "remove" => Some(MachineEvent::Down),
+            "2" | "update" => None,
+            other => bail!(
+                "row {row}: unknown Borg event type {other:?} (0/ADD, 1/REMOVE, 2/UPDATE)"
+            ),
+        };
+        if let Some(event) = event {
+            out.push(TraceEvent { time: us / 1e6, machine: machine.to_string(), event });
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_codes_words_headers_and_comments() {
+        let text = "# excerpt\n\
+                    timestamp,machine_id,event_type,platform_id,cpus,memory\n\
+                    0,m1,0,p,0.5,0.25\n\
+                    5000000,m2,ADD,p,0.5,0.25\n\
+                    10000000,m1,1,,,\n\
+                    15000000,m1,remove,,,\n\
+                    20000000,m2,2,p,1.0,0.5\n\
+                    25000000,m1,add,,,\n";
+        let evs = parse(text).unwrap();
+        // the UPDATE row parses to nothing
+        assert_eq!(evs.len(), 5);
+        assert_eq!(evs[0], TraceEvent { time: 0.0, machine: "m1".into(), event: MachineEvent::Up });
+        assert_eq!(evs[1].time, 5.0, "microseconds convert to seconds");
+        assert_eq!(evs[2].event, MachineEvent::Down);
+        assert_eq!(
+            evs[4],
+            TraceEvent { time: 25.0, machine: "m1".into(), event: MachineEvent::Up }
+        );
+    }
+
+    #[test]
+    fn malformed_rows_are_row_numbered() {
+        // row 3 (after the header) has a bogus event type
+        let text = "timestamp,machine_id,event_type\n0,m1,0\n5,m1,explode\n";
+        let err = parse(text).unwrap_err().to_string();
+        assert!(err.contains("row 3"), "{err}");
+        assert!(err.contains("explode"), "{err}");
+
+        let err = parse("nonsense,m1,0\n").unwrap_err().to_string();
+        assert!(err.contains("row 1") && err.contains("timestamp"), "{err}");
+
+        let err = parse("-5,m1,0\n").unwrap_err().to_string();
+        assert!(err.contains("row 1"), "{err}");
+
+        let err = parse("0,m1\n").unwrap_err().to_string();
+        assert!(err.contains("row 1") && err.contains("column"), "{err}");
+
+        let err = parse("0,,0\n").unwrap_err().to_string();
+        assert!(err.contains("row 1") && err.contains("machine"), "{err}");
+    }
+}

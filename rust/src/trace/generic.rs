@@ -1,0 +1,113 @@
+//! The documented generic fallback CSV (see `docs/scenarios.md`).
+//!
+//! Row format:
+//!
+//! ```text
+//! time,node,event[,value]
+//! ```
+//!
+//! * `time` — seconds since trace start (any non-negative float);
+//! * `node` — opaque machine identifier;
+//! * `event` — one of `up`, `down`, `slow`, `recover`, or `usage`
+//!   (case-insensitive); `usage` requires a `value` in `[0, 1]`, which
+//!   the pipeline thresholds into slow states with hysteresis.
+//!
+//! Blank lines, `#` comments and a `time,...` header row are skipped;
+//! anything else malformed is a row-numbered error.
+
+use super::{MachineEvent, TraceEvent};
+use anyhow::{anyhow, bail, ensure, Result};
+
+pub(super) fn parse(text: &str) -> Result<Vec<TraceEvent>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let row = i + 1;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cols: Vec<&str> = line.split(',').map(str::trim).collect();
+        if cols[0].eq_ignore_ascii_case("time") {
+            continue; // header
+        }
+        ensure!(
+            cols.len() >= 3,
+            "row {row}: expected `time,node,event[,value]`, got {} column(s)",
+            cols.len()
+        );
+        let time: f64 =
+            cols[0].parse().map_err(|_| anyhow!("row {row}: bad time {:?}", cols[0]))?;
+        ensure!(
+            time.is_finite() && time >= 0.0,
+            "row {row}: time must be a non-negative number of seconds"
+        );
+        let machine = cols[1];
+        ensure!(!machine.is_empty(), "row {row}: empty node id");
+        let event = match cols[2].to_ascii_lowercase().as_str() {
+            "up" => MachineEvent::Up,
+            "down" => MachineEvent::Down,
+            "slow" => MachineEvent::Slow(true),
+            "recover" => MachineEvent::Slow(false),
+            "usage" => {
+                let raw = cols.get(3).copied().unwrap_or("");
+                ensure!(!raw.is_empty(), "row {row}: usage needs a value column");
+                let v: f64 = raw
+                    .parse()
+                    .map_err(|_| anyhow!("row {row}: bad usage value {raw:?}"))?;
+                ensure!(
+                    (0.0..=1.0).contains(&v),
+                    "row {row}: usage value {v} outside [0, 1]"
+                );
+                MachineEvent::Usage(v)
+            }
+            other => bail!(
+                "row {row}: unknown event {other:?} (up|down|slow|recover|usage)"
+            ),
+        };
+        out.push(TraceEvent { time, machine: machine.to_string(), event });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_event_kind() {
+        let text = "time,node,event,value\n\
+                    # warm-up\n\
+                    0,a,up,\n\
+                    1.5,a,slow,\n\
+                    2,a,recover,\n\
+                    3,b,down,\n\
+                    4,b,up,\n\
+                    5,c,usage,0.92\n";
+        let evs = parse(text).unwrap();
+        assert_eq!(evs.len(), 6);
+        assert_eq!(
+            evs[1],
+            TraceEvent { time: 1.5, machine: "a".into(), event: MachineEvent::Slow(true) }
+        );
+        assert_eq!(evs[2].event, MachineEvent::Slow(false));
+        assert_eq!(evs[5].event, MachineEvent::Usage(0.92));
+    }
+
+    #[test]
+    fn malformed_rows_are_row_numbered() {
+        let err = parse("x,a,up\n").unwrap_err().to_string();
+        assert!(err.contains("row 1") && err.contains("time"), "{err}");
+
+        let err = parse("1,a,explode\n").unwrap_err().to_string();
+        assert!(err.contains("row 1") && err.contains("explode"), "{err}");
+
+        let err = parse("1,a,usage\n").unwrap_err().to_string();
+        assert!(err.contains("row 1") && err.contains("value"), "{err}");
+
+        let err = parse("1,a,usage,7\n").unwrap_err().to_string();
+        assert!(err.contains("row 1") && err.contains("[0, 1]"), "{err}");
+
+        let err = parse("time,node,event\n1,a,up\n2,,down\n").unwrap_err().to_string();
+        assert!(err.contains("row 3"), "{err}");
+    }
+}

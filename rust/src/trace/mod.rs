@@ -1,0 +1,821 @@
+//! Real-cluster trace ingestion: machine-event logs → replayable timelines.
+//!
+//! PR 1's `TopologyTimeline` and PR 2's `StragglerTimeline` can replay any
+//! correlated churn/straggler process bit for bit, but until now every
+//! scenario was synthetically generated.  This module grounds both axes in
+//! *real* cluster history: it parses machine-event logs from production
+//! traces and lowers them onto the existing timeline formats, so a morning
+//! of Borg machine churn or an Alibaba utilization storm becomes an
+//! `ExperimentConfig` any of the five algorithms can train through.
+//!
+//! ## Pipeline
+//!
+//! 1. **Parse** ([`parse_events`]) one of three formats into a common
+//!    stream of [`TraceEvent`]s (seconds + opaque machine id + what
+//!    happened).  Malformed rows are rejected with row-numbered errors.
+//!    * [`TraceKind::Borg`] — Google Borg / ClusterData `machine_events`
+//!      CSV (`timestamp,machine_id,event_type`, µs timestamps, event
+//!      types `0`/ADD, `1`/REMOVE, `2`/UPDATE);
+//!    * [`TraceKind::Alibaba`] — Alibaba cluster-trace `machine_usage`
+//!      rows (CPU-utilization samples) and `machine_meta` rows (`USING`
+//!      /`OFFLINE` status transitions);
+//!    * [`TraceKind::Generic`] — the documented fallback CSV
+//!      (`time,node,event[,value]`; see `docs/scenarios.md`).
+//! 2. **Map** machines onto the `m` simulated workers ([`MapPolicy`]:
+//!    stable hash, first-appearance round-robin, or one-to-one onto the
+//!    top-`m` busiest machines, dropping the rest).
+//! 3. **Threshold** utilization samples into slow states with hysteresis:
+//!    a machine enters the slow state when utilization reaches
+//!    `threshold` and recovers only once it falls to
+//!    `threshold - hysteresis`, so samples oscillating around the
+//!    threshold do not flap.
+//! 4. **Rescale** the selected wall-clock `window` (defaults to the whole
+//!    trace span) linearly onto `horizon` virtual seconds, folding
+//!    pre-window history into the state at virtual time zero.
+//! 5. **Lower** ([`TraceIngest::lower`]) into a [`LoweredTrace`]:
+//!    machine slow/recover flips become a [`StragglerTimeline`], machine
+//!    REMOVE/ADD become `Isolate`/`Attach` mutations in a
+//!    [`TopologyTimeline`] — both replayed through the exact churn and
+//!    straggler paths the synthetic generators use.
+//!
+//! When several machines share one worker, the worker is **slow while any
+//! of its machines is slow** and **down only while all of them are down**
+//! (the worker models their pooled capacity).  Workers with no mapped
+//! machine stay up and fast.
+//!
+//! ## Config reference (`trace` section)
+//!
+//! ```json
+//! {
+//!   "trace": {
+//!     "kind": "borg",                // borg | alibaba | generic
+//!     "path": "rust/testdata/traces/borg_machine_events.csv",
+//!     "map": "round_robin",          // hash | round_robin | top_busiest
+//!     "window": [0.0, 3600.0],       // optional trace-seconds slice
+//!     "horizon": 30.0,               // virtual seconds the window maps onto
+//!     "threshold": 0.8,              // utilization entering the slow state
+//!     "hysteresis": 0.1              // recover at threshold - hysteresis
+//!   }
+//! }
+//! ```
+//!
+//! Like every other section, unknown keys and wrongly-typed values are
+//! rejected rather than silently defaulted.  A config with a `trace`
+//! section must leave `churn` inactive and `straggler` on the default
+//! Bernoulli kind: the trace *is* the churn schedule and the straggler
+//! process (the straggler section's `slowdown` still applies while a
+//! machine is slow).
+
+mod alibaba;
+mod borg;
+mod generic;
+
+use crate::churn::{TopologyMutation, TopologyTimeline};
+use crate::sim::straggler::{StragglerEvent, StragglerTimeline};
+use crate::topology::Graph;
+use crate::util::json::Json;
+use crate::WorkerId;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Which trace format [`parse_events`] expects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Google Borg / ClusterData `machine_events` CSV.
+    Borg,
+    /// Alibaba cluster-trace `machine_usage` / `machine_meta` CSV.
+    Alibaba,
+    /// The documented generic fallback CSV (`time,node,event[,value]`).
+    Generic,
+}
+
+impl TraceKind {
+    /// Parse from the snake_case config token.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "borg" => TraceKind::Borg,
+            "alibaba" => TraceKind::Alibaba,
+            "generic" => TraceKind::Generic,
+            other => bail!("unknown trace kind {other:?} (borg|alibaba|generic)"),
+        })
+    }
+
+    /// Inverse of [`Self::parse`].
+    pub fn token(&self) -> &'static str {
+        match self {
+            TraceKind::Borg => "borg",
+            TraceKind::Alibaba => "alibaba",
+            TraceKind::Generic => "generic",
+        }
+    }
+}
+
+/// How trace machines are assigned to the `m` simulated workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MapPolicy {
+    /// Stable FNV-1a hash of the machine id modulo `m` (machine counts
+    /// far above `m` spread roughly evenly; mapping is independent of
+    /// event order).
+    Hash,
+    /// Machines in order of first appearance get workers `0, 1, …,
+    /// m-1, 0, …` (the default: deterministic and balanced).
+    RoundRobin,
+    /// The `m` machines with the most trace events map one-to-one onto
+    /// workers `0..m` (ties broken by machine id); quieter machines are
+    /// dropped from the scenario.
+    TopBusiest,
+}
+
+impl MapPolicy {
+    /// Parse from the snake_case config token.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "hash" => MapPolicy::Hash,
+            "round_robin" => MapPolicy::RoundRobin,
+            "top_busiest" => MapPolicy::TopBusiest,
+            other => bail!("unknown trace map policy {other:?} (hash|round_robin|top_busiest)"),
+        })
+    }
+
+    /// Inverse of [`Self::parse`].
+    pub fn token(&self) -> &'static str {
+        match self {
+            MapPolicy::Hash => "hash",
+            MapPolicy::RoundRobin => "round_robin",
+            MapPolicy::TopBusiest => "top_busiest",
+        }
+    }
+}
+
+/// What happened to a machine at one trace timestamp.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MachineEvent {
+    /// The machine (re)joined the cluster (Borg ADD, Alibaba `USING`,
+    /// generic `up`).
+    Up,
+    /// The machine left the cluster (Borg REMOVE, Alibaba `OFFLINE`,
+    /// generic `down`).
+    Down,
+    /// Explicit slow-state flip (generic `slow` / `recover`).
+    Slow(bool),
+    /// Utilization sample in `[0, 1]` (Alibaba `machine_usage`, generic
+    /// `usage`); thresholded into slow states by the pipeline.
+    Usage(f64),
+}
+
+/// One parsed machine event: the common currency of the three parsers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Seconds since the trace epoch (parsers normalize units).
+    pub time: f64,
+    /// Opaque source-machine identifier.
+    pub machine: String,
+    /// What happened.
+    pub event: MachineEvent,
+}
+
+/// Parse raw trace text in the given format into machine events.
+/// Returns row-numbered errors for malformed rows (1-based, counting
+/// headers, comments and blank lines).
+pub fn parse_events(kind: TraceKind, text: &str) -> Result<Vec<TraceEvent>> {
+    match kind {
+        TraceKind::Borg => borg::parse(text),
+        TraceKind::Alibaba => alibaba::parse(text),
+        TraceKind::Generic => generic::parse(text),
+    }
+}
+
+/// The `trace` section of the experiment config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceConfig {
+    /// Trace format.
+    pub kind: TraceKind,
+    /// Path to the trace file.
+    pub path: String,
+    /// Machine → worker assignment policy.
+    pub map: MapPolicy,
+    /// Optional `[start, end]` slice of the trace in trace seconds;
+    /// `None` uses the whole span (first to last event).
+    pub window: Option<(f64, f64)>,
+    /// Virtual seconds the selected window is rescaled onto.
+    pub horizon: f64,
+    /// Utilization at which a machine enters the slow state.
+    pub threshold: f64,
+    /// A slow machine recovers once utilization falls to
+    /// `threshold - hysteresis` (flap damping).
+    pub hysteresis: f64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            kind: TraceKind::Generic,
+            path: String::new(),
+            map: MapPolicy::RoundRobin,
+            window: None,
+            horizon: 60.0,
+            threshold: 0.8,
+            hysteresis: 0.1,
+        }
+    }
+}
+
+impl TraceConfig {
+    /// Parse the config form, rejecting unknown keys and wrong types
+    /// like the `churn`/`straggler`/`adapt` sections.  `kind` and `path`
+    /// are required.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let obj = j.as_obj().context("trace section must be an object")?;
+        let mut cfg = TraceConfig::default();
+        let (mut saw_kind, mut saw_path) = (false, false);
+        for (key, v) in obj {
+            match key.as_str() {
+                "kind" => {
+                    cfg.kind =
+                        TraceKind::parse(v.as_str().context("trace kind must be a string")?)?;
+                    saw_kind = true;
+                }
+                "path" => {
+                    cfg.path = v.as_str().context("trace path must be a string")?.to_string();
+                    saw_path = true;
+                }
+                "map" => {
+                    cfg.map =
+                        MapPolicy::parse(v.as_str().context("trace map must be a string")?)?;
+                }
+                "window" => {
+                    let a = v.as_arr().context("trace window must be [start, end]")?;
+                    ensure!(a.len() == 2, "trace window must be [start, end]");
+                    let t0 = a[0].as_f64().context("trace window start must be a number")?;
+                    let t1 = a[1].as_f64().context("trace window end must be a number")?;
+                    cfg.window = Some((t0, t1));
+                }
+                "horizon" => {
+                    cfg.horizon = v.as_f64().context("trace horizon must be a number")?;
+                }
+                "threshold" => {
+                    cfg.threshold = v.as_f64().context("trace threshold must be a number")?;
+                }
+                "hysteresis" => {
+                    cfg.hysteresis = v.as_f64().context("trace hysteresis must be a number")?;
+                }
+                other => bail!(
+                    "unknown trace key {other:?} \
+                     (kind|path|map|window|horizon|threshold|hysteresis)"
+                ),
+            }
+        }
+        ensure!(saw_kind, "trace section needs a \"kind\" (borg|alibaba|generic)");
+        ensure!(saw_path, "trace section needs a \"path\"");
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Inverse of [`Self::from_json`].
+    pub fn to_json(&self) -> Json {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("kind".into(), Json::from(self.kind.token()));
+        m.insert("path".into(), Json::from(self.path.as_str()));
+        m.insert("map".into(), Json::from(self.map.token()));
+        if let Some((t0, t1)) = self.window {
+            m.insert("window".into(), Json::Arr(vec![Json::Num(t0), Json::Num(t1)]));
+        }
+        m.insert("horizon".into(), Json::Num(self.horizon));
+        m.insert("threshold".into(), Json::Num(self.threshold));
+        m.insert("hysteresis".into(), Json::Num(self.hysteresis));
+        Json::Obj(m)
+    }
+
+    /// Parameter sanity checks (called from `ExperimentConfig::validate`).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.path.is_empty(), "trace needs a non-empty path");
+        ensure!(
+            self.horizon.is_finite() && self.horizon > 0.0,
+            "trace horizon must be positive and finite"
+        );
+        ensure!(
+            self.threshold > 0.0 && self.threshold <= 1.0,
+            "trace threshold must be in (0, 1]"
+        );
+        ensure!(
+            self.hysteresis >= 0.0 && self.hysteresis < self.threshold,
+            "trace hysteresis must be in [0, threshold)"
+        );
+        if let Some((t0, t1)) = self.window {
+            ensure!(
+                t0.is_finite() && t1.is_finite() && t1 > t0,
+                "trace window must satisfy start < end"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// A parsed trace plus its ingestion settings, ready to lower onto the
+/// simulator's replayable timelines.
+///
+/// ```
+/// use dsgd_aau::topology::generators::ring;
+/// use dsgd_aau::trace::{TraceConfig, TraceIngest, TraceKind};
+///
+/// let csv = "time,node,event,value\n\
+///            0,a,up,\n\
+///            5,a,slow,\n\
+///            10,b,down,\n\
+///            20,a,recover,\n\
+///            40,b,up,\n";
+/// let cfg = TraceConfig { kind: TraceKind::Generic, horizon: 8.0, ..TraceConfig::default() };
+/// let lowered = TraceIngest::from_text(&cfg, csv).unwrap().lower(4, &ring(4)).unwrap();
+/// assert_eq!(lowered.straggler.num_events(), 2); // slow + recover
+/// assert_eq!(lowered.topology.num_mutations(), 2); // isolate + attach
+/// assert!(lowered.straggler.entries.iter().all(|e| e.time <= 8.0));
+/// ```
+#[derive(Debug, Clone)]
+pub struct TraceIngest {
+    cfg: TraceConfig,
+    /// Events sorted by time (stable, so same-time rows keep file order).
+    events: Vec<TraceEvent>,
+}
+
+impl TraceIngest {
+    /// Read and parse the file named by `cfg.path`.
+    pub fn load(cfg: &TraceConfig) -> Result<Self> {
+        cfg.validate()?;
+        let text = std::fs::read_to_string(Path::new(&cfg.path))
+            .with_context(|| format!("read trace {}", cfg.path))?;
+        Self::from_text(cfg, &text).with_context(|| format!("parse trace {}", cfg.path))
+    }
+
+    /// Parse trace text directly (tests, doctests, embedded scenarios);
+    /// `cfg.path` is ignored here and may be empty.
+    pub fn from_text(cfg: &TraceConfig, text: &str) -> Result<Self> {
+        let mut events = parse_events(cfg.kind, text)?;
+        ensure!(!events.is_empty(), "trace holds no machine events");
+        events.sort_by(|a, b| a.time.partial_cmp(&b.time).expect("finite event times"));
+        Ok(TraceIngest { cfg: cfg.clone(), events })
+    }
+
+    /// Number of parsed machine events.
+    pub fn num_events(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Distinct machine ids, ascending.
+    pub fn machines(&self) -> Vec<&str> {
+        let set: std::collections::BTreeSet<&str> =
+            self.events.iter().map(|e| e.machine.as_str()).collect();
+        set.into_iter().collect()
+    }
+
+    /// Time span `(first, last)` of the parsed events, in trace seconds.
+    pub fn span(&self) -> (f64, f64) {
+        (
+            self.events.first().map_or(0.0, |e| e.time),
+            self.events.last().map_or(0.0, |e| e.time),
+        )
+    }
+
+    /// Lower the trace onto an `m`-worker fleet whose initial
+    /// communication graph is `initial` (recovering machines re-attach a
+    /// worker to its initial neighbors).  Pre-window history folds into
+    /// flips at virtual time zero; in-window flips land at linearly
+    /// rescaled times in `[0, horizon]`.
+    pub fn lower(&self, workers: usize, initial: &Graph) -> Result<LoweredTrace> {
+        ensure!(workers >= 1, "trace lowering needs at least one worker");
+        ensure!(
+            initial.num_vertices() == workers,
+            "initial graph has {} vertices for {} workers",
+            initial.num_vertices(),
+            workers
+        );
+        let (t0, t1) = match self.cfg.window {
+            Some(w) => w,
+            None => {
+                let (lo, hi) = self.span();
+                ensure!(
+                    hi > lo,
+                    "trace spans zero time ({lo}); set an explicit \"window\""
+                );
+                (lo, hi)
+            }
+        };
+
+        // --- machine -> worker mapping ---------------------------------
+        let order = first_appearance_order(&self.events);
+        let mapping = build_mapping(self.cfg.map, &order, &self.events, workers);
+        ensure!(
+            !mapping.is_empty(),
+            "no machines mapped onto workers (policy {})",
+            self.cfg.map.token()
+        );
+        let machines_dropped = order.len() - mapping.len();
+
+        // --- per-machine state machines -> worker-level flips ----------
+        // A machine is up & fast until the trace says otherwise; a worker
+        // is slow while ANY mapped machine is slow, down only while ALL
+        // its machines are down.
+        #[derive(Clone, Copy, Default)]
+        struct MState {
+            down: bool,
+            slow: bool,
+        }
+        let mut mstate: BTreeMap<String, MState> = BTreeMap::new();
+        let mut machines_per_worker = vec![0usize; workers];
+        for (name, &w) in &mapping {
+            machines_per_worker[w] += 1;
+            mstate.insert(name.clone(), MState::default());
+        }
+        let mut slow_count = vec![0usize; workers];
+        let mut down_count = vec![0usize; workers];
+        let mut w_slow = vec![false; workers];
+        let mut w_down = vec![false; workers];
+
+        // One worker-level state change at a trace timestamp.
+        enum Flip {
+            Slow(WorkerId, bool),
+            Down(WorkerId, bool),
+        }
+        let mut flips: Vec<(f64, Flip)> = Vec::new();
+        for ev in &self.events {
+            if ev.time > t1 {
+                break;
+            }
+            let Some(&w) = mapping.get(&ev.machine) else {
+                continue; // dropped by top_busiest
+            };
+            let st = mstate.get_mut(&ev.machine).expect("mapped machine has state");
+            let (mut new_down, mut new_slow) = (st.down, st.slow);
+            match ev.event {
+                MachineEvent::Up => new_down = false,
+                MachineEvent::Down => new_down = true,
+                MachineEvent::Slow(s) => new_slow = s,
+                MachineEvent::Usage(u) => {
+                    if !st.slow && u >= self.cfg.threshold {
+                        new_slow = true;
+                    } else if st.slow && u <= self.cfg.threshold - self.cfg.hysteresis {
+                        new_slow = false;
+                    }
+                }
+            }
+            if new_slow != st.slow {
+                st.slow = new_slow;
+                slow_count[w] = if new_slow { slow_count[w] + 1 } else { slow_count[w] - 1 };
+                let agg = slow_count[w] > 0;
+                if agg != w_slow[w] {
+                    w_slow[w] = agg;
+                    flips.push((ev.time, Flip::Slow(w, agg)));
+                }
+            }
+            if new_down != st.down {
+                st.down = new_down;
+                down_count[w] = if new_down { down_count[w] + 1 } else { down_count[w] - 1 };
+                let agg = down_count[w] == machines_per_worker[w];
+                if agg != w_down[w] {
+                    w_down[w] = agg;
+                    flips.push((ev.time, Flip::Down(w, agg)));
+                }
+            }
+        }
+
+        // --- window clipping + linear rescale --------------------------
+        // Flips before t0 fold into the state at virtual time zero; the
+        // rest land at (t - t0) / (t1 - t0) * horizon.
+        let scale = self.cfg.horizon / (t1 - t0);
+        let mut start_slow = vec![false; workers];
+        let mut start_down = vec![false; workers];
+        let mut scaled: Vec<(f64, Flip)> = Vec::new();
+        for (t, flip) in flips {
+            if t < t0 {
+                match flip {
+                    Flip::Slow(w, s) => start_slow[w] = s,
+                    Flip::Down(w, d) => start_down[w] = d,
+                }
+            } else {
+                scaled.push(((t - t0) * scale, flip));
+            }
+        }
+        let mut initial_flips: Vec<Flip> = Vec::new();
+        for w in 0..workers {
+            if start_slow[w] {
+                initial_flips.push(Flip::Slow(w, true));
+            }
+            if start_down[w] {
+                initial_flips.push(Flip::Down(w, true));
+            }
+        }
+        let all: Vec<(f64, Flip)> = initial_flips
+            .into_iter()
+            .map(|f| (0.0, f))
+            .chain(scaled)
+            .collect();
+
+        // --- emit the two timelines, batching equal timestamps ---------
+        let mut straggler = StragglerTimeline::new();
+        let mut topology = TopologyTimeline::new();
+        let mut s_batch: Vec<StragglerEvent> = Vec::new();
+        let mut t_batch: Vec<TopologyMutation> = Vec::new();
+        let mut at = 0.0f64;
+        let flush =
+            |time: f64,
+             s_batch: &mut Vec<StragglerEvent>,
+             t_batch: &mut Vec<TopologyMutation>,
+             straggler: &mut StragglerTimeline,
+             topology: &mut TopologyTimeline| {
+                if !s_batch.is_empty() {
+                    straggler.push(time, std::mem::take(s_batch));
+                }
+                if !t_batch.is_empty() {
+                    topology.push(time, std::mem::take(t_batch));
+                }
+            };
+        for (t, flip) in all {
+            if t != at {
+                flush(at, &mut s_batch, &mut t_batch, &mut straggler, &mut topology);
+                at = t;
+            }
+            match flip {
+                Flip::Slow(w, s) => s_batch.push(StragglerEvent { worker: w, slow: s }),
+                Flip::Down(w, true) => t_batch.push(TopologyMutation::Isolate(w)),
+                Flip::Down(w, false) => {
+                    t_batch.push(TopologyMutation::Attach(w, initial.neighbors(w).to_vec()))
+                }
+            }
+        }
+        flush(at, &mut s_batch, &mut t_batch, &mut straggler, &mut topology);
+
+        Ok(LoweredTrace {
+            straggler,
+            topology,
+            mapping,
+            machines_dropped,
+            window: (t0, t1),
+            horizon: self.cfg.horizon,
+        })
+    }
+}
+
+/// Result of [`TraceIngest::lower`]: the trace expressed in the
+/// simulator's native replay formats, plus ingestion diagnostics.
+#[derive(Debug, Clone)]
+pub struct LoweredTrace {
+    /// Worker slow/recover flips (drives the straggler process).
+    pub straggler: StragglerTimeline,
+    /// Worker isolate/attach mutations (drives the churn replay path).
+    pub topology: TopologyTimeline,
+    /// Machine id → worker assignment actually used.
+    pub mapping: BTreeMap<String, WorkerId>,
+    /// Machines dropped by the mapping policy (`top_busiest` overflow).
+    pub machines_dropped: usize,
+    /// The trace-seconds window that was lowered.
+    pub window: (f64, f64),
+    /// Virtual seconds the window was rescaled onto.
+    pub horizon: f64,
+}
+
+/// Distinct machines in order of first appearance in the (time-sorted)
+/// event stream.
+fn first_appearance_order(events: &[TraceEvent]) -> Vec<String> {
+    let mut seen: std::collections::BTreeSet<&str> = std::collections::BTreeSet::new();
+    let mut order = Vec::new();
+    for e in events {
+        if seen.insert(e.machine.as_str()) {
+            order.push(e.machine.clone());
+        }
+    }
+    order
+}
+
+fn build_mapping(
+    policy: MapPolicy,
+    order: &[String],
+    events: &[TraceEvent],
+    workers: usize,
+) -> BTreeMap<String, WorkerId> {
+    let mut mapping = BTreeMap::new();
+    match policy {
+        MapPolicy::Hash => {
+            for name in order {
+                let h = crate::util::fnv1a(name.as_bytes());
+                mapping.insert(name.clone(), (h % workers as u64) as WorkerId);
+            }
+        }
+        MapPolicy::RoundRobin => {
+            for (i, name) in order.iter().enumerate() {
+                mapping.insert(name.clone(), i % workers);
+            }
+        }
+        MapPolicy::TopBusiest => {
+            let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
+            for e in events {
+                *counts.entry(e.machine.as_str()).or_insert(0) += 1;
+            }
+            let mut ranked: Vec<(&str, usize)> = counts.into_iter().collect();
+            // busiest first, ties by machine id ascending
+            ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+            for (w, (name, _)) in ranked.into_iter().take(workers).enumerate() {
+                mapping.insert(name.to_string(), w);
+            }
+        }
+    }
+    mapping
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::generators::ring;
+
+    fn generic_cfg() -> TraceConfig {
+        TraceConfig { kind: TraceKind::Generic, horizon: 10.0, ..TraceConfig::default() }
+    }
+
+    const GENERIC: &str = "time,node,event,value\n\
+                           0,a,up,\n\
+                           10,a,slow,\n\
+                           20,b,down,\n\
+                           30,a,recover,\n\
+                           40,b,up,\n\
+                           50,c,usage,0.95\n\
+                           60,c,usage,0.75\n\
+                           70,c,usage,0.60\n\
+                           100,a,slow,\n";
+
+    #[test]
+    fn config_json_roundtrip_and_strict_keys() {
+        let cfg = TraceConfig {
+            kind: TraceKind::Borg,
+            path: "traces/x.csv".into(),
+            map: MapPolicy::TopBusiest,
+            window: Some((10.0, 500.0)),
+            horizon: 25.0,
+            threshold: 0.9,
+            hysteresis: 0.2,
+        };
+        let back = TraceConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+        // no window key when None
+        let cfg = TraceConfig { path: "t.csv".into(), ..TraceConfig::default() };
+        let back = TraceConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+
+        for bad in [
+            r#"{"kind": "borg"}"#,                                 // no path
+            r#"{"path": "x.csv"}"#,                                // no kind
+            r#"{"kind": "slurm", "path": "x.csv"}"#,               // unknown kind
+            r#"{"kind": "borg", "path": "x.csv", "pth": 1}"#,      // typo key
+            r#"{"kind": "borg", "path": "x.csv", "window": [3]}"#, // bad window
+            r#"{"kind": "borg", "path": "x.csv", "window": [5, 2]}"#,
+            r#"{"kind": "borg", "path": "x.csv", "horizon": 0}"#,
+            r#"{"kind": "borg", "path": "x.csv", "threshold": 1.5}"#,
+            r#"{"kind": "borg", "path": "x.csv", "hysteresis": 0.9}"#,
+            r#"{"kind": "borg", "path": "x.csv", "map": "best"}"#,
+        ] {
+            assert!(TraceConfig::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn tokens_roundtrip() {
+        for k in [TraceKind::Borg, TraceKind::Alibaba, TraceKind::Generic] {
+            assert_eq!(TraceKind::parse(k.token()).unwrap(), k);
+        }
+        for p in [MapPolicy::Hash, MapPolicy::RoundRobin, MapPolicy::TopBusiest] {
+            assert_eq!(MapPolicy::parse(p.token()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn lowering_emits_both_timelines_scaled_into_the_horizon() {
+        let ing = TraceIngest::from_text(&generic_cfg(), GENERIC).unwrap();
+        assert_eq!(ing.machines(), vec!["a", "b", "c"]);
+        let lt = ing.lower(6, &ring(6)).unwrap();
+        // round-robin by first appearance: a->0, b->1, c->2
+        assert_eq!(lt.mapping.get("a"), Some(&0));
+        assert_eq!(lt.mapping.get("b"), Some(&1));
+        assert_eq!(lt.mapping.get("c"), Some(&2));
+        assert_eq!(lt.machines_dropped, 0);
+        // span [0, 100] -> horizon 10: trace t=10 lands at 1.0 etc.
+        assert_eq!(lt.window, (0.0, 100.0));
+        let times: Vec<f64> = lt.straggler.entries.iter().map(|e| e.time).collect();
+        // a slow@10->1.0, a recover@30->3.0, c usage-slow@50->5.0,
+        // c recover@70 (0.60 <= 0.8-0.1)->7.0, a slow@100->10.0
+        assert_eq!(times, vec![1.0, 3.0, 5.0, 7.0, 10.0]);
+        // b down@20 -> isolate at 2.0, b up@40 -> attach at 4.0
+        assert_eq!(lt.topology.len(), 2);
+        assert_eq!(lt.topology.entries[0].time, 2.0);
+        assert!(matches!(lt.topology.entries[0].mutations[0], TopologyMutation::Isolate(1)));
+        assert_eq!(lt.topology.entries[1].time, 4.0);
+        match &lt.topology.entries[1].mutations[0] {
+            TopologyMutation::Attach(1, ns) => {
+                assert_eq!(ns, &ring(6).neighbors(1).to_vec(), "reattach to initial neighbors")
+            }
+            other => panic!("expected attach, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hysteresis_suppresses_flapping() {
+        // 0.82 enters; 0.75 stays slow (> 0.7 exit level); 0.69 recovers
+        let text = "time,node,event,value\n\
+                    0,m,usage,0.82\n\
+                    10,m,usage,0.75\n\
+                    20,m,usage,0.81\n\
+                    30,m,usage,0.69\n\
+                    40,m,usage,0.10\n";
+        let ing = TraceIngest::from_text(&generic_cfg(), text).unwrap();
+        let lt = ing.lower(2, &ring(2)).unwrap();
+        let flips: Vec<(f64, bool)> = lt
+            .straggler
+            .entries
+            .iter()
+            .flat_map(|e| e.events.iter().map(move |ev| (e.time, ev.slow)))
+            .collect();
+        assert_eq!(flips, vec![(0.0, true), (7.5, false)]);
+    }
+
+    #[test]
+    fn window_folds_prior_history_into_time_zero() {
+        let cfg = TraceConfig { window: Some((25.0, 75.0)), ..generic_cfg() };
+        let ing = TraceIngest::from_text(&cfg, GENERIC).unwrap();
+        let lt = ing.lower(6, &ring(6)).unwrap();
+        // at t0=25: a is slow (slow@10, recover@30 is inside the window),
+        // b is down (down@20, up@40 inside the window)
+        let first = &lt.straggler.entries[0];
+        assert_eq!(first.time, 0.0);
+        assert_eq!(first.events, vec![StragglerEvent { worker: 0, slow: true }]);
+        assert!(matches!(lt.topology.entries[0].mutations[0], TopologyMutation::Isolate(1)));
+        assert_eq!(lt.topology.entries[0].time, 0.0);
+        // recover@30 -> (30-25)/50*10 = 1.0; up@40 -> 3.0
+        assert_eq!(lt.straggler.entries[1].time, 1.0);
+        assert_eq!(lt.topology.entries[1].time, 3.0);
+        // events past t1=75 (a slow@100) are clipped
+        assert!(lt.straggler.entries.iter().all(|e| e.time <= 10.0));
+        assert_eq!(lt.straggler.num_events(), 4, "slow@0, recover, c-slow, c-recover");
+    }
+
+    #[test]
+    fn many_machines_aggregate_any_slow_all_down() {
+        // four machines onto two workers round-robin: a,c -> 0; b,d -> 1
+        let text = "time,node,event,value\n\
+                    0,a,up,\n\
+                    0,b,up,\n\
+                    0,c,up,\n\
+                    0,d,up,\n\
+                    10,a,slow,\n\
+                    20,c,slow,\n\
+                    30,a,recover,\n\
+                    40,c,recover,\n\
+                    50,b,down,\n\
+                    60,d,down,\n\
+                    70,b,up,\n\
+                    80,d,up,\n\
+                    100,a,usage,0.1\n";
+        let ing = TraceIngest::from_text(&generic_cfg(), text).unwrap();
+        let lt = ing.lower(2, &ring(2)).unwrap();
+        // worker 0: slow from 10 (any) until 40 (all fast again)
+        let flips: Vec<(f64, usize, bool)> = lt
+            .straggler
+            .entries
+            .iter()
+            .flat_map(|e| e.events.iter().map(move |ev| (e.time, ev.worker, ev.slow)))
+            .collect();
+        assert_eq!(flips, vec![(1.0, 0, true), (4.0, 0, false)]);
+        // worker 1: down only once BOTH b and d are down (60), back at 70
+        assert_eq!(lt.topology.len(), 2);
+        assert_eq!(lt.topology.entries[0].time, 6.0);
+        assert!(matches!(lt.topology.entries[0].mutations[0], TopologyMutation::Isolate(1)));
+        assert_eq!(lt.topology.entries[1].time, 7.0);
+    }
+
+    #[test]
+    fn mapping_policies_are_deterministic() {
+        // hash: stable across runs
+        let cfg = TraceConfig { map: MapPolicy::Hash, ..generic_cfg() };
+        let a = TraceIngest::from_text(&cfg, GENERIC).unwrap().lower(4, &ring(4)).unwrap();
+        let b = TraceIngest::from_text(&cfg, GENERIC).unwrap().lower(4, &ring(4)).unwrap();
+        assert_eq!(a.mapping, b.mapping);
+        // top_busiest with 2 workers keeps the 2 machines with most
+        // events (a: 4 events, c: 3, b: 2 -> keep a, c) and drops b
+        let cfg = TraceConfig { map: MapPolicy::TopBusiest, ..generic_cfg() };
+        let lt = TraceIngest::from_text(&cfg, GENERIC).unwrap().lower(2, &ring(2)).unwrap();
+        assert_eq!(lt.mapping.len(), 2);
+        assert_eq!(lt.machines_dropped, 1);
+        assert_eq!(lt.mapping.get("a"), Some(&0));
+        assert_eq!(lt.mapping.get("c"), Some(&1));
+        assert!(lt.topology.is_empty(), "b's down/up events are dropped with it");
+    }
+
+    #[test]
+    fn degenerate_traces_are_errors() {
+        // no events at all
+        assert!(TraceIngest::from_text(&generic_cfg(), "time,node,event,value\n").is_err());
+        // zero time span without an explicit window
+        let ing =
+            TraceIngest::from_text(&generic_cfg(), "time,node,event,value\n5,a,slow,\n").unwrap();
+        assert!(ing.lower(2, &ring(2)).is_err());
+        // fleet-size mismatch
+        let ing = TraceIngest::from_text(&generic_cfg(), GENERIC).unwrap();
+        assert!(ing.lower(4, &ring(6)).is_err());
+    }
+}

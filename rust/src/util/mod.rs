@@ -5,3 +5,15 @@ pub mod json;
 pub mod rng;
 
 pub use rng::Rng64;
+
+/// FNV-1a over a byte string: the stable non-cryptographic hash shared
+/// by the sweep layer's config hashing and the trace subsystem's
+/// machine → worker `hash` mapping policy.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}

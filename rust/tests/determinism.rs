@@ -29,7 +29,7 @@ fn cfg(alg: AlgorithmKind) -> ExperimentConfig {
     cfg.adapt = AdaptConfig {
         allow_partitions: true,
         partition_aware: true,
-        detection_latency: 0.1,
+        detection_latency: 0.1.into(),
         heal_restart: true,
     };
     cfg.straggler = StragglerModel {

@@ -5,7 +5,7 @@
 //! partition is the full-fleet stall fallback — and every update rule
 //! keeps learning on a genuinely split graph.
 
-use dsgd_aau::adapt::AdaptConfig;
+use dsgd_aau::adapt::{AdaptConfig, DetectionLatency};
 use dsgd_aau::algorithms::AlgorithmKind;
 use dsgd_aau::churn::{ChurnConfig, ChurnKind, TopologyMutation, TopologyTimeline};
 use dsgd_aau::config::{BackendKind, ExperimentConfig};
@@ -61,7 +61,7 @@ fn aware() -> AdaptConfig {
     AdaptConfig {
         allow_partitions: true,
         partition_aware: true,
-        detection_latency: 0.0,
+        detection_latency: 0.0.into(),
         heal_restart: true,
     }
 }
@@ -73,7 +73,7 @@ fn blind() -> AdaptConfig {
     AdaptConfig {
         allow_partitions: true,
         partition_aware: false,
-        detection_latency: 0.0,
+        detection_latency: 0.0.into(),
         heal_restart: true,
     }
 }
@@ -210,6 +210,40 @@ fn isolated_worker_trains_solo_without_stalling_the_fleet() {
     assert!(s.iterations > 0);
     let first = s.recorder.curve.first().unwrap().loss;
     assert!(s.final_loss() < first);
+}
+
+#[test]
+fn per_worker_detection_latencies_run_deterministically() {
+    // heterogeneous failure detectors: the half nearest the cut notices
+    // in 50 ms, the far half takes two full seconds — the run must stay
+    // live (the stall fallback covers the disagreement window), learn,
+    // and be byte-deterministic like every other configuration
+    let tl = ring_partition_timeline(12, 2.0, 20.0);
+    let mut cfg = schedule_cfg(&tl, "hetero_latency");
+    cfg.algorithm = AlgorithmKind::DsgdAau;
+    let mut lat = vec![0.05; 6];
+    lat.extend(vec![2.0; 6]);
+    cfg.adapt = AdaptConfig {
+        allow_partitions: true,
+        partition_aware: true,
+        detection_latency: DetectionLatency::PerWorker(lat),
+        heal_restart: true,
+    };
+    cfg.time_budget = Some(25.0);
+    let a = run_experiment(&cfg).unwrap();
+    let b = run_experiment(&cfg).unwrap();
+    assert_eq!(a.recorder.csv_string(), b.recorder.csv_string(), "byte-deterministic");
+    assert!(a.recorder.partition_splits >= 1);
+    let first = a.recorder.curve.first().unwrap().loss;
+    assert!(a.final_loss() < first, "loss {first} -> {} must decrease", a.final_loss());
+    assert!(a.iterations > 0);
+
+    // a latency vector of the wrong length is a config-time error
+    let mut bad = schedule_cfg(&tl, "bad_latency");
+    bad.adapt.partition_aware = true;
+    bad.adapt.allow_partitions = true;
+    bad.adapt.detection_latency = DetectionLatency::PerWorker(vec![0.1; 5]);
+    assert!(run_experiment(&bad).is_err(), "5 latencies for 12 workers must be rejected");
 }
 
 #[test]

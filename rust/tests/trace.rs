@@ -1,0 +1,193 @@
+//! Trace-ingestion round trip: every bundled real-cluster excerpt parses,
+//! lowers onto the replayable timelines, and drives the engine end to end
+//! — deterministically (byte-identical metrics CSV across reruns) and for
+//! all five algorithms — while malformed rows fail with row-numbered
+//! errors instead of silently skewing a scenario.
+
+use dsgd_aau::algorithms::AlgorithmKind;
+use dsgd_aau::config::{BackendKind, ExperimentConfig};
+use dsgd_aau::coordinator::run_experiment;
+use dsgd_aau::topology::TopologyKind;
+use dsgd_aau::trace::{MapPolicy, TraceConfig, TraceIngest, TraceKind};
+
+const EXCERPTS: &[(TraceKind, &str)] = &[
+    (TraceKind::Borg, "rust/testdata/traces/borg_machine_events.csv"),
+    (TraceKind::Alibaba, "rust/testdata/traces/alibaba_machine_usage.csv"),
+    (TraceKind::Generic, "rust/testdata/traces/generic_cluster.csv"),
+];
+
+fn trace_cfg(kind: TraceKind, path: &str, horizon: f64) -> TraceConfig {
+    TraceConfig { kind, path: path.to_string(), horizon, ..TraceConfig::default() }
+}
+
+fn engine_cfg(kind: TraceKind, path: &str, alg: AlgorithmKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.num_workers = 10;
+    cfg.algorithm = alg;
+    cfg.backend = BackendKind::Quadratic;
+    cfg.topology = TopologyKind::Random { p: 0.3, seed: 11 };
+    cfg.trace = Some(trace_cfg(kind, path, 5.0));
+    cfg.max_iterations = u64::MAX / 2;
+    cfg.time_budget = Some(5.0);
+    cfg.eval_every = 100;
+    cfg.mean_compute = 0.01;
+    cfg.seed = 777;
+    cfg
+}
+
+#[test]
+fn bundled_excerpts_parse_and_lower() {
+    for &(kind, path) in EXCERPTS {
+        let cfg = trace_cfg(kind, path, 10.0);
+        let ing = TraceIngest::load(&cfg).unwrap_or_else(|e| panic!("{path}: {e:#}"));
+        assert!(ing.num_events() > 0, "{path}: no events");
+        assert!(ing.machines().len() >= 3, "{path}: too few machines");
+        let g = TopologyKind::Random { p: 0.3, seed: 11 }.build(10);
+        let lt = ing.lower(10, &g).unwrap_or_else(|e| panic!("{path}: {e:#}"));
+        assert!(lt.straggler.entries.iter().all(|e| e.time <= 10.0), "{path}");
+        assert!(lt.topology.entries.iter().all(|e| e.time <= 10.0), "{path}");
+        match kind {
+            // Borg machine_events carry only churn
+            TraceKind::Borg => {
+                assert!(lt.topology.num_mutations() > 0, "{path}: no churn");
+                assert!(lt.straggler.is_empty(), "{path}: borg has no usage data");
+            }
+            // the Alibaba excerpt has hot machines AND an OFFLINE window
+            TraceKind::Alibaba => {
+                assert!(lt.straggler.num_events() > 0, "{path}: no slow states");
+                assert!(lt.topology.num_mutations() > 0, "{path}: no meta churn");
+            }
+            // the generic excerpt mixes every event kind
+            TraceKind::Generic => {
+                assert!(lt.straggler.num_events() > 0, "{path}: no slow states");
+                assert!(lt.topology.num_mutations() > 0, "{path}: no churn");
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_round_trip_is_byte_deterministic() {
+    for &(kind, path) in EXCERPTS {
+        let cfg = engine_cfg(kind, path, AlgorithmKind::DsgdAau);
+        let a = run_experiment(&cfg).unwrap_or_else(|e| panic!("{path}: {e:#}"));
+        let b = run_experiment(&cfg).unwrap();
+        assert_eq!(
+            a.recorder.csv_string(),
+            b.recorder.csv_string(),
+            "{path}: trace replay must be byte-identical across reruns"
+        );
+        assert!(a.iterations > 0, "{path}");
+    }
+}
+
+#[test]
+fn all_five_algorithms_learn_through_every_excerpt() {
+    for &(kind, path) in EXCERPTS {
+        for alg in AlgorithmKind::all() {
+            let cfg = engine_cfg(kind, path, alg);
+            let s = run_experiment(&cfg)
+                .unwrap_or_else(|e| panic!("{path}/{}: {e:#}", alg.label()));
+            let first = s.recorder.curve.first().unwrap().loss;
+            assert!(
+                s.final_loss() < first,
+                "{path}/{}: loss {first} -> {} should decrease",
+                alg.label(),
+                s.final_loss()
+            );
+            assert!(s.iterations > 0 && s.virtual_time > 0.0, "{path}/{}", alg.label());
+        }
+    }
+}
+
+#[test]
+fn trace_churn_is_visible_in_the_run() {
+    // the Borg excerpt's REMOVE/ADD cycles must surface as topology
+    // changes in the recorder (repair mode defers disconnecting cuts but
+    // still counts the events)
+    let cfg = engine_cfg(TraceKind::Borg, EXCERPTS[0].1, AlgorithmKind::DsgdAau);
+    let s = run_experiment(&cfg).unwrap();
+    assert!(s.recorder.topology_changes > 0, "machine churn must reach the engine");
+    // and the Alibaba excerpt's hot machines must inflate compute times
+    let cfg = engine_cfg(TraceKind::Alibaba, EXCERPTS[1].1, AlgorithmKind::DsgdAau);
+    let s = run_experiment(&cfg).unwrap();
+    assert!(
+        s.straggler_fraction > 0.0,
+        "utilization-driven slow states must reach the compute model"
+    );
+    assert_eq!(s.straggler_process, "trace");
+}
+
+#[test]
+fn window_override_rescales_the_excerpt() {
+    let (kind, path) = EXCERPTS[2];
+    let mut tc = trace_cfg(kind, path, 6.0);
+    tc.window = Some((30.0, 90.0));
+    let g = TopologyKind::Ring.build(8);
+    let lt = TraceIngest::load(&tc).unwrap().lower(8, &g).unwrap();
+    assert_eq!(lt.window, (30.0, 90.0));
+    for e in &lt.straggler.entries {
+        assert!((0.0..=6.0).contains(&e.time), "flip at {} outside horizon", e.time);
+    }
+    for e in &lt.topology.entries {
+        assert!((0.0..=6.0).contains(&e.time), "mutation at {} outside horizon", e.time);
+    }
+}
+
+#[test]
+fn mapping_policy_override_via_config() {
+    let (kind, path) = EXCERPTS[1];
+    let mut tc = trace_cfg(kind, path, 6.0);
+    tc.map = MapPolicy::TopBusiest;
+    let g = TopologyKind::Ring.build(4);
+    let lt = TraceIngest::load(&tc).unwrap().lower(4, &g).unwrap();
+    assert_eq!(lt.mapping.len(), 4, "top_busiest keeps exactly the fleet size");
+    assert!(lt.machines_dropped >= 1, "the excerpt has more than 4 machines");
+}
+
+#[test]
+fn malformed_files_fail_with_row_numbered_errors() {
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+
+    // Borg: bogus event type on (1-based) row 3
+    let path = dir.join(format!("dsgd_trace_bad_borg_{pid}.csv"));
+    std::fs::write(&path, "timestamp,machine_id,event_type\n0,m1,0\n5,m1,explode\n").unwrap();
+    let err = TraceIngest::load(&trace_cfg(TraceKind::Borg, path.to_str().unwrap(), 5.0))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("row 3"), "{err:#}");
+    std::fs::remove_file(&path).ok();
+
+    // Alibaba: non-numeric utilization on row 2
+    let path = dir.join(format!("dsgd_trace_bad_ali_{pid}.csv"));
+    std::fs::write(&path, "m_1,10,50,1,,,,,\nm_1,20,oops,1,,,,,\n").unwrap();
+    let err = TraceIngest::load(&trace_cfg(TraceKind::Alibaba, path.to_str().unwrap(), 5.0))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("row 2"), "{err:#}");
+    std::fs::remove_file(&path).ok();
+
+    // Generic: usage without a value on row 4
+    let path = dir.join(format!("dsgd_trace_bad_gen_{pid}.csv"));
+    std::fs::write(&path, "time,node,event,value\n0,a,up,\n1,a,slow,\n2,a,usage,\n").unwrap();
+    let err = TraceIngest::load(&trace_cfg(TraceKind::Generic, path.to_str().unwrap(), 5.0))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("row 4"), "{err:#}");
+    std::fs::remove_file(&path).ok();
+
+    // a missing file is an error, not a panic
+    assert!(TraceIngest::load(&trace_cfg(TraceKind::Borg, "/no/such/trace.csv", 5.0)).is_err());
+
+    // and a config pointing at a missing file fails at engine build
+    let cfg = engine_cfg(TraceKind::Borg, "/no/such/trace.csv", AlgorithmKind::DsgdAau);
+    assert!(run_experiment(&cfg).is_err());
+}
+
+#[test]
+fn trace_conflicts_with_churn_and_correlated_stragglers() {
+    let mut cfg = engine_cfg(TraceKind::Generic, EXCERPTS[2].1, AlgorithmKind::DsgdAau);
+    cfg.churn = dsgd_aau::churn::ChurnConfig {
+        kind: dsgd_aau::churn::ChurnKind::FlakyLinks { rate: 1.0, mean_downtime: 1.0 },
+        seed: None,
+    };
+    assert!(run_experiment(&cfg).is_err(), "trace + churn must be rejected");
+}
