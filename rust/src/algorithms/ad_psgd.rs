@@ -74,4 +74,14 @@ impl UpdateRule for AdPsgd {
         core.restart_after(w, end - now);
         // r is untouched: if it is mid-compute, its gradient is now stale.
     }
+
+    fn on_worker_leave(&mut self, w: WorkerId, _core: &mut EngineCore) {
+        // The slot's averaging serialization dies with its occupant; a
+        // future joiner inherits a free horizon.
+        self.busy_until[w] = 0.0;
+    }
+
+    fn on_worker_join(&mut self, w: WorkerId, _core: &mut EngineCore) {
+        self.busy_until[w] = 0.0;
+    }
 }

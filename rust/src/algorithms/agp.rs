@@ -86,4 +86,19 @@ impl UpdateRule for Agp {
         let delay = core.comm.transfer_time(core.param_bytes());
         core.restart_after(w, delay);
     }
+
+    fn on_worker_leave(&mut self, w: WorkerId, _core: &mut EngineCore) {
+        // Undelivered pushes and the departing user's residual mass
+        // retire with its parameters (a small push-sum mass leak, the
+        // price of an open world; the survivors' weights stay positive
+        // so de-biasing remains well defined).
+        self.inbox[w].clear();
+        self.weight[w] = 1.0;
+    }
+
+    fn on_worker_join(&mut self, w: WorkerId, _core: &mut EngineCore) {
+        // The joiner starts a fresh push-sum life with unit mass.
+        self.inbox[w].clear();
+        self.weight[w] = 1.0;
+    }
 }

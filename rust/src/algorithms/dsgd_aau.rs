@@ -185,4 +185,12 @@ impl UpdateRule for DsgdAau {
             self.try_fire_component(x, core);
         });
     }
+
+    fn on_worker_leave(&mut self, w: WorkerId, _core: &mut EngineCore) {
+        // A departed waiter can no longer contribute a novel edge; the
+        // engine has already pruned its Pathsearch state (its edges left
+        // the graph with it), and the shrunken component re-evaluates via
+        // on_view_changed once the monitor promotes the vacancy.
+        self.waiting.retain(|x| *x != w);
+    }
 }

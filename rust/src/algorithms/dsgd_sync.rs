@@ -106,4 +106,11 @@ impl UpdateRule for DsgdSync {
             self.try_fire_component(x, core);
         });
     }
+
+    fn on_worker_leave(&mut self, w: WorkerId, _core: &mut EngineCore) {
+        // A departed worker can no longer hold a barrier: drop its done
+        // mark; the component barriers re-evaluate when the monitor
+        // promotes the vacancy (on_view_changed).
+        self.done.remove(&w);
+    }
 }

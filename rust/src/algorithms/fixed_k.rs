@@ -97,6 +97,12 @@ impl UpdateRule for FixedFastest {
             self.try_fire_component(x, core);
         });
     }
+
+    fn on_worker_leave(&mut self, w: WorkerId, _core: &mut EngineCore) {
+        // A departed finisher must not be counted toward (or gossiped
+        // into) a future first-k group.
+        self.waiting.retain(|x| *x != w);
+    }
 }
 
 #[cfg(test)]

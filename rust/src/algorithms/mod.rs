@@ -167,6 +167,21 @@ pub trait UpdateRule {
     /// or barrier may already cover its entire (now smaller) component,
     /// and no further `ComputeDone` event will arrive to trigger it.
     fn on_view_changed(&mut self, _core: &mut EngineCore) {}
+
+    /// Slot `w` was vacated (open-world membership).  Rules must forget
+    /// any pending state for `w` — waiting-set entries, barrier marks,
+    /// group memberships, in-flight mailbox contents — so a mid-epoch
+    /// departure can never wedge the survivors.  The engine has already
+    /// cancelled `w`'s in-flight compute and isolated it in the graph;
+    /// component-scoped re-evaluation still arrives via
+    /// [`Self::on_view_changed`] once the monitor promotes the change.
+    fn on_worker_leave(&mut self, _w: WorkerId, _core: &mut EngineCore) {}
+
+    /// Slot `w` was filled by a joining user (open-world membership).
+    /// Called after the engine wired `w`'s edges and warm-started its
+    /// parameters, but before `w`'s first `ComputeStart`.  Most rules
+    /// need nothing; mailbox-style rules reset per-slot state here.
+    fn on_worker_join(&mut self, _w: WorkerId, _core: &mut EngineCore) {}
 }
 
 #[cfg(test)]

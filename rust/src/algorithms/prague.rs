@@ -55,45 +55,25 @@ impl Prague {
         self.rng.shuffle(&mut candidates);
         let mut members = vec![seed_worker];
         members.extend(candidates.into_iter().take(self.group_size - 1));
-        let gid = self
-            .groups
-            .iter()
-            .position(Option::is_none)
-            .unwrap_or_else(|| {
-                self.groups.push(None);
-                self.groups.len() - 1
-            });
+        let gid = self.free_slot();
         for &m in &members {
             self.assignment[m] = Some(gid);
         }
         self.groups[gid] = Some(Group { members, ready: HashSet::new() });
         gid
     }
-}
 
-impl UpdateRule for Prague {
-    fn name(&self) -> &'static str {
-        "Prague"
+    /// First vacant group slot (allocating one if needed).
+    fn free_slot(&mut self) -> usize {
+        self.groups.iter().position(Option::is_none).unwrap_or_else(|| {
+            self.groups.push(None);
+            self.groups.len() - 1
+        })
     }
 
-    fn on_start(&mut self, core: &mut EngineCore) {
-        self.assignment = vec![None; core.num_workers()];
-    }
-
-    fn on_ready(&mut self, w: WorkerId, core: &mut EngineCore) {
-        let gid = match self.assignment[w] {
-            Some(g) => g,
-            None => self.alloc_group(w, core),
-        };
-        let complete = {
-            let group = self.groups[gid].as_mut().expect("group exists");
-            group.ready.insert(w);
-            group.ready.len() == group.members.len()
-        };
-        if !complete {
-            return; // wait for the rest of the randomly chosen group
-        }
-        let group = self.groups[gid].take().expect("group exists");
+    /// Run a completed group: gradients, per-reachable-sub-group ring
+    /// all-reduce, iteration advance, member restarts.
+    fn fire_group(&mut self, group: Group, core: &mut EngineCore) {
         for &m in &group.members {
             self.assignment[m] = None;
             core.apply_gradient(m);
@@ -101,7 +81,8 @@ impl UpdateRule for Prague {
         // Partial all-reduce = uniform average over the group (Prague's
         // groups ignore the topology; its all-reduce is logical).  Under
         // partition-aware adaptivity a group allocated before a cut may
-        // now straddle it — the all-reduce then runs per reachable
+        // still straddle it at fire time (the proactive rebuild runs only
+        // on *adopted* splits) — the all-reduce then runs per reachable
         // sub-group, never averaging across a detected partition.
         let subgroups: Vec<Vec<WorkerId>> = if core.partition_aware() {
             let mut by_label: std::collections::BTreeMap<usize, Vec<WorkerId>> =
@@ -131,6 +112,102 @@ impl UpdateRule for Prague {
             for &mb in sub {
                 core.restart_after(mb, delay);
             }
+        }
+    }
+}
+
+impl UpdateRule for Prague {
+    fn name(&self) -> &'static str {
+        "Prague"
+    }
+
+    fn on_start(&mut self, core: &mut EngineCore) {
+        self.assignment = vec![None; core.num_workers()];
+    }
+
+    fn on_ready(&mut self, w: WorkerId, core: &mut EngineCore) {
+        let gid = match self.assignment[w] {
+            Some(g) => g,
+            None => self.alloc_group(w, core),
+        };
+        let complete = {
+            let group = self.groups[gid].as_mut().expect("group exists");
+            group.ready.insert(w);
+            group.ready.len() == group.members.len()
+        };
+        if !complete {
+            return; // wait for the rest of the randomly chosen group
+        }
+        let group = self.groups[gid].take().expect("group exists");
+        self.fire_group(group, core);
+    }
+
+    fn on_view_changed(&mut self, core: &mut EngineCore) {
+        if !core.partition_aware() {
+            return;
+        }
+        // Proactive regrouping: the moment a split is *adopted*, rebuild
+        // every group that straddles the cut instead of letting stranded
+        // members wait for peers that can no longer reach them.  Each
+        // straddler is partitioned by observed component with its ready
+        // marks preserved; a fragment whose members have all finished
+        // fires immediately, the rest keep waiting as smaller groups.
+        for gid in 0..self.groups.len() {
+            let straddles = match &self.groups[gid] {
+                Some(g) => {
+                    let l0 = core.monitor.component_of(g.members[0]);
+                    g.members.iter().any(|&m| core.monitor.component_of(m) != l0)
+                }
+                None => false,
+            };
+            if !straddles {
+                continue;
+            }
+            let old = self.groups[gid].take().expect("straddling group exists");
+            core.recorder.prague_regroups += 1;
+            let mut by_label: std::collections::BTreeMap<usize, Group> =
+                std::collections::BTreeMap::new();
+            for &m in &old.members {
+                let frag = by_label
+                    .entry(core.monitor.component_of(m))
+                    .or_insert_with(|| Group { members: Vec::new(), ready: HashSet::new() });
+                frag.members.push(m);
+                if old.ready.contains(&m) {
+                    frag.ready.insert(m);
+                }
+            }
+            for (_, frag) in by_label {
+                if frag.ready.len() == frag.members.len() {
+                    self.fire_group(frag, core);
+                } else {
+                    let slot = self.free_slot();
+                    for &m in &frag.members {
+                        self.assignment[m] = Some(slot);
+                    }
+                    self.groups[slot] = Some(frag);
+                }
+            }
+        }
+    }
+
+    fn on_worker_leave(&mut self, w: WorkerId, core: &mut EngineCore) {
+        // Shrink the departed worker's group in place (a rebuild counted
+        // as a regroup); if the survivors have all finished, the smaller
+        // group fires now — a mid-epoch departure never wedges it.
+        let Some(gid) = self.assignment[w] else { return };
+        self.assignment[w] = None;
+        core.recorder.prague_regroups += 1;
+        let (empty, complete) = {
+            let g = self.groups[gid].as_mut().expect("assigned group exists");
+            g.members.retain(|x| *x != w);
+            g.ready.remove(&w);
+            (g.members.is_empty(), !g.members.is_empty() && g.ready.len() == g.members.len())
+        };
+        if empty {
+            self.groups[gid] = None;
+        } else if complete {
+            let g = self.groups[gid].take().expect("group exists");
+            self.fire_group(g, core);
         }
     }
 }

@@ -8,6 +8,7 @@
 use crate::adapt::AdaptConfig;
 use crate::algorithms::AlgorithmKind;
 use crate::churn::ChurnConfig;
+use crate::membership::MembershipConfig;
 use crate::sim::{CommModel, StragglerModel};
 use crate::topology::TopologyKind;
 use crate::trace::TraceConfig;
@@ -98,6 +99,14 @@ pub struct ExperimentConfig {
     /// `churn` section must stay inactive and `straggler` on the default
     /// Bernoulli kind — its `slowdown` still applies).
     pub trace: Option<TraceConfig>,
+    /// Open-world membership: a logical population of `population` users
+    /// sampled into the `num_workers` slots (Poisson arrivals/departures,
+    /// per-round participation sampling, optional two-tier hierarchy).
+    /// `None` keeps the closed-world default.  Requires partition-aware
+    /// adaptivity (`adapt.partition_aware` + `adapt.allow_partitions`):
+    /// vacant slots are isolated vertices, which the legacy connectivity
+    /// repair would reject.
+    pub membership: Option<MembershipConfig>,
     /// Update rule under test.
     pub algorithm: AlgorithmKind,
     /// Gradient backend.
@@ -155,6 +164,7 @@ impl Default for ExperimentConfig {
             churn: ChurnConfig::default(),
             adapt: AdaptConfig::default(),
             trace: None,
+            membership: None,
             algorithm: AlgorithmKind::DsgdAau,
             backend: BackendKind::Quadratic,
             model: "mlp_small".into(),
@@ -212,6 +222,13 @@ impl ExperimentConfig {
                 self.trace =
                     if matches!(v, Json::Null) { None } else { Some(TraceConfig::from_json(v)?) }
             }
+            "membership" => {
+                self.membership = if matches!(v, Json::Null) {
+                    None
+                } else {
+                    Some(MembershipConfig::from_json(v)?)
+                }
+            }
             "algorithm" => {
                 self.algorithm = AlgorithmKind::parse(v.as_str().unwrap_or_default())?
             }
@@ -268,6 +285,9 @@ impl ExperimentConfig {
         m.insert("adapt".into(), self.adapt.to_json());
         if let Some(tc) = &self.trace {
             m.insert("trace".into(), tc.to_json());
+        }
+        if let Some(mc) = &self.membership {
+            m.insert("membership".into(), mc.to_json());
         }
         m.insert("algorithm".into(), Json::from(self.algorithm.token()));
         m.insert("backend".into(), Json::from(self.backend.token()));
@@ -337,6 +357,41 @@ impl ExperimentConfig {
                 self.straggler.probability == StragglerModel::default().probability,
                 "the trace section drives the straggler process — the bernoulli probability \
                  is unused, leave it unset (only the straggler slowdown applies)"
+            );
+        }
+        if let Some(mc) = &self.membership {
+            mc.validate()?;
+            anyhow::ensure!(
+                mc.population >= self.num_workers,
+                "membership.population ({}) must cover the {} slots",
+                mc.population,
+                self.num_workers
+            );
+            anyhow::ensure!(
+                mc.aggregators < self.num_workers,
+                "membership.aggregators ({}) must leave at least one edge slot (num_workers {})",
+                mc.aggregators,
+                self.num_workers
+            );
+            anyhow::ensure!(
+                self.adapt.partition_aware && self.adapt.partitions_allowed(),
+                "membership requires adapt.partition_aware and adapt.allow_partitions: vacant \
+                 slots are isolated vertices, which connectivity repair would reject"
+            );
+            // Poisson/mobility churn generates edge mutations against slots
+            // that may be vacant; only explicit schedules (and traces,
+            // whose ADD/REMOVE route through the join/leave path) compose
+            // with an open world.
+            let synthetic = matches!(
+                self.churn.kind,
+                crate::churn::ChurnKind::FlakyLinks { .. }
+                    | crate::churn::ChurnKind::Mobile { .. }
+                    | crate::churn::ChurnKind::PartitionHeal { .. }
+            );
+            anyhow::ensure!(
+                !synthetic,
+                "membership composes with churn schedules and traces only — remove the \
+                 synthetic churn section (flaky_links/mobile/partition_heal)"
             );
         }
         Ok(())
@@ -519,6 +574,52 @@ mod tests {
         cfg.straggler = StragglerModel::default();
         cfg.straggler.slowdown = 15.0; // the slowdown DOES apply to trace slow states
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn membership_section_parses_strictly_and_roundtrips() {
+        let cfg = ExperimentConfig::from_json(
+            &Json::parse(
+                r#"{"membership": {"population": 200000, "arrival_rate": 2.0,
+                     "departure_rate": 0.5, "round_interval": 4.0,
+                     "participation": 0.5, "sampling": "sticky",
+                     "stickiness": 0.8, "aggregators": 4, "seed": 11},
+                    "adapt": {"partition_aware": true, "allow_partitions": true,
+                     "detection_latency": 0.1}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let mc = cfg.membership.as_ref().expect("membership section parsed");
+        assert_eq!(mc.population, 200_000);
+        assert_eq!(mc.aggregators, 4);
+        assert_eq!(mc.seed, Some(11));
+        cfg.validate().unwrap();
+        let back =
+            ExperimentConfig::from_json(&Json::parse(&cfg.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back.membership, cfg.membership);
+        // unknown membership keys are rejected, not defaulted
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"membership": {"population": 1000, "particpation": 0.5}}"#).unwrap()
+        )
+        .is_err());
+        // omitting the section keeps the closed-world default
+        let legacy = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(legacy.membership.is_none());
+        // membership without partition-aware adaptivity is rejected
+        let mut bad = cfg.clone();
+        bad.adapt = crate::adapt::AdaptConfig::default();
+        assert!(bad.validate().is_err(), "membership needs allow_partitions");
+        // synthetic churn under membership is rejected
+        let mut bad = cfg.clone();
+        bad.churn.kind =
+            crate::churn::ChurnKind::FlakyLinks { rate: 1.0, mean_downtime: 1.0 };
+        assert!(bad.validate().is_err(), "synthetic churn incompatible");
+        // a population smaller than the slot count is rejected
+        let mut bad = cfg;
+        bad.membership.as_mut().unwrap().population = 4;
+        assert!(bad.validate().is_err(), "population must cover the slots");
     }
 
     #[test]

@@ -70,6 +70,57 @@ impl GroupWeights {
         GroupWeights { members, weights: w }
     }
 
+    /// Incrementally recompute the rows of the listed member workers
+    /// against the live graph (ids not in the group are ignored).
+    ///
+    /// Caller contract (membership join/leave maintenance): `touched`
+    /// must contain every member whose induced degree changed — the
+    /// mutated worker and its old/new neighbors — **plus their
+    /// neighbors**, whose off-diagonal entries reference the changed
+    /// degrees.  Under that contract the result is bitwise identical to
+    /// a from-scratch [`Self::metropolis`] over the same members: the
+    /// per-entry formula, f32 summation order, and diagonal fix-up are
+    /// replicated exactly, and every entry outside the touched rows is
+    /// provably unchanged (both endpoint degrees are unchanged).
+    ///
+    /// Cost is O(|touched| · m) entry updates plus one O(active edges)
+    /// degree pass — not the O(m²) pair probe of a full rebuild.
+    pub fn refresh_rows(&mut self, g: &Graph, touched: &[WorkerId]) {
+        let m = self.members.len();
+        // Current within-group degrees from the live graph (equals the
+        // pair-probe degrees of `metropolis` by symmetry of `has_edge`).
+        let mut active_deg = vec![0usize; m];
+        for (a, &wa) in self.members.iter().enumerate() {
+            active_deg[a] =
+                g.neighbors(wa).iter().filter(|x| self.members.binary_search(x).is_ok()).count();
+        }
+        let mut rows: Vec<usize> =
+            touched.iter().filter_map(|w| self.members.binary_search(w).ok()).collect();
+        rows.sort_unstable();
+        rows.dedup();
+        for &a in &rows {
+            let mut row = vec![0f32; m];
+            for (b, &wb) in self.members.iter().enumerate() {
+                if b != a && g.has_edge(self.members[a], wb) {
+                    row[b] = 1.0 / (1.0 + active_deg[a].max(active_deg[b]) as f32);
+                }
+            }
+            let off: f32 = row.iter().sum();
+            row[a] = 1.0 - off;
+            // mirror into untouched rows' columns; under the caller
+            // contract any actually-changed entry has its owner row in
+            // `rows` too, so this only rewrites identical values there
+            for b in 0..m {
+                self.weights[b][a] = row[b];
+            }
+            self.weights[a] = row;
+        }
+        debug_assert!(
+            self.stochasticity_error() < 1e-4,
+            "refresh_rows broke double stochasticity — touched set too small"
+        );
+    }
+
     /// Pairwise averaging (AD-PSGD style): both members weight 1/2.
     pub fn pairwise(i: WorkerId, j: WorkerId) -> Self {
         let members = if i < j { vec![i, j] } else { vec![j, i] };
@@ -213,6 +264,59 @@ mod tests {
     fn dedup_members() {
         let gw = GroupWeights::uniform(&[1, 1, 2]);
         assert_eq!(gw.members, vec![1, 2]);
+    }
+
+    #[test]
+    fn refresh_rows_matches_from_scratch_bitwise() {
+        // vacate vertex 4 of a random graph: touched = {4} ∪ N(4) ∪ N(N(4))
+        let mut g = random_connected(10, 0.35, 9);
+        let all: Vec<WorkerId> = (0..10).collect();
+        let mut gw = GroupWeights::metropolis(&g, &all);
+        let nbrs: Vec<usize> = g.neighbors(4).to_vec();
+        g.remove_vertex(4);
+        let mut touched: Vec<WorkerId> = vec![4];
+        touched.extend(&nbrs);
+        for &x in &nbrs {
+            touched.extend(g.neighbors(x));
+        }
+        gw.refresh_rows(&g, &touched);
+        let fresh = GroupWeights::metropolis(&g, &all);
+        for a in 0..10 {
+            for b in 0..10 {
+                assert_eq!(
+                    gw.weights[a][b].to_bits(),
+                    fresh.weights[a][b].to_bits(),
+                    "entry ({a},{b}) diverged from from-scratch metropolis"
+                );
+            }
+        }
+        assert!(gw.stochasticity_error() < 1e-6);
+    }
+
+    #[test]
+    fn refresh_rows_after_rejoin_with_new_edges() {
+        // re-attach vertex 4 with a different edge set than it had
+        let mut g = ring(8);
+        let all: Vec<WorkerId> = (0..8).collect();
+        let mut gw = GroupWeights::metropolis(&g, &all);
+        g.remove_vertex(4);
+        gw.refresh_rows(&g, &[2, 3, 4, 5, 6]);
+        g.add_edge(4, 0);
+        g.add_edge(4, 1);
+        // touched: 4 and new neighbors {0,1} and their neighbors
+        let mut touched = vec![4, 0, 1];
+        for &x in &[0usize, 1] {
+            touched.extend(g.neighbors(x));
+        }
+        gw.refresh_rows(&g, &touched);
+        let fresh = GroupWeights::metropolis(&g, &all);
+        for a in 0..8 {
+            for b in 0..8 {
+                assert_eq!(gw.weights[a][b].to_bits(), fresh.weights[a][b].to_bits());
+            }
+        }
+        // unknown ids are ignored, not a panic
+        gw.refresh_rows(&g, &[99]);
     }
 
     #[test]

@@ -13,12 +13,14 @@ use crate::backend::{Backend, GradOutput};
 use crate::churn::{self, ApplyOutcome, ChurnModel, TopologyMutation};
 use crate::config::{ExperimentConfig, LrSchedule};
 use crate::consensus::GroupWeights;
+use crate::membership::MembershipModel;
 use crate::metrics::Recorder;
 use crate::model::ParamVec;
 use crate::pathsearch::PathSearch;
 use crate::sim::{CommModel, ComputeModel, Event, EventKind, EventQueue};
 use crate::topology::Graph;
 use crate::WorkerId;
+use std::collections::BTreeMap;
 
 /// Shared engine state exposed to update rules.
 pub struct EngineCore {
@@ -57,8 +59,20 @@ pub struct EngineCore {
     /// round, so the steady-state hot loop performs zero allocation).
     scratch: Vec<ParamVec>,
     /// Cached full-fleet Metropolis weights (synchronous DSGD's per-round
-    /// matrix); invalidated whenever the topology changes.
+    /// matrix); invalidated whenever churn mutates the topology.  Under
+    /// open-world membership the cache is instead maintained
+    /// *incrementally*: join/leave recomputes only the touched rows
+    /// (`GroupWeights::refresh_rows`), never the whole matrix.
     full_weights: Option<GroupWeights>,
+    /// Per-slot occupancy under open-world membership (all `true` in the
+    /// closed-world default, so every guard below is a no-op there).
+    active: Vec<bool>,
+    /// Exact scheduled completion time of each slot's in-flight compute;
+    /// NaN when idle.  A popped `ComputeDone` is accepted only when its
+    /// timestamp equals this bitwise — vacating a slot cancels the
+    /// in-flight gradient by resetting the entry to NaN, so a stale
+    /// completion from a previous occupant can never fire for a joiner.
+    expected_done: Vec<f64>,
 }
 
 impl EngineCore {
@@ -80,6 +94,69 @@ impl EngineCore {
     /// Whether worker `w` has a stashed (un-applied) gradient.
     pub fn has_stash(&self, w: WorkerId) -> bool {
         self.stash[w].is_some()
+    }
+
+    /// Whether slot `w` currently holds an active worker (always true in
+    /// closed-world runs without a `membership` section).
+    pub fn is_active(&self, w: WorkerId) -> bool {
+        self.active[w]
+    }
+
+    /// Number of occupied slots.
+    pub fn num_active(&self) -> usize {
+        self.active.iter().filter(|a| **a).count()
+    }
+
+    /// Dispatch guard for `ComputeStart(w)`: a vacant slot must not start
+    /// computing, and a slot with an in-flight gradient must not stack a
+    /// second one (a pre-departure restart racing a later join).  Always
+    /// true in closed-world runs — each worker's lifecycle is strictly
+    /// start → done → restart there.
+    pub fn can_start(&self, w: WorkerId) -> bool {
+        self.active[w] && self.expected_done[w].is_nan()
+    }
+
+    /// Dispatch guard for `ComputeDone(w)`: accept only the completion
+    /// whose timestamp matches the scheduled one bitwise, then mark the
+    /// slot idle.  Cancelled computes (the slot was vacated mid-flight)
+    /// and completions of a previous occupant fail the match and are
+    /// dropped.  O(1) per event — membership dispatch never scans slots.
+    pub fn accept_done(&mut self, w: WorkerId) -> bool {
+        if self.expected_done[w].to_bits() == self.queue.now().to_bits() {
+            self.expected_done[w] = f64::NAN;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Max row/column-sum deviation from 1 of the cached full-fleet
+    /// Metropolis matrix (`None` when no matrix is cached).  Under
+    /// open-world membership the matrix is maintained incrementally
+    /// across join/leave, so this is the doubly-stochasticity invariant
+    /// the membership tests gate on.
+    pub fn full_weights_stochastic_error(&self) -> Option<f32> {
+        self.full_weights.as_ref().map(GroupWeights::stochasticity_error)
+    }
+
+    /// Whether the incrementally maintained full-fleet Metropolis matrix
+    /// is bitwise identical to a from-scratch rebuild over all slots on
+    /// the live graph (`None` when no matrix is cached).
+    pub fn full_weights_match_rebuild(&self) -> Option<bool> {
+        self.full_weights.as_ref().map(|gw| {
+            let all: Vec<WorkerId> = (0..self.graph.num_vertices()).collect();
+            let fresh = GroupWeights::metropolis(&self.graph, &all);
+            gw.members == fresh.members
+                && gw.weights.len() == fresh.weights.len()
+                && gw
+                    .weights
+                    .iter()
+                    .zip(&fresh.weights)
+                    .all(|(a, b)| {
+                        a.len() == b.len()
+                            && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+                    })
+        })
     }
 
     /// Whether update rules must retarget to the live component structure
@@ -121,6 +198,9 @@ impl EngineCore {
         self.recent_loss.1 += 1;
         self.stash[w] = Some(out);
         let dur = self.compute.sample_duration(w, self.queue.now());
+        // identical float expression to EventQueue::schedule_in, so the
+        // popped event time matches bitwise in accept_done
+        self.expected_done[w] = self.queue.now() + dur;
         self.queue.schedule_in(dur, EventKind::ComputeDone(w));
     }
 
@@ -324,16 +404,119 @@ impl EngineCore {
         if self.recorder.curve.last().map_or(false, |p| p.iteration == k && p.time == t) {
             return;
         }
-        let refs: Vec<&[f32]> = self.params.iter().map(|p| p.as_slice()).collect();
+        // Evaluate the mean over *occupied* slots only: vacant slots hold
+        // retired parameters that no live worker owns (identity filter in
+        // closed-world runs).
+        let refs: Vec<&[f32]> = self
+            .params
+            .iter()
+            .zip(&self.active)
+            .filter(|(_, &a)| a)
+            .map(|(p, _)| p.as_slice())
+            .collect();
         let mean = crate::model::mean_of(&refs);
         let out = self.backend.eval(&mean);
         self.recorder.record_eval(k, t, out.loss, out.accuracy);
     }
 
-    /// Consensus gap `max_j ‖w_j − w̄‖` (Theorem 1 diagnostics).
+    /// Consensus gap `max_j ‖w_j − w̄‖` over occupied slots (Theorem 1
+    /// diagnostics).
     pub fn consensus_gap(&self) -> f32 {
-        let refs: Vec<&[f32]> = self.params.iter().map(|p| p.as_slice()).collect();
+        let refs: Vec<&[f32]> = self
+            .params
+            .iter()
+            .zip(&self.active)
+            .filter(|(_, &a)| a)
+            .map(|(p, _)| p.as_slice())
+            .collect();
         crate::model::consensus_gap(&refs)
+    }
+
+    /// Stage the monitor ground truth after a membership slot mutation
+    /// and schedule its delayed adoption — the same split/merge
+    /// bookkeeping as [`Self::on_topology_changed`], minus the churn
+    /// counters (membership changes are not churn events).
+    fn note_membership_mutation(&mut self, muts: &[TopologyMutation]) {
+        let delta = self.monitor.apply_mutations(&self.graph, muts);
+        if !delta.changed() {
+            return;
+        }
+        self.recorder.partition_splits += delta.splits;
+        self.recorder.partition_merges += delta.merges;
+        self.recorder.max_components =
+            self.recorder.max_components.max(self.monitor.num_components());
+        self.monitor.queue_observation(self.now());
+        for latency in self.monitor.distinct_latencies() {
+            self.queue.schedule_in(latency, EventKind::PartitionDetect);
+        }
+    }
+
+    /// Vacate slot `s` (open-world membership): cancel its in-flight
+    /// compute, drop its stashed gradient, retire its parameters with it
+    /// (they stay in the buffer but leave the eval/consensus mean),
+    /// isolate it in the graph, prune Pathsearch, refresh only the
+    /// touched Metropolis rows, and stage the monitor observation.
+    /// O(active-degree neighborhood), never O(n) beyond the slot vectors.
+    fn vacate_slot(&mut self, s: WorkerId) {
+        debug_assert!(self.active[s], "vacating already-vacant slot {s}");
+        self.active[s] = false;
+        self.expected_done[s] = f64::NAN;
+        self.stash[s] = None;
+        let old_nbrs: Vec<WorkerId> = self.graph.neighbors(s).to_vec();
+        self.graph.remove_vertex(s);
+        self.pathsearch.prune_missing(&self.graph);
+        self.pathsearch.reset_component(&[s]);
+        // leave announcement: one id pair flooded, same O(2N) accounting
+        // as the churn/Pathsearch broadcasts
+        self.recorder.control_bytes += PathSearch::broadcast_bytes(self.num_workers(), 1);
+        if let Some(gw) = self.full_weights.as_mut() {
+            // rows with a changed induced degree ({s} ∪ N(s)) plus their
+            // neighbors, whose entries reference those degrees
+            let mut touched = vec![s];
+            touched.extend(&old_nbrs);
+            for &x in &old_nbrs {
+                touched.extend(self.graph.neighbors(x));
+            }
+            gw.refresh_rows(&self.graph, &touched);
+        }
+        self.note_membership_mutation(&[TopologyMutation::Isolate(s)]);
+    }
+
+    /// Fill vacant slot `s` (open-world membership): re-wire its template
+    /// edges toward currently active peers, warm-start its parameters
+    /// from the neighbor average of the inherited slot (the caller passes
+    /// the fleet-init fallback for a joiner with no reachable neighbor),
+    /// charge the warm-start pulls, refresh only the touched Metropolis
+    /// rows, and stage the monitor observation.  Returns the attach
+    /// targets.  The caller starts the joiner's compute afterwards.
+    fn fill_slot(&mut self, s: WorkerId, template: &Graph, init: &ParamVec) -> Vec<WorkerId> {
+        debug_assert!(!self.active[s], "filling occupied slot {s}");
+        let targets: Vec<WorkerId> =
+            template.neighbors(s).iter().copied().filter(|&x| self.active[x]).collect();
+        for &t in &targets {
+            self.graph.add_edge(s, t);
+        }
+        self.active[s] = true;
+        self.params[s] = if targets.is_empty() {
+            init.clone()
+        } else {
+            let rows: Vec<&[f32]> = targets.iter().map(|&t| self.params[t].as_slice()).collect();
+            crate::model::mean_of(&rows)
+        };
+        // warm start pulls one parameter message per attach target, plus
+        // the join announcement on the control plane
+        self.recorder.param_bytes += targets.len() as u64 * self.param_bytes;
+        self.recorder.control_bytes += PathSearch::broadcast_bytes(self.num_workers(), 1);
+        if let Some(gw) = self.full_weights.as_mut() {
+            let mut touched = vec![s];
+            touched.extend(&targets);
+            for &x in &targets {
+                touched.extend(self.graph.neighbors(x));
+            }
+            gw.refresh_rows(&self.graph, &touched);
+        }
+        self.note_membership_mutation(&[TopologyMutation::Attach(s, targets.clone())]);
+        targets
     }
 
     /// Mean of local losses since the last call (coarse progress signal).
@@ -440,6 +623,20 @@ pub struct Engine {
     time_budget: Option<f64>,
     /// Time-based evaluation period (drives `EventKind::EvalTick`).
     eval_every_seconds: Option<f64>,
+    /// Open-world population layer (`membership` config section): owns the
+    /// user pool, the round sampler and the departure clock, and feeds the
+    /// event loop `WorkerJoin`/`WorkerLeave`/`RoundSample` events.
+    membership: Option<MembershipModel>,
+    /// Slot-graph template: a joiner re-wires the vacant slot's template
+    /// edges toward whichever endpoints are currently active.
+    initial_graph: Graph,
+    /// Fleet init vector — warm-start fallback for a joiner whose slot has
+    /// no active template neighbor.
+    init_params: ParamVec,
+    /// External worker id (trace machines ≥ n) → assigned slot (satellite:
+    /// trace ADD/REMOVE of previously-unknown machine ids route through
+    /// the join/leave path instead of being dropped).
+    extern_map: BTreeMap<usize, WorkerId>,
 }
 
 impl Engine {
@@ -457,7 +654,20 @@ impl Engine {
         backend: Box<dyn Backend>,
     ) -> anyhow::Result<Self> {
         let n = cfg.num_workers;
-        let graph = cfg.topology.build(n);
+        let membership = cfg
+            .membership
+            .as_ref()
+            .map(|mc| MembershipModel::from_config(mc, n, cfg.seed_for("membership")))
+            .transpose()?;
+        // Two-tier membership (aggregators > 0) replaces the configured
+        // topology with the hierarchical slot graph; otherwise the slot
+        // graph *is* the configured topology.  Initial vacancies are
+        // applied as leaves in `run`, so the template built here is the
+        // fully-occupied graph.
+        let graph = membership
+            .as_ref()
+            .and_then(|m| m.build_graph())
+            .unwrap_or_else(|| cfg.topology.build(n));
         assert!(graph.is_connected(), "topology must be connected");
         // A trace section replaces both synthetic generators: the lowered
         // straggler timeline drives the compute model and the lowered
@@ -491,6 +701,14 @@ impl Engine {
             PartitionMonitor::with_latencies(&graph, cfg.adapt.detection_latency.resolve(n)?);
         let mut recorder = Recorder::new();
         recorder.max_components = monitor.num_components();
+        // Closed-world runs lazily (re)build the full matrix on demand;
+        // open-world runs prime it here and maintain it incrementally
+        // across every join/leave (`GroupWeights::refresh_rows`).
+        let full_weights = membership.is_some().then(|| {
+            let all: Vec<WorkerId> = (0..n).collect();
+            GroupWeights::metropolis(&graph, &all)
+        });
+        let initial_graph = graph.clone();
         let core = EngineCore {
             graph,
             queue: EventQueue::new(),
@@ -502,7 +720,7 @@ impl Engine {
             adapt: cfg.adapt.clone(),
             compute,
             backend,
-            params: vec![init; n],
+            params: vec![init.clone(); n],
             stash: vec![None; n],
             lr: cfg.lr,
             lr_per_round: cfg.lr_per_round,
@@ -511,7 +729,9 @@ impl Engine {
             param_bytes,
             recent_loss: (0.0, 0),
             scratch: Vec::new(),
-            full_weights: None,
+            full_weights,
+            active: vec![true; n],
+            expected_done: vec![f64::NAN; n],
         };
         let rule = cfg.algorithm.build(cfg.prague_group, cfg.seed_for("algorithm"));
         let churn = match lowered {
@@ -525,7 +745,84 @@ impl Engine {
             max_iterations: cfg.max_iterations,
             time_budget: cfg.time_budget,
             eval_every_seconds: cfg.eval_every_seconds,
+            membership,
+            initial_graph,
+            init_params: init,
+            extern_map: BTreeMap::new(),
         })
+    }
+
+    /// Slot `s` leaves the fleet: core teardown, then the update rule's
+    /// hook (so a group-based rule can shrink or fire the departed
+    /// member's group before the monitor even promotes the vacancy).
+    fn do_leave(&mut self, s: WorkerId) {
+        self.core.vacate_slot(s);
+        self.rule.on_worker_leave(s, &mut self.core);
+    }
+
+    /// A joiner occupies vacant slot `s`: core re-wiring + warm start,
+    /// then the rule's hook, then the joiner starts computing.
+    fn do_join(&mut self, s: WorkerId) {
+        self.core.fill_slot(s, &self.initial_graph, &self.init_params);
+        self.rule.on_worker_join(s, &mut self.core);
+        self.core.begin_compute(s);
+    }
+
+    /// Route churn/trace mutations through the membership model
+    /// (satellite fix: an `Isolate`/`Attach` naming a machine id the
+    /// engine has never seen — trace REMOVE/ADD of an unknown worker — is
+    /// a membership leave/join, not a topology edit).  Returns the
+    /// mutations that still apply as plain topology churn.
+    fn route_membership_mutations(
+        &mut self,
+        muts: Vec<TopologyMutation>,
+        now: f64,
+    ) -> Vec<TopologyMutation> {
+        // temporarily detach the model: do_leave/do_join re-borrow self
+        let mut model = self.membership.take().expect("membership routing without model");
+        let n = self.core.num_workers();
+        let mut rest = Vec::new();
+        for m in muts {
+            match m {
+                TopologyMutation::Isolate(w) => {
+                    let slot = if w < n {
+                        Some(w)
+                    } else {
+                        self.extern_map.remove(&w)
+                    };
+                    let Some(slot) = slot else { continue };
+                    if model.extern_leave(slot, now) {
+                        self.core.recorder.workers_left += 1;
+                        self.do_leave(slot);
+                    }
+                }
+                TopologyMutation::Attach(w, targets) => {
+                    if w < n {
+                        if model.extern_join(w, now) {
+                            self.core.recorder.workers_joined += 1;
+                            self.do_join(w);
+                        } else {
+                            // occupied slot: a plain re-wire, not a join
+                            rest.push(TopologyMutation::Attach(w, targets));
+                        }
+                    } else if let Some(slot) = (0..n).find(|&s| !self.core.active[s]) {
+                        // previously-unknown machine id: admit it into the
+                        // lowest vacant slot and remember the mapping so a
+                        // later REMOVE of the same id routes back here
+                        if model.extern_join(slot, now) {
+                            self.extern_map.insert(w, slot);
+                            self.core.recorder.workers_joined += 1;
+                            self.do_join(slot);
+                        }
+                    }
+                    // no vacant slot: the fleet is full, the arrival is
+                    // turned away (dropped, as the pre-membership code did)
+                }
+                other => rest.push(other),
+            }
+        }
+        self.membership = Some(model);
+        rest
     }
 
     /// Read-only core access (tests/diagnostics).
@@ -536,10 +833,20 @@ impl Engine {
     /// Run to completion (iteration cap, time budget, or quiescence).
     pub fn run(&mut self) -> RunSummary {
         let n = self.core.num_workers();
-        for w in 0..n {
-            self.core.begin_compute(w);
-        }
         self.rule.on_start(&mut self.core);
+        // Open-world runs start with only the sampled slots occupied: the
+        // template graph vacates down to the membership model's initial
+        // occupancy before anyone computes (not counted as departures).
+        let vacant =
+            self.membership.as_ref().map(|m| m.initially_vacant()).unwrap_or_default();
+        for s in vacant {
+            self.do_leave(s);
+        }
+        for w in 0..n {
+            if self.core.active[w] {
+                self.core.begin_compute(w);
+            }
+        }
         self.core.eval_now(); // k = 0 baseline point
         if let Some(t) = self.churn.next_change() {
             self.core.queue.schedule(t, EventKind::TopologyChange);
@@ -547,10 +854,65 @@ impl Engine {
         if let Some(dt) = self.eval_every_seconds {
             self.core.queue.schedule(dt, EventKind::EvalTick);
         }
+        if let Some(model) = self.membership.as_mut() {
+            self.core.queue.schedule(model.next_round_time(), EventKind::RoundSample);
+            if let Some((t, s)) = model.schedule_departure(0.0) {
+                self.core.queue.schedule(t, EventKind::WorkerLeave(s));
+            }
+        }
         while let Some(Event { kind, .. }) = self.core.queue.pop() {
             match kind {
-                EventKind::ComputeStart(w) => self.core.begin_compute(w),
-                EventKind::ComputeDone(w) => self.rule.on_ready(w, &mut self.core),
+                EventKind::ComputeStart(w) => {
+                    if self.core.can_start(w) {
+                        self.core.begin_compute(w);
+                    }
+                }
+                EventKind::ComputeDone(w) => {
+                    if self.core.accept_done(w) {
+                        self.rule.on_ready(w, &mut self.core);
+                    }
+                }
+                EventKind::WorkerJoin(s) => {
+                    let admit = self
+                        .membership
+                        .as_mut()
+                        .map_or(false, |model| model.on_join_event(s));
+                    if admit {
+                        self.core.recorder.workers_joined += 1;
+                        self.do_join(s);
+                    }
+                }
+                EventKind::WorkerLeave(s) => {
+                    let now = self.core.queue.now();
+                    let (proceed, redraw) = match self.membership.as_mut() {
+                        Some(model) => model.on_leave_event(s, now),
+                        None => (false, None),
+                    };
+                    if proceed {
+                        self.core.recorder.workers_left += 1;
+                        self.do_leave(s);
+                    }
+                    if let Some((t, slot)) = redraw {
+                        self.core.queue.schedule(t, EventKind::WorkerLeave(slot));
+                    }
+                }
+                EventKind::RoundSample => {
+                    let now = self.core.queue.now();
+                    if let Some(model) = self.membership.as_mut() {
+                        let outcome = model.fire_round(now);
+                        self.core.recorder.rounds_sampled += 1;
+                        // leaves replay before joins at the same timestamp
+                        // (FIFO tie-break), so a rotated slot is vacated
+                        // before its next occupant arrives
+                        for &s in &outcome.leaves {
+                            self.core.queue.schedule(now, EventKind::WorkerLeave(s));
+                        }
+                        for &s in &outcome.joins {
+                            self.core.queue.schedule(now, EventKind::WorkerJoin(s));
+                        }
+                        self.core.queue.schedule(model.next_round_time(), EventKind::RoundSample);
+                    }
+                }
                 EventKind::EvalTick => {
                     self.core.eval_now();
                     // re-arm only while other activity is pending so a
@@ -564,6 +926,14 @@ impl Engine {
                 EventKind::TopologyChange => {
                     let now = self.core.queue.now();
                     let muts = self.churn.step(now, &self.core.graph);
+                    // under membership, Isolate/Attach churn (including
+                    // trace ADD/REMOVE of unknown machine ids) is a
+                    // membership leave/join, not a topology edit
+                    let muts = if self.membership.is_some() {
+                        self.route_membership_mutations(muts, now)
+                    } else {
+                        muts
+                    };
                     if !muts.is_empty() {
                         let outcome = if self.core.partitions_allowed() {
                             churn::apply_mutations_unrepaired(&mut self.core.graph, &muts)
@@ -585,6 +955,15 @@ impl Engine {
                                     .queue
                                     .schedule_in(latency, EventKind::PartitionDetect);
                             }
+                        }
+                        if self.membership.is_some() {
+                            // on_topology_changed dropped the cached
+                            // matrix; open-world maintenance is
+                            // incremental, so rebuild the baseline the
+                            // next join/leave will patch
+                            let all: Vec<WorkerId> = (0..n).collect();
+                            self.core.full_weights =
+                                Some(GroupWeights::metropolis(&self.core.graph, &all));
                         }
                     }
                     if let Some(t) = self.churn.next_change() {

@@ -95,6 +95,8 @@ pub mod coordinator;
 pub mod data;
 pub mod engine;
 pub mod harness;
+#[deny(missing_docs)]
+pub mod membership;
 pub mod metrics;
 pub mod model;
 pub mod pathsearch;
@@ -102,6 +104,7 @@ pub mod runtime;
 pub mod sim;
 #[deny(missing_docs)]
 pub mod sweep;
+#[deny(missing_docs)]
 pub mod topology;
 #[deny(missing_docs)]
 pub mod trace;

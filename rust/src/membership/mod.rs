@@ -1,0 +1,682 @@
+//! Open-world membership: a sampled-participation population layer.
+//!
+//! The paper models a *closed* fleet of `n` workers.  Production
+//! decentralized training is open-world: a population of 1e5–1e6 logical
+//! users arrives and departs over time, and only a sampled slice occupies
+//! the `n` bounded *active slots* the engine actually simulates at any
+//! instant.  This module holds that population without materializing it —
+//! every data structure is O(slots), never O(population):
+//!
+//! * the inactive population is a mean-field *fluid pool* advanced in
+//!   closed form (`dp/dt = λ − μ·p`), so arrivals cost O(1) regardless
+//!   of population size;
+//! * active occupants are tracked per slot as minted logical user ids
+//!   (a `u64` counter arena — no dense per-user parameter state exists);
+//! * departures of active users fire from a single exponential thinning
+//!   clock over the edge slots (per-occupied-slot hazard `μ`, thinned
+//!   from the upper bound `μ·E`);
+//! * every `round_interval` virtual seconds a `RoundSample` rotation
+//!   re-samples which pool users occupy the edge slots, either uniformly
+//!   or stickiness-weighted (each sitting occupant survives the rotation
+//!   with probability `stickiness`);
+//! * an optional two-tier hierarchy reserves the first `aggregators`
+//!   slots as always-on hubs on a ring, with every edge slot starred
+//!   onto one hub — edge users then route through intermediate
+//!   aggregation nodes exactly as in hierarchical FL deployments.
+//!
+//! The engine consumes this model through three events
+//! ([`WorkerJoin`](crate::sim::EventKind::WorkerJoin) /
+//! [`WorkerLeave`](crate::sim::EventKind::WorkerLeave) /
+//! [`RoundSample`](crate::sim::EventKind::RoundSample)): joiners
+//! warm-start from the neighbor average of the slot they inherit, a
+//! departure-clock leave retires its user (and that slot's parameters)
+//! permanently, while a rotation leave merely returns the user to the
+//! pool.  Vacant slots appear to the partition machinery as isolated
+//! singleton components, which is why the `membership` config section
+//! requires `adapt.partition_aware = true`: every update rule then
+//! automatically scopes its waiting/barrier logic to the live active
+//! components and tolerates mid-epoch departures.
+//!
+//! Trace-driven arrivals reuse the existing `trace/` ingestion: a lowered
+//! Borg/Alibaba timeline replayed by [`crate::churn::ChurnModel`] emits
+//! `Isolate`/`Attach` mutations which the engine routes through the same
+//! leave/join paths (see `docs/scenarios.md`), so real REMOVE/ADD machine
+//! events drive the open-world fleet instead of the Poisson processes.
+
+use crate::topology::Graph;
+use crate::util::json::Json;
+use crate::util::Rng64;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeSet;
+
+/// How the per-round participation sampler picks edge-slot occupants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplingKind {
+    /// Every rotation resamples all edge slots uniformly from the pool;
+    /// sitting occupants return to the pool first (high turnover, the
+    /// classical uniform-participation regime).
+    Uniform,
+    /// Each sitting occupant survives the rotation with probability
+    /// `stickiness`; only the remainder is resampled from the pool
+    /// (models device availability correlation across rounds).
+    Sticky,
+}
+
+impl SamplingKind {
+    /// Parse the config token (`"uniform"` or `"sticky"`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "uniform" => Ok(SamplingKind::Uniform),
+            "sticky" => Ok(SamplingKind::Sticky),
+            other => bail!("unknown membership.sampling {other:?} (expected uniform|sticky)"),
+        }
+    }
+
+    /// The config token for this kind.
+    pub fn token(&self) -> &'static str {
+        match self {
+            SamplingKind::Uniform => "uniform",
+            SamplingKind::Sticky => "sticky",
+        }
+    }
+}
+
+/// Strict-parsed `membership` config section (open-world population).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MembershipConfig {
+    /// Logical population size (1e5–1e6 scale); only sets the initial
+    /// fluid pool, so memory stays O(active slots).
+    pub population: usize,
+    /// Poisson birth rate λ (users/virtual-second) flowing into the pool.
+    pub arrival_rate: f64,
+    /// Per-user death hazard μ (1/virtual-second); drains both the pool
+    /// (in fluid form) and active edge slots (via the thinning clock).
+    pub departure_rate: f64,
+    /// Virtual seconds between `RoundSample` participation rotations.
+    pub round_interval: f64,
+    /// Fraction of edge slots kept occupied by each rotation, in (0, 1].
+    pub participation: f64,
+    /// Participation sampler.
+    pub sampling: SamplingKind,
+    /// Per-round survival probability of a sitting occupant, in [0, 1);
+    /// only used by [`SamplingKind::Sticky`].
+    pub stickiness: f64,
+    /// Number of always-on two-tier aggregator slots (0 = flat topology).
+    pub aggregators: usize,
+    /// Membership RNG seed override; `None` derives from the experiment
+    /// seed via `seed_for("membership")`.
+    pub seed: Option<u64>,
+}
+
+impl Default for MembershipConfig {
+    fn default() -> Self {
+        MembershipConfig {
+            population: 100_000,
+            arrival_rate: 0.0,
+            departure_rate: 0.0,
+            round_interval: 1.0,
+            participation: 1.0,
+            sampling: SamplingKind::Uniform,
+            stickiness: 0.5,
+            aggregators: 0,
+            seed: None,
+        }
+    }
+}
+
+fn need_usize(key: &str, v: &Json) -> Result<usize> {
+    v.as_usize().with_context(|| format!("membership.{key} must be a non-negative integer"))
+}
+
+fn need_f64(key: &str, v: &Json) -> Result<f64> {
+    v.as_f64().with_context(|| format!("membership.{key} must be a number"))
+}
+
+impl MembershipConfig {
+    /// Strict parse: unknown keys are errors, values are type-checked.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let obj = v.as_obj().context("membership section must be an object")?;
+        let mut cfg = MembershipConfig::default();
+        for (k, v) in obj {
+            match k.as_str() {
+                "population" => cfg.population = need_usize(k, v)?,
+                "arrival_rate" => cfg.arrival_rate = need_f64(k, v)?,
+                "departure_rate" => cfg.departure_rate = need_f64(k, v)?,
+                "round_interval" => cfg.round_interval = need_f64(k, v)?,
+                "participation" => cfg.participation = need_f64(k, v)?,
+                "sampling" => {
+                    let s = v.as_str().context("membership.sampling must be a string")?;
+                    cfg.sampling = SamplingKind::parse(s)?;
+                }
+                "stickiness" => cfg.stickiness = need_f64(k, v)?,
+                "aggregators" => cfg.aggregators = need_usize(k, v)?,
+                "seed" => {
+                    cfg.seed = match v {
+                        Json::Null => None,
+                        other => Some(
+                            other.as_u64().context("membership.seed must be an integer or null")?,
+                        ),
+                    }
+                }
+                other => bail!("unknown membership config key {other:?}"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize back to the canonical JSON object.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("population".into(), Json::from(self.population as f64));
+        m.insert("arrival_rate".into(), Json::from(self.arrival_rate));
+        m.insert("departure_rate".into(), Json::from(self.departure_rate));
+        m.insert("round_interval".into(), Json::from(self.round_interval));
+        m.insert("participation".into(), Json::from(self.participation));
+        m.insert("sampling".into(), Json::Str(self.sampling.token().to_string()));
+        m.insert("stickiness".into(), Json::from(self.stickiness));
+        m.insert("aggregators".into(), Json::from(self.aggregators as f64));
+        if let Some(s) = self.seed {
+            m.insert("seed".into(), Json::from(s as f64));
+        }
+        Json::Obj(m)
+    }
+
+    /// Range checks local to the section (cross-section rules live in
+    /// [`crate::config::ExperimentConfig::validate`]).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.population >= 1, "membership.population must be >= 1");
+        anyhow::ensure!(
+            self.arrival_rate.is_finite() && self.arrival_rate >= 0.0,
+            "membership.arrival_rate must be finite and >= 0"
+        );
+        anyhow::ensure!(
+            self.departure_rate.is_finite() && self.departure_rate >= 0.0,
+            "membership.departure_rate must be finite and >= 0"
+        );
+        anyhow::ensure!(
+            self.round_interval.is_finite() && self.round_interval > 0.0,
+            "membership.round_interval must be finite and > 0"
+        );
+        anyhow::ensure!(
+            self.participation > 0.0 && self.participation <= 1.0,
+            "membership.participation must be in (0, 1]"
+        );
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.stickiness),
+            "membership.stickiness must be in [0, 1)"
+        );
+        Ok(())
+    }
+}
+
+/// Slot changes committed by one `RoundSample` rotation.  The model has
+/// already updated its occupancy when this is returned; the engine turns
+/// each entry into a `WorkerLeave`/`WorkerJoin` event at the same
+/// timestamp (leaves first) so rule hooks observe an ordered stream.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RoundOutcome {
+    /// Edge slots vacated this rotation (occupants returned to the pool).
+    pub leaves: Vec<usize>,
+    /// Edge slots filled this rotation (pool users promoted to active).
+    pub joins: Vec<usize>,
+}
+
+/// The open-world population model: fluid pool + slot occupancy arena +
+/// departure thinning clock + rotation schedule.  All state is O(slots).
+#[derive(Debug, Clone)]
+pub struct MembershipModel {
+    cfg: MembershipConfig,
+    n: usize,
+    rng: Rng64,
+    /// Mean-field inactive population (fractional users are fine — only
+    /// `floor(pool)` can be promoted at any instant).
+    pool: f64,
+    /// Last virtual time the pool ODE was advanced to.
+    last_advance: f64,
+    /// Next logical user id to mint (ids are never reused: a retired id
+    /// is gone forever, a pooled user gets a fresh id on re-promotion —
+    /// the pool is anonymous by mean-field construction).
+    next_uid: u64,
+    /// Per-slot occupant (logical user id), `None` when vacant.
+    occupant: Vec<Option<u64>>,
+    /// Users permanently retired by the departure clock.
+    retired: u64,
+    /// Pending departure-clock sample: (fire time, edge slot, occupant
+    /// uid at draw time — `None` means the slot was vacant at draw and
+    /// the event is a thinned no-op).
+    next_departure: Option<(f64, usize, Option<u64>)>,
+    /// Next `RoundSample` fire time.
+    next_round: f64,
+    /// Rotation leaves committed but not yet consumed by the engine.
+    pending_leave: BTreeSet<usize>,
+    /// Rotation joins committed but not yet consumed by the engine.
+    pending_join: BTreeSet<usize>,
+}
+
+impl MembershipModel {
+    /// Build the model for `num_workers` active slots and fill the
+    /// initial occupancy: all aggregator slots plus
+    /// `ceil(participation · E)` seeded-random edge slots.
+    pub fn from_config(cfg: &MembershipConfig, num_workers: usize, seed: u64) -> Result<Self> {
+        anyhow::ensure!(num_workers >= 1, "membership requires at least one worker slot");
+        anyhow::ensure!(
+            cfg.aggregators < num_workers,
+            "membership.aggregators ({}) must be < num_workers ({num_workers})",
+            cfg.aggregators
+        );
+        anyhow::ensure!(
+            cfg.population >= num_workers,
+            "membership.population ({}) must be >= num_workers ({num_workers})",
+            cfg.population
+        );
+        let mut rng = Rng64::seed_from_u64(cfg.seed.unwrap_or(seed));
+        let mut occupant = vec![None; num_workers];
+        let mut minted = 0u64;
+        for slot in occupant.iter_mut().take(cfg.aggregators) {
+            *slot = Some(minted);
+            minted += 1;
+        }
+        let edge_slots: Vec<usize> = (cfg.aggregators..num_workers).collect();
+        let target = Self::target_for(cfg.participation, edge_slots.len());
+        for s in rng.sample(&edge_slots, target) {
+            occupant[s] = Some(minted);
+            minted += 1;
+        }
+        let pool = cfg.population as f64 - minted as f64;
+        Ok(MembershipModel {
+            cfg: cfg.clone(),
+            n: num_workers,
+            rng,
+            pool,
+            last_advance: 0.0,
+            next_uid: minted,
+            occupant,
+            retired: 0,
+            next_departure: None,
+            next_round: cfg.round_interval,
+            pending_leave: BTreeSet::new(),
+            pending_join: BTreeSet::new(),
+        })
+    }
+
+    /// Rotation target: `ceil(participation · E)`, clamped to `[1, E]`.
+    fn target_for(participation: f64, edge_count: usize) -> usize {
+        ((participation * edge_count as f64).ceil() as usize).clamp(1, edge_count.max(1))
+    }
+
+    /// Number of edge (non-aggregator) slots.
+    fn edge_count(&self) -> usize {
+        self.n - self.cfg.aggregators
+    }
+
+    /// Whether `slot` currently holds a user.
+    pub fn is_occupied(&self, slot: usize) -> bool {
+        self.occupant[slot].is_some()
+    }
+
+    /// Occupied slot count (aggregators included).
+    pub fn occupied_count(&self) -> usize {
+        self.occupant.iter().filter(|o| o.is_some()).count()
+    }
+
+    /// Current fluid pool size (inactive population).
+    pub fn pool(&self) -> f64 {
+        self.pool
+    }
+
+    /// Users permanently retired by the departure clock so far.
+    pub fn retired(&self) -> u64 {
+        self.retired
+    }
+
+    /// Slots left vacant by the initial fill — the engine vacates these
+    /// through its normal leave path before the run starts.
+    pub fn initially_vacant(&self) -> Vec<usize> {
+        (0..self.n).filter(|&s| self.occupant[s].is_none()).collect()
+    }
+
+    /// Two-tier hierarchical topology when `aggregators > 0`: a ring over
+    /// the aggregator slots (a single pair becomes one edge) plus a star
+    /// edge from every edge slot to `slot % aggregators`.  `None` for the
+    /// flat case — the engine then uses the configured topology.
+    pub fn build_graph(&self) -> Option<Graph> {
+        let a = self.cfg.aggregators;
+        if a == 0 {
+            return None;
+        }
+        let mut g = Graph::empty(self.n);
+        for i in 0..a {
+            g.add_edge(i, (i + 1) % a); // self-loop/dup-safe for a <= 2
+        }
+        for w in a..self.n {
+            g.add_edge(w, w % a);
+        }
+        Some(g)
+    }
+
+    /// Advance the fluid pool ODE `dp/dt = λ − μ·p` to `now` using the
+    /// exact solution `p(t+dt) = λ/μ + (p − λ/μ)·e^(−μ·dt)` (or linear
+    /// growth when μ = 0).  O(1) per call, deterministic.
+    fn advance_pool(&mut self, now: f64) {
+        let dt = now - self.last_advance;
+        if dt <= 0.0 {
+            return;
+        }
+        let (lam, mu) = (self.cfg.arrival_rate, self.cfg.departure_rate);
+        self.pool = if mu > 0.0 {
+            let eq = lam / mu;
+            eq + (self.pool - eq) * (-mu * dt).exp()
+        } else {
+            self.pool + lam * dt
+        };
+        self.last_advance = now;
+    }
+
+    /// Draw the next departure-clock sample after `now` and return its
+    /// fire time and slot for the engine to schedule, or `None` when
+    /// μ = 0 (no clock).  Thinning: the clock runs at the upper bound
+    /// `μ·E` and picks a uniform edge slot; if that slot's occupant
+    /// changed (or was vacant) by fire time, the event is a no-op.
+    pub fn schedule_departure(&mut self, now: f64) -> Option<(f64, usize)> {
+        let mu = self.cfg.departure_rate;
+        let e = self.edge_count();
+        if mu <= 0.0 || e == 0 {
+            self.next_departure = None;
+            return None;
+        }
+        let t = now + self.rng.exponential(1.0 / (mu * e as f64));
+        let slot = self.cfg.aggregators + self.rng.gen_range(e);
+        self.next_departure = Some((t, slot, self.occupant[slot]));
+        Some((t, slot))
+    }
+
+    /// Handle a `WorkerLeave(slot)` event at `now`.  Returns
+    /// `(proceed, next_clock)`: `proceed` is whether the engine should
+    /// actually vacate the slot, and `next_clock` is the redrawn
+    /// departure sample to schedule (departure-clock events only).
+    ///
+    /// A rotation leave (pre-committed by [`Self::fire_round`]) always
+    /// proceeds.  A departure-clock leave proceeds only if the recorded
+    /// occupant still sits in the slot (thinning) and vacating it would
+    /// not silence the whole engine (at least one active slot survives).
+    pub fn on_leave_event(&mut self, slot: usize, now: f64) -> (bool, Option<(f64, usize)>) {
+        if self.pending_leave.remove(&slot) {
+            return (true, None);
+        }
+        let recorded = match self.next_departure {
+            Some((t, s, uid)) if s == slot && t <= now => uid,
+            _ => None, // stale or mismatched event: thinned no-op
+        };
+        self.advance_pool(now);
+        let valid = recorded.is_some()
+            && self.occupant[slot] == recorded
+            && self.occupied_count() > 1;
+        if valid {
+            self.occupant[slot] = None;
+            self.retired += 1;
+        }
+        (valid, self.schedule_departure(now))
+    }
+
+    /// Handle a `WorkerJoin(slot)` event: proceeds iff the join was
+    /// pre-committed by [`Self::fire_round`].
+    pub fn on_join_event(&mut self, slot: usize) -> bool {
+        self.pending_join.remove(&slot)
+    }
+
+    /// Next `RoundSample` fire time (drift-free fixed grid).
+    pub fn next_round_time(&self) -> f64 {
+        self.next_round
+    }
+
+    /// Fire the participation rotation at `now`: commit occupancy
+    /// atomically and return the slot deltas for the engine to replay as
+    /// events.  Sitting edge occupants either survive (sticky) or return
+    /// to the pool (uniform); vacancies up to the participation target
+    /// are refilled from the pool while it has whole users left.
+    pub fn fire_round(&mut self, now: f64) -> RoundOutcome {
+        self.advance_pool(now);
+        self.next_round += self.cfg.round_interval;
+        let a = self.cfg.aggregators;
+        let target = Self::target_for(self.cfg.participation, self.edge_count());
+
+        let mut kept: Vec<usize> = Vec::new();
+        let mut leaves: Vec<usize> = Vec::new();
+        for s in a..self.n {
+            if self.occupant[s].is_none() {
+                continue;
+            }
+            let survive = match self.cfg.sampling {
+                SamplingKind::Uniform => false,
+                SamplingKind::Sticky => self.rng.gen_bool(self.cfg.stickiness),
+            };
+            if survive && kept.len() < target {
+                kept.push(s);
+            } else {
+                leaves.push(s);
+            }
+        }
+        // Rotation leaves return to the pool (only the departure clock
+        // retires users permanently).
+        for &s in &leaves {
+            self.occupant[s] = None;
+            self.pool += 1.0;
+        }
+        let vacant: Vec<usize> = (a..self.n).filter(|&s| self.occupant[s].is_none()).collect();
+        let want = (target - kept.len()).min(self.pool.floor().max(0.0) as usize);
+        let mut joins = self.rng.sample(&vacant, want);
+        joins.sort_unstable();
+        for &s in &joins {
+            self.occupant[s] = Some(self.next_uid);
+            self.next_uid += 1;
+            self.pool -= 1.0;
+        }
+        // Rotation can never starve the engine: leaves replenish the pool
+        // before the refill draws, so a non-empty occupancy always yields
+        // at least one join.  Only the departure clock can shrink the
+        // active set, and it refuses to retire the last occupant.
+        self.pending_leave.extend(leaves.iter().copied());
+        self.pending_join.extend(joins.iter().copied());
+        RoundOutcome { leaves, joins }
+    }
+
+    /// Commit an externally-driven join (trace/churn `Attach` of a vacant
+    /// or previously-unknown worker id routed by the engine).  Mints a
+    /// fresh user, drawing from the pool when it has whole users left.
+    /// Returns false if the slot is already occupied.
+    pub fn extern_join(&mut self, slot: usize, now: f64) -> bool {
+        if self.occupant[slot].is_some() {
+            return false;
+        }
+        self.advance_pool(now);
+        if self.pool >= 1.0 {
+            self.pool -= 1.0;
+        }
+        self.occupant[slot] = Some(self.next_uid);
+        self.next_uid += 1;
+        true
+    }
+
+    /// Commit an externally-driven leave (trace/churn `Isolate` of an
+    /// occupied slot routed by the engine); the user retires permanently,
+    /// mirroring a machine REMOVE event.  Returns false when the slot is
+    /// vacant or the last active one.
+    pub fn extern_leave(&mut self, slot: usize, now: f64) -> bool {
+        if self.occupant[slot].is_none() || self.occupied_count() <= 1 {
+            return false;
+        }
+        self.advance_pool(now);
+        self.occupant[slot] = None;
+        self.retired += 1;
+        true
+    }
+
+    /// Approximate resident bytes of the model — used by the membership
+    /// bench/tests to assert O(slots) scaling: the footprint must not
+    /// grow with `population`.
+    pub fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.occupant.capacity() * std::mem::size_of::<Option<u64>>()
+            + (self.pending_leave.len() + self.pending_join.len())
+                * std::mem::size_of::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(population: usize) -> MembershipConfig {
+        MembershipConfig {
+            population,
+            arrival_rate: 5.0,
+            departure_rate: 0.1,
+            round_interval: 1.0,
+            participation: 0.5,
+            sampling: SamplingKind::Sticky,
+            stickiness: 0.6,
+            aggregators: 0,
+            seed: Some(7),
+        }
+    }
+
+    #[test]
+    fn config_roundtrip_and_strict_keys() {
+        let c = cfg(1000);
+        let j = c.to_json();
+        let back = MembershipConfig::from_json(&j).unwrap();
+        assert_eq!(back, c);
+        let bad = Json::parse(r#"{"poplation": 10}"#).unwrap();
+        assert!(MembershipConfig::from_json(&bad).is_err());
+        let bad2 = Json::parse(r#"{"participation": 0.0}"#).unwrap();
+        assert!(MembershipConfig::from_json(&bad2).is_err());
+        let bad3 = Json::parse(r#"{"sampling": "roulette"}"#).unwrap();
+        assert!(MembershipConfig::from_json(&bad3).is_err());
+    }
+
+    #[test]
+    fn initial_fill_meets_target_and_pool_balances() {
+        let m = MembershipModel::from_config(&cfg(1000), 16, 1).unwrap();
+        assert_eq!(m.occupied_count(), 8); // ceil(0.5 * 16)
+        assert!((m.pool() - 992.0).abs() < 1e-9);
+        assert_eq!(m.initially_vacant().len(), 8);
+    }
+
+    #[test]
+    fn aggregator_slots_always_occupied_and_graph_connected() {
+        let mut c = cfg(1000);
+        c.aggregators = 3;
+        let m = MembershipModel::from_config(&c, 16, 1).unwrap();
+        for s in 0..3 {
+            assert!(m.is_occupied(s), "aggregator slot {s} vacant");
+        }
+        let g = m.build_graph().unwrap();
+        assert!(g.is_connected());
+        assert_eq!(g.num_vertices(), 16);
+        // every edge slot stars onto exactly one hub
+        for w in 3..16 {
+            assert_eq!(g.degree(w), 1);
+            assert!(g.has_edge(w, w % 3));
+        }
+        // flat config has no membership topology
+        assert!(MembershipModel::from_config(&cfg(1000), 16, 1).unwrap().build_graph().is_none());
+    }
+
+    #[test]
+    fn pool_ode_matches_euler_integration() {
+        let mut m = MembershipModel::from_config(&cfg(10_000), 8, 1).unwrap();
+        let p0 = m.pool();
+        m.advance_pool(3.0);
+        // fine-step Euler reference
+        let (lam, mu) = (5.0, 0.1);
+        let mut p = p0;
+        let steps = 300_000;
+        let dt = 3.0 / steps as f64;
+        for _ in 0..steps {
+            p += (lam - mu * p) * dt;
+        }
+        assert!((m.pool() - p).abs() < 1e-2, "closed form {} vs euler {p}", m.pool());
+    }
+
+    #[test]
+    fn rotation_is_deterministic_per_seed() {
+        let mut a = MembershipModel::from_config(&cfg(1000), 16, 1).unwrap();
+        let mut b = MembershipModel::from_config(&cfg(1000), 16, 1).unwrap();
+        for r in 1..=20 {
+            let now = r as f64;
+            assert_eq!(a.fire_round(now), b.fire_round(now));
+            let da = a.schedule_departure(now);
+            assert_eq!(da, b.schedule_departure(now));
+            if let Some((t, s)) = da {
+                assert_eq!(a.on_leave_event(s, t).0, b.on_leave_event(s, t).0);
+            }
+        }
+        assert_eq!(a.occupied_count(), b.occupied_count());
+        assert_eq!(a.retired(), b.retired());
+    }
+
+    #[test]
+    fn uniform_rotation_swaps_all_occupants() {
+        let mut c = cfg(1000);
+        c.sampling = SamplingKind::Uniform;
+        let mut m = MembershipModel::from_config(&c, 16, 1).unwrap();
+        let out = m.fire_round(1.0);
+        assert_eq!(out.leaves.len(), 8); // everyone rotated out
+        assert_eq!(out.joins.len(), 8); // target refilled from the pool
+        assert_eq!(m.occupied_count(), 8);
+    }
+
+    #[test]
+    fn departure_clock_thins_stale_samples() {
+        let mut m = MembershipModel::from_config(&cfg(1000), 4, 1).unwrap();
+        let (t, slot) = m.schedule_departure(0.0).unwrap();
+        // rotate the occupant away before the clock fires
+        m.occupant[slot] = None;
+        let (fired, next) = m.on_leave_event(slot, t);
+        assert!(!fired, "stale departure must be a no-op");
+        assert!(next.is_some(), "clock must be redrawn either way");
+    }
+
+    #[test]
+    fn last_active_slot_is_protected() {
+        let mut c = cfg(10);
+        c.participation = 0.01; // target clamps to 1 slot
+        let mut m = MembershipModel::from_config(&c, 4, 1).unwrap();
+        assert_eq!(m.occupied_count(), 1);
+        // even with an empty pool, a rotation leave replenishes the pool
+        // before the refill draws, so occupancy never collapses to zero
+        m.pool = 0.0;
+        let out = m.fire_round(0.0);
+        assert_eq!(m.occupied_count(), 1, "engine would starve");
+        assert_eq!(out.leaves.len(), out.joins.len());
+        // departure clock refuses to retire the last occupant
+        let slot = (0..4).find(|&s| m.is_occupied(s)).unwrap();
+        m.pending_leave.clear();
+        m.pending_join.clear();
+        m.next_departure = Some((1.0, slot, m.occupant[slot]));
+        let (fired, _) = m.on_leave_event(slot, 1.0);
+        assert!(!fired);
+    }
+
+    #[test]
+    fn memory_is_o_slots_not_o_population() {
+        let small = MembershipModel::from_config(&cfg(100_000), 32, 1).unwrap();
+        let big = MembershipModel::from_config(&cfg(1_000_000), 32, 1).unwrap();
+        assert_eq!(small.mem_bytes(), big.mem_bytes());
+        assert!(big.mem_bytes() < 64 * 1024, "footprint {} not O(slots)", big.mem_bytes());
+    }
+
+    #[test]
+    fn extern_join_and_leave_round_trip() {
+        let mut m = MembershipModel::from_config(&cfg(1000), 8, 1).unwrap();
+        let vacant = m.initially_vacant()[0];
+        let pool0 = m.pool();
+        assert!(m.extern_join(vacant, 0.5));
+        assert!(!m.extern_join(vacant, 0.6)); // already occupied
+        assert!((m.pool() - (pool0 - 1.0)).abs() < 1e-9);
+        assert!(m.extern_leave(vacant, 0.7));
+        assert_eq!(m.retired(), 1); // trace REMOVE retires permanently
+        assert!(!m.extern_leave(vacant, 0.8)); // already vacant
+    }
+}

@@ -62,6 +62,19 @@ pub struct Recorder {
     /// Gossip rounds bucketed by the ground-truth component count at the
     /// time of the round — the per-component progress profile.
     pub gossips_by_components: std::collections::BTreeMap<usize, u64>,
+    /// Open-world membership: pool users promoted into active slots
+    /// (rotation refills, trace-routed attaches — initial fill excluded).
+    pub workers_joined: u64,
+    /// Open-world membership: active slots vacated (rotation leaves,
+    /// departure-clock retirements, trace-routed isolates — the initial
+    /// vacancy pass is excluded).
+    pub workers_left: u64,
+    /// Open-world membership: `RoundSample` participation rotations fired.
+    pub rounds_sampled: u64,
+    /// Prague proactive group rebuilds triggered by an adopted split
+    /// or a member departure (stranded workers regroup without waiting
+    /// for fire-time sub-group all-reduces).
+    pub prague_regroups: u64,
 }
 
 impl Recorder {

@@ -26,6 +26,20 @@ pub enum EventKind {
     /// engine promotes the `PartitionMonitor` observations staged
     /// `detection_latency` seconds ago (partition-aware adaptivity).
     PartitionDetect,
+    /// A pool user fills this vacant active slot (open-world membership):
+    /// the engine re-wires the slot's edges, warm-starts its parameters
+    /// from the neighbor average, and starts its compute.
+    WorkerJoin(WorkerId),
+    /// The occupant of this active slot leaves (open-world membership):
+    /// either a rotation leave (user returns to the pool) or a
+    /// departure-clock leave (user retires forever); the engine isolates
+    /// the slot and retires its parameters either way.
+    WorkerLeave(WorkerId),
+    /// Periodic participation rotation (open-world membership): the
+    /// `MembershipModel` commits which users occupy the edge slots for
+    /// the next round and the engine replays the deltas as
+    /// `WorkerLeave`/`WorkerJoin` events at this timestamp.
+    RoundSample,
 }
 
 /// A scheduled event.

@@ -1,0 +1,248 @@
+//! `bench engine` — the canonical engine micro-bench behind
+//! `BENCH_engine.json`: event-queue throughput (schedule/pop ops per
+//! wall-clock second) and end-to-end engine runs (events/sec, peak RSS)
+//! across fleet sizes.  `--check` gates the measured numbers against the
+//! committed baseline (`rust/testdata/perf/BENCH_engine.json`) with a
+//! multiplicative `--tolerance` (default 0.6: a run may be up to 40 %
+//! slower / proportionally larger than the baseline before CI fails —
+//! wide on purpose, shared runners are noisy).
+
+use crate::config::{BackendKind, ExperimentConfig};
+use crate::coordinator::run_experiment;
+use crate::sim::{EventKind, EventQueue};
+use crate::sweep::cli::BenchArgs;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Default committed baseline location (repo-relative).
+pub const BASELINE_PATH: &str = "rust/testdata/perf/BENCH_engine.json";
+
+/// One end-to-end measurement row.
+#[derive(Debug, Clone, Copy)]
+struct E2eRow {
+    n: usize,
+    events_per_sec: f64,
+    peak_rss_kb: Option<u64>,
+}
+
+/// Peak resident set (VmHWM) in kB — Linux only, `None` elsewhere.
+fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+/// Raw queue throughput: schedule+pop `ops` interleaved events through a
+/// warm heap, returning operations (schedule or pop) per second.
+fn bench_queue(ops: usize) -> f64 {
+    let mut q = EventQueue::new();
+    // keep a standing population so pops exercise a non-trivial heap
+    for w in 0..1024usize {
+        q.schedule(w as f64 * 0.001, EventKind::ComputeDone(w));
+    }
+    let start = Instant::now();
+    let mut done = 0usize;
+    while done < ops {
+        let ev = q.pop().expect("standing population never drains");
+        if let EventKind::ComputeDone(w) = ev.kind {
+            q.schedule_in(1.0 + (w % 7) as f64 * 0.1, EventKind::ComputeDone(w));
+        }
+        done += 2; // one pop + one schedule
+    }
+    done as f64 / start.elapsed().as_secs_f64().max(1e-9)
+}
+
+/// End-to-end engine throughput at fleet size `n` (DSGD-AAU, quadratic
+/// backend): processed events per wall-clock second, approximated as two
+/// events (start + done) per local gradient step.
+fn bench_e2e(n: usize, iters: u64) -> Result<E2eRow> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = format!("bench_engine_n{n}");
+    cfg.num_workers = n;
+    cfg.backend = BackendKind::Quadratic;
+    cfg.topology = crate::topology::TopologyKind::Random { p: 0.3, seed: 11 };
+    cfg.mean_compute = 0.01;
+    cfg.max_iterations = iters;
+    cfg.eval_every = iters.max(1);
+    cfg.seed = 12000;
+    let start = Instant::now();
+    let s = run_experiment(&cfg)?;
+    let elapsed = start.elapsed().as_secs_f64().max(1e-9);
+    Ok(E2eRow {
+        n,
+        events_per_sec: 2.0 * s.recorder.local_steps as f64 / elapsed,
+        peak_rss_kb: peak_rss_kb(),
+    })
+}
+
+fn row_json(r: &E2eRow) -> Json {
+    let mut m: BTreeMap<String, Json> = BTreeMap::new();
+    m.insert("n".into(), Json::from(r.n));
+    m.insert("events_per_sec".into(), Json::Num(r.events_per_sec));
+    match r.peak_rss_kb {
+        Some(kb) => m.insert("peak_rss_kb".into(), Json::from(kb as usize)),
+        None => m.insert("peak_rss_kb".into(), Json::Null),
+    };
+    Json::Obj(m)
+}
+
+/// Gate one measured value against a baseline floor: `measured >=
+/// tolerance * baseline` for throughput, `measured <= baseline /
+/// tolerance` for sizes.
+fn gate(
+    failures: &mut Vec<String>,
+    what: &str,
+    measured: f64,
+    baseline: f64,
+    tolerance: f64,
+    larger_is_better: bool,
+) {
+    let ok = if larger_is_better {
+        measured >= tolerance * baseline
+    } else {
+        measured <= baseline / tolerance
+    };
+    if !ok {
+        failures.push(format!(
+            "{what}: measured {measured:.0} vs baseline {baseline:.0} (tolerance {tolerance})"
+        ));
+    }
+}
+
+fn check_against_baseline(
+    baseline_path: &Path,
+    queue_ops: f64,
+    rows: &[E2eRow],
+    tolerance: f64,
+) -> Result<()> {
+    let text = std::fs::read_to_string(baseline_path)
+        .with_context(|| format!("read baseline {}", baseline_path.display()))?;
+    let base = Json::parse(&text)?;
+    let mut failures = Vec::new();
+    if let Some(b) = base.req("queue")?.req("ops_per_sec")?.as_f64() {
+        gate(&mut failures, "queue ops/sec", queue_ops, b, tolerance, true);
+    }
+    let base_rows: &[Json] = base.req("e2e")?.as_arr().unwrap_or(&[]);
+    for r in rows {
+        let Some(b) = base_rows.iter().find(|br| {
+            br.get("n").and_then(Json::as_usize) == Some(r.n)
+        }) else {
+            continue; // fleet size not in the committed baseline — ungated
+        };
+        if let Some(eps) = b.get("events_per_sec").and_then(Json::as_f64) {
+            gate(
+                &mut failures,
+                &format!("e2e n={} events/sec", r.n),
+                r.events_per_sec,
+                eps,
+                tolerance,
+                true,
+            );
+        }
+        if let (Some(kb), Some(bkb)) =
+            (r.peak_rss_kb, b.get("peak_rss_kb").and_then(Json::as_f64))
+        {
+            gate(
+                &mut failures,
+                &format!("e2e n={} peak RSS kB", r.n),
+                kb as f64,
+                bkb,
+                tolerance,
+                false,
+            );
+        }
+    }
+    anyhow::ensure!(
+        failures.is_empty(),
+        "engine bench regressed past the baseline gate:\n  {}",
+        failures.join("\n  ")
+    );
+    println!("[bench engine] baseline gate passed (tolerance {tolerance})");
+    Ok(())
+}
+
+/// Entry point of `bench engine`.
+pub fn run(args: &BenchArgs) -> Result<()> {
+    let quick = args.quick;
+    let ns: &[usize] = if quick { &[8, 32] } else { &[8, 32, 128] };
+    let queue_ops = bench_queue(if quick { 400_000 } else { 2_000_000 });
+    println!("[bench engine] queue: {queue_ops:.0} ops/sec");
+    let iters = if quick { 400 } else { 2000 };
+    let mut rows = Vec::new();
+    for &n in ns {
+        let row = bench_e2e(n, iters)?;
+        println!(
+            "[bench engine] e2e n={}: {:.0} events/sec, peak RSS {} kB",
+            n,
+            row.events_per_sec,
+            row.peak_rss_kb.map_or("n/a".into(), |kb| kb.to_string()),
+        );
+        rows.push(row);
+    }
+
+    let mut m: BTreeMap<String, Json> = BTreeMap::new();
+    m.insert("schema".into(), Json::from("bench-engine-v1"));
+    let mut qm: BTreeMap<String, Json> = BTreeMap::new();
+    qm.insert("ops_per_sec".into(), Json::Num(queue_ops));
+    m.insert("queue".into(), Json::Obj(qm));
+    m.insert("e2e".into(), Json::Arr(rows.iter().map(row_json).collect()));
+    let out = Json::Obj(m);
+    std::fs::create_dir_all(&args.out_dir)?;
+    let out_path = crate::sweep::json_path(&args.out_dir, "engine");
+    std::fs::write(&out_path, out.to_string_compact())
+        .with_context(|| format!("write {}", out_path.display()))?;
+    println!("[bench engine] wrote {}", out_path.display());
+
+    if args.extra.get("check").map(|v| v == "1").unwrap_or(false) {
+        let tolerance: f64 = match args.extra.get("tolerance") {
+            Some(t) => t.parse().context("--tolerance must be a number")?,
+            None => 0.6,
+        };
+        let baseline = args
+            .extra
+            .get("baseline")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from(BASELINE_PATH));
+        check_against_baseline(&baseline, queue_ops, &rows, tolerance)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_bench_measures_something() {
+        assert!(bench_queue(10_000) > 0.0);
+    }
+
+    #[test]
+    fn gate_directions() {
+        let mut f = Vec::new();
+        gate(&mut f, "thr", 100.0, 100.0, 0.6, true);
+        gate(&mut f, "rss", 100.0, 100.0, 0.6, false);
+        assert!(f.is_empty());
+        gate(&mut f, "thr", 50.0, 100.0, 0.6, true);
+        assert_eq!(f.len(), 1, "40% floor breached");
+        gate(&mut f, "rss", 200.0, 100.0, 0.6, false);
+        assert_eq!(f.len(), 2, "size ceiling breached");
+    }
+
+    #[test]
+    fn baseline_file_parses_and_gates_loosely() {
+        // the committed baseline must stay parseable and conservative
+        // enough that a quick in-test measurement passes it
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(BASELINE_PATH);
+        let text = std::fs::read_to_string(&path).expect("committed baseline exists");
+        let base = Json::parse(&text).expect("baseline parses");
+        assert_eq!(base.req("schema").unwrap().as_str(), Some("bench-engine-v1"));
+        let queue_ops = bench_queue(20_000);
+        let row = bench_e2e(8, 100).unwrap();
+        check_against_baseline(&path, queue_ops, &[row], 0.01)
+            .expect("ultra-loose tolerance passes the committed floors");
+    }
+}

@@ -18,6 +18,9 @@ USAGE:
   bench <suite> [OPTIONS]   run one suite from its SweepSpec declaration
   bench all [OPTIONS]       run every suite (CI runs `bench all --quick`)
   bench list                list the suites and their paper mapping
+  bench engine [OPTIONS]    engine micro-bench (events/sec, peak RSS) ->
+                            BENCH_engine.json; --check gates against the
+                            committed baseline with --tolerance (default 0.6)
 
 OPTIONS:
   --quick          smallest grid still covering every axis (CI smoke tier)
@@ -140,7 +143,7 @@ pub struct Suite {
     pub build: fn(&BenchArgs) -> Result<SweepSpec>,
 }
 
-/// The ten suites, in paper order.
+/// The eleven suites, in paper order.
 pub fn registry() -> Vec<Suite> {
     vec![
         Suite {
@@ -203,6 +206,12 @@ pub fn registry() -> Vec<Suite> {
             summary: "real-cluster excerpts (Borg/Alibaba/generic) x algorithm",
             build: suites::trace,
         },
+        Suite {
+            name: "membership",
+            paper: "ROADMAP open-world grid",
+            summary: "sampled participation over 1e5-1e6 logical users",
+            build: suites::membership,
+        },
     ]
 }
 
@@ -255,6 +264,10 @@ pub fn bench_main() -> Result<()> {
             ensure!(failed.is_empty(), "suites failed: {}", failed.join(", "));
             Ok(())
         }
+        "engine" => {
+            let args = BenchArgs::parse_from(argv)?;
+            crate::sweep::bench_engine::run(&args)
+        }
         name => {
             let args = BenchArgs::parse_from(argv)?;
             run_named(name, &args).map(|_| ())
@@ -280,13 +293,14 @@ mod tests {
     use super::*;
 
     #[test]
-    fn registry_has_ten_unique_suites() {
+    fn registry_has_eleven_unique_suites() {
         let names: Vec<&str> = registry().iter().map(|s| s.name).collect();
-        assert_eq!(names.len(), 10);
+        assert_eq!(names.len(), 11);
         let set: std::collections::BTreeSet<&str> = names.iter().copied().collect();
         assert_eq!(set.len(), names.len(), "suite names must be unique");
         assert!(find_suite("partition").is_some());
         assert!(find_suite("trace").is_some());
+        assert!(find_suite("membership").is_some());
         assert!(find_suite("nope").is_none());
     }
 

@@ -34,13 +34,19 @@
 //! joint grid (ROADMAP)      bench straggler       process x churn x algorithm
 //! partition grid (ROADMAP)  bench partition       repair/blind/aware x algorithm
 //! trace grid (ROADMAP)      bench trace           real-cluster excerpt x algorithm
+//! open-world (ROADMAP)      bench membership      population x fleet x sampling
 //! ```
+//!
+//! `bench engine` is not a sweep: it micro-benches the event loop
+//! (events/sec, peak RSS vs fleet size) into `BENCH_engine.json` and
+//! `--check` gates the numbers against the committed baseline.
 //!
 //! `bench all --quick` runs every suite's smoke grid (the CI perf
 //! trajectory); `--resume` re-runs only the missing cells and produces
 //! byte-identical artifacts to a cold run.  The legacy `bench_*`
 //! binaries remain as thin shims for one release.
 
+pub mod bench_engine;
 pub mod cli;
 mod exec;
 mod record;

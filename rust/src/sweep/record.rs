@@ -83,6 +83,10 @@ impl RunRecord {
         m.insert("component_epochs".into(), num(r.component_epochs as f64));
         m.insert("epoch_restarts".into(), num(r.epoch_restarts as f64));
         m.insert("partitioned_gossips".into(), num(r.partitioned_gossips as f64));
+        m.insert("workers_joined".into(), num(r.workers_joined as f64));
+        m.insert("workers_left".into(), num(r.workers_left as f64));
+        m.insert("rounds_sampled".into(), num(r.rounds_sampled as f64));
+        m.insert("prague_regroups".into(), num(r.prague_regroups as f64));
         m.insert("loss_q25".into(), num(r.loss_at_fraction(0.25) as f64));
         m.insert("loss_q50".into(), num(r.loss_at_fraction(0.5) as f64));
         m.insert("loss_q100".into(), num(r.loss_at_fraction(1.0) as f64));

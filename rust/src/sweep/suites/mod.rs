@@ -3,10 +3,12 @@
 //! grid) as a ~30-line [`SweepSpec`] declaration.  The registry lives in
 //! [`crate::sweep::cli`].
 
+mod membership;
 mod paper;
 mod scenarios;
 mod trace;
 
+pub use membership::membership;
 pub use paper::{ablation, accuracy, fixedk, loss_curves, speedup, timebudget};
 pub use scenarios::{churn, partition, straggler};
 pub use trace::trace;

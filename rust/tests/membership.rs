@@ -1,0 +1,231 @@
+//! Open-world membership integration invariants: every update rule must
+//! tolerate mid-epoch joins/departures, the incrementally maintained
+//! Metropolis matrix must stay doubly stochastic (and bitwise-match a
+//! from-scratch rebuild), the partition monitor's labels must agree with
+//! a from-scratch BFS over the mutating vertex set, replay must be
+//! byte-identical across reruns and sweep thread counts, Prague must
+//! proactively regroup on splits and departures, and churn/trace
+//! `Attach`/`Isolate` of previously-unknown worker ids must route
+//! through the membership join/leave path.
+
+use dsgd_aau::adapt::{component_labels, AdaptConfig};
+use dsgd_aau::algorithms::AlgorithmKind;
+use dsgd_aau::churn::{ChurnConfig, ChurnKind, TopologyMutation, TopologyTimeline};
+use dsgd_aau::config::{BackendKind, ExperimentConfig};
+use dsgd_aau::coordinator::{build_backend, run_experiment, run_sweep_with_threads};
+use dsgd_aau::engine::Engine;
+use dsgd_aau::membership::{MembershipConfig, SamplingKind};
+use dsgd_aau::sim::{StragglerKind, StragglerModel};
+use dsgd_aau::topology::TopologyKind;
+
+/// Adversarial open-world setting: a 100k-user population sampled onto
+/// 12 slots with sticky rotation every 0.5 virtual seconds plus a live
+/// departure clock, under partition-aware adaptivity.
+fn cfg(alg: AlgorithmKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = format!("membership_{}", alg.token());
+    cfg.num_workers = 12;
+    cfg.algorithm = alg;
+    cfg.backend = BackendKind::Quadratic;
+    cfg.topology = TopologyKind::Random { p: 0.4, seed: 11 };
+    cfg.adapt = AdaptConfig {
+        allow_partitions: true,
+        partition_aware: true,
+        detection_latency: 0.1.into(),
+        heal_restart: true,
+    };
+    cfg.membership = Some(MembershipConfig {
+        population: 100_000,
+        arrival_rate: 3.0,
+        departure_rate: 0.2,
+        round_interval: 0.5,
+        participation: 0.75,
+        sampling: SamplingKind::Sticky,
+        stickiness: 0.5,
+        aggregators: 0,
+        seed: None,
+    });
+    cfg.max_iterations = u64::MAX / 2;
+    cfg.time_budget = Some(6.0);
+    cfg.eval_every = 50;
+    cfg.mean_compute = 0.01;
+    cfg.seed = 2026;
+    cfg
+}
+
+#[test]
+fn every_rule_tolerates_mid_epoch_churn() {
+    for alg in AlgorithmKind::all() {
+        let s = run_experiment(&cfg(alg)).unwrap();
+        let label = alg.label();
+        // the scenario must actually rotate participants, or this guards
+        // nothing
+        assert!(s.recorder.rounds_sampled > 0, "{label}: no rotation fired");
+        assert!(s.recorder.workers_joined > 0, "{label}: nobody joined");
+        assert!(s.recorder.workers_left > 0, "{label}: nobody left");
+        assert!(s.final_loss().is_finite(), "{label}: loss diverged");
+        assert!(s.iterations > 0, "{label}: engine starved");
+    }
+}
+
+#[test]
+fn metropolis_stays_doubly_stochastic_and_monitor_matches_bfs() {
+    // run the engine directly so the post-run core is inspectable
+    let c = cfg(AlgorithmKind::DsgdSync);
+    c.validate().unwrap();
+    let backend = build_backend(&c).unwrap();
+    let mut eng = Engine::try_from_config(&c, backend).unwrap();
+    let s = eng.run();
+    assert!(s.recorder.workers_joined > 0 && s.recorder.workers_left > 0);
+    let core = eng.core();
+
+    // (a) the incrementally refreshed full-fleet matrix is still doubly
+    // stochastic after every join/leave of the run...
+    let err = core
+        .full_weights_stochastic_error()
+        .expect("membership maintains the full matrix");
+    assert!(err < 1e-5, "row/col sums drifted: {err}");
+    // ...and bitwise-identical to a from-scratch Metropolis rebuild
+    assert_eq!(
+        core.full_weights_match_rebuild(),
+        Some(true),
+        "incremental refresh diverged from a from-scratch rebuild"
+    );
+
+    // (b) incremental component labels match a from-scratch BFS over the
+    // final (heavily mutated) graph
+    assert_eq!(
+        core.monitor.labels(),
+        component_labels(&core.graph).as_slice(),
+        "monitor ground truth diverged from BFS"
+    );
+
+    // (c) a vacated slot holds no edges until a joiner re-wires it
+    for w in 0..core.num_workers() {
+        if !core.is_active(w) {
+            assert_eq!(core.graph.degree(w), 0, "vacant slot {w} kept edges");
+        }
+    }
+}
+
+#[test]
+fn membership_replay_is_byte_identical_across_runs_and_threads() {
+    for alg in [AlgorithmKind::DsgdAau, AlgorithmKind::Prague] {
+        let c = cfg(alg);
+        let a = run_experiment(&c).unwrap();
+        let b = run_experiment(&c).unwrap();
+        assert_eq!(
+            a.recorder.csv_string(),
+            b.recorder.csv_string(),
+            "{}: metrics CSV must be byte-identical across reruns",
+            alg.label()
+        );
+        assert_eq!(a.recorder.workers_joined, b.recorder.workers_joined);
+        assert_eq!(a.recorder.workers_left, b.recorder.workers_left);
+        assert_eq!(a.recorder.rounds_sampled, b.recorder.rounds_sampled);
+        assert_eq!(a.recorder.total_bytes(), b.recorder.total_bytes());
+        assert_eq!(a.virtual_time, b.virtual_time);
+    }
+
+    // sweep-level thread scheduling must not leak into results either
+    let cfgs: Vec<ExperimentConfig> =
+        [AlgorithmKind::DsgdAau, AlgorithmKind::Prague].map(cfg).into_iter().collect();
+    let one = run_sweep_with_threads(cfgs.clone(), 1);
+    let four = run_sweep_with_threads(cfgs, 4);
+    assert_eq!(one.len(), four.len());
+    for ((c1, r1), (c4, r4)) in one.iter().zip(&four) {
+        assert_eq!(c1.algorithm, c4.algorithm, "order must be input order");
+        let (s1, s4) = (r1.as_ref().unwrap(), r4.as_ref().unwrap());
+        assert_eq!(
+            s1.recorder.csv_string(),
+            s4.recorder.csv_string(),
+            "{}: 1 vs 4 threads",
+            c1.algorithm.label()
+        );
+        assert_eq!(s1.recorder.workers_joined, s4.recorder.workers_joined);
+        assert_eq!(s1.recorder.workers_left, s4.recorder.workers_left);
+    }
+}
+
+#[test]
+fn prague_regroups_proactively_on_split_detection() {
+    // closed-world regression: under partition churn with awareness on,
+    // Prague must rebuild straddling groups at split adoption instead of
+    // letting stranded members wait forever.  Summed over seeds so the
+    // assertion doesn't hinge on one RNG stream's group/cut alignment.
+    let mut splits = 0;
+    let mut regroups = 0;
+    for seed in 1..=3u64 {
+        let mut c = cfg(AlgorithmKind::Prague);
+        c.name = format!("prague_regroup_{seed}");
+        c.membership = None;
+        c.churn = ChurnConfig {
+            kind: ChurnKind::PartitionHeal { period: 1.5, downtime: 0.6 },
+            seed: Some(seed),
+        };
+        c.straggler = StragglerModel {
+            kind: StragglerKind::GilbertElliott { mean_fast: 2.0, mean_slow: 0.5 },
+            slowdown: 10.0,
+            seed: Some(seed),
+            ..StragglerModel::default()
+        };
+        c.time_budget = Some(10.0);
+        c.seed = 7000 + seed;
+        let s = run_experiment(&c).unwrap();
+        splits += s.recorder.partition_splits;
+        regroups += s.recorder.prague_regroups;
+    }
+    assert!(splits > 0, "scenario never partitioned");
+    assert!(regroups > 0, "no straddling group was ever rebuilt");
+}
+
+#[test]
+fn prague_regroups_on_membership_departures() {
+    // open-world: rotation departures hit assigned group members
+    // mid-epoch; each such shrink counts as a regroup and must never
+    // wedge the survivors
+    let mut c = cfg(AlgorithmKind::Prague);
+    c.membership.as_mut().unwrap().sampling = SamplingKind::Uniform;
+    let s = run_experiment(&c).unwrap();
+    assert!(s.recorder.workers_left > 0);
+    assert!(s.recorder.prague_regroups > 0, "departures never shrank a group");
+    assert!(s.iterations > 0 && s.final_loss().is_finite());
+}
+
+#[test]
+fn unknown_worker_ids_in_churn_schedules_route_through_join_leave() {
+    // a trace/churn schedule naming machine ids the 12-slot engine has
+    // never seen: ADD must occupy a vacant slot via the membership join
+    // path, a later REMOVE of the same id must route back to that slot,
+    // and stale/never-seen REMOVEs must be no-ops
+    let mut tl = TopologyTimeline::new();
+    tl.push(0.5, vec![TopologyMutation::Attach(500, vec![0, 1])]);
+    tl.push(1.0, vec![TopologyMutation::Attach(501, vec![0])]);
+    tl.push(1.5, vec![TopologyMutation::Isolate(500)]);
+    tl.push(2.0, vec![TopologyMutation::Isolate(500)]); // stale: no-op
+    tl.push(2.5, vec![TopologyMutation::Isolate(777)]); // never seen
+    let path = std::env::temp_dir()
+        .join(format!("dsgd_membership_extern_{}.json", std::process::id()));
+    tl.save(&path).unwrap();
+
+    let mut c = cfg(AlgorithmKind::DsgdAau);
+    // freeze the Poisson machinery so the counters isolate the schedule:
+    // no departure clock, no rotation within the budget, half the slots
+    // initially vacant for the unknown ids to land in
+    {
+        let mc = c.membership.as_mut().unwrap();
+        mc.departure_rate = 0.0;
+        mc.round_interval = 1000.0;
+        mc.participation = 0.5;
+    }
+    c.churn =
+        ChurnConfig { kind: ChurnKind::Schedule { path: path.display().to_string() }, seed: None };
+    c.time_budget = Some(4.0);
+    let s = run_experiment(&c).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(s.recorder.workers_joined, 2, "both unknown ADDs must join");
+    assert_eq!(s.recorder.workers_left, 1, "exactly the mapped REMOVE must leave");
+    assert_eq!(s.recorder.rounds_sampled, 0, "rotation must stay frozen");
+    assert!(s.final_loss().is_finite());
+}
