@@ -126,6 +126,7 @@ impl DetectionLatency {
     }
 
     /// Parse the config form: a number, or an array of per-worker numbers.
+    // pallas-lint: allow(strict-config-parse) — scalar-or-array form: there are no object keys to reject
     pub fn from_json(j: &Json) -> Result<Self> {
         if let Some(v) = j.as_f64() {
             return Ok(DetectionLatency::Uniform(v));

@@ -8,12 +8,12 @@
 use super::UpdateRule;
 use crate::engine::EngineCore;
 use crate::WorkerId;
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 /// Synchronous DSGD barrier state.
 #[derive(Debug, Default)]
 pub struct DsgdSync {
-    done: HashSet<WorkerId>,
+    done: BTreeSet<WorkerId>,
 }
 
 impl DsgdSync {
@@ -97,11 +97,10 @@ impl UpdateRule for DsgdSync {
             return;
         }
         // After a split, a smaller component may consist entirely of
-        // already-done workers; its barrier must fire now (iterate in
-        // sorted worker order so the event stream stays deterministic —
-        // `done` is a hash set).
-        let mut done_sorted: Vec<WorkerId> = self.done.iter().copied().collect();
-        done_sorted.sort_unstable();
+        // already-done workers; its barrier must fire now.  `done` is a
+        // BTreeSet, so the iteration (and hence the event stream) is
+        // already in sorted worker order.
+        let done_sorted: Vec<WorkerId> = self.done.iter().copied().collect();
         super::for_each_distinct_component(&done_sorted, core, |x, core| {
             self.try_fire_component(x, core);
         });

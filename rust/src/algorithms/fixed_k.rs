@@ -7,7 +7,7 @@
 //! group sizing is argued against: a fixed k must be tuned per workload
 //! (too small → slow information diffusion, too large → stragglers are
 //! back in the critical path), whereas Pathsearch sizes groups by what
-//! the epoch still needs.  `bench_ablation --fixedk=1` sweeps k.
+//! the epoch still needs.  `bench fixedk` sweeps k.
 
 use super::UpdateRule;
 use crate::consensus::GroupWeights;

@@ -11,11 +11,11 @@ use crate::consensus::GroupWeights;
 use crate::engine::EngineCore;
 use crate::WorkerId;
 use crate::util::Rng64;
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 struct Group {
     members: Vec<WorkerId>,
-    ready: HashSet<WorkerId>,
+    ready: BTreeSet<WorkerId>,
 }
 
 /// Prague group-generator state.
@@ -59,7 +59,7 @@ impl Prague {
         for &m in &members {
             self.assignment[m] = Some(gid);
         }
-        self.groups[gid] = Some(Group { members, ready: HashSet::new() });
+        self.groups[gid] = Some(Group { members, ready: BTreeSet::new() });
         gid
     }
 
@@ -170,7 +170,7 @@ impl UpdateRule for Prague {
             for &m in &old.members {
                 let frag = by_label
                     .entry(core.monitor.component_of(m))
-                    .or_insert_with(|| Group { members: Vec::new(), ready: HashSet::new() });
+                    .or_insert_with(|| Group { members: Vec::new(), ready: BTreeSet::new() });
                 frag.members.push(m);
                 if old.ready.contains(&m) {
                     frag.ready.insert(m);

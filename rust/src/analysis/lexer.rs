@@ -1,0 +1,420 @@
+//! A small Rust lexer for the lint pass.
+//!
+//! Tokenizes a source file into identifiers, punctuation, literals and
+//! comments with `line:col` positions, handling exactly the constructs
+//! that make naive grepping unsound: line and (nested) block comments,
+//! string literals with escapes, raw strings with arbitrary `#` fences,
+//! byte strings, char literals, and the char-vs-lifetime ambiguity.
+//! It does **not** parse: rules operate on the token stream plus the
+//! module scope, which is all the repo's invariants need.
+
+/// What kind of lexeme a token is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `HashMap`, `unwrap`, …).
+    Ident,
+    /// Numeric literal (loosely lexed; never inspected by rules).
+    Num,
+    /// String literal of any flavor (`"…"`, `r#"…"#`, `b"…"`); `text`
+    /// holds the *contents* without quotes or fences.
+    Str,
+    /// Char or byte-char literal (`'x'`, `b'\n'`).
+    Char,
+    /// Lifetime or loop label (`'a`, `'outer`).
+    Lifetime,
+    /// Single punctuation character (`{`, `:`, `!`, …).
+    Punct,
+    /// Line or block comment; `text` holds the full comment including
+    /// its `//` / `/* */` markers (pragmas are parsed out of these).
+    Comment,
+}
+
+/// One token with its 1-based source position.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    /// Lexeme class.
+    pub kind: TokKind,
+    /// Lexeme text (see [`TokKind`] for per-kind conventions).
+    pub text: String,
+    /// 1-based line of the first character.
+    pub line: u32,
+    /// 1-based byte column of the first character.
+    pub col: u32,
+}
+
+impl Tok {
+    /// Whether this token is the identifier `s`.
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    /// Whether this token is the punctuation character `c`.
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == c.len_utf8() && self.text.starts_with(c)
+    }
+}
+
+/// Tokenize `src`.  Unterminated literals/comments are tolerated (the
+/// remainder of the file becomes one token): the lint must keep scanning
+/// a tree that may not even compile yet.
+pub fn lex(src: &str) -> Vec<Tok> {
+    Lexer { src: src.as_bytes(), pos: 0, line: 1, col: 1, toks: Vec::new() }.run()
+}
+
+struct Lexer<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: u32,
+    col: u32,
+    toks: Vec<Tok>,
+}
+
+impl<'a> Lexer<'a> {
+    fn run(mut self) -> Vec<Tok> {
+        while let Some(b) = self.peek(0) {
+            let (line, col, start) = (self.line, self.col, self.pos);
+            match b {
+                b' ' | b'\t' | b'\r' | b'\n' => {
+                    self.bump();
+                }
+                b'/' if self.peek(1) == Some(b'/') => self.line_comment(line, col, start),
+                b'/' if self.peek(1) == Some(b'*') => self.block_comment(line, col, start),
+                b'"' => self.string(line, col),
+                b'\'' => self.char_or_lifetime(line, col),
+                b'r' | b'b' if self.raw_or_byte_prefix() => self.raw_or_byte(line, col),
+                c if c.is_ascii_digit() => self.number(line, col, start),
+                c if c == b'_' || c.is_ascii_alphabetic() => self.ident(line, col, start),
+                _ => {
+                    self.bump();
+                    self.push(TokKind::Punct, start, line, col);
+                }
+            }
+        }
+        self.toks
+    }
+
+    fn peek(&self, ahead: usize) -> Option<u8> {
+        self.src.get(self.pos + ahead).copied()
+    }
+
+    fn bump(&mut self) {
+        if self.src[self.pos] == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        self.pos += 1;
+    }
+
+    fn push(&mut self, kind: TokKind, start: usize, line: u32, col: u32) {
+        let text = String::from_utf8_lossy(&self.src[start..self.pos]).into_owned();
+        self.toks.push(Tok { kind, text, line, col });
+    }
+
+    fn push_text(&mut self, kind: TokKind, text: String, line: u32, col: u32) {
+        self.toks.push(Tok { kind, text, line, col });
+    }
+
+    fn line_comment(&mut self, line: u32, col: u32, start: usize) {
+        while let Some(b) = self.peek(0) {
+            if b == b'\n' {
+                break;
+            }
+            self.bump();
+        }
+        self.push(TokKind::Comment, start, line, col);
+    }
+
+    fn block_comment(&mut self, line: u32, col: u32, start: usize) {
+        self.bump(); // '/'
+        self.bump(); // '*'
+        let mut depth = 1usize;
+        while let Some(b) = self.peek(0) {
+            if b == b'/' && self.peek(1) == Some(b'*') {
+                depth += 1;
+                self.bump();
+                self.bump();
+            } else if b == b'*' && self.peek(1) == Some(b'/') {
+                depth -= 1;
+                self.bump();
+                self.bump();
+                if depth == 0 {
+                    break;
+                }
+            } else {
+                self.bump();
+            }
+        }
+        self.push(TokKind::Comment, start, line, col);
+    }
+
+    /// `"…"` with `\` escapes; the token text is the unquoted contents.
+    fn string(&mut self, line: u32, col: u32) {
+        self.bump(); // opening quote
+        let start = self.pos;
+        while let Some(b) = self.peek(0) {
+            match b {
+                b'\\' => {
+                    self.bump();
+                    if self.peek(0).is_some() {
+                        self.bump();
+                    }
+                }
+                b'"' => break,
+                _ => self.bump(),
+            }
+        }
+        let text = String::from_utf8_lossy(&self.src[start..self.pos]).into_owned();
+        if self.peek(0) == Some(b'"') {
+            self.bump();
+        }
+        self.push_text(TokKind::Str, text, line, col);
+    }
+
+    /// Lifetime (`'a`) vs char literal (`'a'`, `'\n'`, `'\u{1F600}'`).
+    fn char_or_lifetime(&mut self, line: u32, col: u32) {
+        self.bump(); // '\''
+        let start = self.pos;
+        let first = self.peek(0);
+        let ident_start =
+            first.map_or(false, |b| b == b'_' || b.is_ascii_alphabetic());
+        if ident_start && self.peek(1) != Some(b'\'') {
+            // lifetime or label: consume the identifier tail
+            while let Some(b) = self.peek(0) {
+                if b == b'_' || b.is_ascii_alphanumeric() {
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+            self.push(TokKind::Lifetime, start, line, col);
+            return;
+        }
+        // char literal: one (possibly escaped) char then the closing quote
+        while let Some(b) = self.peek(0) {
+            match b {
+                b'\\' => {
+                    self.bump();
+                    if self.peek(0).is_some() {
+                        self.bump();
+                    }
+                }
+                b'\'' => break,
+                _ => self.bump(),
+            }
+        }
+        let text = String::from_utf8_lossy(&self.src[start..self.pos]).into_owned();
+        if self.peek(0) == Some(b'\'') {
+            self.bump();
+        }
+        self.push_text(TokKind::Char, text, line, col);
+    }
+
+    /// Whether the current `r`/`b` starts a raw/byte literal rather than
+    /// an identifier: `r"`, `r#`, `b"`, `b'`, `br`/`rb` + fence.
+    fn raw_or_byte_prefix(&self) -> bool {
+        let b0 = self.peek(0).unwrap();
+        match (b0, self.peek(1)) {
+            (b'r', Some(b'"')) | (b'r', Some(b'#')) => true,
+            (b'b', Some(b'"')) | (b'b', Some(b'\'')) => true,
+            (b'b', Some(b'r')) => matches!(self.peek(2), Some(b'"') | Some(b'#')),
+            _ => false,
+        }
+    }
+
+    fn raw_or_byte(&mut self, line: u32, col: u32) {
+        let raw = match self.peek(0) {
+            Some(b'r') => true,
+            Some(b'b') if self.peek(1) == Some(b'r') => {
+                self.bump(); // 'b'
+                true
+            }
+            _ => false,
+        };
+        self.bump(); // 'r' or 'b'
+        if !raw {
+            // b"…" or b'…': reuse the escaped forms
+            if self.peek(0) == Some(b'"') {
+                self.string(line, col);
+            } else {
+                self.char_or_lifetime(line, col);
+            }
+            return;
+        }
+        let mut fence = 0usize;
+        while self.peek(0) == Some(b'#') {
+            fence += 1;
+            self.bump();
+        }
+        if self.peek(0) != Some(b'"') {
+            // `r#foo` raw identifier: lex the tail as a plain ident
+            let start = self.pos;
+            while let Some(b) = self.peek(0) {
+                if b == b'_' || b.is_ascii_alphanumeric() {
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+            self.push(TokKind::Ident, start, line, col);
+            return;
+        }
+        self.bump(); // opening quote
+        let start = self.pos;
+        let mut end = self.pos;
+        'scan: while let Some(b) = self.peek(0) {
+            if b == b'"' {
+                // need `fence` hashes to close
+                for k in 0..fence {
+                    if self.peek(1 + k) != Some(b'#') {
+                        self.bump();
+                        continue 'scan;
+                    }
+                }
+                end = self.pos;
+                self.bump(); // closing quote
+                for _ in 0..fence {
+                    self.bump();
+                }
+                let text = String::from_utf8_lossy(&self.src[start..end]).into_owned();
+                self.push_text(TokKind::Str, text, line, col);
+                return;
+            }
+            self.bump();
+            end = self.pos;
+        }
+        let text = String::from_utf8_lossy(&self.src[start..end]).into_owned();
+        self.push_text(TokKind::Str, text, line, col);
+    }
+
+    fn number(&mut self, line: u32, col: u32, start: usize) {
+        // integer part (incl. 0x/0b/0o digits and type-suffix letters)
+        while let Some(b) = self.peek(0) {
+            if b == b'_' || b.is_ascii_alphanumeric() {
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        // fractional part only when `.` is followed by a digit, so `1.max`
+        // and ranges like `0..n` stay separate tokens
+        if self.peek(0) == Some(b'.') && self.peek(1).map_or(false, |b| b.is_ascii_digit()) {
+            self.bump();
+            while let Some(b) = self.peek(0) {
+                if b == b'_' || b.is_ascii_alphanumeric() {
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+        }
+        // exponent sign (`1e-3`): the `e` was consumed above
+        if matches!(self.peek(0), Some(b'+') | Some(b'-'))
+            && self.src[self.pos - 1].eq_ignore_ascii_case(&b'e')
+            && self.src[start].is_ascii_digit()
+        {
+            self.bump();
+            while let Some(b) = self.peek(0) {
+                if b == b'_' || b.is_ascii_digit() {
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+        }
+        self.push(TokKind::Num, start, line, col);
+    }
+
+    fn ident(&mut self, line: u32, col: u32, start: usize) {
+        while let Some(b) = self.peek(0) {
+            if b == b'_' || b.is_ascii_alphanumeric() {
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.push(TokKind::Ident, start, line, col);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_and_puncts() {
+        let t = kinds("fn main() {}");
+        assert_eq!(t[0], (TokKind::Ident, "fn".into()));
+        assert_eq!(t[1], (TokKind::Ident, "main".into()));
+        assert!(t[2..].iter().all(|(k, _)| *k == TokKind::Punct));
+    }
+
+    #[test]
+    fn comments_capture_text_and_positions() {
+        let t = lex("let x = 1; // HashMap here\n/* Instant::now */ let y;");
+        let comments: Vec<&Tok> = t.iter().filter(|t| t.kind == TokKind::Comment).collect();
+        assert_eq!(comments.len(), 2);
+        assert!(comments[0].text.contains("HashMap"));
+        assert_eq!(comments[0].line, 1);
+        assert_eq!(comments[1].line, 2);
+        // no Ident token leaked out of either comment
+        assert!(!t.iter().any(|t| t.kind == TokKind::Ident && t.text == "HashMap"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let t = kinds("/* a /* nested */ still comment */ fn");
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[1], (TokKind::Ident, "fn".into()));
+    }
+
+    #[test]
+    fn strings_hide_identifiers() {
+        let t = kinds(r#"let s = "HashMap \" Instant::now";"#);
+        assert!(t.iter().any(|(k, x)| *k == TokKind::Str && x.contains("HashMap")));
+        assert!(!t.iter().any(|(k, x)| *k == TokKind::Ident && x == "HashMap"));
+    }
+
+    #[test]
+    fn raw_strings_with_fences() {
+        let t = kinds(r###"let s = r#"a "quoted" HashMap"# ;"###);
+        assert!(t.iter().any(|(k, x)| *k == TokKind::Str && x.contains("HashMap")));
+        assert!(!t.iter().any(|(k, x)| *k == TokKind::Ident && x == "HashMap"));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let t = kinds("let c: char = 'a'; fn f<'a>(x: &'a str) {} let n = '\\n';");
+        let chars: Vec<_> = t.iter().filter(|(k, _)| *k == TokKind::Char).collect();
+        let lifetimes: Vec<_> = t.iter().filter(|(k, _)| *k == TokKind::Lifetime).collect();
+        assert_eq!(chars.len(), 2);
+        assert_eq!(lifetimes.len(), 2);
+    }
+
+    #[test]
+    fn numbers_do_not_eat_methods_or_ranges() {
+        let t = kinds("let a = 1.max(2); for i in 0..n {} let f = 1.5e-3;");
+        assert!(t.iter().any(|(k, x)| *k == TokKind::Ident && x == "max"));
+        assert!(t.iter().any(|(k, x)| *k == TokKind::Ident && x == "n"));
+        assert!(t.iter().any(|(k, x)| *k == TokKind::Num && x == "1.5e-3"));
+    }
+
+    #[test]
+    fn byte_literals() {
+        let t = kinds(r#"let b = b"bytes"; let c = b'\n'; let r = br#x;"#);
+        assert!(t.iter().any(|(k, x)| *k == TokKind::Str && x == "bytes"));
+        assert!(t.iter().any(|(k, _)| *k == TokKind::Char));
+    }
+
+    #[test]
+    fn positions_are_one_based() {
+        let t = lex("a\n  b");
+        assert_eq!((t[0].line, t[0].col), (1, 1));
+        assert_eq!((t[1].line, t[1].col), (2, 3));
+    }
+}

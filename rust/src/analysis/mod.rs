@@ -1,0 +1,360 @@
+//! `pallas-lint`: a dependency-free static-analysis pass over the
+//! crate's own source, guarding the determinism and simulation
+//! invariants every verification claim rests on (byte-identical golden
+//! replays, bitwise incremental-Metropolis rebuilds, replay parity
+//! across sweep thread counts).
+//!
+//! The pass lexes each file ([`lexer`]), scopes it onto the crate tree
+//! by path, and runs the rule registry ([`rules::registry`]) over the
+//! code tokens.  Intentional sites are baselined with an inline pragma:
+//!
+//! ```text
+//! // pallas-lint: allow(no-wall-clock) — host-side diagnostic only
+//! ```
+//!
+//! The reason is mandatory; a reasonless or malformed pragma is itself
+//! a finding (`lint-pragma`), and a pragma that suppresses nothing is
+//! flagged as `unused-pragma` so baselines cannot rot.  Run it with
+//! `cargo run --bin lint`; see `docs/lint.md` for the rule catalogue.
+
+pub mod lexer;
+pub mod rules;
+
+use anyhow::{Context, Result};
+use lexer::{lex, Tok, TokKind};
+pub use rules::{registry, RuleInfo, Severity};
+use std::path::Path;
+
+/// One lint diagnostic, bound to a file.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Path relative to the lint root.
+    pub file: String,
+    /// 1-based line.
+    pub line: u32,
+    /// 1-based byte column.
+    pub col: u32,
+    /// Rule name (a core rule, `lint-pragma`, or `unused-pragma`).
+    pub rule: String,
+    /// Finding severity.
+    pub severity: Severity,
+    /// The offending lexeme.
+    pub lexeme: String,
+    /// Human explanation.
+    pub message: String,
+}
+
+impl Finding {
+    /// `file:line:col [rule] lexeme — message`, the human report line.
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{}:{}: {} [{}] `{}` — {}",
+            self.file,
+            self.line,
+            self.col,
+            self.severity.label(),
+            self.rule,
+            self.lexeme,
+            self.message
+        )
+    }
+}
+
+/// The result of linting a tree (or a single source in tests).
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// All findings, sorted by `(file, line, col, rule)`.
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    /// Whether any finding is [`Severity::Error`] (non-zero exit).
+    pub fn has_errors(&self) -> bool {
+        self.findings.iter().any(|f| f.severity == Severity::Error)
+    }
+
+    /// Machine-readable report (for `--format=json` / the CI artifact).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let findings: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                let mut o = BTreeMap::new();
+                o.insert("file".to_string(), Json::from(f.file.as_str()));
+                o.insert("line".to_string(), Json::from(f.line as usize));
+                o.insert("col".to_string(), Json::from(f.col as usize));
+                o.insert("rule".to_string(), Json::from(f.rule.as_str()));
+                o.insert("severity".to_string(), Json::from(f.severity.label()));
+                o.insert("lexeme".to_string(), Json::from(f.lexeme.as_str()));
+                o.insert("message".to_string(), Json::from(f.message.as_str()));
+                Json::Obj(o)
+            })
+            .collect();
+        let rules: Vec<Json> = registry()
+            .iter()
+            .map(|r| {
+                let mut o = BTreeMap::new();
+                o.insert("name".to_string(), Json::from(r.name));
+                o.insert("severity".to_string(), Json::from(r.severity.label()));
+                o.insert("description".to_string(), Json::from(r.description));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("files_scanned".to_string(), Json::from(self.files_scanned));
+        top.insert("findings".to_string(), Json::Arr(findings));
+        top.insert("rules".to_string(), Json::Arr(rules));
+        Json::Obj(top)
+    }
+}
+
+/// A parsed suppression pragma.
+struct Pragma {
+    /// Line the pragma *ends* on (suppresses this line and the next).
+    line: u32,
+    col: u32,
+    /// Allowed rule names (validated against the registry).
+    allowed: Vec<String>,
+    /// Per-rule "did it suppress anything" flags, parallel to `allowed`.
+    used: Vec<bool>,
+}
+
+/// Marker every pragma comment carries.
+const PRAGMA_TAG: &str = "pallas-lint:";
+
+/// Parse the pragmas out of one file's comment tokens.  Malformed
+/// pragmas (bad syntax, unknown rule, missing reason) become findings
+/// immediately and do not suppress anything.
+fn parse_pragmas(toks: &[Tok], findings: &mut Vec<Finding>) -> Vec<Pragma> {
+    let mut pragmas = Vec::new();
+    for t in toks {
+        if t.kind != TokKind::Comment || !t.text.contains(PRAGMA_TAG) {
+            continue;
+        }
+        // Doc comments are prose: a pragma quoted in rustdoc (like the
+        // example in this module's docs) must not become a live one.
+        let doc = ["///", "//!", "/**", "/*!"].iter().any(|p| t.text.starts_with(p));
+        if doc {
+            continue;
+        }
+        let end_line = t.line + t.text.matches('\n').count() as u32;
+        let mut bad = |msg: String| {
+            findings.push(Finding {
+                file: String::new(),
+                line: t.line,
+                col: t.col,
+                rule: "lint-pragma".to_string(),
+                severity: Severity::Error,
+                lexeme: PRAGMA_TAG.trim_end_matches(':').to_string(),
+                message: msg,
+            });
+        };
+        let text = t.text.trim_end_matches("*/");
+        let after_tag = &text[text.find(PRAGMA_TAG).unwrap() + PRAGMA_TAG.len()..];
+        let rest = after_tag.trim_start();
+        let Some(args) = rest.strip_prefix("allow(") else {
+            bad("pragma must be `pallas-lint: allow(<rule>) — <reason>`".to_string());
+            continue;
+        };
+        let Some(close) = args.find(')') else {
+            bad("unterminated allow(...) in pragma".to_string());
+            continue;
+        };
+        let mut allowed = Vec::new();
+        let mut ok = true;
+        for name in args[..close].split(',') {
+            let name = name.trim();
+            if !rules::is_known_rule(name) {
+                bad(format!("unknown rule {name:?} in pragma"));
+                ok = false;
+                break;
+            }
+            allowed.push(name.to_string());
+        }
+        if !ok {
+            continue;
+        }
+        let reason = args[close + 1..]
+            .trim_matches(|c: char| c.is_whitespace() || matches!(c, '-' | '—' | '–' | ':'));
+        if reason.is_empty() {
+            bad("pragma reason is mandatory: allow(<rule>) — <why this site is safe>"
+                .to_string());
+            continue;
+        }
+        let used = vec![false; allowed.len()];
+        pragmas.push(Pragma { line: end_line, col: t.col, allowed, used });
+    }
+    pragmas
+}
+
+/// Lint one source text as if it lived at `rel` under the lint root.
+/// Pragma suppression applies to findings on the pragma's own line or
+/// the line directly below it.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let toks = lex(src);
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut pragmas = parse_pragmas(&toks, &mut findings);
+    for raw in rules::run_rules(rel, &toks) {
+        let mut suppressed = false;
+        for p in &mut pragmas {
+            if raw.line != p.line && raw.line != p.line + 1 {
+                continue;
+            }
+            if let Some(k) = p.allowed.iter().position(|r| r == raw.rule) {
+                p.used[k] = true;
+                suppressed = true;
+            }
+        }
+        if !suppressed {
+            findings.push(Finding {
+                file: String::new(),
+                line: raw.line,
+                col: raw.col,
+                rule: raw.rule.to_string(),
+                severity: raw.severity,
+                lexeme: raw.lexeme,
+                message: raw.message,
+            });
+        }
+    }
+    for p in &pragmas {
+        for (k, used) in p.used.iter().enumerate() {
+            if !used {
+                findings.push(Finding {
+                    file: String::new(),
+                    line: p.line,
+                    col: p.col,
+                    rule: "unused-pragma".to_string(),
+                    severity: Severity::Warning,
+                    lexeme: p.allowed[k].clone(),
+                    message: format!(
+                        "pragma allows `{}` but nothing on this or the next line \
+                         triggers it; remove the stale baseline",
+                        p.allowed[k]
+                    ),
+                });
+            }
+        }
+    }
+    for f in &mut findings {
+        f.file = rel.to_string();
+    }
+    findings.sort_by(|a, b| {
+        (a.line, a.col, a.rule.as_str()).cmp(&(b.line, b.col, b.rule.as_str()))
+    });
+    findings
+}
+
+/// Collect every `.rs` file under `root`, depth-first in sorted order
+/// (so reports are deterministic across platforms).
+fn collect_rs_files(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .collect::<std::io::Result<_>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let path = e.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().map_or(false, |x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (normally `rust/src`).
+pub fn lint_tree(root: &Path) -> Result<LintReport> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    let mut report = LintReport { findings: Vec::new(), files_scanned: files.len() };
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src =
+            std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        report.findings.extend(lint_source(&rel, &src));
+    }
+    report.findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.col, a.rule.as_str())
+            .cmp(&(b.file.as_str(), b.line, b.col, b.rule.as_str()))
+    });
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pragma_with_reason_suppresses_same_and_next_line() {
+        let same = "fn f() { let t = Instant::now(); } // pallas-lint: allow(no-wall-clock) \
+                    — test fixture\n";
+        assert!(lint_source("engine/mod.rs", same).is_empty());
+        let above = "// pallas-lint: allow(no-wall-clock) — test fixture\n\
+                     fn f() { let t = Instant::now(); }\n";
+        assert!(lint_source("engine/mod.rs", above).is_empty());
+    }
+
+    #[test]
+    fn reasonless_pragma_is_a_finding_and_does_not_suppress() {
+        let src = "// pallas-lint: allow(no-wall-clock)\n\
+                   fn f() { let t = Instant::now(); }\n";
+        let f = lint_source("engine/mod.rs", src);
+        assert_eq!(f.len(), 2);
+        assert!(f.iter().any(|x| x.rule == "lint-pragma"));
+        assert!(f.iter().any(|x| x.rule == "no-wall-clock"));
+    }
+
+    #[test]
+    fn doc_comment_pragmas_are_inert() {
+        let src = "/// pallas-lint: allow(no-wall-clock) — quoted example, not live\nfn f() {}\n";
+        assert!(lint_source("engine/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unknown_rule_in_pragma_is_flagged() {
+        let src = "// pallas-lint: allow(no-such-rule) — because\nfn f() {}\n";
+        let f = lint_source("engine/mod.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "lint-pragma");
+    }
+
+    #[test]
+    fn unused_pragma_is_flagged() {
+        let src = "// pallas-lint: allow(no-wall-clock) — stale\nfn f() {}\n";
+        let f = lint_source("engine/mod.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "unused-pragma");
+        assert_eq!(f[0].severity, Severity::Warning);
+    }
+
+    #[test]
+    fn findings_render_position_rule_and_lexeme() {
+        let f = lint_source("engine/mod.rs", "fn f() { x.unwrap(); }\n");
+        assert_eq!(f.len(), 1);
+        let line = f[0].render();
+        assert!(line.contains("engine/mod.rs:1:12"), "{line}");
+        assert!(line.contains("no-panic-in-engine"));
+        assert!(line.contains("unwrap("));
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let mut report = LintReport { findings: Vec::new(), files_scanned: 3 };
+        report.findings = lint_source("engine/mod.rs", "fn f() { x.unwrap(); }\n");
+        let j = report.to_json();
+        assert_eq!(j.get("files_scanned").and_then(|v| v.as_usize()), Some(3));
+        let arr = j.get("findings").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("rule").and_then(|v| v.as_str()), Some("no-panic-in-engine"));
+        assert_eq!(j.get("rules").and_then(|v| v.as_arr()).map(|r| r.len()), Some(5));
+    }
+}

@@ -1,0 +1,450 @@
+//! The rule registry and the five determinism/invariant rules.
+//!
+//! Rules operate on the token stream from [`crate::analysis::lexer`]
+//! plus the module scope derived from the file's path in the crate
+//! tree.  Code inside `#[test]` functions and `#[cfg(test)]` items is
+//! skipped: tests may freely use wall clocks, unwraps and hash maps.
+
+use super::lexer::{Tok, TokKind};
+
+/// How severe a finding is.  Errors fail the lint (non-zero exit);
+/// warnings are reported but do not.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Reported, but does not fail the run.
+    Warning,
+    /// Fails the run.
+    Error,
+}
+
+impl Severity {
+    /// Lower-case label for reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// A rule's registry entry: name, severity, and what it guards.
+#[derive(Debug, Clone, Copy)]
+pub struct RuleInfo {
+    /// Stable rule name, as used in suppression pragmas.
+    pub name: &'static str,
+    /// Default severity of its findings.
+    pub severity: Severity,
+    /// One-line description for `lint --rules` and docs.
+    pub description: &'static str,
+}
+
+/// Modules whose event/weight paths must iterate in a defined order.
+pub const ORDERED_SCOPES: [&str; 7] =
+    ["engine", "algorithms", "membership", "consensus", "adapt", "churn", "topology"];
+
+/// Modules allowed to read the host clock (measurement harness + CLIs).
+pub const WALL_CLOCK_EXEMPT: [&str; 2] = ["sweep", "bin"];
+
+/// The five core (suppressible) rules, in catalogue order.
+pub fn registry() -> Vec<RuleInfo> {
+    vec![
+        RuleInfo {
+            name: "no-unordered-iteration",
+            severity: Severity::Error,
+            description: "HashMap/HashSet in event-ordered modules (iteration order leaks \
+                          into event order; use BTreeMap/BTreeSet)",
+        },
+        RuleInfo {
+            name: "no-wall-clock",
+            severity: Severity::Error,
+            description: "Instant::now/SystemTime::now outside sweep/bin (simulation runs \
+                          on virtual time only)",
+        },
+        RuleInfo {
+            name: "no-ambient-rng",
+            severity: Severity::Error,
+            description: "thread_rng/rand::random/from_entropy anywhere (all randomness \
+                          must come from seeded per-worker streams)",
+        },
+        RuleInfo {
+            name: "no-panic-in-engine",
+            severity: Severity::Error,
+            description: "unwrap()/expect(/panic! in the engine (sweep panic containment \
+                          is a backstop, not a code path)",
+        },
+        RuleInfo {
+            name: "strict-config-parse",
+            severity: Severity::Error,
+            description: "from_json impls must reject unknown keys (the strict-parsed \
+                          section convention)",
+        },
+    ]
+}
+
+/// Whether `name` is one of the suppressible core rules.
+pub fn is_known_rule(name: &str) -> bool {
+    registry().iter().any(|r| r.name == name)
+}
+
+/// A raw finding before pragma suppression (file attached by the caller).
+#[derive(Debug, Clone)]
+pub struct RawFinding {
+    /// Rule that fired.
+    pub rule: &'static str,
+    /// Finding severity.
+    pub severity: Severity,
+    /// 1-based line.
+    pub line: u32,
+    /// 1-based byte column.
+    pub col: u32,
+    /// The offending lexeme (e.g. `HashMap`, `Instant::now`).
+    pub lexeme: String,
+    /// Human explanation.
+    pub message: String,
+}
+
+/// Map a path relative to the source root onto crate-module components:
+/// `engine/mod.rs` → `["engine"]`, `algorithms/prague.rs` →
+/// `["algorithms", "prague"]`, `main.rs` → `["bin"]`, `lib.rs` → `[]`.
+pub fn module_path(rel: &str) -> Vec<String> {
+    let rel = rel.replace('\\', "/");
+    let mut parts: Vec<String> = rel.split('/').map(|s| s.to_string()).collect();
+    let last = parts.pop().unwrap_or_default();
+    match last.as_str() {
+        "lib.rs" => {}
+        "mod.rs" => {}
+        "main.rs" => parts.push("bin".to_string()),
+        other => parts.push(other.trim_end_matches(".rs").to_string()),
+    }
+    parts
+}
+
+/// Mark every token that sits inside a `#[test]` function or a
+/// `#[cfg(test)]`-gated item (incl. `mod tests { … }` bodies).
+pub fn test_spans(toks: &[Tok]) -> Vec<bool> {
+    let mut in_test = vec![false; toks.len()];
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].is_punct('#') && toks.get(i + 1).map_or(false, |t| t.is_punct('[')) {
+            if let Some(close) = matching_bracket(toks, i + 1) {
+                let body = &toks[i + 2..close];
+                let is_test = body.iter().any(|t| t.is_ident("test"))
+                    && !body.iter().any(|t| t.is_ident("not"));
+                if is_test {
+                    let end = item_end(toks, close + 1);
+                    for flag in in_test.iter_mut().take(end + 1).skip(i) {
+                        *flag = true;
+                    }
+                    i = end + 1;
+                    continue;
+                }
+                i = close + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    in_test
+}
+
+/// Index of the `]` matching the `[` at `open`, tolerating nesting.
+fn matching_bracket(toks: &[Tok], open: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct('[') {
+            depth += 1;
+        } else if t.is_punct(']') {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+    }
+    None
+}
+
+/// Index of the last token of the item starting at `start` (after an
+/// attribute): skips further attributes, then ends at the `}` matching
+/// the first `{`, or at a `;` if one comes first (no body).
+fn item_end(toks: &[Tok], mut start: usize) -> usize {
+    // skip stacked attributes (`#[test] #[ignore] fn …`)
+    while start < toks.len()
+        && toks[start].is_punct('#')
+        && toks.get(start + 1).map_or(false, |t| t.is_punct('['))
+    {
+        match matching_bracket(toks, start + 1) {
+            Some(close) => start = close + 1,
+            None => return toks.len().saturating_sub(1),
+        }
+    }
+    let mut j = start;
+    while j < toks.len() {
+        if toks[j].is_punct(';') {
+            return j;
+        }
+        if toks[j].is_punct('{') {
+            let mut depth = 0usize;
+            while j < toks.len() {
+                if toks[j].is_punct('{') {
+                    depth += 1;
+                } else if toks[j].is_punct('}') {
+                    depth -= 1;
+                    if depth == 0 {
+                        return j;
+                    }
+                }
+                j += 1;
+            }
+            return toks.len().saturating_sub(1);
+        }
+        j += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Run every rule over one file's tokens.  `rel` is the path relative
+/// to the source root (used for module scoping).
+pub fn run_rules(rel: &str, toks: &[Tok]) -> Vec<RawFinding> {
+    let scope = module_path(rel);
+    let top = scope.first().map(String::as_str).unwrap_or("").to_string();
+    let in_test = test_spans(toks);
+    // Pre-filter to code tokens (comments out, test regions out) while
+    // remembering original positions for sequence checks.
+    let code: Vec<&Tok> = toks
+        .iter()
+        .zip(&in_test)
+        .filter(|(t, &skip)| !skip && t.kind != TokKind::Comment)
+        .map(|(t, _)| t)
+        .collect();
+
+    let mut out = Vec::new();
+    no_unordered_iteration(&top, &code, &mut out);
+    no_wall_clock(&top, &code, &mut out);
+    no_ambient_rng(&code, &mut out);
+    no_panic_in_engine(&top, &code, &mut out);
+    strict_config_parse(&code, &mut out);
+    out
+}
+
+fn push(out: &mut Vec<RawFinding>, rule: &'static str, t: &Tok, lexeme: &str, msg: String) {
+    let severity = registry()
+        .iter()
+        .find(|r| r.name == rule)
+        .map(|r| r.severity)
+        .unwrap_or(Severity::Error);
+    out.push(RawFinding {
+        rule,
+        severity,
+        line: t.line,
+        col: t.col,
+        lexeme: lexeme.to_string(),
+        message: msg,
+    });
+}
+
+fn no_unordered_iteration(top: &str, code: &[&Tok], out: &mut Vec<RawFinding>) {
+    if !ORDERED_SCOPES.contains(&top) {
+        return;
+    }
+    for t in code {
+        if t.is_ident("HashMap") || t.is_ident("HashSet") {
+            push(
+                out,
+                "no-unordered-iteration",
+                t,
+                &t.text,
+                format!(
+                    "{} in `{top}`: iteration order is randomized per process and leaks \
+                     into event order; use BTreeMap/BTreeSet or a sorted Vec",
+                    t.text
+                ),
+            );
+        }
+    }
+}
+
+fn no_wall_clock(top: &str, code: &[&Tok], out: &mut Vec<RawFinding>) {
+    if WALL_CLOCK_EXEMPT.contains(&top) {
+        return;
+    }
+    for w in code.windows(4) {
+        let clock = w[0].kind == TokKind::Ident
+            && (w[0].text == "Instant" || w[0].text == "SystemTime");
+        if clock && w[1].is_punct(':') && w[2].is_punct(':') && w[3].is_ident("now") {
+            let lexeme = format!("{}::now", w[0].text);
+            push(
+                out,
+                "no-wall-clock",
+                w[0],
+                &lexeme,
+                format!("{lexeme} outside sweep/bin: the simulation runs on virtual time"),
+            );
+        }
+    }
+}
+
+fn no_ambient_rng(code: &[&Tok], out: &mut Vec<RawFinding>) {
+    for t in code {
+        if t.is_ident("thread_rng") || t.is_ident("from_entropy") {
+            push(
+                out,
+                "no-ambient-rng",
+                t,
+                &t.text,
+                format!("{}: all randomness must come from seeded per-worker streams", t.text),
+            );
+        }
+    }
+    for w in code.windows(4) {
+        if w[0].is_ident("rand")
+            && w[1].is_punct(':')
+            && w[2].is_punct(':')
+            && w[3].is_ident("random")
+        {
+            push(
+                out,
+                "no-ambient-rng",
+                w[0],
+                "rand::random",
+                "rand::random: all randomness must come from seeded per-worker streams"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+fn no_panic_in_engine(top: &str, code: &[&Tok], out: &mut Vec<RawFinding>) {
+    if top != "engine" {
+        return;
+    }
+    for w in code.windows(2) {
+        let (t, next) = (w[0], w[1]);
+        if (t.is_ident("unwrap") || t.is_ident("expect")) && next.is_punct('(') {
+            push(
+                out,
+                "no-panic-in-engine",
+                t,
+                &format!("{}(", t.text),
+                format!(
+                    "{}() in the engine: dispatch paths must degrade deterministically, \
+                     not panic into the sweep's containment",
+                    t.text
+                ),
+            );
+        } else if t.is_ident("panic") && next.is_punct('!') {
+            push(
+                out,
+                "no-panic-in-engine",
+                t,
+                "panic!",
+                "panic! in the engine: dispatch paths must degrade deterministically, \
+                 not panic into the sweep's containment"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+/// A `from_json` body satisfies the strict-parse convention when it
+/// either bails with an "unknown …" message itself or delegates to
+/// `apply_kv` (which does).
+fn strict_config_parse(code: &[&Tok], out: &mut Vec<RawFinding>) {
+    let mut i = 0;
+    while i + 1 < code.len() {
+        if code[i].is_ident("fn") && code[i + 1].is_ident("from_json") {
+            let name = code[i + 1];
+            // find the body: first `{` after the signature
+            let mut j = i + 2;
+            while j < code.len() && !code[j].is_punct('{') {
+                j += 1;
+            }
+            let mut depth = 0usize;
+            let mut end = j;
+            while end < code.len() {
+                if code[end].is_punct('{') {
+                    depth += 1;
+                } else if code[end].is_punct('}') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                end += 1;
+            }
+            let body = &code[j..end.min(code.len())];
+            let strict = body.iter().any(|t| {
+                (t.kind == TokKind::Str && t.text.to_ascii_lowercase().contains("unknown"))
+                    || t.is_ident("apply_kv")
+            });
+            if !strict {
+                push(
+                    out,
+                    "strict-config-parse",
+                    name,
+                    "from_json",
+                    "from_json without unknown-key rejection: strict-parsed sections must \
+                     bail on keys they do not understand"
+                        .to_string(),
+                );
+            }
+            i = end;
+        }
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    #[test]
+    fn module_paths() {
+        assert_eq!(module_path("engine/mod.rs"), vec!["engine"]);
+        assert_eq!(module_path("algorithms/prague.rs"), vec!["algorithms", "prague"]);
+        assert_eq!(module_path("config.rs"), vec!["config"]);
+        assert_eq!(module_path("bin/lint.rs"), vec!["bin", "lint"]);
+        assert_eq!(module_path("main.rs"), vec!["bin"]);
+        assert!(module_path("lib.rs").is_empty());
+    }
+
+    #[test]
+    fn test_regions_are_skipped() {
+        let src = "fn live() { m.unwrap(); }\n\
+                   #[cfg(test)]\nmod tests {\n fn t() { x.unwrap(); }\n}\n";
+        let f = run_rules("engine/mod.rs", &lex(src));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 1);
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_region() {
+        let src = "#[cfg(not(test))]\nfn live() { m.unwrap(); }\n";
+        let f = run_rules("engine/mod.rs", &lex(src));
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn scoping_gates_unordered_and_wall_clock() {
+        let src = "use std::collections::HashMap;\nfn f() { let t = Instant::now(); }\n";
+        assert_eq!(run_rules("engine/mod.rs", &lex(src)).len(), 2);
+        assert_eq!(run_rules("data/mod.rs", &lex(src)).len(), 1); // clock only
+        assert_eq!(run_rules("sweep/cli.rs", &lex(src)).len(), 0); // neither
+    }
+
+    #[test]
+    fn panic_rule_ignores_unwrap_or_else() {
+        let src = "fn f() { a.unwrap_or_else(|| 0); b.unwrap_or(1); c.unwrap_or_default(); }";
+        assert!(run_rules("engine/mod.rs", &lex(src)).is_empty());
+    }
+
+    #[test]
+    fn strict_parse_accepts_bail_and_apply_kv() {
+        let ok1 = r#"fn from_json(v: &Json) { bail!("unknown key {k:?}"); }"#;
+        let ok2 = "fn from_json(v: &Json) { cfg.apply_kv(key, v)?; }";
+        let bad = "fn from_json(v: &Json) { let x = v.get(\"kind\"); }";
+        assert!(run_rules("config.rs", &lex(ok1)).is_empty());
+        assert!(run_rules("config.rs", &lex(ok2)).is_empty());
+        assert_eq!(run_rules("config.rs", &lex(bad)).len(), 1);
+    }
+}

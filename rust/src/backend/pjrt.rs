@@ -161,6 +161,7 @@ impl Backend for PjrtBackend {
                 (BatchOwned::Tokens(x), y)
             }
         };
+        // pallas-lint: allow(no-wall-clock) — host-side kernel-time diagnostic; never enters virtual time
         let t0 = std::time::Instant::now();
         let out = self
             .runtime
@@ -179,6 +180,7 @@ impl Backend for PjrtBackend {
 
     fn eval(&mut self, params: &[f32]) -> EvalOutput {
         let (batch, y) = self.eval_batch();
+        // pallas-lint: allow(no-wall-clock) — host-side kernel-time diagnostic; never enters virtual time
         let t0 = std::time::Instant::now();
         let (loss, correct) = self
             .runtime
@@ -192,6 +194,7 @@ impl Backend for PjrtBackend {
         if rows.len() > self.runtime.gossip_fanout {
             return None;
         }
+        // pallas-lint: allow(no-wall-clock) — host-side kernel-time diagnostic; never enters virtual time
         let t0 = std::time::Instant::now();
         let out = self.runtime.gossip_average(rows, weights).ok();
         self.execute_seconds += t0.elapsed().as_secs_f64();

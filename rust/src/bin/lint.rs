@@ -1,0 +1,110 @@
+//! `pallas-lint` CLI: run the repo's static-analysis pass over the
+//! crate source and report determinism/invariant findings.
+//!
+//! ```text
+//! cargo run --bin lint                        # human report, exit 1 on errors
+//! cargo run --bin lint -- --format=json       # machine-readable report on stdout
+//! cargo run --bin lint -- --out=results/lint_report.json   # also write JSON
+//! cargo run --bin lint -- --fix-list          # pragma stubs for each finding
+//! cargo run --bin lint -- --rules             # rule catalogue
+//! cargo run --bin lint -- --root=rust/src     # lint a different tree
+//! ```
+
+use dsgd_aau::analysis::{lint_tree, registry, rules::is_known_rule, Severity};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() -> &'static str {
+    "usage: lint [--root=PATH] [--format=text|json] [--out=PATH] [--fix-list] [--rules]"
+}
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let mut format_json = false;
+    let mut out_path: Option<PathBuf> = None;
+    let mut fix_list = false;
+    for arg in std::env::args().skip(1) {
+        if let Some(v) = arg.strip_prefix("--root=") {
+            root = PathBuf::from(v);
+        } else if let Some(v) = arg.strip_prefix("--format=") {
+            match v {
+                "json" => format_json = true,
+                "text" => format_json = false,
+                other => {
+                    eprintln!("unknown format {other:?} (want text or json)");
+                    return ExitCode::from(2);
+                }
+            }
+        } else if let Some(v) = arg.strip_prefix("--out=") {
+            out_path = Some(PathBuf::from(v));
+        } else if arg == "--fix-list" {
+            fix_list = true;
+        } else if arg == "--rules" {
+            for r in registry() {
+                println!("{:<24} {:<8} {}", r.name, r.severity.label(), r.description);
+            }
+            return ExitCode::SUCCESS;
+        } else {
+            eprintln!("unknown argument {arg:?}\n{}", usage());
+            return ExitCode::from(2);
+        }
+    }
+
+    let report = match lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("lint: {e:#}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if let Some(path) = &out_path {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                if let Err(e) = std::fs::create_dir_all(dir) {
+                    eprintln!("lint: creating {}: {e}", dir.display());
+                    return ExitCode::from(2);
+                }
+            }
+        }
+        if let Err(e) = std::fs::write(path, report.to_json().to_string_compact()) {
+            eprintln!("lint: writing {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+
+    if fix_list {
+        // Pragma stubs to baseline each suppressible finding; the TODO
+        // keeps a pasted-but-unexplained stub failing the lint-pragma
+        // reason check until a human writes the why.
+        for f in &report.findings {
+            if is_known_rule(&f.rule) {
+                println!(
+                    "{}:{}: // pallas-lint: allow({}) — TODO: why this site is safe",
+                    f.file, f.line, f.rule
+                );
+            }
+        }
+        return ExitCode::SUCCESS;
+    }
+
+    if format_json {
+        println!("{}", report.to_json().to_string_compact());
+    } else {
+        for f in &report.findings {
+            println!("{}", f.render());
+        }
+        let errors = report.findings.iter().filter(|f| f.severity == Severity::Error).count();
+        let warnings = report.findings.len() - errors;
+        println!(
+            "lint: {} files scanned, {} findings ({errors} errors, {warnings} warnings)",
+            report.files_scanned,
+            report.findings.len()
+        );
+    }
+    if report.has_errors() {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

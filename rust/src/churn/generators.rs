@@ -26,13 +26,14 @@ use crate::util::Rng64;
 use crate::WorkerId;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 use std::path::Path;
 
 /// Which churn scenario to run (config-selectable).
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Default)]
 pub enum ChurnKind {
     /// Static graph (the paper's setting).
+    #[default]
     None,
     /// Random link failures at `rate` events/second; each failed link
     /// restores after roughly `mean_downtime` seconds.
@@ -66,12 +67,6 @@ pub enum ChurnKind {
         /// Path to the schedule file.
         path: String,
     },
-}
-
-impl Default for ChurnKind {
-    fn default() -> Self {
-        ChurnKind::None
-    }
 }
 
 /// Churn section of the experiment config.
@@ -380,10 +375,10 @@ impl ChurnModel {
                 // failure ticks stay on the 1/rate grid; this step may be
                 // a pure restore event between ticks
                 if now + 1e-9 >= *next_fail {
-                    // fail one random non-bridge link (sorted for
-                    // determinism: the edge set iterates in hash order)
+                    // fail one random non-bridge link (`Graph::edges`
+                    // iterates the BTreeSet in sorted order, so the
+                    // indexed draw below is deterministic)
                     let mut edges: Vec<(usize, usize)> = g.edges().collect();
-                    edges.sort_unstable();
                     for _ in 0..8 {
                         if edges.is_empty() {
                             break;
@@ -435,11 +430,9 @@ impl ChurnModel {
                     let n = g.num_vertices();
                     let mut ids: Vec<usize> = (0..n).collect();
                     rng.shuffle(&mut ids);
-                    let side_a: HashSet<usize> = ids[..n / 2].iter().copied().collect();
-                    let mut edges: Vec<(usize, usize)> = g.edges().collect();
-                    edges.sort_unstable();
+                    let side_a: BTreeSet<usize> = ids[..n / 2].iter().copied().collect();
                     let mut muts = Vec::new();
-                    for (i, j) in edges {
+                    for (i, j) in g.edges() {
                         if side_a.contains(&i) != side_a.contains(&j) {
                             muts.push(TopologyMutation::RemoveEdge(i, j));
                             cut.push((i, j));

@@ -172,10 +172,25 @@ impl TopologyTimeline {
         Json::Obj(m)
     }
 
-    /// Inverse of [`Self::to_json`]; entries are sorted by time.
+    /// Inverse of [`Self::to_json`]; entries are sorted by time.  Strict
+    /// parse: unknown keys in the document or an update entry are errors
+    /// (a typo like `"event"` must not silently drop a schedule).
     pub fn from_json(j: &Json) -> Result<Self> {
+        if let Some(obj) = j.as_obj() {
+            for key in obj.keys() {
+                anyhow::ensure!(key == "updates", "unknown timeline key {key:?} (want updates)");
+            }
+        }
         let mut entries = Vec::new();
         for e in j.req("updates")?.as_arr().context("updates must be an array")? {
+            if let Some(obj) = e.as_obj() {
+                for key in obj.keys() {
+                    anyhow::ensure!(
+                        key == "time" || key == "events",
+                        "unknown update key {key:?} (want time, events)"
+                    );
+                }
+            }
             let time = e.req("time")?.as_f64().context("time must be a number")?;
             anyhow::ensure!(time >= 0.0 && time.is_finite(), "bad update time {time}");
             let mutations = e

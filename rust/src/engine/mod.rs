@@ -645,6 +645,7 @@ impl Engine {
     /// the fallible form used by the coordinator).
     pub fn from_config(cfg: &ExperimentConfig, backend: Box<dyn Backend>) -> Self {
         Self::try_from_config(cfg, backend)
+            // pallas-lint: allow(no-panic-in-engine) — documented panicking constructor, not dispatch
             .expect("engine config invalid (churn schedule missing or bad parameters)")
     }
 
@@ -779,6 +780,7 @@ impl Engine {
         now: f64,
     ) -> Vec<TopologyMutation> {
         // temporarily detach the model: do_leave/do_join re-borrow self
+        // pallas-lint: allow(no-panic-in-engine) — caller dispatches here only when membership is Some
         let mut model = self.membership.take().expect("membership routing without model");
         let n = self.core.num_workers();
         let mut rest = Vec::new();

@@ -36,7 +36,7 @@
 //!
 //! ## Guides
 //!
-//! Three long-form guides live in `docs/` at the repository root:
+//! Four long-form guides live in `docs/` at the repository root:
 //!
 //! * `docs/architecture.md` — layering (engine → sim/churn/adapt/trace →
 //!   sweep) and an event-loop walkthrough;
@@ -44,7 +44,10 @@
 //!   validated JSON example per strict-parsed section;
 //! * `docs/scenarios.md` — the scenario cookbook: writing, generating
 //!   and ingesting timelines, the three trace-file formats, and how to
-//!   add a sweep suite.
+//!   add a sweep suite;
+//! * `docs/lint.md` — the [`analysis`] module's `pallas-lint` pass:
+//!   the determinism rule catalogue, the suppression pragma, and how to
+//!   add a rule (`cargo run --bin lint`).
 //!
 //! ## Quick start
 //!
@@ -87,6 +90,8 @@
 #[deny(missing_docs)]
 pub mod adapt;
 pub mod algorithms;
+#[deny(missing_docs)]
+pub mod analysis;
 pub mod backend;
 pub mod churn;
 pub mod config;

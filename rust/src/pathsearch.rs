@@ -17,15 +17,15 @@
 
 use crate::topology::{norm_edge, Graph};
 use crate::WorkerId;
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 /// Shared (consensus) Pathsearch state `P`, `V` plus epoch accounting.
 #[derive(Debug, Clone, Default)]
 pub struct PathSearch {
     /// Visited edges `P` (normalized).
-    edges: HashSet<(usize, usize)>,
+    edges: BTreeSet<(usize, usize)>,
     /// Visited vertices `V`.
-    vertices: HashSet<WorkerId>,
+    vertices: BTreeSet<WorkerId>,
     /// Completed epochs (strongly-connected graphs established).
     pub epochs_completed: u64,
     /// Edges added over the lifetime (across epochs).
@@ -51,7 +51,7 @@ impl PathSearch {
     /// Whether `(i, j)` would be a *new* edge per Alg. 3 line 6:
     /// `(i,j) ∈ E ∧ (i,j) ∉ P ∧ (i ∉ V ∨ j ∉ V)`.
     pub fn is_novel_edge(&self, g: &Graph, i: WorkerId, j: WorkerId) -> bool {
-        // edge-existence first: on sparse graphs one hash probe rejects the
+        // edge-existence first: on sparse graphs one set probe rejects the
         // vast majority of pairs (measured faster than vertex-first;
         // EXPERIMENTS.md §Perf)
         g.has_edge(i, j)
@@ -135,10 +135,10 @@ impl PathSearch {
         if !members.iter().all(|m| self.vertices.contains(m)) {
             return false;
         }
-        let vset: HashSet<usize> = members.iter().copied().collect();
+        let vset: BTreeSet<usize> = members.iter().copied().collect();
         // Edges with an endpoint outside the component cannot help it
         // span (and may exist transiently while observed views lag).
-        let edges: HashSet<(usize, usize)> = self
+        let edges: BTreeSet<(usize, usize)> = self
             .edges
             .iter()
             .copied()
@@ -182,7 +182,7 @@ impl PathSearch {
     /// and every visited edge touching them, leaving other components'
     /// accumulation untouched.  The caller counts component epochs.
     pub fn reset_component(&mut self, members: &[WorkerId]) {
-        let vset: HashSet<usize> = members.iter().copied().collect();
+        let vset: BTreeSet<usize> = members.iter().copied().collect();
         self.edges.retain(|&(i, j)| !vset.contains(&i) && !vset.contains(&j));
         for m in members {
             self.vertices.remove(m);

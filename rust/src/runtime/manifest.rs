@@ -70,6 +70,7 @@ fn usize_of(j: &Json, key: &str) -> Result<usize> {
 }
 
 impl VariantMeta {
+    // pallas-lint: allow(strict-config-parse) — artifact manifest from the Python AOT pipeline; newer pipelines may add forward-compatible keys
     fn from_json(j: &Json) -> Result<Self> {
         let files = j
             .req("files")?

@@ -40,10 +40,11 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 /// Which straggler process injects slowness (config-selectable).
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Default)]
 pub enum StragglerKind {
     /// I.i.d. per-sample coin with the config's `probability` (the
     /// paper's testbed; the default).
+    #[default]
     Bernoulli,
     /// Two-state Markov process: exponential fast periods of mean
     /// `mean_fast` seconds alternating with slow periods of mean
@@ -70,12 +71,6 @@ pub enum StragglerKind {
         /// Path to the trace file.
         path: String,
     },
-}
-
-impl Default for StragglerKind {
-    fn default() -> Self {
-        StragglerKind::Bernoulli
-    }
 }
 
 /// Straggler section of the experiment config.

@@ -36,8 +36,17 @@ impl StragglerEvent {
         Json::Obj(m)
     }
 
-    /// Inverse of [`Self::to_json`].
+    /// Inverse of [`Self::to_json`].  Strict parse: keys other than
+    /// `worker`/`slow` are errors.
     pub fn from_json(j: &Json) -> Result<Self> {
+        if let Some(obj) = j.as_obj() {
+            for key in obj.keys() {
+                anyhow::ensure!(
+                    key == "worker" || key == "slow",
+                    "unknown straggler event key {key:?} (want worker, slow)"
+                );
+            }
+        }
         Ok(StragglerEvent {
             worker: j.req("worker")?.as_usize().context("worker must be a worker id")?,
             slow: j.req("slow")?.as_bool().context("slow must be a boolean")?,
@@ -126,10 +135,24 @@ impl StragglerTimeline {
     }
 
     /// Inverse of [`Self::to_json`]; entries are stably sorted by time
-    /// (same-time batches keep their file order).
+    /// (same-time batches keep their file order).  Strict parse: unknown
+    /// keys in the document or an update entry are errors.
     pub fn from_json(j: &Json) -> Result<Self> {
+        if let Some(obj) = j.as_obj() {
+            for key in obj.keys() {
+                anyhow::ensure!(key == "updates", "unknown trace key {key:?} (want updates)");
+            }
+        }
         let mut entries = Vec::new();
         for e in j.req("updates")?.as_arr().context("updates must be an array")? {
+            if let Some(obj) = e.as_obj() {
+                for key in obj.keys() {
+                    anyhow::ensure!(
+                        key == "time" || key == "events",
+                        "unknown update key {key:?} (want time, events)"
+                    );
+                }
+            }
             let time = e.req("time")?.as_f64().context("time must be a number")?;
             anyhow::ensure!(time >= 0.0 && time.is_finite(), "bad update time {time}");
             let events = e

@@ -1,7 +1,7 @@
 //! Bench CLI: shared flag parsing (the old `harness::BenchArgs`, grown
 //! `--resume`/`--threads`), the suite registry mapping every paper
-//! table/figure to its [`SweepSpec`], and the entry points behind the
-//! `bench` multiplexer binary and the legacy `bench_*` shims.
+//! table/figure to its [`SweepSpec`], and the entry point behind the
+//! `bench` multiplexer binary.
 
 use crate::config::ExperimentConfig;
 use crate::sweep::exec::{run_suite, SuiteRun};
@@ -273,19 +273,6 @@ pub fn bench_main() -> Result<()> {
             run_named(name, &args).map(|_| ())
         }
     }
-}
-
-/// Entry point of the legacy `bench_<suite>` shim binaries (kept for one
-/// release; they parse the same flags and defer to the registry).
-/// Artifacts use the canonical names now: `<suite>*.csv` and
-/// `BENCH_<suite>.json` replace the per-binary file names.
-pub fn shim_main(suite: &str) -> Result<()> {
-    eprintln!(
-        "[bench_{suite}] deprecated shim — use `bench {suite}` (same flags; artifacts now \
-         {suite}*.csv + BENCH_{suite}.json)"
-    );
-    let args = BenchArgs::parse()?;
-    run_named(suite, &args).map(|_| ())
 }
 
 #[cfg(test)]

@@ -43,8 +43,7 @@
 //!
 //! `bench all --quick` runs every suite's smoke grid (the CI perf
 //! trajectory); `--resume` re-runs only the missing cells and produces
-//! byte-identical artifacts to a cold run.  The legacy `bench_*`
-//! binaries remain as thin shims for one release.
+//! byte-identical artifacts to a cold run.
 
 pub mod bench_engine;
 pub mod cli;

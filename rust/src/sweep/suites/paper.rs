@@ -215,7 +215,7 @@ pub fn ablation(args: &BenchArgs) -> Result<SweepSpec> {
         ablation_params(&[0.05, 0.1, 0.2, 0.4], &[5.0, 10.0, 20.0, 40.0], &[32, 64, 128, 256]),
     ))
     .axis(alg_axis(&AlgorithmKind::paper_table()))
-    // `fixedk` is the legacy routing flag of the bench_ablation shim
+    // `fixedk` is the legacy routing flag of the retired bench_ablation binary
     .consumes(&["iid", "budget", "fixedk"])
     .table(TableSpec::pivot("", "param", "algorithm", metric, Fmt::Pct, 1.0)))
 }
@@ -264,7 +264,7 @@ pub fn fixedk(args: &BenchArgs) -> Result<SweepSpec> {
         fixedk_values(&[2, 4, 8, 16]),
         fixedk_values(&[2, 4, 8, 16, 32]),
     ))
-    // `fixedk` is the legacy routing flag of the bench_ablation shim
+    // `fixedk` is the legacy routing flag of the retired bench_ablation binary
     .consumes(&["fixedk"])
     .table(TableSpec::long(
         "",

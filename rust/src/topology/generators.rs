@@ -55,13 +55,27 @@ impl TopologyKind {
     }
 
     /// Parse the config form: `{"kind": "random", "p": 0.1, "seed": 17}` or
-    /// a bare string for parameterless kinds.
+    /// a bare string for parameterless kinds.  Strict parse: object keys
+    /// the chosen kind does not take are errors (a misspelled or misplaced
+    /// parameter must not be silently ignored).
     pub fn from_json(j: &Json) -> Result<Self> {
         let kind = j
             .as_str()
             .or_else(|| j.get("kind").and_then(Json::as_str))
             .unwrap_or_default()
             .to_string();
+        if let Some(obj) = j.as_obj() {
+            let allowed: &[&str] = match kind.as_str() {
+                "random" => &["kind", "p", "seed"],
+                "bipartite" => &["kind", "seed"],
+                _ => &["kind"],
+            };
+            for key in obj.keys() {
+                if !allowed.contains(&key.as_str()) {
+                    bail!("unknown topology key {key:?} for kind {kind:?} (want {allowed:?})");
+                }
+            }
+        }
         Ok(match kind.as_str() {
             "ring" => TopologyKind::Ring,
             "complete" => TopologyKind::Complete,

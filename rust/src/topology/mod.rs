@@ -8,14 +8,14 @@ pub mod generators;
 
 pub use generators::TopologyKind;
 
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 /// Undirected communication graph with adjacency lists and an edge set.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Graph {
     n: usize,
     adj: Vec<Vec<usize>>,
-    edges: HashSet<(usize, usize)>, // normalized (min, max)
+    edges: BTreeSet<(usize, usize)>, // normalized (min, max)
 }
 
 /// Normalize an undirected edge to `(min, max)` form.
@@ -31,7 +31,7 @@ pub fn norm_edge(i: usize, j: usize) -> (usize, usize) {
 impl Graph {
     /// Empty graph over `n` vertices.
     pub fn empty(n: usize) -> Self {
-        Graph { n, adj: vec![Vec::new(); n], edges: HashSet::new() }
+        Graph { n, adj: vec![Vec::new(); n], edges: BTreeSet::new() }
     }
 
     /// Build from an explicit edge list (self-loops and duplicates ignored).
@@ -136,7 +136,8 @@ impl Graph {
         i != j && self.edges.contains(&norm_edge(i, j))
     }
 
-    /// Iterator over normalized edges.
+    /// Iterator over normalized edges, in ascending `(min, max)` order
+    /// (the edge set is a `BTreeSet`, so iteration is deterministic).
     pub fn edges(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
         self.edges.iter().copied()
     }
@@ -167,8 +168,8 @@ impl Graph {
     /// `edge_set` edges.  Used by Pathsearch to decide epoch completion.
     pub fn subgraph_connected(
         n: usize,
-        vertices: &HashSet<usize>,
-        edge_set: &HashSet<(usize, usize)>,
+        vertices: &BTreeSet<usize>,
+        edge_set: &BTreeSet<(usize, usize)>,
     ) -> bool {
         if vertices.is_empty() {
             return false;
@@ -179,7 +180,7 @@ impl Graph {
             adj[j].push(i);
         }
         let start = *vertices.iter().next().unwrap();
-        let mut seen = HashSet::new();
+        let mut seen = BTreeSet::new();
         seen.insert(start);
         let mut stack = vec![start];
         while let Some(v) = stack.pop() {
@@ -277,10 +278,10 @@ mod tests {
 
     #[test]
     fn subgraph_connectivity() {
-        let verts: HashSet<usize> = [0, 1, 2].into_iter().collect();
-        let edges: HashSet<(usize, usize)> = [(0, 1), (1, 2)].into_iter().collect();
+        let verts: BTreeSet<usize> = [0, 1, 2].into_iter().collect();
+        let edges: BTreeSet<(usize, usize)> = [(0, 1), (1, 2)].into_iter().collect();
         assert!(Graph::subgraph_connected(5, &verts, &edges));
-        let edges2: HashSet<(usize, usize)> = [(0, 1)].into_iter().collect();
+        let edges2: BTreeSet<(usize, usize)> = [(0, 1)].into_iter().collect();
         assert!(!Graph::subgraph_connected(5, &verts, &edges2));
     }
 

@@ -1,0 +1,7 @@
+//! Fixture: panicking calls in engine dispatch paths must be flagged.
+pub fn dispatch(stash: Option<f64>, params: Result<f64, String>) -> f64 {
+    if stash.is_none() {
+        panic!("empty stash");
+    }
+    stash.unwrap() + params.expect("params missing")
+}

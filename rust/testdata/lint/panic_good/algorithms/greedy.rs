@@ -1,0 +1,4 @@
+//! Fixture: the panic rule is scoped to the engine module only.
+pub fn pick(xs: &[f64]) -> f64 {
+    *xs.first().unwrap()
+}

@@ -1,0 +1,7 @@
+//! Fixture: non-panicking option/result handling in the engine is fine.
+pub fn dispatch(stash: Option<f64>) -> f64 {
+    let a = stash.unwrap_or(0.0);
+    let b = stash.unwrap_or_else(|| 1.0);
+    let c = stash.unwrap_or_default();
+    a + b + c
+}

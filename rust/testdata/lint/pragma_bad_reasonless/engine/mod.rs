@@ -1,0 +1,5 @@
+//! Fixture: a reasonless pragma is itself a finding and suppresses nothing.
+pub fn from_config(cfg: Option<f64>) -> f64 {
+    // pallas-lint: allow(no-panic-in-engine)
+    cfg.expect("config invalid")
+}

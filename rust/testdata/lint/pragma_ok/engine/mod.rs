@@ -1,0 +1,5 @@
+//! Fixture: a reasoned pragma suppresses the finding on the next line.
+pub fn from_config(cfg: Option<f64>) -> f64 {
+    // pallas-lint: allow(no-panic-in-engine) — documented panicking constructor, not dispatch
+    cfg.expect("config invalid")
+}

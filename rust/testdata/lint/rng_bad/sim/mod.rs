@@ -1,0 +1,7 @@
+//! Fixture: ambient RNG must be flagged anywhere in the tree.
+pub fn jitter() -> f64 {
+    let mut rng = thread_rng();
+    let x: f64 = rand::random();
+    let _seeded = StdRng::from_entropy();
+    x + rng.gen_range(0.0..1.0)
+}

@@ -1,0 +1,10 @@
+//! Fixture: a from_json without unknown-key rejection must be flagged.
+pub struct Section {
+    pub rate: f64,
+}
+
+impl Section {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(Section { rate: j.get("rate").and_then(Json::as_f64).unwrap_or(0.0) })
+    }
+}

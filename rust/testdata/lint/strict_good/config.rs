@@ -1,0 +1,29 @@
+//! Fixture: unknown-key rejection (directly or via apply_kv) passes.
+pub struct Section {
+    pub rate: f64,
+}
+
+impl Section {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut out = Section { rate: 0.0 };
+        for (key, v) in j.as_obj().unwrap_or(&Default::default()) {
+            match key.as_str() {
+                "rate" => out.rate = v.as_f64().unwrap_or(0.0),
+                other => bail!("unknown section key {other:?}"),
+            }
+        }
+        Ok(out)
+    }
+}
+
+pub struct Delegating;
+
+impl Delegating {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let cfg = Delegating;
+        for (key, v) in j.as_obj().iter().flat_map(|m| m.iter()) {
+            cfg.apply_kv(key, v)?;
+        }
+        Ok(cfg)
+    }
+}

@@ -1,0 +1,6 @@
+//! Fixture: unordered collections inside the engine must be flagged.
+use std::collections::HashMap;
+
+pub fn dispatch(stash: &HashMap<usize, f64>) -> f64 {
+    stash.values().sum()
+}

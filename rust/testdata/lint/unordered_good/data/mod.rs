@@ -1,0 +1,6 @@
+//! Fixture: `data` is not an event-ordered module; hash maps are fine.
+use std::collections::HashMap;
+
+pub fn index(names: &[String]) -> HashMap<String, usize> {
+    names.iter().cloned().zip(0..).collect()
+}

@@ -1,0 +1,22 @@
+//! Fixture: ordered collections are fine; test-only hash maps are fine.
+use std::collections::BTreeMap;
+
+pub fn dispatch(stash: &BTreeMap<usize, f64>) -> f64 {
+    stash.values().sum()
+}
+
+// "HashSet" in a string and a comment must not trip the token scan.
+pub fn describe() -> &'static str {
+    "not a real HashSet usage"
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn scratch_maps_are_allowed_in_tests() {
+        let m: HashMap<usize, usize> = HashMap::new();
+        assert!(m.is_empty());
+    }
+}

@@ -1,0 +1,8 @@
+//! Fixture: wall-clock reads outside sweep/bin must be flagged.
+use std::time::{Instant, SystemTime};
+
+pub fn sample_now() -> f64 {
+    let t0 = Instant::now();
+    let _wall = SystemTime::now();
+    t0.elapsed().as_secs_f64()
+}

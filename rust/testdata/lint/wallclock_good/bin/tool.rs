@@ -1,0 +1,4 @@
+//! Fixture: CLI binaries may read the host clock.
+fn main() {
+    let _t0 = std::time::Instant::now();
+}

@@ -1,0 +1,7 @@
+//! Fixture: the measurement harness may read the host clock.
+use std::time::Instant;
+
+pub fn measure() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}
