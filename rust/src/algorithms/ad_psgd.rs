@@ -57,18 +57,22 @@ impl UpdateRule for AdPsgd {
         }
         let r = nbrs[self.rng.gen_range(nbrs.len())];
 
+        // Values are exchanged at `end` (below); since nothing else
+        // touches the pair between now and `end` in this serialization
+        // model, the average itself is computed immediately.  The gossip
+        // runs first so the exchange duration can be sized by what
+        // actually moved (one shard under fragmentation, the full vector
+        // otherwise).
+        core.gossip_pair(w, r);
+
         // Atomic averaging: serialize on both endpoints' busy horizons.
         let now = core.now();
         let start = now.max(self.busy_until[w]).max(self.busy_until[r]);
-        let dur = core.comm.gossip_time(2, core.param_bytes());
+        let dur = core.comm.gossip_time(2, core.round_wire_bytes());
         let end = start + dur;
         self.busy_until[w] = end;
         self.busy_until[r] = end;
 
-        // Values are exchanged at `end`; since nothing else touches the
-        // pair between now and `end` in this serialization model, the
-        // average itself is computed immediately.
-        core.gossip_pair(w, r);
         core.advance_iteration();
 
         core.restart_after(w, end - now);

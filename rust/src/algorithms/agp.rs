@@ -22,8 +22,11 @@ pub struct Agp {
     rng: Rng64,
     /// Push-sum weights s_j.
     weight: Vec<f64>,
-    /// Inbox: pending (x, δ) messages per worker.
-    inbox: Vec<Vec<(Vec<f32>, f64)>>,
+    /// Inbox: pending `(lo, hi, x[lo..hi], δ)` messages per worker.  A
+    /// full-vector push (the passthrough default) carries `lo = 0`,
+    /// `hi = dim`; under fragmentation each push carries one scheduled
+    /// shard and the mix applies to that range only.
+    inbox: Vec<Vec<(usize, usize, Vec<f32>, f64)>>,
 }
 
 impl Agp {
@@ -39,10 +42,13 @@ impl Agp {
         let msgs = std::mem::take(&mut self.inbox[w]);
         let mut s = self.weight[w];
         let mut x = core.params_of(w).to_vec();
-        for (xi, delta) in msgs {
+        for (lo, hi, xi, delta) in msgs {
             let total = s + delta;
             let (a, b) = ((s / total) as f32, (delta / total) as f32);
-            for (xo, xv) in x.iter_mut().zip(&xi) {
+            // a shard push mixes its range only; the rest of the receiver's
+            // vector keeps its old value at the new mass (the fragment-
+            // gossip approximation of push-sum)
+            for (xo, xv) in x[lo..hi].iter_mut().zip(&xi) {
                 *xo = a * *xo + b * *xv;
             }
             s = total;
@@ -77,13 +83,16 @@ impl UpdateRule for Agp {
             let r = nbrs[self.rng.gen_range(nbrs.len())];
             let delta = self.weight[w] / 2.0;
             self.weight[w] = (self.weight[w] - delta).max(1e-9);
-            self.inbox[r].push((core.params_of(w).to_vec(), delta));
-            core.charge_param_bytes(core.param_bytes());
+            // one scheduled shard per push (the full vector in
+            // passthrough), charged and delayed at its wire size
+            let plan = core.fragment_plan(&[w, r]);
+            self.inbox[r].push((plan.lo, plan.hi, core.wire_slice(w, &plan), delta));
+            core.charge_shard_transfer(&plan);
             core.recorder.gossip_rounds += 1;
             core.recorder.group_size_sum += 2;
         }
         core.advance_iteration();
-        let delay = core.comm.transfer_time(core.param_bytes());
+        let delay = core.comm.transfer_time(core.round_wire_bytes());
         core.restart_after(w, delay);
     }
 

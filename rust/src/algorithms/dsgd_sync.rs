@@ -43,7 +43,7 @@ impl DsgdSync {
         }
         core.advance_iteration();
         let max_deg = comp.iter().map(|&m| core.graph.degree(m)).max().unwrap_or(0);
-        let delay = core.comm.gossip_time(max_deg + 1, core.param_bytes());
+        let delay = core.comm.gossip_time(max_deg + 1, core.round_wire_bytes());
         for &m in &comp {
             core.restart_after(m, delay);
         }
@@ -84,9 +84,10 @@ impl UpdateRule for DsgdSync {
 
         // Communication round: every worker exchanges with its neighbors;
         // the round completes when the max-degree worker has received all
-        // its messages.
+        // its messages (each sized by what the round moved — one shard
+        // under fragmentation).
         let max_deg = all.iter().map(|&m| core.graph.degree(m)).max().unwrap_or(0);
-        let delay = core.comm.gossip_time(max_deg + 1, core.param_bytes());
+        let delay = core.comm.gossip_time(max_deg + 1, core.round_wire_bytes());
         for &m in &all {
             core.restart_after(m, delay);
         }

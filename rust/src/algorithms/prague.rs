@@ -94,21 +94,27 @@ impl Prague {
         } else {
             vec![group.members]
         };
+        // Ring all-reduce: 2(m−1) message steps per sub-group, each step
+        // sized by what the round actually moved (one shard under
+        // fragmentation), so the delay is read back right after the
+        // gossip that set it.  A stranded singleton skips the collective
+        // entirely and restarts immediately.
+        let mut delays = Vec::with_capacity(subgroups.len());
         for sub in &subgroups {
-            // ring all-reduce: 2(m-1) parameter-sized message steps
-            // (a stranded singleton skips the collective entirely)
             if sub.len() >= 2 {
                 let gw = GroupWeights::uniform(sub);
-                let bytes = 2 * (sub.len() as u64 - 1) * core.param_bytes();
-                core.gossip_costed(&gw, bytes);
+                core.gossip_costed(&gw, 2 * (sub.len() as u64 - 1));
+                delays.push(
+                    2.0 * (sub.len() as f64 - 1.0)
+                        * core.comm.transfer_time(core.round_wire_bytes()),
+                );
+            } else {
+                delays.push(0.0);
             }
         }
         core.advance_iteration();
 
-        // Ring all-reduce cost: 2(m−1) message steps per sub-group.
-        for sub in &subgroups {
-            let delay =
-                2.0 * (sub.len() as f64 - 1.0) * core.comm.transfer_time(core.param_bytes());
+        for (sub, delay) in subgroups.iter().zip(delays) {
             for &mb in sub {
                 core.restart_after(mb, delay);
             }

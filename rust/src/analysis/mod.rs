@@ -355,6 +355,6 @@ mod tests {
         let arr = j.get("findings").and_then(|v| v.as_arr()).unwrap();
         assert_eq!(arr.len(), 1);
         assert_eq!(arr[0].get("rule").and_then(|v| v.as_str()), Some("no-panic-in-engine"));
-        assert_eq!(j.get("rules").and_then(|v| v.as_arr()).map(|r| r.len()), Some(5));
+        assert_eq!(j.get("rules").and_then(|v| v.as_arr()).map(|r| r.len()), Some(6));
     }
 }

@@ -1,4 +1,4 @@
-//! The rule registry and the five determinism/invariant rules.
+//! The rule registry and the six determinism/invariant rules.
 //!
 //! Rules operate on the token stream from [`crate::analysis::lexer`]
 //! plus the module scope derived from the file's path in the crate
@@ -39,13 +39,21 @@ pub struct RuleInfo {
 }
 
 /// Modules whose event/weight paths must iterate in a defined order.
-pub const ORDERED_SCOPES: [&str; 7] =
-    ["engine", "algorithms", "membership", "consensus", "adapt", "churn", "topology"];
+pub const ORDERED_SCOPES: [&str; 8] = [
+    "engine",
+    "algorithms",
+    "membership",
+    "consensus",
+    "adapt",
+    "churn",
+    "topology",
+    "fragment",
+];
 
 /// Modules allowed to read the host clock (measurement harness + CLIs).
 pub const WALL_CLOCK_EXEMPT: [&str; 2] = ["sweep", "bin"];
 
-/// The five core (suppressible) rules, in catalogue order.
+/// The six core (suppressible) rules, in catalogue order.
 pub fn registry() -> Vec<RuleInfo> {
     vec![
         RuleInfo {
@@ -77,6 +85,13 @@ pub fn registry() -> Vec<RuleInfo> {
             severity: Severity::Error,
             description: "from_json impls must reject unknown keys (the strict-parsed \
                           section convention)",
+        },
+        RuleInfo {
+            name: "no-float-accumulation-order",
+            severity: Severity::Error,
+            description: "float sum/product over a hash container in event-ordered modules \
+                          (f32 addition is non-associative, so a randomized visit order \
+                          changes the result bitwise; reduce over a BTree/sorted Vec)",
         },
     ]
 }
@@ -223,6 +238,7 @@ pub fn run_rules(rel: &str, toks: &[Tok]) -> Vec<RawFinding> {
     no_ambient_rng(&code, &mut out);
     no_panic_in_engine(&top, &code, &mut out);
     strict_config_parse(&code, &mut out);
+    no_float_accumulation_order(&top, &code, &mut out);
     out
 }
 
@@ -393,6 +409,51 @@ fn strict_config_parse(code: &[&Tok], out: &mut Vec<RawFinding>) {
     }
 }
 
+/// Flag `sum::<f32>()` / `product::<f64>()` turbofish reductions inside
+/// a function that also names a `HashMap`/`HashSet` — the classic shape
+/// of "iterate the hash container, fold the floats", whose result
+/// depends on the randomized visit order even when the container itself
+/// carries a suppression pragma.  Scoped to the event-ordered modules;
+/// the enclosing-function window is a heuristic (annotation-typed
+/// `let s: f32 = it.sum()` is not matched), which keeps the rule free
+/// of false positives on ordered reductions.
+fn no_float_accumulation_order(top: &str, code: &[&Tok], out: &mut Vec<RawFinding>) {
+    if !ORDERED_SCOPES.contains(&top) {
+        return;
+    }
+    for i in 0..code.len().saturating_sub(4) {
+        let t = code[i];
+        let reduces = (t.is_ident("sum") || t.is_ident("product"))
+            && code[i + 1].is_punct(':')
+            && code[i + 2].is_punct(':')
+            && code[i + 3].is_punct('<')
+            && (code[i + 4].is_ident("f32") || code[i + 4].is_ident("f64"));
+        if !reduces {
+            continue;
+        }
+        // the reduction is unordered if its enclosing function also
+        // names a hash container (conservative: same-fn co-occurrence)
+        let fn_start = code[..i].iter().rposition(|t| t.is_ident("fn")).unwrap_or(0);
+        let hashed = code[fn_start..i]
+            .iter()
+            .any(|t| t.is_ident("HashMap") || t.is_ident("HashSet"));
+        if hashed {
+            let lexeme = format!("{}::<{}>", t.text, code[i + 4].text);
+            push(
+                out,
+                "no-float-accumulation-order",
+                t,
+                &lexeme,
+                format!(
+                    "{lexeme} in a function using HashMap/HashSet in `{top}`: float \
+                     addition is non-associative, so the randomized visit order changes \
+                     the result bitwise; reduce over a BTree container or a sorted Vec"
+                ),
+            );
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -436,6 +497,32 @@ mod tests {
     fn panic_rule_ignores_unwrap_or_else() {
         let src = "fn f() { a.unwrap_or_else(|| 0); b.unwrap_or(1); c.unwrap_or_default(); }";
         assert!(run_rules("engine/mod.rs", &lex(src)).is_empty());
+    }
+
+    #[test]
+    fn float_accumulation_needs_hash_and_turbofish() {
+        // hash container + float turbofish reduction in one fn: flagged
+        // (the HashMap ident itself also fires no-unordered-iteration)
+        let bad = "fn f(m: &HashMap<u32, f32>) -> f32 { m.values().sum::<f32>() }";
+        let fired: Vec<&str> =
+            run_rules("engine/mod.rs", &lex(bad)).iter().map(|f| f.rule).collect();
+        assert!(fired.contains(&"no-float-accumulation-order"));
+        // ordered container: clean
+        let ordered = "fn f(m: &BTreeMap<u32, f32>) -> f32 { m.values().sum::<f32>() }";
+        assert!(run_rules("engine/mod.rs", &lex(ordered)).is_empty());
+        // integer reduction over a hash container: only the container rule
+        let ints = "fn f(m: &HashMap<u32, u64>) -> u64 { m.values().sum::<u64>() }";
+        let fired: Vec<&str> =
+            run_rules("engine/mod.rs", &lex(ints)).iter().map(|f| f.rule).collect();
+        assert!(!fired.contains(&"no-float-accumulation-order"));
+        // out-of-scope module: clean
+        assert!(run_rules("data/mod.rs", &lex(bad)).is_empty());
+        // the hash usage and the reduction in *different* fns: clean
+        let split = "fn a(m: &HashMap<u32, f32>) {}\n\
+                     fn b(v: &[f32]) -> f32 { v.iter().sum::<f32>() }";
+        let fired: Vec<&str> =
+            run_rules("fragment/mod.rs", &lex(split)).iter().map(|f| f.rule).collect();
+        assert!(!fired.contains(&"no-float-accumulation-order"));
     }
 
     #[test]

@@ -8,6 +8,7 @@
 use crate::adapt::AdaptConfig;
 use crate::algorithms::AlgorithmKind;
 use crate::churn::ChurnConfig;
+use crate::fragment::FragmentConfig;
 use crate::membership::MembershipConfig;
 use crate::sim::{CommModel, StragglerModel};
 use crate::topology::TopologyKind;
@@ -107,6 +108,11 @@ pub struct ExperimentConfig {
     /// vacant slots are isolated vertices, which the legacy connectivity
     /// repair would reject.
     pub membership: Option<MembershipConfig>,
+    /// Sharded gossip: split the parameter vector into `count` contiguous
+    /// shards and transfer one scheduled shard per gossip round (optional
+    /// `f16` wire encoding).  The default (`count = 1`, `f32`) is the
+    /// legacy full-vector exchange, bit-identical to older configs.
+    pub fragments: FragmentConfig,
     /// Update rule under test.
     pub algorithm: AlgorithmKind,
     /// Gradient backend.
@@ -165,6 +171,7 @@ impl Default for ExperimentConfig {
             adapt: AdaptConfig::default(),
             trace: None,
             membership: None,
+            fragments: FragmentConfig::default(),
             algorithm: AlgorithmKind::DsgdAau,
             backend: BackendKind::Quadratic,
             model: "mlp_small".into(),
@@ -229,6 +236,7 @@ impl ExperimentConfig {
                     Some(MembershipConfig::from_json(v)?)
                 }
             }
+            "fragments" => self.fragments = FragmentConfig::from_json(v)?,
             "algorithm" => {
                 self.algorithm = AlgorithmKind::parse(v.as_str().unwrap_or_default())?
             }
@@ -289,6 +297,7 @@ impl ExperimentConfig {
         if let Some(mc) = &self.membership {
             m.insert("membership".into(), mc.to_json());
         }
+        m.insert("fragments".into(), self.fragments.to_json());
         m.insert("algorithm".into(), Json::from(self.algorithm.token()));
         m.insert("backend".into(), Json::from(self.backend.token()));
         m.insert("model".into(), Json::from(self.model.as_str()));
@@ -342,6 +351,7 @@ impl ExperimentConfig {
         self.comm.validate()?;
         self.churn.validate()?;
         self.adapt.validate()?;
+        self.fragments.validate()?;
         if let Some(tc) = &self.trace {
             tc.validate()?;
             anyhow::ensure!(
@@ -620,6 +630,36 @@ mod tests {
         let mut bad = cfg;
         bad.membership.as_mut().unwrap().population = 4;
         assert!(bad.validate().is_err(), "population must cover the slots");
+    }
+
+    #[test]
+    fn fragments_section_parses_strictly_and_roundtrips() {
+        let cfg = ExperimentConfig::from_json(
+            &Json::parse(
+                r#"{"fragments": {"count": 4, "schedule": "stalest_first",
+                     "encoding": "f16", "seed": 3}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.fragments.count, 4);
+        assert_eq!(cfg.fragments.schedule, crate::fragment::ShardSchedule::StalestFirst);
+        assert_eq!(cfg.fragments.encoding, crate::fragment::WireEncoding::F16);
+        assert_eq!(cfg.fragments.seed, Some(3));
+        cfg.validate().unwrap();
+        let back =
+            ExperimentConfig::from_json(&Json::parse(&cfg.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back.fragments, cfg.fragments);
+        // unknown fragments keys are rejected, not defaulted
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"fragments": {"count": 4, "shedule": "round_robin"}}"#).unwrap()
+        )
+        .is_err());
+        // omitting the section keeps the legacy full-vector exchange
+        let legacy = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(legacy.fragments, crate::fragment::FragmentConfig::default());
+        assert!(legacy.fragments.is_passthrough());
     }
 
     #[test]

@@ -143,9 +143,17 @@ impl GroupWeights {
         self.members.len()
     }
 
-    /// True when the group is a single worker (gossip is a no-op).
+    /// True when the group has no members at all.  A *singleton* group is
+    /// not empty — use [`Self::is_singleton`] to test for the
+    /// one-worker case where gossip is a no-op.
     pub fn is_empty(&self) -> bool {
         self.members.is_empty()
+    }
+
+    /// True when the group is a single worker: gossip moves nothing, so
+    /// the engine's gossip paths early-out without charging bytes.
+    pub fn is_singleton(&self) -> bool {
+        self.members.len() == 1
     }
 
     /// Max |row sum − 1| and |col sum − 1|: 0 for doubly stochastic.
@@ -325,5 +333,10 @@ mod tests {
         let gw = GroupWeights::metropolis(&g, &[2]);
         assert_eq!(gw.len(), 1);
         assert!((gw.weights[0][0] - 1.0).abs() < 1e-7);
+        // a singleton is not "empty": is_empty means zero members
+        assert!(gw.is_singleton());
+        assert!(!gw.is_empty());
+        let none = GroupWeights::uniform(&[]);
+        assert!(none.members.is_empty() && none.is_empty() && !none.is_singleton());
     }
 }

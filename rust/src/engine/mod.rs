@@ -13,6 +13,7 @@ use crate::backend::{Backend, GradOutput};
 use crate::churn::{self, ApplyOutcome, ChurnModel, TopologyMutation};
 use crate::config::{ExperimentConfig, LrSchedule};
 use crate::consensus::GroupWeights;
+use crate::fragment::{quantize_f16, FragmentState, ShardPlan};
 use crate::membership::MembershipModel;
 use crate::metrics::Recorder;
 use crate::model::ParamVec;
@@ -73,6 +74,17 @@ pub struct EngineCore {
     /// in-flight gradient by resetting the entry to NaN, so a stale
     /// completion from a previous occupant can never fire for a joiner.
     expected_done: Vec<f64>,
+    /// Sharded-gossip bookkeeping (`fragments` config section): shard
+    /// bounds, per-worker per-shard version counters and the scheduler.
+    /// Passthrough state (the `count = 1`, `f32` default) routes every
+    /// gossip through the exact legacy full-vector path.
+    fragments: FragmentState,
+    /// Wire bytes of one point-to-point message in the most recent
+    /// gossip round (= `param_bytes` in passthrough; the scheduled
+    /// shard's cost otherwise).  Update rules derive communication
+    /// delays from this so a shard exchange is also *faster*, not just
+    /// cheaper on the byte meter.
+    last_wire_bytes: u64,
 }
 
 impl EngineCore {
@@ -238,43 +250,102 @@ impl EngineCore {
 
     /// Simultaneous consensus update over a gossip group (eq. 4 line 2):
     /// every member's new vector is the weighted average of the group's
-    /// current vectors.  Uses the PJRT Pallas gossip kernel when enabled
-    /// and the group fits the artifact fanout; falls back to a native
+    /// current vectors — of the scheduled shard range only when the
+    /// `fragments` section configures sharded exchange.  Uses the PJRT
+    /// Pallas gossip kernel when enabled, the group fits the artifact
+    /// fanout and the exchange is full-vector; falls back to a native
     /// fused loop otherwise.  Charges two parameter messages per active
-    /// (positive-weight) pair — the induced-subgraph edges.
+    /// (positive-weight) pair — the induced-subgraph edges.  Empty and
+    /// singleton groups return without moving (or charging) anything.
     pub fn gossip(&mut self, gw: &GroupWeights) {
-        let m = gw.len();
-        if m <= 1 {
+        if gw.is_empty() || gw.is_singleton() {
             return;
         }
         debug_assert!(gw.stochasticity_error() < 1e-4, "non-doubly-stochastic weights");
-        self.mix_into_scratch(gw);
-        for (a, &mb) in gw.members.iter().enumerate() {
-            std::mem::swap(&mut self.params[mb], &mut self.scratch[a]);
-        }
         // Parameter messages traverse only active (positive-weight) pairs,
         // bidirectionally — the induced-subgraph edges for Metropolis
         // groups.  Rules with a cheaper collective (Prague's ring
         // all-reduce) use `gossip_costed` instead.
-        let bytes = 2 * gw.active_edges() as u64 * self.param_bytes;
-        self.recorder.record_gossip(m, bytes);
-        self.recorder.note_gossip_components(self.monitor.num_components());
+        let messages = 2 * gw.active_edges() as u64;
+        self.gossip_with_messages(gw, messages);
     }
 
-    /// Like [`Self::gossip`] but with an explicit byte charge (collectives
-    /// whose traffic is not edge-shaped, e.g. ring all-reduce).
-    pub fn gossip_costed(&mut self, gw: &GroupWeights, bytes: u64) {
-        let m = gw.len();
-        if m <= 1 {
+    /// Like [`Self::gossip`] but with an explicit message count
+    /// (collectives whose traffic is not edge-shaped, e.g. Prague's ring
+    /// all-reduce at `2(m−1)` messages).  Each message is charged at the
+    /// round's wire size: the full vector in passthrough, the scheduled
+    /// shard under fragmentation.
+    pub fn gossip_costed(&mut self, gw: &GroupWeights, messages: u64) {
+        if gw.is_empty() || gw.is_singleton() {
             return;
         }
         debug_assert!(gw.stochasticity_error() < 1e-4, "non-doubly-stochastic weights");
-        self.mix_into_scratch(gw);
-        for (a, &mb) in gw.members.iter().enumerate() {
-            std::mem::swap(&mut self.params[mb], &mut self.scratch[a]);
+        self.gossip_with_messages(gw, messages);
+    }
+
+    /// Shared gossip body: mix, write back, account `messages` transfers.
+    ///
+    /// Passthrough (the default `fragments` config) is the exact legacy
+    /// full-vector path — scratch swap, PJRT kernel eligibility,
+    /// `messages · param_bytes` on the byte meter — and stays
+    /// bit-identical to builds without fragmentation.  Otherwise the
+    /// scheduler picks one shard, the consensus weights apply to that
+    /// contiguous range only (through a simulated `f16` wire round-trip
+    /// when configured), and each message is charged at the shard's wire
+    /// size, with the savings and retired staleness recorded.
+    fn gossip_with_messages(&mut self, gw: &GroupWeights, messages: u64) {
+        let m = gw.len();
+        if self.fragments.is_passthrough() {
+            self.mix_into_scratch(gw);
+            for (a, &mb) in gw.members.iter().enumerate() {
+                std::mem::swap(&mut self.params[mb], &mut self.scratch[a]);
+            }
+            self.last_wire_bytes = self.param_bytes;
+            self.recorder.record_gossip(m, messages * self.param_bytes);
+            self.recorder.note_gossip_components(self.monitor.num_components());
+            return;
         }
-        self.recorder.record_gossip(m, bytes);
+        let plan = self.fragments.next_plan(&gw.members);
+        self.mix_range_into_scratch(gw, plan.lo, plan.hi);
+        let w = plan.hi - plan.lo;
+        for (a, &mb) in gw.members.iter().enumerate() {
+            self.params[mb][plan.lo..plan.hi].copy_from_slice(&self.scratch[a][..w]);
+        }
+        self.last_wire_bytes = plan.wire_bytes;
+        self.recorder.record_gossip(m, messages * plan.wire_bytes);
+        self.recorder.shard_bytes_saved +=
+            messages * self.param_bytes.saturating_sub(plan.wire_bytes);
+        self.recorder.shard_staleness += plan.staleness;
         self.recorder.note_gossip_components(self.monitor.num_components());
+    }
+
+    /// Weighted-average the members' `[lo, hi)` parameter ranges into the
+    /// scratch buffer prefixes (the fragmented-gossip mix).  Under `f16`
+    /// wire encoding every input row — including each member's own —
+    /// round-trips through binary16 first: what a member mixes is what
+    /// the wire delivered.  The PJRT gossip kernel is full-vector only,
+    /// so shard mixes always take the native loop.
+    fn mix_range_into_scratch(&mut self, gw: &GroupWeights, lo: usize, hi: usize) {
+        let m = gw.len();
+        let d = self.params[0].len();
+        let w = hi - lo;
+        while self.scratch.len() < m {
+            self.scratch.push(vec![0f32; d]);
+        }
+        let quantized: Option<Vec<Vec<f32>>> = self.fragments.quantize_wire().then(|| {
+            gw.members
+                .iter()
+                .map(|&mb| self.params[mb][lo..hi].iter().copied().map(quantize_f16).collect())
+                .collect()
+        });
+        let rows: Vec<&[f32]> = match &quantized {
+            Some(q) => q.iter().map(|r| r.as_slice()).collect(),
+            None => gw.members.iter().map(|&mb| &self.params[mb][lo..hi]).collect(),
+        };
+        for a in 0..m {
+            self.scratch[a].resize(d, 0.0);
+            native_weighted_average_into(&rows, &gw.weights[a], &mut self.scratch[a][..w]);
+        }
     }
 
     /// Compute every member's weighted average into the scratch buffers
@@ -353,16 +424,11 @@ impl EngineCore {
         true
     }
 
-    /// Pairwise average with explicit byte accounting (AD-PSGD's atomic
-    /// averaging exchanges exactly two parameter messages).
+    /// Pairwise average with explicit message accounting (AD-PSGD's
+    /// atomic averaging exchanges exactly two parameter messages).
     pub fn gossip_pair(&mut self, i: WorkerId, j: WorkerId) {
         let gw = GroupWeights::pairwise(i, j);
-        self.mix_into_scratch(&gw);
-        for (a, &mb) in gw.members.iter().enumerate() {
-            std::mem::swap(&mut self.params[mb], &mut self.scratch[a]);
-        }
-        self.recorder.record_gossip(2, 2 * self.param_bytes);
-        self.recorder.note_gossip_components(self.monitor.num_components());
+        self.gossip_with_messages(&gw, 2);
     }
 
     /// Overwrite worker `w`'s parameters (push-sum style rules).
@@ -377,14 +443,63 @@ impl EngineCore {
         self.recorder.param_bytes += bytes;
     }
 
-    /// Parameter message size in bytes.
+    /// Full-vector parameter message size in bytes.
     pub fn param_bytes(&self) -> u64 {
         self.param_bytes
     }
 
-    /// Communication time for a gossip round among `m` workers.
+    /// Wire bytes of one message in the most recent gossip round: the
+    /// full vector in passthrough, the scheduled shard's cost under
+    /// fragmentation.  Update rules compute post-gossip communication
+    /// delays from this.
+    pub fn round_wire_bytes(&self) -> u64 {
+        self.last_wire_bytes
+    }
+
+    /// Communication time for the most recent gossip round among `m`
+    /// workers (sized by [`Self::round_wire_bytes`], so a shard exchange
+    /// is proportionally faster than a full-vector one).
     pub fn gossip_delay(&self, m: usize) -> f64 {
-        self.comm.gossip_time(m, self.param_bytes)
+        self.comm.gossip_time(m, self.last_wire_bytes)
+    }
+
+    /// Schedule the shard a point-to-point push among `members` moves
+    /// (AGP's push path).  Passthrough returns a full-vector pseudo-plan
+    /// without touching the scheduler state, so default configs stay
+    /// bit-identical to the pre-fragmentation engine.
+    pub fn fragment_plan(&mut self, members: &[WorkerId]) -> ShardPlan {
+        if self.fragments.is_passthrough() {
+            ShardPlan {
+                shard: 0,
+                lo: 0,
+                hi: self.params[0].len(),
+                wire_bytes: self.param_bytes,
+                staleness: 0,
+            }
+        } else {
+            self.fragments.next_plan(members)
+        }
+    }
+
+    /// What `w` puts on the wire for `plan`'s range: the raw range in
+    /// `f32` mode, the binary16 round-trip of it under `f16` encoding.
+    pub fn wire_slice(&self, w: WorkerId, plan: &ShardPlan) -> ParamVec {
+        let range = &self.params[w][plan.lo..plan.hi];
+        if self.fragments.quantize_wire() {
+            range.iter().copied().map(quantize_f16).collect()
+        } else {
+            range.to_vec()
+        }
+    }
+
+    /// Charge one point-to-point transfer of `plan`'s shard (AGP pushes;
+    /// group rounds account inside [`Self::gossip`]).  In passthrough
+    /// this is exactly the legacy `charge_param_bytes(param_bytes())`.
+    pub fn charge_shard_transfer(&mut self, plan: &ShardPlan) {
+        self.recorder.param_bytes += plan.wire_bytes;
+        self.recorder.shard_bytes_saved += self.param_bytes.saturating_sub(plan.wire_bytes);
+        self.recorder.shard_staleness += plan.staleness;
+        self.last_wire_bytes = plan.wire_bytes;
     }
 
     /// Advance the gossip-iteration counter, evaluating on schedule.
@@ -489,6 +604,15 @@ impl EngineCore {
     /// charge the warm-start pulls, refresh only the touched Metropolis
     /// rows, and stage the monitor observation.  Returns the attach
     /// targets.  The caller starts the joiner's compute afterwards.
+    ///
+    /// The warm-start average is scoped to one observed component: mid-
+    /// heal, the template neighbors can straddle a partition, and a plain
+    /// mean of both sides would seed the joiner with a vector no live
+    /// component trained (dragging both components' consensus toward the
+    /// blend).  The joiner averages — and pays for — only the largest
+    /// coherent cohort of its targets (ties break toward the cohort
+    /// holding the lowest worker id); the remaining targets still get
+    /// their edges and converge through normal gossip.
     fn fill_slot(&mut self, s: WorkerId, template: &Graph, init: &ParamVec) -> Vec<WorkerId> {
         debug_assert!(!self.active[s], "filling occupied slot {s}");
         let targets: Vec<WorkerId> =
@@ -497,15 +621,29 @@ impl EngineCore {
             self.graph.add_edge(s, t);
         }
         self.active[s] = true;
-        self.params[s] = if targets.is_empty() {
+        // Cohorts keyed by observed component label (pre-attach view):
+        // BTreeMap order makes "lowest worker id" the first max-length
+        // entry, so the pick is deterministic.
+        let mut cohorts: BTreeMap<usize, Vec<WorkerId>> = BTreeMap::new();
+        for &t in &targets {
+            cohorts.entry(self.monitor.component_of(t)).or_default().push(t);
+        }
+        let cohort: &[WorkerId] = cohorts
+            .values()
+            .max_by_key(|members| (members.len(), std::cmp::Reverse(members[0])))
+            .map(Vec::as_slice)
+            .unwrap_or(&[]);
+        self.params[s] = if cohort.is_empty() {
             init.clone()
         } else {
-            let rows: Vec<&[f32]> = targets.iter().map(|&t| self.params[t].as_slice()).collect();
+            let rows: Vec<&[f32]> = cohort.iter().map(|&t| self.params[t].as_slice()).collect();
             crate::model::mean_of(&rows)
         };
-        // warm start pulls one parameter message per attach target, plus
-        // the join announcement on the control plane
-        self.recorder.param_bytes += targets.len() as u64 * self.param_bytes;
+        // a fresh full vector is current on every shard
+        self.fragments.reset_worker(s);
+        // warm start pulls one parameter message per averaged cohort
+        // member, plus the join announcement on the control plane
+        self.recorder.param_bytes += cohort.len() as u64 * self.param_bytes;
         self.recorder.control_bytes += PathSearch::broadcast_bytes(self.num_workers(), 1);
         if let Some(gw) = self.full_weights.as_mut() {
             let mut touched = vec![s];
@@ -733,6 +871,8 @@ impl Engine {
             full_weights,
             active: vec![true; n],
             expected_done: vec![f64::NAN; n],
+            fragments: FragmentState::new(&cfg.fragments, dim, n, cfg.seed_for("fragments")),
+            last_wire_bytes: param_bytes,
         };
         let rule = cfg.algorithm.build(cfg.prague_group, cfg.seed_for("algorithm"));
         let churn = match lowered {
@@ -830,6 +970,12 @@ impl Engine {
     /// Read-only core access (tests/diagnostics).
     pub fn core(&self) -> &EngineCore {
         &self.core
+    }
+
+    /// Mutable core access (tests drive gossip primitives directly, e.g.
+    /// the shard-equals-full-vector bitwise invariant suite).
+    pub fn core_mut(&mut self) -> &mut EngineCore {
+        &mut self.core
     }
 
     /// Run to completion (iteration cap, time budget, or quiescence).
@@ -1027,5 +1173,62 @@ mod tests {
         // NaN row has zero weight and must not poison the result
         let out = native_weighted_average(&[&a, &b], &[0.0, 1.0]);
         assert_eq!(out, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn fill_slot_warm_start_scoped_to_observed_component() {
+        // Membership under partition: slot 4's template neighbors straddle
+        // a split ({0,1,2} vs {3}).  The joiner must warm-start from the
+        // majority cohort's mean only — never a cross-partition blend —
+        // and pay warm-start bytes for that cohort only, while the edges
+        // toward the minority side are still wired up.
+        let mut cfg = ExperimentConfig::default();
+        cfg.num_workers = 5;
+        cfg.backend = crate::config::BackendKind::Quadratic;
+        cfg.topology = crate::topology::TopologyKind::Complete;
+        cfg.adapt = AdaptConfig {
+            allow_partitions: true,
+            partition_aware: true,
+            detection_latency: 0.0.into(),
+            heal_restart: false,
+        };
+        let backend = crate::coordinator::build_backend(&cfg).unwrap();
+        let mut eng = Engine::try_from_config(&cfg, backend).unwrap();
+        let core = eng.core_mut();
+        let template = core.graph.clone();
+        let dim = core.params[0].len();
+        let init = vec![-7.0f32; dim];
+
+        core.vacate_slot(4);
+        // cut the survivors into {0,1,2} and {3}, observed immediately
+        core.graph.remove_edge(0, 3);
+        core.graph.remove_edge(1, 3);
+        core.graph.remove_edge(2, 3);
+        core.monitor = PartitionMonitor::new(&core.graph, 0.0);
+        for w in 0..3 {
+            core.params[w] = vec![1.0 + w as f32; dim];
+        }
+        core.params[3] = vec![100.0; dim];
+
+        let bytes_before = core.recorder.param_bytes;
+        let targets = core.fill_slot(4, &template, &init);
+        assert_eq!(targets, vec![0, 1, 2, 3]);
+        // mean over {0,1,2} is exactly 2.0; a full-target blend would be
+        // pulled far off by worker 3's vector
+        assert_eq!(core.params[4], vec![2.0f32; dim]);
+        assert_eq!(
+            core.recorder.param_bytes - bytes_before,
+            3 * core.param_bytes,
+            "warm start must be charged for the averaged cohort only"
+        );
+        // the minority-side edge still exists — it converges via gossip
+        assert!(core.graph.has_edge(4, 3));
+
+        // a joiner with no reachable neighbor falls back to the fleet init
+        core.vacate_slot(4);
+        let lonely = Graph::empty(5);
+        let targets = core.fill_slot(4, &lonely, &init);
+        assert!(targets.is_empty());
+        assert_eq!(core.params[4], init);
     }
 }

@@ -1,0 +1,579 @@
+//! Sharded gossip: fragment the flat [`crate::model::ParamVec`] into `k`
+//! contiguous shards and transfer one scheduled shard per gossip round.
+//!
+//! The paper's DSGD-AAU adapts *who* each worker waits for, but every
+//! exchange still moves the full parameter vector — round bytes and
+//! staleness scale with model size.  Model-fragmentation gossip
+//! (arxiv 2410.12918) transfers fragments with per-shard versioning
+//! instead: each round the scheduler picks which contiguous range of the
+//! vector the group exchanges, the engine applies the consensus weights
+//! to that range only, and bytes are charged for the shard actually
+//! moved.  A second bytes knob simulates `f16` wire encoding
+//! (quantize/dequantize on transfer, accounted at 2 bytes/param).
+//!
+//! Everything here is deterministic: the `seeded_random` schedule draws
+//! from a dedicated [`Rng64`] stream (`seed_for("fragments")`), the
+//! `stalest_first` schedule breaks ties toward the lowest shard index,
+//! and the per-worker per-shard version counters advance only through
+//! [`FragmentState::next_plan`] / [`FragmentState::reset_worker`] calls
+//! made by the engine in event order.
+//!
+//! The default configuration (`count = 1`, `f32` wire) is *passthrough*:
+//! the engine routes gossip through the exact legacy full-vector path,
+//! bit-identical to a build without this module.
+
+use crate::util::json::Json;
+use crate::util::rng::Rng64;
+use crate::WorkerId;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Which shard a gossip round transfers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardSchedule {
+    /// Cycle through shards `0, 1, …, k-1, 0, …` (a global cursor, not
+    /// per-group — interleaved groups still cover all shards).
+    RoundRobin,
+    /// Pick the shard with the lowest summed version over the group's
+    /// members (ties break toward the lowest shard index).
+    StalestFirst,
+    /// Uniform draw from a dedicated seeded stream.
+    SeededRandom,
+}
+
+impl ShardSchedule {
+    /// Parse from the snake_case config token.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "round_robin" => ShardSchedule::RoundRobin,
+            "stalest_first" => ShardSchedule::StalestFirst,
+            "seeded_random" => ShardSchedule::SeededRandom,
+            other => bail!(
+                "unknown fragments schedule {other:?} (round_robin|stalest_first|seeded_random)"
+            ),
+        })
+    }
+
+    /// Inverse of [`Self::parse`].
+    pub fn token(&self) -> &'static str {
+        match self {
+            ShardSchedule::RoundRobin => "round_robin",
+            ShardSchedule::StalestFirst => "stalest_first",
+            ShardSchedule::SeededRandom => "seeded_random",
+        }
+    }
+}
+
+/// How shard payloads are encoded on the (simulated) wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireEncoding {
+    /// Full-precision transfer, 4 bytes/param.
+    F32,
+    /// Half-precision transfer, 2 bytes/param: values round-trip through
+    /// IEEE 754 binary16 (round-to-nearest-even) on every exchange.
+    F16,
+}
+
+impl WireEncoding {
+    /// Parse from the config token.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => WireEncoding::F32,
+            "f16" => WireEncoding::F16,
+            other => bail!("unknown fragments encoding {other:?} (f32|f16)"),
+        })
+    }
+
+    /// Inverse of [`Self::parse`].
+    pub fn token(&self) -> &'static str {
+        match self {
+            WireEncoding::F32 => "f32",
+            WireEncoding::F16 => "f16",
+        }
+    }
+
+    /// Accounted wire cost per parameter.
+    pub fn bytes_per_param(&self) -> u64 {
+        match self {
+            WireEncoding::F32 => 4,
+            WireEncoding::F16 => 2,
+        }
+    }
+}
+
+/// The strict-parsed `"fragments"` config section.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FragmentConfig {
+    /// Number of contiguous shards the parameter vector splits into
+    /// (`1` = legacy full-vector exchange, bit-identical to a config
+    /// without this section).
+    pub count: usize,
+    /// Which shard each gossip round transfers.
+    pub schedule: ShardSchedule,
+    /// Simulated wire encoding of shard payloads.
+    pub encoding: WireEncoding,
+    /// Seed override for the `seeded_random` schedule (`None` derives
+    /// from the experiment seed via `seed_for("fragments")`).
+    pub seed: Option<u64>,
+}
+
+impl Default for FragmentConfig {
+    fn default() -> Self {
+        FragmentConfig {
+            count: 1,
+            schedule: ShardSchedule::RoundRobin,
+            encoding: WireEncoding::F32,
+            seed: None,
+        }
+    }
+}
+
+impl FragmentConfig {
+    /// Whether this configuration is the legacy full-vector exchange.
+    /// Passthrough configs route through the engine's original gossip
+    /// path and must stay bit-identical to builds without fragmentation.
+    pub fn is_passthrough(&self) -> bool {
+        self.count <= 1 && self.encoding == WireEncoding::F32
+    }
+
+    /// Parse the section; unknown keys are rejected.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let obj = j.as_obj().context("fragments must be an object")?;
+        let mut cfg = FragmentConfig::default();
+        for (key, v) in obj {
+            match key.as_str() {
+                "count" => {
+                    cfg.count =
+                        v.as_usize().context("fragments count must be a non-negative integer")?
+                }
+                "schedule" => {
+                    cfg.schedule = ShardSchedule::parse(
+                        v.as_str().context("fragments schedule must be a string")?,
+                    )?
+                }
+                "encoding" => {
+                    cfg.encoding = WireEncoding::parse(
+                        v.as_str().context("fragments encoding must be a string")?,
+                    )?
+                }
+                "seed" => {
+                    cfg.seed = if matches!(v, Json::Null) {
+                        None
+                    } else {
+                        Some(v.as_u64().context("fragments seed must be a non-negative integer")?)
+                    }
+                }
+                other => bail!("unknown fragments key {other:?}"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Inverse of [`Self::from_json`].
+    pub fn to_json(&self) -> Json {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("count".into(), Json::from(self.count));
+        m.insert("schedule".into(), Json::from(self.schedule.token()));
+        m.insert("encoding".into(), Json::from(self.encoding.token()));
+        if let Some(s) = self.seed {
+            m.insert("seed".into(), Json::from(s as usize));
+        }
+        Json::Obj(m)
+    }
+
+    /// Parameter sanity checks (called from `ExperimentConfig::validate`).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.count >= 1, "fragments count must be >= 1");
+        Ok(())
+    }
+}
+
+/// The shard a gossip round moves: the parameter range, its accounted
+/// wire size for one point-to-point transfer, and the staleness the
+/// schedule retired by picking it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Scheduled shard index.
+    pub shard: usize,
+    /// Start of the parameter range (inclusive).
+    pub lo: usize,
+    /// End of the parameter range (exclusive).
+    pub hi: usize,
+    /// Bytes one point-to-point transfer of this shard costs.
+    pub wire_bytes: u64,
+    /// Summed rounds-since-last-refresh of this shard over the group's
+    /// members at scheduling time.
+    pub staleness: u64,
+}
+
+/// Runtime shard bookkeeping: shard bounds, per-worker per-shard version
+/// counters, and the scheduler state.
+#[derive(Debug, Clone)]
+pub struct FragmentState {
+    bounds: Vec<usize>,
+    /// `last_round[w][s]`: the gossip round in which worker `w` last
+    /// exchanged shard `s` (0 = never; joiners reset to the current round).
+    last_round: Vec<Vec<u64>>,
+    rounds: u64,
+    rr_cursor: usize,
+    rng: Rng64,
+    schedule: ShardSchedule,
+    encoding: WireEncoding,
+    passthrough: bool,
+}
+
+impl FragmentState {
+    /// Build the runtime state for a `dim`-parameter model over `n`
+    /// worker slots.  `seed` feeds the `seeded_random` stream unless the
+    /// config overrides it; the shard count clamps to `dim` so every
+    /// shard is non-empty.
+    pub fn new(cfg: &FragmentConfig, dim: usize, n: usize, seed: u64) -> Self {
+        let count = cfg.count.max(1).min(dim.max(1));
+        // Contiguous, non-overlapping ranges covering [0, dim): the first
+        // `dim % count` shards take the extra element.
+        let mut bounds = Vec::with_capacity(count + 1);
+        let (base, extra) = (dim / count, dim % count);
+        let mut at = 0usize;
+        bounds.push(at);
+        for s in 0..count {
+            at += base + usize::from(s < extra);
+            bounds.push(at);
+        }
+        FragmentState {
+            bounds,
+            last_round: vec![vec![0u64; count]; n],
+            rounds: 0,
+            rr_cursor: 0,
+            rng: Rng64::seed_from_u64(cfg.seed.unwrap_or(seed)),
+            schedule: cfg.schedule,
+            encoding: cfg.encoding,
+            passthrough: cfg.is_passthrough(),
+        }
+    }
+
+    /// Number of shards (clamped to the parameter dimension).
+    pub fn shard_count(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Whether the configured exchange is the legacy full-vector path.
+    pub fn is_passthrough(&self) -> bool {
+        self.passthrough
+    }
+
+    /// Whether shard payloads round-trip through binary16 on transfer.
+    pub fn quantize_wire(&self) -> bool {
+        self.encoding == WireEncoding::F16
+    }
+
+    /// The parameter range of shard `s`.
+    pub fn shard_bounds(&self, s: usize) -> (usize, usize) {
+        (self.bounds[s], self.bounds[s + 1])
+    }
+
+    /// Schedule the shard the next gossip round transfers among
+    /// `members`, advancing the round counter and the members' version
+    /// counters for the chosen shard.
+    pub fn next_plan(&mut self, members: &[WorkerId]) -> ShardPlan {
+        self.rounds += 1;
+        let k = self.shard_count();
+        let shard = match self.schedule {
+            ShardSchedule::RoundRobin => {
+                let s = self.rr_cursor % k;
+                self.rr_cursor = (self.rr_cursor + 1) % k;
+                s
+            }
+            ShardSchedule::StalestFirst => {
+                // Lowest summed last-exchange round = stalest; ties break
+                // toward the lowest shard index (the `<` comparison).
+                let mut best = 0usize;
+                let mut best_sum = u64::MAX;
+                for s in 0..k {
+                    let sum: u64 =
+                        members.iter().map(|&m| self.last_round[m][s]).sum();
+                    if sum < best_sum {
+                        best_sum = sum;
+                        best = s;
+                    }
+                }
+                best
+            }
+            ShardSchedule::SeededRandom => self.rng.gen_range(k),
+        };
+        let (lo, hi) = self.shard_bounds(shard);
+        let mut staleness = 0u64;
+        for &m in members {
+            staleness += (self.rounds - 1).saturating_sub(self.last_round[m][shard]);
+            self.last_round[m][shard] = self.rounds;
+        }
+        ShardPlan {
+            shard,
+            lo,
+            hi,
+            wire_bytes: (hi - lo) as u64 * self.encoding.bytes_per_param(),
+            staleness,
+        }
+    }
+
+    /// A joiner warm-started with a fresh full vector is current on every
+    /// shard: reset its counters to the present round so `stalest_first`
+    /// does not chase phantom staleness.
+    pub fn reset_worker(&mut self, w: WorkerId) {
+        for v in &mut self.last_round[w] {
+            *v = self.rounds;
+        }
+    }
+}
+
+/// Convert an `f32` to IEEE 754 binary16 bits with round-to-nearest-even
+/// (ties to even), the hardware rounding mode; overflow saturates to
+/// infinity, NaN payloads keep a quiet bit.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Infinity or NaN; force a quiet NaN so a payload living entirely
+        // in the dropped bits cannot collapse to infinity.
+        let nan = if man != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | nan | (man >> 13) as u16;
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7c00; // overflow -> ±inf
+    }
+    if unbiased >= -14 {
+        // Normal half: drop 13 mantissa bits with RNE.
+        let mut half_exp = (unbiased + 15) as u32;
+        let mut half_man = man >> 13;
+        let rem = man & 0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && half_man & 1 == 1) {
+            half_man += 1;
+            if half_man == 0x400 {
+                half_man = 0;
+                half_exp += 1;
+                if half_exp == 31 {
+                    return sign | 0x7c00;
+                }
+            }
+        }
+        return sign | ((half_exp as u16) << 10) | half_man as u16;
+    }
+    if unbiased < -25 {
+        return sign; // underflow to ±0
+    }
+    // Subnormal half: shift the (explicit-leading-one) mantissa down.
+    let man = man | 0x0080_0000;
+    let shift = (-1 - unbiased) as u32; // 14..=24 dropped bits
+    let mut half_man = man >> shift;
+    let rem = man & ((1u32 << shift) - 1);
+    let halfway = 1u32 << (shift - 1);
+    if rem > halfway || (rem == halfway && half_man & 1 == 1) {
+        half_man += 1; // may carry into the exponent: smallest normal, still correct
+    }
+    sign | half_man as u16
+}
+
+/// Convert IEEE 754 binary16 bits back to `f32` (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal half: renormalize into the f32 exponent range.
+            let mut exp32 = 113u32; // 127 - 14
+            let mut man = man;
+            while man & 0x400 == 0 {
+                man <<= 1;
+                exp32 -= 1;
+            }
+            sign | (exp32 << 23) | ((man & 0x3ff) << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Simulated wire round-trip of one value: what the receiver sees after
+/// an `f16`-encoded transfer.
+pub fn quantize_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_section_is_passthrough_and_roundtrips() {
+        let cfg = FragmentConfig::default();
+        assert!(cfg.is_passthrough());
+        let back = FragmentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn section_parses_strictly() {
+        let j = Json::parse(
+            r#"{"count": 4, "schedule": "stalest_first", "encoding": "f16", "seed": 9}"#,
+        )
+        .unwrap();
+        let cfg = FragmentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.count, 4);
+        assert_eq!(cfg.schedule, ShardSchedule::StalestFirst);
+        assert_eq!(cfg.encoding, WireEncoding::F16);
+        assert_eq!(cfg.seed, Some(9));
+        assert!(!cfg.is_passthrough());
+        let back = FragmentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+        // unknown keys, bad tokens and a zero count are rejected
+        assert!(FragmentConfig::from_json(&Json::parse(r#"{"shards": 4}"#).unwrap()).is_err());
+        assert!(FragmentConfig::from_json(
+            &Json::parse(r#"{"schedule": "round-robin"}"#).unwrap()
+        )
+        .is_err());
+        assert!(
+            FragmentConfig::from_json(&Json::parse(r#"{"encoding": "bf16"}"#).unwrap()).is_err()
+        );
+        assert!(FragmentConfig::from_json(&Json::parse(r#"{"count": 0}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn count_one_with_f16_is_not_passthrough() {
+        let cfg = FragmentConfig { encoding: WireEncoding::F16, ..FragmentConfig::default() };
+        assert!(!cfg.is_passthrough(), "f16 wire must take the fragmented path");
+    }
+
+    #[test]
+    fn bounds_partition_the_dimension() {
+        let cfg = FragmentConfig { count: 4, ..FragmentConfig::default() };
+        let st = FragmentState::new(&cfg, 10, 3, 7);
+        assert_eq!(st.shard_count(), 4);
+        let ranges: Vec<(usize, usize)> = (0..4).map(|s| st.shard_bounds(s)).collect();
+        assert_eq!(ranges, [(0, 3), (3, 6), (6, 8), (8, 10)]);
+        // shard count clamps to the dimension
+        let tiny = FragmentState::new(&FragmentConfig { count: 64, ..cfg }, 5, 3, 7);
+        assert_eq!(tiny.shard_count(), 5);
+    }
+
+    #[test]
+    fn round_robin_cycles_and_random_is_seeded() {
+        let cfg = FragmentConfig { count: 3, ..FragmentConfig::default() };
+        let mut st = FragmentState::new(&cfg, 9, 2, 1);
+        let picks: Vec<usize> = (0..6).map(|_| st.next_plan(&[0, 1]).shard).collect();
+        assert_eq!(picks, [0, 1, 2, 0, 1, 2]);
+
+        let rnd = FragmentConfig { schedule: ShardSchedule::SeededRandom, ..cfg };
+        let mut a = FragmentState::new(&rnd, 9, 2, 5);
+        let mut b = FragmentState::new(&rnd, 9, 2, 5);
+        for _ in 0..20 {
+            assert_eq!(a.next_plan(&[0]).shard, b.next_plan(&[0]).shard);
+        }
+        // the config seed overrides the derived one
+        let pinned = FragmentConfig { seed: Some(5), ..rnd };
+        let mut c = FragmentState::new(&pinned, 9, 2, 999);
+        let mut d = FragmentState::new(&rnd, 9, 2, 5);
+        for _ in 0..20 {
+            assert_eq!(c.next_plan(&[0]).shard, d.next_plan(&[0]).shard);
+        }
+    }
+
+    #[test]
+    fn stalest_first_chases_the_oldest_shard() {
+        let cfg = FragmentConfig {
+            count: 3,
+            schedule: ShardSchedule::StalestFirst,
+            ..FragmentConfig::default()
+        };
+        let mut st = FragmentState::new(&cfg, 9, 2, 1);
+        // all counters equal: ties break toward shard 0, then 1, then 2
+        assert_eq!(st.next_plan(&[0, 1]).shard, 0);
+        assert_eq!(st.next_plan(&[0, 1]).shard, 1);
+        assert_eq!(st.next_plan(&[0, 1]).shard, 2);
+        // worker 1 alone refreshes its stalest shard (0); over {0, 1}
+        // shard 1 now has the lowest summed version
+        // (s0 = 1+4, s1 = 2+2, s2 = 3+3)
+        assert_eq!(st.next_plan(&[1]).shard, 0);
+        assert_eq!(st.next_plan(&[0, 1]).shard, 1);
+    }
+
+    #[test]
+    fn staleness_accumulates_and_reset_clears_it() {
+        let cfg = FragmentConfig {
+            count: 2,
+            schedule: ShardSchedule::RoundRobin,
+            ..FragmentConfig::default()
+        };
+        let mut st = FragmentState::new(&cfg, 8, 2, 1);
+        assert_eq!(st.next_plan(&[0, 1]).staleness, 0, "round 1: nothing is stale yet");
+        assert_eq!(st.next_plan(&[0, 1]).staleness, 2, "shard 1 missed round 1 on both");
+        // worker 1 sits out rounds 3-4, then rejoins on shard 0 in round 5:
+        // worker 0 refreshed it in round 3 (staleness 1), worker 1 in round 1
+        // (staleness 3)
+        assert_eq!(st.next_plan(&[0]).shard, 0);
+        assert_eq!(st.next_plan(&[0]).shard, 1);
+        let plan = st.next_plan(&[0, 1]);
+        assert_eq!((plan.shard, plan.staleness), (0, 1 + 3));
+        // a reset marks the worker current on every shard
+        st.reset_worker(1);
+        assert_eq!(st.next_plan(&[1]).staleness, 0);
+    }
+
+    #[test]
+    fn wire_bytes_follow_the_encoding() {
+        let f32cfg = FragmentConfig { count: 2, ..FragmentConfig::default() };
+        let mut st = FragmentState::new(&f32cfg, 10, 1, 1);
+        assert_eq!(st.next_plan(&[0]).wire_bytes, 5 * 4);
+        let f16cfg = FragmentConfig { encoding: WireEncoding::F16, ..f32cfg };
+        let mut st = FragmentState::new(&f16cfg, 10, 1, 1);
+        assert!(st.quantize_wire());
+        assert_eq!(st.next_plan(&[0]).wire_bytes, 5 * 2);
+    }
+
+    #[test]
+    fn f16_roundtrip_is_exact_for_representable_values() {
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 6.1035156e-5] {
+            assert_eq!(quantize_f16(x), x, "{x} must survive the round-trip");
+        }
+        // subnormal halves round-trip too
+        let tiny = f16_bits_to_f32(0x0001);
+        assert_eq!(quantize_f16(tiny), tiny);
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even_and_saturates() {
+        // 1 + 2^-11 sits exactly between 1.0 and the next half (1 + 2^-10):
+        // ties go to the even mantissa, i.e. 1.0
+        assert_eq!(quantize_f16(1.0 + f32::powi(2.0, -11)), 1.0);
+        // 1 + 3·2^-12 is past the midpoint and rounds up
+        assert_eq!(
+            quantize_f16(1.0 + 3.0 * f32::powi(2.0, -12)),
+            1.0 + f32::powi(2.0, -10)
+        );
+        // beyond the f16 range saturates to infinity; NaN stays NaN
+        assert_eq!(quantize_f16(1e6), f32::INFINITY);
+        assert_eq!(quantize_f16(-1e6), f32::NEG_INFINITY);
+        assert!(quantize_f16(f32::NAN).is_nan());
+        // below the smallest subnormal underflows to signed zero
+        assert_eq!(quantize_f16(1e-10), 0.0);
+        assert_eq!(quantize_f16(-1e-10).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn f16_is_idempotent() {
+        let mut rng = Rng64::seed_from_u64(3);
+        for _ in 0..1000 {
+            let x = rng.normal_f32() * 10.0;
+            let once = quantize_f16(x);
+            assert_eq!(quantize_f16(once), once, "quantization must be idempotent at {x}");
+        }
+    }
+}

@@ -99,6 +99,8 @@ pub mod consensus;
 pub mod coordinator;
 pub mod data;
 pub mod engine;
+#[deny(missing_docs)]
+pub mod fragment;
 pub mod harness;
 #[deny(missing_docs)]
 pub mod membership;

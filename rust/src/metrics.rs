@@ -75,6 +75,12 @@ pub struct Recorder {
     /// or a member departure (stranded workers regroup without waiting
     /// for fire-time sub-group all-reduces).
     pub prague_regroups: u64,
+    /// Sharded gossip: parameter bytes *not* sent versus a full-vector
+    /// exchange with the same message count (zero in passthrough mode).
+    pub shard_bytes_saved: u64,
+    /// Sharded gossip: summed per-member shard staleness (rounds since
+    /// each participant last refreshed the scheduled shard).
+    pub shard_staleness: u64,
 }
 
 impl Recorder {

@@ -26,11 +26,26 @@ impl LayoutEntry {
 /// A worker's flat parameter (or gradient) vector.
 pub type ParamVec = Vec<f32>;
 
+/// Whether a leaf tensor name denotes a bias: exactly `b<digits>` (the
+/// manifest's per-layer `b0`, `b1`, …) or a `_b` suffix.  A bare
+/// `starts_with('b')` test is wrong — it classifies weight tensors like
+/// `beta` or `base` as biases and silently zero-initializes them.
+fn is_bias_leaf(leaf: &str) -> bool {
+    if leaf.ends_with("_b") {
+        return true;
+    }
+    match leaf.strip_prefix('b') {
+        Some(rest) => !rest.is_empty() && rest.bytes().all(|c| c.is_ascii_digit()),
+        None => false,
+    }
+}
+
 /// He-style init over a layout, padded with zeros to `padded_dim`.
 ///
 /// Weight tensors (rank ≥ 2 or names not matching bias/gain patterns) get
-/// `N(0, 2/fan_in)`; biases and positional tables get zeros; LayerNorm
-/// gains (`*_g`) get ones — mirroring `model.init_params` on the JAX side.
+/// `N(0, 2/fan_in)`; biases (`b<digits>` / `*_b`) and positional tables
+/// get zeros; LayerNorm gains (`*_g`) get ones — mirroring
+/// `model.init_params` on the JAX side.
 pub fn init_params(layout: &[LayoutEntry], padded_dim: usize, seed: u64) -> ParamVec {
     let mut rng = Rng64::seed_from_u64(seed);
     let mut out = Vec::with_capacity(padded_dim);
@@ -39,7 +54,7 @@ pub fn init_params(layout: &[LayoutEntry], padded_dim: usize, seed: u64) -> Para
         let n = entry.numel();
         if leaf.ends_with("_g") {
             out.extend(std::iter::repeat(1.0f32).take(n));
-        } else if leaf.starts_with('b') || leaf.ends_with("_b") || leaf == "pos" {
+        } else if is_bias_leaf(leaf) || leaf == "pos" {
             out.extend(std::iter::repeat(0.0f32).take(n));
         } else {
             let fan_in = entry.shape[0].max(1);
@@ -129,6 +144,27 @@ mod tests {
         assert!(p[48..].iter().all(|&v| v == 0.0));
         // weights non-degenerate
         assert!(l2_norm(&p[..32]) > 0.1);
+    }
+
+    #[test]
+    fn b_prefixed_weights_are_not_biases() {
+        // regression: a weight tensor named `beta` (or `l0.base`) used to
+        // match the bias pattern and silently train from zeros
+        let layout = vec![
+            LayoutEntry { name: "beta".into(), shape: vec![8, 4] },
+            LayoutEntry { name: "l0.base".into(), shape: vec![4, 4] },
+            LayoutEntry { name: "b1".into(), shape: vec![4] },
+            LayoutEntry { name: "l0.attn_b".into(), shape: vec![4] },
+        ];
+        let p = init_params(&layout, 64, 1);
+        assert!(l2_norm(&p[..32]) > 0.1, "`beta` must get He init, not zeros");
+        assert!(l2_norm(&p[32..48]) > 0.1, "`base` must get He init, not zeros");
+        assert!(p[48..52].iter().all(|&v| v == 0.0), "`b1` stays a zero-init bias");
+        assert!(p[52..56].iter().all(|&v| v == 0.0), "`_b` suffix stays a zero-init bias");
+        // the classifier itself: digits-only after `b`, or a `_b` suffix
+        assert!(is_bias_leaf("b0") && is_bias_leaf("b12") && is_bias_leaf("attn_b"));
+        assert!(!is_bias_leaf("beta") && !is_bias_leaf("base") && !is_bias_leaf("b"));
+        assert!(!is_bias_leaf("b2x") && !is_bias_leaf("w0"));
     }
 
     #[test]

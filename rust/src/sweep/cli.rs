@@ -143,7 +143,7 @@ pub struct Suite {
     pub build: fn(&BenchArgs) -> Result<SweepSpec>,
 }
 
-/// The eleven suites, in paper order.
+/// The twelve suites, in paper order.
 pub fn registry() -> Vec<Suite> {
     vec![
         Suite {
@@ -211,6 +211,12 @@ pub fn registry() -> Vec<Suite> {
             paper: "ROADMAP open-world grid",
             summary: "sampled participation over 1e5-1e6 logical users",
             build: suites::membership,
+        },
+        Suite {
+            name: "fragment",
+            paper: "ROADMAP sharded gossip",
+            summary: "MB to target accuracy: full vs fragmented exchange",
+            build: suites::fragment,
         },
     ]
 }
@@ -280,14 +286,15 @@ mod tests {
     use super::*;
 
     #[test]
-    fn registry_has_eleven_unique_suites() {
+    fn registry_has_twelve_unique_suites() {
         let names: Vec<&str> = registry().iter().map(|s| s.name).collect();
-        assert_eq!(names.len(), 11);
+        assert_eq!(names.len(), 12);
         let set: std::collections::BTreeSet<&str> = names.iter().copied().collect();
         assert_eq!(set.len(), names.len(), "suite names must be unique");
         assert!(find_suite("partition").is_some());
         assert!(find_suite("trace").is_some());
         assert!(find_suite("membership").is_some());
+        assert!(find_suite("fragment").is_some());
         assert!(find_suite("nope").is_none());
     }
 

@@ -87,6 +87,8 @@ impl RunRecord {
         m.insert("workers_left".into(), num(r.workers_left as f64));
         m.insert("rounds_sampled".into(), num(r.rounds_sampled as f64));
         m.insert("prague_regroups".into(), num(r.prague_regroups as f64));
+        m.insert("shard_bytes_saved".into(), num(r.shard_bytes_saved as f64));
+        m.insert("shard_staleness".into(), num(r.shard_staleness as f64));
         m.insert("loss_q25".into(), num(r.loss_at_fraction(0.25) as f64));
         m.insert("loss_q50".into(), num(r.loss_at_fraction(0.5) as f64));
         m.insert("loss_q100".into(), num(r.loss_at_fraction(1.0) as f64));

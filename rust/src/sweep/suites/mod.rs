@@ -3,11 +3,13 @@
 //! grid) as a ~30-line [`SweepSpec`] declaration.  The registry lives in
 //! [`crate::sweep::cli`].
 
+mod fragment;
 mod membership;
 mod paper;
 mod scenarios;
 mod trace;
 
+pub use fragment::fragment;
 pub use membership::membership;
 pub use paper::{ablation, accuracy, fixedk, loss_curves, speedup, timebudget};
 pub use scenarios::{churn, partition, straggler};

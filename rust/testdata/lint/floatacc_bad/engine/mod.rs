@@ -1,0 +1,15 @@
+//! Fixture: float turbofish reductions over hash containers must be
+//! flagged even when the container itself carries a reasoned pragma.
+
+// pallas-lint: allow(no-unordered-iteration) — fixture: the hash map itself is under test
+use std::collections::HashMap;
+
+// pallas-lint: allow(no-unordered-iteration) — fixture: the hash map itself is under test
+pub fn mean_loss(losses: &HashMap<usize, f32>) -> f32 {
+    losses.values().sum::<f32>() / losses.len() as f32
+}
+
+// pallas-lint: allow(no-unordered-iteration) — fixture: the hash map itself is under test
+pub fn total_weight(weights: &HashMap<usize, f64>) -> f64 {
+    weights.values().copied().sum::<f64>()
+}

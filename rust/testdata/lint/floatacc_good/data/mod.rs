@@ -1,0 +1,7 @@
+//! Fixture: float hash reductions outside the ordered scopes are fine
+//! (batch assembly does not feed the event stream).
+use std::collections::HashMap;
+
+pub fn checksum(m: &HashMap<usize, f32>) -> f32 {
+    m.values().sum::<f32>()
+}

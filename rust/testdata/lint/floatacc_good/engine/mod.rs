@@ -1,0 +1,23 @@
+//! Fixture: ordered-container, integer and test-only reductions are all
+//! fine in an event-ordered module.
+use std::collections::BTreeMap;
+
+pub fn mean_loss(losses: &BTreeMap<usize, f32>) -> f32 {
+    losses.values().sum::<f32>() / losses.len() as f32
+}
+
+// pallas-lint: allow(no-unordered-iteration) — fixture: integer counts are order-independent
+pub fn event_count(counts: &std::collections::HashMap<usize, u64>) -> u64 {
+    counts.values().sum::<u64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn scratch_float_sums_are_allowed_in_tests() {
+        let m: HashMap<usize, f32> = HashMap::new();
+        assert_eq!(m.values().sum::<f32>(), 0.0);
+    }
+}

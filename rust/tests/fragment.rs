@@ -1,0 +1,243 @@
+//! Sharded-gossip integration invariants: fragmented runs must stay
+//! byte-identical across reruns and sweep thread counts under the
+//! adversarial churn + straggler setting, a `count = k` round-robin
+//! cycle must equal one full-vector gossip bitwise, any `count = 1`
+//! `f32` config must ride the legacy passthrough path byte-for-byte,
+//! singleton groups must move (and charge) nothing, and the sharded
+//! exchange must cut parameter bytes by the shard factor with the
+//! savings meter accounting for every withheld byte.
+
+use dsgd_aau::adapt::AdaptConfig;
+use dsgd_aau::algorithms::AlgorithmKind;
+use dsgd_aau::churn::{ChurnConfig, ChurnKind};
+use dsgd_aau::config::{BackendKind, ExperimentConfig};
+use dsgd_aau::consensus::GroupWeights;
+use dsgd_aau::coordinator::{build_backend, run_experiment, run_sweep_with_threads};
+use dsgd_aau::engine::Engine;
+use dsgd_aau::fragment::{FragmentConfig, ShardSchedule, WireEncoding};
+use dsgd_aau::sim::{StragglerKind, StragglerModel};
+use dsgd_aau::topology::TopologyKind;
+
+fn fragments(count: usize, schedule: ShardSchedule, encoding: WireEncoding) -> FragmentConfig {
+    FragmentConfig { count, schedule, encoding, seed: None }
+}
+
+/// The determinism suite's adversarial setting (churn + correlated
+/// stragglers + partition-aware adaptivity), fragmented.
+fn adversarial_cfg(alg: AlgorithmKind, frag: FragmentConfig) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = format!("fragment_{}", alg.token());
+    cfg.num_workers = 10;
+    cfg.algorithm = alg;
+    cfg.backend = BackendKind::Quadratic;
+    cfg.topology = TopologyKind::Random { p: 0.3, seed: 11 };
+    cfg.churn = ChurnConfig {
+        kind: ChurnKind::PartitionHeal { period: 2.0, downtime: 0.75 },
+        seed: Some(5),
+    };
+    cfg.adapt = AdaptConfig {
+        allow_partitions: true,
+        partition_aware: true,
+        detection_latency: 0.1.into(),
+        heal_restart: true,
+    };
+    cfg.straggler = StragglerModel {
+        kind: StragglerKind::GilbertElliott { mean_fast: 2.0, mean_slow: 0.5 },
+        slowdown: 8.0,
+        seed: Some(4),
+        ..StragglerModel::default()
+    };
+    cfg.max_iterations = u64::MAX / 2;
+    cfg.time_budget = Some(6.0);
+    cfg.eval_every = 25;
+    cfg.eval_every_seconds = Some(0.5);
+    cfg.mean_compute = 0.01;
+    cfg.seed = 4242;
+    cfg.fragments = frag;
+    cfg
+}
+
+/// Quiet closed-world setting for direct engine-primitive tests.
+fn quiet_cfg(frag: FragmentConfig) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "fragment_quiet".into();
+    cfg.num_workers = 6;
+    cfg.backend = BackendKind::Quadratic;
+    cfg.topology = TopologyKind::Random { p: 0.4, seed: 11 };
+    cfg.mean_compute = 0.01;
+    cfg.seed = 77;
+    cfg.fragments = frag;
+    cfg
+}
+
+fn engine_of(cfg: &ExperimentConfig) -> Engine {
+    Engine::try_from_config(cfg, build_backend(cfg).unwrap()).unwrap()
+}
+
+#[test]
+fn fragmented_reruns_are_byte_identical_for_all_algorithms() {
+    for alg in AlgorithmKind::all() {
+        let c = adversarial_cfg(alg, fragments(3, ShardSchedule::StalestFirst, WireEncoding::F32));
+        let a = run_experiment(&c).unwrap();
+        let b = run_experiment(&c).unwrap();
+        assert_eq!(
+            a.recorder.csv_string(),
+            b.recorder.csv_string(),
+            "{}: fragmented metrics CSV must be byte-identical across reruns",
+            alg.label()
+        );
+        assert_eq!(a.recorder.total_bytes(), b.recorder.total_bytes(), "{}", alg.label());
+        assert_eq!(a.recorder.shard_bytes_saved, b.recorder.shard_bytes_saved, "{}", alg.label());
+        assert_eq!(a.recorder.shard_staleness, b.recorder.shard_staleness, "{}", alg.label());
+        // the scenario must actually shard the exchange, or this guards a
+        // passthrough run only
+        assert!(a.recorder.shard_bytes_saved > 0, "{}: nothing was sharded", alg.label());
+    }
+    // the f16 wire is deterministic too (round-to-nearest-even is exact)
+    let c = adversarial_cfg(
+        AlgorithmKind::DsgdAau,
+        fragments(3, ShardSchedule::SeededRandom, WireEncoding::F16),
+    );
+    let a = run_experiment(&c).unwrap();
+    let b = run_experiment(&c).unwrap();
+    assert_eq!(a.recorder.csv_string(), b.recorder.csv_string());
+}
+
+#[test]
+fn fragmented_sweep_thread_count_does_not_change_results() {
+    let cfgs: Vec<ExperimentConfig> = AlgorithmKind::all()
+        .into_iter()
+        .map(|alg| {
+            adversarial_cfg(alg, fragments(3, ShardSchedule::StalestFirst, WireEncoding::F32))
+        })
+        .collect();
+    let one = run_sweep_with_threads(cfgs.clone(), 1);
+    let four = run_sweep_with_threads(cfgs, 4);
+    assert_eq!(one.len(), four.len());
+    for ((c1, r1), (_c4, r4)) in one.iter().zip(&four) {
+        let (s1, s4) = (r1.as_ref().unwrap(), r4.as_ref().unwrap());
+        assert_eq!(
+            s1.recorder.csv_string(),
+            s4.recorder.csv_string(),
+            "{}: 1 vs 4 threads",
+            c1.algorithm.label()
+        );
+        assert_eq!(s1.recorder.total_bytes(), s4.recorder.total_bytes());
+    }
+}
+
+#[test]
+fn count_k_round_robin_cycle_equals_full_vector_gossip_bitwise() {
+    // One full-vector mix and a k-step round-robin cycle apply identical
+    // per-coordinate weighted sums (the mix is coordinate-wise and the
+    // shard ranges partition [0, dim)), so the results must agree
+    // *bitwise*, not just approximately.
+    let k = 4;
+    let mut full = engine_of(&quiet_cfg(FragmentConfig::default()));
+    let mut frag =
+        engine_of(&quiet_cfg(fragments(k, ShardSchedule::RoundRobin, WireEncoding::F32)));
+    let members: Vec<usize> = (0..6).collect();
+    for w in &members {
+        assert_eq!(
+            full.core().params_of(*w),
+            frag.core().params_of(*w),
+            "engines must start from the same init"
+        );
+    }
+    let gw = GroupWeights::uniform(&members);
+    full.core_mut().gossip(&gw);
+    for _ in 0..k {
+        frag.core_mut().gossip(&gw);
+    }
+    for w in &members {
+        assert_eq!(
+            full.core().params_of(*w),
+            frag.core().params_of(*w),
+            "worker {w}: sharded cycle diverged from the full-vector mix"
+        );
+    }
+    // the cycle charged k shard-sized rounds = one full-vector round
+    assert_eq!(
+        full.core().recorder.param_bytes,
+        frag.core().recorder.param_bytes,
+        "a complete cycle moves exactly the full vector's bytes"
+    );
+}
+
+#[test]
+fn any_count_one_f32_config_rides_the_passthrough_path() {
+    // Not just the default: *any* count=1 f32 section (exotic schedule,
+    // explicit seed) must stay byte-identical to the unset config.
+    let alg = AlgorithmKind::DsgdAau;
+    let base = adversarial_cfg(alg, FragmentConfig::default());
+    let mut odd = base.clone();
+    odd.fragments = FragmentConfig {
+        count: 1,
+        schedule: ShardSchedule::StalestFirst,
+        encoding: WireEncoding::F32,
+        seed: Some(9),
+    };
+    let a = run_experiment(&base).unwrap();
+    let b = run_experiment(&odd).unwrap();
+    assert_eq!(a.recorder.csv_string(), b.recorder.csv_string());
+    assert_eq!(a.recorder.total_bytes(), b.recorder.total_bytes());
+    assert_eq!(b.recorder.shard_bytes_saved, 0, "passthrough must not touch the shard meters");
+    assert_eq!(b.recorder.shard_staleness, 0);
+}
+
+#[test]
+fn singleton_group_gossip_moves_and_charges_nothing() {
+    // Regression: a 1-member group used to pay `2 · active_edges = 0`
+    // messages but still ran the mix; now both gossip entry points
+    // early-out before touching params or the byte meter.
+    let mut eng = engine_of(&quiet_cfg(FragmentConfig::default()));
+    let core = eng.core_mut();
+    let before = core.params_of(2).to_vec();
+    core.gossip(&GroupWeights::uniform(&[2]));
+    core.gossip_costed(&GroupWeights::uniform(&[2]), 5);
+    core.gossip(&GroupWeights::uniform(&[]));
+    assert_eq!(core.recorder.param_bytes, 0, "singleton gossip must charge zero bytes");
+    assert_eq!(core.recorder.gossip_rounds, 0);
+    assert_eq!(core.params_of(2), before.as_slice());
+}
+
+#[test]
+fn sharded_exchange_cuts_param_bytes_by_the_shard_factor() {
+    // Fixed iteration count + static topology: the gossip structure is
+    // identical across configs, so byte totals compare exactly.  With
+    // k = 4 equal shards (quadratic dim 64) the sharded run moves 1/4 of
+    // the full exchange — comfortably past the required 2x — and the
+    // savings meter accounts for every withheld byte.
+    let run = |frag: FragmentConfig| {
+        let mut c = quiet_cfg(frag);
+        c.num_workers = 8;
+        c.algorithm = AlgorithmKind::DsgdSync;
+        c.max_iterations = 120;
+        c.eval_every = 30;
+        run_experiment(&c).unwrap()
+    };
+    let full = run(FragmentConfig::default());
+    let frag = run(fragments(4, ShardSchedule::RoundRobin, WireEncoding::F32));
+    let half = run(fragments(4, ShardSchedule::StalestFirst, WireEncoding::F16));
+    assert_eq!(full.iterations, frag.iterations, "fixed-iteration runs must match in length");
+    assert!(full.final_loss().is_finite() && frag.final_loss().is_finite());
+    assert!(
+        full.recorder.param_bytes >= 2 * frag.recorder.param_bytes,
+        "sharded exchange must at least halve param bytes: full={} frag={}",
+        full.recorder.param_bytes,
+        frag.recorder.param_bytes
+    );
+    assert!(
+        full.recorder.param_bytes >= 2 * half.recorder.param_bytes * 2,
+        "f16 shards must halve the bytes again: full={} f16={}",
+        full.recorder.param_bytes,
+        half.recorder.param_bytes
+    );
+    // conservation: moved + withheld = what the full exchange moves
+    assert_eq!(
+        frag.recorder.param_bytes + frag.recorder.shard_bytes_saved,
+        full.recorder.param_bytes,
+        "the savings meter must account for every withheld byte"
+    );
+    assert!(frag.recorder.shard_staleness > 0, "round-robin shards must retire staleness");
+}

@@ -16,7 +16,7 @@ fn rules_of(findings: &[Finding]) -> Vec<&str> {
 }
 
 #[test]
-fn registry_lists_five_rules() {
+fn registry_lists_six_rules() {
     let names: Vec<&str> = registry().iter().map(|r| r.name).collect();
     assert_eq!(
         names,
@@ -26,6 +26,7 @@ fn registry_lists_five_rules() {
             "no-ambient-rng",
             "no-panic-in-engine",
             "strict-config-parse",
+            "no-float-accumulation-order",
         ]
     );
 }
@@ -77,6 +78,18 @@ fn strict_config_parse_requires_unknown_key_rejection() {
     assert_eq!(bad[0].lexeme, "from_json");
     // direct bail!("unknown …") and apply_kv delegation both pass
     assert!(fixture("strict_good").is_empty());
+}
+
+#[test]
+fn float_accumulation_order_scoped_to_ordered_modules() {
+    let bad = fixture("floatacc_bad");
+    assert_eq!(rules_of(&bad), ["no-float-accumulation-order"; 2], "{bad:?}");
+    let lexemes: Vec<&str> = bad.iter().map(|f| f.lexeme.as_str()).collect();
+    assert_eq!(lexemes, ["sum::<f32>", "sum::<f64>"]);
+    assert!(bad.iter().all(|f| f.file == "engine/mod.rs"));
+    // ordered containers, integer reductions, test code and out-of-scope
+    // modules: all clean
+    assert!(fixture("floatacc_good").is_empty());
 }
 
 #[test]
@@ -137,5 +150,5 @@ fn json_report_is_parseable_and_complete() {
             assert!(f.get(key).is_some(), "finding missing {key}");
         }
     }
-    assert_eq!(j.get("rules").and_then(|v| v.as_arr()).map(|r| r.len()), Some(5));
+    assert_eq!(j.get("rules").and_then(|v| v.as_arr()).map(|r| r.len()), Some(6));
 }
