@@ -181,7 +181,7 @@ impl PartitionMonitor {
         let labels = component_labels(g);
         let components = count_components(&labels);
         let mut distinct = latencies.clone();
-        distinct.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        distinct.sort_by(f64::total_cmp);
         distinct.dedup();
         let n = latencies.len();
         let mut hist = VecDeque::new();

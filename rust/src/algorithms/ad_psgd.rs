@@ -7,6 +7,13 @@
 //! highlights).  Stragglers are never waited for, but their parameters go
 //! stale and keep getting mixed in, which is exactly the failure mode
 //! DSGD-AAU targets (paper Fig. 1b).
+//!
+//! **Waiting discipline:** none — no worker ever waits for another; the
+//! only serialization is the pairwise atomic-average busy horizon.
+//! **Staleness semantics:** unbounded — an arbitrarily old neighbor is a
+//! legal averaging partner, and in-flight gradients land on parameters
+//! that moved underneath them.  Contrast [`super::HopBss`], which gates
+//! every exchange on an explicit iteration-lag bound.
 
 use super::UpdateRule;
 use crate::engine::EngineCore;

@@ -11,6 +11,12 @@
 //! We store the de-biased estimate `x = w/s` directly; a push updates the
 //! receiver as `x_r ← (s_r x_r + δ x_w)/(s_r + δ)`, `s_r ← s_r + δ` with
 //! `δ = s_w/2`, and the sender just halves `s_w` (its `x` is unchanged).
+//!
+//! **Waiting discipline:** none — pushes are fire-and-forget into the
+//! receiver's inbox; nobody blocks on anybody.
+//! **Staleness semantics:** unbounded — inbox messages are absorbed
+//! whenever the receiver next finishes a gradient, however long that
+//! takes, and carry no lag bound or expiry.
 
 use super::UpdateRule;
 use crate::engine::EngineCore;

@@ -24,6 +24,13 @@
 //! so `stall_fallbacks` stays at zero during partitioned phases — the
 //! fallback remains only as a guard while detection latency makes a
 //! worker's view lag the live graph.
+//!
+//! **Waiting discipline:** set-based and *adaptive* — finished workers
+//! accumulate until the waiting set holds a novel Pathsearch edge, so
+//! the effective group size is chosen by epoch coverage, not a knob.
+//! **Staleness semantics:** zero within each firing group; cross-group
+//! staleness is bounded in expectation by the epoch structure (every
+//! worker must be absorbed before the epoch can complete).
 
 use super::UpdateRule;
 use crate::consensus::GroupWeights;

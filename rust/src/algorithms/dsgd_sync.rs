@@ -4,6 +4,11 @@
 //! barrier fires one full-graph Metropolis consensus update.  The barrier
 //! makes each round as slow as the slowest worker — this is the
 //! straggler-bound baseline that Figure 5's speedups are measured against.
+//!
+//! **Waiting discipline:** a global barrier (per observed component in
+//! partition-aware mode) — everyone waits for everyone.
+//! **Staleness semantics:** zero — every consumed update is from the
+//! current iteration; the price of that freshness is the straggler bound.
 
 use super::UpdateRule;
 use crate::engine::EngineCore;

@@ -8,6 +8,12 @@
 //! (too small → slow information diffusion, too large → stragglers are
 //! back in the critical path), whereas Pathsearch sizes groups by what
 //! the epoch still needs.  `bench fixedk` sweeps k.
+//!
+//! **Waiting discipline:** set-based with a fixed quota — each round
+//! waits for the first `k` finishers (clamped to the observed component).
+//! **Staleness semantics:** zero within a round's group, but the N−k
+//! excluded workers' parameters age without bound between the rounds
+//! that happen to include them.
 
 use super::UpdateRule;
 use crate::consensus::GroupWeights;

@@ -1,0 +1,288 @@
+//! Hop-BSS: bounded-staleness scheduling (Hop, arxiv 1902.01064).
+//!
+//! **Waiting discipline:** queue-based, not set-based.  Nobody waits for
+//! a *set* of peers (DSGD-AAU) or a barrier (DSGD); instead every
+//! directed link carries a token queue ([`crate::stale::TokenQueue`]) and
+//! each worker keeps a local iteration clock.  A finished worker
+//! exchanges with an in-bound neighbor immediately; it waits only when
+//! every outgoing queue is full — the producer-blocking case — and even
+//! then the skip and backup policies usually fire first.
+//!
+//! **Staleness semantics:** an update is consumed only while the
+//! producer/consumer iteration lag is at most the configured bound `s`
+//! (every `gossip_pair` below is gated on it).  A worker whose entire
+//! neighborhood fell more than `s` behind may *skip* (advance alone)
+//! while queue room remains; once saturated, a designated backup clones
+//! the straggler's role, and failing that the worker parks until the
+//! laggard's clock advances (the stall lands in
+//! `Recorder::queue_block_time`).  A worker that itself fell more than
+//! `s` behind its whole neighborhood drops its overdue gradient and
+//! pulls the freshest neighbor's parameters — Hop discards overdue work
+//! rather than consuming it stale.
+//!
+//! All bounded-staleness bookkeeping (clocks, queues, parked workers,
+//! observed-slow evidence) lives in [`crate::stale::StaleState`], owned
+//! by the engine; this rule drives it and performs the parameter
+//! movement.  Exchanges are charged like AD-PSGD pairs and sized by
+//! [`EngineCore::round_wire_bytes`], so the rule composes with the
+//! fragment wire unchanged.
+
+use super::UpdateRule;
+use crate::engine::EngineCore;
+use crate::WorkerId;
+
+/// Hop-BSS rule state: the atomic-exchange busy horizons.  Clocks,
+/// queues, and policy knobs live in the engine's [`crate::stale`] state.
+#[derive(Debug, Default)]
+pub struct HopBss {
+    busy_until: Vec<f64>,
+}
+
+impl HopBss {
+    /// Fresh rule; scheduling randomness comes from the engine's
+    /// `seed_for("stale")` stream.
+    pub fn new() -> Self {
+        HopBss { busy_until: Vec::new() }
+    }
+
+    /// Neighbor with the highest iteration clock (first wins ties).
+    /// Callers guarantee `nbrs` is non-empty.
+    fn freshest(core: &EngineCore, nbrs: &[WorkerId]) -> WorkerId {
+        let mut best = nbrs[0];
+        for &r in &nbrs[1..] {
+            if core.stale.clock(r) > core.stale.clock(best) {
+                best = r;
+            }
+        }
+        best
+    }
+
+    /// Bounded-staleness exchange: drain both token queues, record the
+    /// consumed staleness, average the pair, and restart the initiator
+    /// `w` after the (fragment-sized) exchange delay.
+    fn exchange(&mut self, core: &mut EngineCore, w: WorkerId, r: WorkerId) {
+        let staleness = core.stale.consume_exchange(w, r);
+        debug_assert!(staleness <= core.stale.config().bound, "consumed lag {staleness} > bound");
+        core.recorder.note_staleness(staleness);
+        core.gossip_pair(w, r);
+        let now = core.now();
+        let start = now.max(self.busy_until[w]).max(self.busy_until[r]);
+        let dur = core.comm.gossip_time(2, core.round_wire_bytes());
+        let end = start + dur;
+        self.busy_until[w] = end;
+        self.busy_until[r] = end;
+        core.restart_after(w, end - now);
+    }
+
+    /// One-way parameter pull `donor -> sink` (resync and backup-clone
+    /// paths): the sink consumes the donor's *current* state, so the
+    /// consumed staleness is zero; its clock jumps to the donor's and its
+    /// queues drain.
+    fn pull(core: &mut EngineCore, sink: WorkerId, donor: WorkerId) {
+        let v = core.params_of(donor).to_vec();
+        core.set_params(sink, v);
+        core.charge_param_bytes(core.param_bytes());
+        let now = core.now();
+        core.stale.resync(sink, donor, now);
+        core.recorder.note_staleness(0);
+    }
+
+    /// Release every waiter parked on `target` after its clock moved:
+    /// account the stall, then exchange (back in bound), re-park (still
+    /// out of bound), or restart (target lost / leapfrogged).
+    fn release_waiters(&mut self, core: &mut EngineCore, target: WorkerId) {
+        let now = core.now();
+        let released = core.stale.release(target, now);
+        for (v, waited) in released {
+            core.recorder.queue_block_time += waited;
+            if !core.is_active(v) {
+                continue;
+            }
+            let bound = core.stale.config().bound as i64;
+            let lag = core.stale.lag(v, target);
+            if core.is_active(target) && lag.abs() <= bound {
+                self.exchange(core, v, target);
+            } else if core.is_active(target) && lag > bound {
+                core.stale.park(v, target, now);
+            } else {
+                // Target vacated, or a resync jumped it past the waiter:
+                // let the waiter re-decide from its own event.
+                core.restart_after(v, 0.0);
+            }
+        }
+    }
+
+    /// Backup activation: the first designated backup slot clones the
+    /// straggler's role at `w`'s frontier.  Returns `false` when no
+    /// usable backup slot exists (caller falls through to blocking).
+    fn activate_backup(&mut self, core: &mut EngineCore, w: WorkerId, straggler: WorkerId) -> bool {
+        let slots = core.stale.backup_slots();
+        let b = match slots
+            .into_iter()
+            .find(|&b| b != w && b != straggler && core.is_active(b) && !core.stale.is_parked(b))
+        {
+            Some(b) => b,
+            None => return false,
+        };
+        // The backup adopts the caller's current parameters (a fresh
+        // pull: staleness zero, clock jumps to w's) ...
+        Self::pull(core, b, w);
+        // ... and reseeds the straggler from its own now-frontier state,
+        // so the fleet stops accruing token debt against it.  The
+        // straggler's in-flight gradient stays scheduled and lands on the
+        // reseeded parameters — standard async semantics.
+        Self::pull(core, straggler, b);
+        core.recorder.backup_activations += 1;
+        // Both clocks jumped to the frontier: waiters parked on either
+        // can proceed.
+        self.release_waiters(core, b);
+        self.release_waiters(core, straggler);
+        // w has an in-bound partner again — exchange with the clone.
+        self.exchange(core, w, b);
+        true
+    }
+}
+
+impl UpdateRule for HopBss {
+    fn name(&self) -> &'static str {
+        "Hop-BSS"
+    }
+
+    fn on_start(&mut self, core: &mut EngineCore) {
+        self.busy_until = vec![0.0; core.num_workers()];
+    }
+
+    fn on_ready(&mut self, w: WorkerId, core: &mut EngineCore) {
+        let now = core.now();
+        let nbrs = core.observed_neighbors(w);
+        let (bound, allow_skip, allow_backup) = {
+            let cfg = core.stale.config();
+            (cfg.bound, cfg.skip, cfg.backup)
+        };
+
+        // Fell more than `s` behind the whole neighborhood?  The local
+        // gradient is `s`+ iterations overdue — Hop drops it rather than
+        // let neighbors consume it stale.  Pull the freshest neighbor's
+        // parameters (one full-vector message) and rejoin at its clock.
+        if !nbrs.is_empty() && core.stale.in_bound(w, &nbrs).is_empty() {
+            let f = Self::freshest(core, &nbrs);
+            if core.stale.lag(f, w) > bound as i64 {
+                core.discard_stash(w);
+                Self::pull(core, w, f);
+                core.advance_iteration();
+                // The clock jump can bring waiters parked on `w` back in
+                // bound.
+                self.release_waiters(core, w);
+                let dur = core.comm.gossip_time(2, core.param_bytes());
+                let start = now.max(self.busy_until[w]).max(self.busy_until[f]);
+                let end = start + dur;
+                self.busy_until[w] = end;
+                self.busy_until[f] = end;
+                core.restart_after(w, end - now);
+                return;
+            }
+        }
+
+        // Normal local step: apply the gradient, advance the clock, and
+        // publish one token into every outgoing queue.
+        core.apply_gradient(w);
+        core.stale.advance(w, now, &nbrs);
+        core.advance_iteration();
+        self.release_waiters(core, w);
+
+        if nbrs.is_empty() {
+            // Solitary worker: keep training alone (same liveness
+            // argument as AD-PSGD — a shattered fleet must still advance
+            // k toward max_iterations).
+            core.restart_after(w, 0.0);
+            return;
+        }
+
+        let in_bound = core.stale.in_bound(w, &nbrs);
+        if !in_bound.is_empty() {
+            // Stalest-link-first: drain the fullest token queue (ties
+            // broken by the seeded scheduling stream).
+            let scores: Vec<u64> = in_bound
+                .iter()
+                .map(|&r| core.stale.occupancy(w, r) + core.stale.occupancy(r, w))
+                .collect();
+            let best = scores.iter().copied().max().unwrap_or(0);
+            let tied: Vec<WorkerId> = in_bound
+                .iter()
+                .copied()
+                .zip(scores)
+                .filter(|&(_, s)| s == best)
+                .map(|(r, _)| r)
+                .collect();
+            let r = tied[core.stale.pick(tied.len())];
+            self.exchange(core, w, r);
+            return;
+        }
+
+        // The whole neighborhood is more than `s` behind.  The nearest
+        // laggard (highest clock) is the one worth waiting on.
+        let r_star = Self::freshest(core, &nbrs);
+
+        // Skip-iteration: advance alone while some outgoing queue still
+        // has room.
+        if allow_skip && !core.stale.producers_saturated(w, &nbrs) {
+            core.recorder.stale_skips += 1;
+            core.restart_after(w, 0.0);
+            return;
+        }
+
+        // Backup activation: requires the laggard's observed slow state
+        // to have persisted past the threshold (parked peers are stalled,
+        // not slow, and are never cloned over).
+        if allow_backup
+            && core.stale.observed_slow(r_star, now)
+            && self.activate_backup(core, w, r_star)
+        {
+            return;
+        }
+
+        // Producer blocks: every queue is full and no policy applies.
+        // The gossip is deferred in virtual time — `w` parks until
+        // `r_star`'s clock advances (released from `r_star`'s next
+        // `on_ready`, a leave, or a view change).
+        core.stale.park(w, r_star, now);
+    }
+
+    fn on_view_changed(&mut self, core: &mut EngineCore) {
+        // Parked waiters may be blocked on peers the new view no longer
+        // reaches: release everyone, account the stall, and let each
+        // re-decide against the new observed neighborhood.
+        let now = core.now();
+        for (v, waited) in core.stale.release_all(now) {
+            core.recorder.queue_block_time += waited;
+            if core.is_active(v) {
+                core.restart_after(v, 0.0);
+            }
+        }
+    }
+
+    fn on_worker_leave(&mut self, w: WorkerId, core: &mut EngineCore) {
+        self.busy_until[w] = 0.0;
+        // Waiters parked on the leaver would never be released by its
+        // clock again.
+        let now = core.now();
+        for (v, waited) in core.stale.release(w, now) {
+            core.recorder.queue_block_time += waited;
+            if core.is_active(v) {
+                core.restart_after(v, 0.0);
+            }
+        }
+        core.stale.on_leave(w);
+    }
+
+    fn on_worker_join(&mut self, w: WorkerId, core: &mut EngineCore) {
+        self.busy_until[w] = 0.0;
+        // The engine warm-started the joiner's parameters from its
+        // observed neighborhood; start its clock at the same frontier so
+        // state and clock agree.
+        let nbrs = core.observed_neighbors(w);
+        let clocks: Vec<u64> = nbrs.iter().map(|&r| core.stale.clock(r)).collect();
+        let now = core.now();
+        core.stale.on_join(w, now, &clocks);
+    }
+}

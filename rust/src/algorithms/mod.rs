@@ -1,4 +1,5 @@
-//! Decentralized update rules: DSGD-AAU plus the paper's baselines.
+//! Decentralized update rules: DSGD-AAU, the paper's baselines, and the
+//! Hop-style bounded-staleness adversary.
 //!
 //! Every algorithm reacts to one event — *worker w finished its local
 //! gradient computation at virtual time t* — and decides who gossips with
@@ -11,6 +12,7 @@ mod agp;
 mod dsgd_aau;
 mod dsgd_sync;
 mod fixed_k;
+mod hop_bss;
 mod prague;
 
 pub use ad_psgd::AdPsgd;
@@ -18,6 +20,7 @@ pub use agp::Agp;
 pub use dsgd_aau::DsgdAau;
 pub use dsgd_sync::DsgdSync;
 pub use fixed_k::FixedFastest;
+pub use hop_bss::HopBss;
 pub use prague::Prague;
 
 use crate::engine::EngineCore;
@@ -40,6 +43,11 @@ pub enum AlgorithmKind {
     /// Asynchronous gradient push [5]: push-sum averaging to one random
     /// neighbor (non-doubly-stochastic).
     Agp,
+    /// Hop-style bounded-staleness scheduling (arxiv 1902.01064):
+    /// per-directed-link token queues with a staleness bound, iteration
+    /// skipping, and backup-worker activation, configured by the
+    /// `"stale"` section.
+    HopBss,
     /// Fixed-fastest-k partial participation (manually tuned group size —
     /// the stale-synchronous prior art DSGD-AAU's adaptivity replaces).
     FixedK {
@@ -57,12 +65,13 @@ impl AlgorithmKind {
             "ad_psgd" => AlgorithmKind::AdPsgd,
             "prague" => AlgorithmKind::Prague,
             "agp" => AlgorithmKind::Agp,
+            "hop_bss" => AlgorithmKind::HopBss,
             s if s.starts_with("fixed_k") => {
                 let k = s.strip_prefix("fixed_k").unwrap().parse().unwrap_or(4);
                 AlgorithmKind::FixedK { k }
             }
             other => anyhow::bail!(
-                "unknown algorithm {other} (dsgd_aau|dsgd_sync|ad_psgd|prague|agp)"
+                "unknown algorithm {other} (dsgd_aau|dsgd_sync|ad_psgd|prague|agp|hop_bss)"
             ),
         })
     }
@@ -75,6 +84,7 @@ impl AlgorithmKind {
             AlgorithmKind::AdPsgd => "ad_psgd",
             AlgorithmKind::Prague => "prague",
             AlgorithmKind::Agp => "agp",
+            AlgorithmKind::HopBss => "hop_bss",
             AlgorithmKind::FixedK { .. } => "fixed_k",
         }
     }
@@ -87,16 +97,18 @@ impl AlgorithmKind {
             AlgorithmKind::AdPsgd => "AD-PSGD",
             AlgorithmKind::Prague => "Prague",
             AlgorithmKind::Agp => "AGP",
+            AlgorithmKind::HopBss => "Hop-BSS",
             AlgorithmKind::FixedK { .. } => "Fixed-k",
         }
     }
 
     /// All algorithms, in the paper's table order.
-    pub fn all() -> [AlgorithmKind; 5] {
+    pub fn all() -> [AlgorithmKind; 6] {
         [
             AlgorithmKind::Agp,
             AlgorithmKind::AdPsgd,
             AlgorithmKind::Prague,
+            AlgorithmKind::HopBss,
             AlgorithmKind::DsgdAau,
             AlgorithmKind::DsgdSync,
         ]
@@ -121,6 +133,7 @@ impl AlgorithmKind {
             AlgorithmKind::AdPsgd => Box::new(AdPsgd::new(seed)),
             AlgorithmKind::Prague => Box::new(Prague::new(prague_group, seed)),
             AlgorithmKind::Agp => Box::new(Agp::new(seed)),
+            AlgorithmKind::HopBss => Box::new(HopBss::new()),
             AlgorithmKind::FixedK { k } => Box::new(FixedFastest::new(*k)),
         }
     }

@@ -5,6 +5,11 @@
 //! finished their current local computation.  Random membership means a
 //! straggler regularly lands in a group and stalls it — the paper's
 //! explanation for Prague trailing DSGD-AAU (Appendix A).
+//!
+//! **Waiting discipline:** set-based with random membership — a group's
+//! partial all-reduce waits for its slowest member.
+//! **Staleness semantics:** zero within a group; groups run concurrently
+//! against each other without any cross-group freshness guarantee.
 
 use super::UpdateRule;
 use crate::consensus::GroupWeights;

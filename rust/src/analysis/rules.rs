@@ -39,7 +39,7 @@ pub struct RuleInfo {
 }
 
 /// Modules whose event/weight paths must iterate in a defined order.
-pub const ORDERED_SCOPES: [&str; 8] = [
+pub const ORDERED_SCOPES: [&str; 9] = [
     "engine",
     "algorithms",
     "membership",
@@ -48,7 +48,14 @@ pub const ORDERED_SCOPES: [&str; 8] = [
     "churn",
     "topology",
     "fragment",
+    "stale",
 ];
+
+/// Event-path modules that must degrade deterministically instead of
+/// panicking into the sweep's containment: the engine dispatch itself
+/// plus the subsystems it calls from inside event handlers.
+pub const PANIC_FREE_SCOPES: [&str; 5] =
+    ["engine", "adapt", "fragment", "membership", "stale"];
 
 /// Modules allowed to read the host clock (measurement harness + CLIs).
 pub const WALL_CLOCK_EXEMPT: [&str; 2] = ["sweep", "bin"];
@@ -77,8 +84,9 @@ pub fn registry() -> Vec<RuleInfo> {
         RuleInfo {
             name: "no-panic-in-engine",
             severity: Severity::Error,
-            description: "unwrap()/expect(/panic! in the engine (sweep panic containment \
-                          is a backstop, not a code path)",
+            description: "unwrap()/expect(/panic! in the event path (engine, adapt, \
+                          fragment, membership, stale — sweep panic containment is a \
+                          backstop, not a code path)",
         },
         RuleInfo {
             name: "strict-config-parse",
@@ -89,9 +97,10 @@ pub fn registry() -> Vec<RuleInfo> {
         RuleInfo {
             name: "no-float-accumulation-order",
             severity: Severity::Error,
-            description: "float sum/product over a hash container in event-ordered modules \
-                          (f32 addition is non-associative, so a randomized visit order \
-                          changes the result bitwise; reduce over a BTree/sorted Vec)",
+            description: "float sum/product (turbofish or annotation-typed) over a hash \
+                          container in event-ordered modules (f32 addition is \
+                          non-associative, so a randomized visit order changes the result \
+                          bitwise; reduce over a BTree/sorted Vec)",
         },
     ]
 }
@@ -330,7 +339,7 @@ fn no_ambient_rng(code: &[&Tok], out: &mut Vec<RawFinding>) {
 }
 
 fn no_panic_in_engine(top: &str, code: &[&Tok], out: &mut Vec<RawFinding>) {
-    if top != "engine" {
+    if !PANIC_FREE_SCOPES.contains(&top) {
         return;
     }
     for w in code.windows(2) {
@@ -342,7 +351,7 @@ fn no_panic_in_engine(top: &str, code: &[&Tok], out: &mut Vec<RawFinding>) {
                 t,
                 &format!("{}(", t.text),
                 format!(
-                    "{}() in the engine: dispatch paths must degrade deterministically, \
+                    "{}() in `{top}`: event-path code must degrade deterministically, \
                      not panic into the sweep's containment",
                     t.text
                 ),
@@ -353,9 +362,10 @@ fn no_panic_in_engine(top: &str, code: &[&Tok], out: &mut Vec<RawFinding>) {
                 "no-panic-in-engine",
                 t,
                 "panic!",
-                "panic! in the engine: dispatch paths must degrade deterministically, \
-                 not panic into the sweep's containment"
-                    .to_string(),
+                format!(
+                    "panic! in `{top}`: event-path code must degrade deterministically, \
+                     not panic into the sweep's containment"
+                ),
             );
         }
     }
@@ -409,47 +419,71 @@ fn strict_config_parse(code: &[&Tok], out: &mut Vec<RawFinding>) {
     }
 }
 
-/// Flag `sum::<f32>()` / `product::<f64>()` turbofish reductions inside
-/// a function that also names a `HashMap`/`HashSet` — the classic shape
-/// of "iterate the hash container, fold the floats", whose result
-/// depends on the randomized visit order even when the container itself
-/// carries a suppression pragma.  Scoped to the event-ordered modules;
-/// the enclosing-function window is a heuristic (annotation-typed
-/// `let s: f32 = it.sum()` is not matched), which keeps the rule free
-/// of false positives on ordered reductions.
+/// Flag float `sum()`/`product()` reductions inside a function that
+/// also names a `HashMap`/`HashSet` — the classic shape of "iterate the
+/// hash container, fold the floats", whose result depends on the
+/// randomized visit order even when the container itself carries a
+/// suppression pragma.  Two detection forms: the turbofish
+/// (`sum::<f32>()`) and the annotation-typed let binding
+/// (`let s: f32 = it.sum()`).  Scoped to the event-ordered modules; the
+/// enclosing-function window is a heuristic that keeps the rule free of
+/// false positives on ordered reductions.
 fn no_float_accumulation_order(top: &str, code: &[&Tok], out: &mut Vec<RawFinding>) {
     if !ORDERED_SCOPES.contains(&top) {
         return;
     }
+    // does the reduction's enclosing function also name a hash
+    // container? (conservative: same-fn co-occurrence)
+    let hashed_fn = |i: usize| {
+        let fn_start = code[..i].iter().rposition(|t| t.is_ident("fn")).unwrap_or(0);
+        code[fn_start..i].iter().any(|t| t.is_ident("HashMap") || t.is_ident("HashSet"))
+    };
+    let flag = |out: &mut Vec<RawFinding>, t: &Tok, lexeme: &str| {
+        push(
+            out,
+            "no-float-accumulation-order",
+            t,
+            lexeme,
+            format!(
+                "{lexeme} in a function using HashMap/HashSet in `{top}`: float \
+                 addition is non-associative, so the randomized visit order changes \
+                 the result bitwise; reduce over a BTree container or a sorted Vec"
+            ),
+        );
+    };
     for i in 0..code.len().saturating_sub(4) {
         let t = code[i];
-        let reduces = (t.is_ident("sum") || t.is_ident("product"))
+        let turbofish = (t.is_ident("sum") || t.is_ident("product"))
             && code[i + 1].is_punct(':')
             && code[i + 2].is_punct(':')
             && code[i + 3].is_punct('<')
             && (code[i + 4].is_ident("f32") || code[i + 4].is_ident("f64"));
-        if !reduces {
+        if turbofish && hashed_fn(i) {
+            let lexeme = format!("{}::<{}>", t.text, code[i + 4].text);
+            flag(out, t, &lexeme);
+        }
+    }
+    // annotation-typed form: `let s: f32 = …sum()` — the element type is
+    // named on the binding instead of the turbofish
+    for i in 0..code.len().saturating_sub(1) {
+        let t = code[i];
+        let bare_call = (t.is_ident("sum") || t.is_ident("product")) && code[i + 1].is_punct('(');
+        if !bare_call {
             continue;
         }
-        // the reduction is unordered if its enclosing function also
-        // names a hash container (conservative: same-fn co-occurrence)
-        let fn_start = code[..i].iter().rposition(|t| t.is_ident("fn")).unwrap_or(0);
-        let hashed = code[fn_start..i]
+        let stmt_start = code[..i]
             .iter()
-            .any(|t| t.is_ident("HashMap") || t.is_ident("HashSet"));
-        if hashed {
-            let lexeme = format!("{}::<{}>", t.text, code[i + 4].text);
-            push(
-                out,
-                "no-float-accumulation-order",
-                t,
-                &lexeme,
-                format!(
-                    "{lexeme} in a function using HashMap/HashSet in `{top}`: float \
-                     addition is non-associative, so the randomized visit order changes \
-                     the result bitwise; reduce over a BTree container or a sorted Vec"
-                ),
-            );
+            .rposition(|t| t.is_punct(';') || t.is_punct('{') || t.is_punct('}'))
+            .map(|j| j + 1)
+            .unwrap_or(0);
+        let stmt = &code[stmt_start..i];
+        let is_let = stmt.first().map_or(false, |t| t.is_ident("let"));
+        let float_typed = stmt
+            .windows(2)
+            .any(|w| w[0].is_punct(':') && (w[1].is_ident("f32") || w[1].is_ident("f64")));
+        if is_let && float_typed && hashed_fn(i) {
+            let lexeme = format!("{}()", t.text);
+            flag(out, t, &lexeme);
         }
     }
 }
@@ -497,6 +531,49 @@ mod tests {
     fn panic_rule_ignores_unwrap_or_else() {
         let src = "fn f() { a.unwrap_or_else(|| 0); b.unwrap_or(1); c.unwrap_or_default(); }";
         assert!(run_rules("engine/mod.rs", &lex(src)).is_empty());
+    }
+
+    #[test]
+    fn panic_rule_covers_event_path_scopes() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        for m in [
+            "engine/mod.rs",
+            "adapt/monitor.rs",
+            "fragment/mod.rs",
+            "membership/mod.rs",
+            "stale/mod.rs",
+        ] {
+            assert_eq!(run_rules(m, &lex(src)).len(), 1, "{m} must be panic-free");
+        }
+        // algorithms and the measurement layers stay out of scope
+        assert!(run_rules("algorithms/greedy.rs", &lex(src)).is_empty());
+        assert!(run_rules("sweep/cli.rs", &lex(src)).is_empty());
+    }
+
+    #[test]
+    fn float_accumulation_catches_annotation_typed_sums() {
+        // `let s: f32 = …sum()` over a hash container: flagged (also
+        // exercises the new `stale` ordered scope)
+        let bad = "fn f(m: &HashMap<u32, f32>) -> f32 { let s: f32 = m.values().sum(); s }";
+        let fired: Vec<&str> =
+            run_rules("stale/mod.rs", &lex(bad)).iter().map(|f| f.rule).collect();
+        assert!(fired.contains(&"no-float-accumulation-order"), "{fired:?}");
+        // same shape over an ordered container: clean
+        let ordered =
+            "fn f(m: &BTreeMap<u32, f32>) -> f32 { let s: f32 = m.values().sum(); s }";
+        assert!(run_rules("stale/mod.rs", &lex(ordered)).is_empty());
+        // annotation-typed *integer* sum over a hash container: only the
+        // container rule fires
+        let ints = "fn f(m: &HashMap<u32, u64>) -> u64 { let s: u64 = m.values().sum(); s }";
+        let fired: Vec<&str> =
+            run_rules("stale/mod.rs", &lex(ints)).iter().map(|f| f.rule).collect();
+        assert!(!fired.contains(&"no-float-accumulation-order"), "{fired:?}");
+        // hash usage and the annotated reduction in different fns: clean
+        let split = "fn a(m: &HashMap<u32, f32>) {}\n\
+                     fn b(v: &[f32]) -> f32 { let s: f32 = v.iter().sum(); s }";
+        let fired: Vec<&str> =
+            run_rules("fragment/mod.rs", &lex(split)).iter().map(|f| f.rule).collect();
+        assert!(!fired.contains(&"no-float-accumulation-order"), "{fired:?}");
     }
 
     #[test]

@@ -11,6 +11,7 @@ use crate::churn::ChurnConfig;
 use crate::fragment::FragmentConfig;
 use crate::membership::MembershipConfig;
 use crate::sim::{CommModel, StragglerModel};
+use crate::stale::StaleConfig;
 use crate::topology::TopologyKind;
 use crate::trace::TraceConfig;
 use crate::util::json::Json;
@@ -113,6 +114,10 @@ pub struct ExperimentConfig {
     /// `f16` wire encoding).  The default (`count = 1`, `f32`) is the
     /// legacy full-vector exchange, bit-identical to older configs.
     pub fragments: FragmentConfig,
+    /// Bounded-staleness scheduling: the per-link staleness bound, token
+    /// queue depth, and skip/backup policy knobs consumed by the
+    /// `hop_bss` update rule (other rules ignore the section).
+    pub stale: StaleConfig,
     /// Update rule under test.
     pub algorithm: AlgorithmKind,
     /// Gradient backend.
@@ -172,6 +177,7 @@ impl Default for ExperimentConfig {
             trace: None,
             membership: None,
             fragments: FragmentConfig::default(),
+            stale: StaleConfig::default(),
             algorithm: AlgorithmKind::DsgdAau,
             backend: BackendKind::Quadratic,
             model: "mlp_small".into(),
@@ -237,6 +243,7 @@ impl ExperimentConfig {
                 }
             }
             "fragments" => self.fragments = FragmentConfig::from_json(v)?,
+            "stale" => self.stale = StaleConfig::from_json(v)?,
             "algorithm" => {
                 self.algorithm = AlgorithmKind::parse(v.as_str().unwrap_or_default())?
             }
@@ -298,6 +305,7 @@ impl ExperimentConfig {
             m.insert("membership".into(), mc.to_json());
         }
         m.insert("fragments".into(), self.fragments.to_json());
+        m.insert("stale".into(), self.stale.to_json());
         m.insert("algorithm".into(), Json::from(self.algorithm.token()));
         m.insert("backend".into(), Json::from(self.backend.token()));
         m.insert("model".into(), Json::from(self.model.as_str()));
@@ -352,6 +360,7 @@ impl ExperimentConfig {
         self.churn.validate()?;
         self.adapt.validate()?;
         self.fragments.validate()?;
+        self.stale.validate()?;
         if let Some(tc) = &self.trace {
             tc.validate()?;
             anyhow::ensure!(
@@ -660,6 +669,41 @@ mod tests {
         let legacy = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
         assert_eq!(legacy.fragments, crate::fragment::FragmentConfig::default());
         assert!(legacy.fragments.is_passthrough());
+    }
+
+    #[test]
+    fn stale_section_parses_strictly_and_roundtrips() {
+        let cfg = ExperimentConfig::from_json(
+            &Json::parse(
+                r#"{"stale": {"bound": 6, "depth": 3, "skip": false,
+                     "backup": true, "backups": 2, "backup_after": 0.5, "seed": 7}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.stale.bound, 6);
+        assert_eq!(cfg.stale.depth, 3);
+        assert!(!cfg.stale.skip);
+        assert_eq!(cfg.stale.backups, 2);
+        assert_eq!(cfg.stale.seed, Some(7));
+        cfg.validate().unwrap();
+        let back =
+            ExperimentConfig::from_json(&Json::parse(&cfg.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back.stale, cfg.stale);
+        // unknown stale keys are rejected, not defaulted
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"stale": {"bond": 4}}"#).unwrap()
+        )
+        .is_err());
+        // a zero bound is rejected at parse and at validate
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"stale": {"bound": 0}}"#).unwrap()
+        )
+        .is_err());
+        // omitting the section keeps the defaults
+        let legacy = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(legacy.stale, crate::stale::StaleConfig::default());
     }
 
     #[test]

@@ -19,6 +19,7 @@ use crate::metrics::Recorder;
 use crate::model::ParamVec;
 use crate::pathsearch::PathSearch;
 use crate::sim::{CommModel, ComputeModel, Event, EventKind, EventQueue};
+use crate::stale::StaleState;
 use crate::topology::Graph;
 use crate::WorkerId;
 use std::collections::BTreeMap;
@@ -44,6 +45,11 @@ pub struct EngineCore {
     pub recorder: Recorder,
     /// Gossip-iteration counter k.
     pub k: u64,
+    /// Bounded-staleness scheduling state (`stale` config section):
+    /// per-worker iteration clocks, per-directed-link token queues, and
+    /// the parked-worker table.  Inert unless the update rule drives it
+    /// (only `hop_bss` does today).
+    pub stale: StaleState,
     adapt: AdaptConfig,
     compute: ComputeModel,
     backend: Box<dyn Backend>,
@@ -871,6 +877,7 @@ impl Engine {
             full_weights,
             active: vec![true; n],
             expected_done: vec![f64::NAN; n],
+            stale: StaleState::new(&cfg.stale, n, cfg.seed_for("stale")),
             fragments: FragmentState::new(&cfg.fragments, dim, n, cfg.seed_for("fragments")),
             last_wire_bytes: param_bytes,
         };

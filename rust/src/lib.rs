@@ -6,8 +6,10 @@
 //!
 //! * **L3 (this crate)** — the decentralized training runtime: communication
 //!   topologies, Metropolis consensus, the Pathsearch procedure (paper
-//!   Alg. 3), the DSGD-AAU update rule plus four baselines (synchronous
-//!   DSGD, AD-PSGD, Prague, AGP), a discrete-event cluster simulator with
+//!   Alg. 3), the DSGD-AAU update rule plus five adversaries (synchronous
+//!   DSGD, AD-PSGD, Prague, AGP, and the Hop-style bounded-staleness
+//!   rule backed by the [`stale`] token-queue subsystem), a
+//!   discrete-event cluster simulator with
 //!   pluggable straggler injection ([`sim::straggler`]: the paper's
 //!   i.i.d. Bernoulli coin, Gilbert–Elliott persistent slow states,
 //!   Weibull-renewal bursts, JSON trace replay), a dynamic-topology
@@ -89,6 +91,7 @@
 // is a crate-wide deny once the remaining seed modules are documented.
 #[deny(missing_docs)]
 pub mod adapt;
+#[deny(missing_docs)]
 pub mod algorithms;
 #[deny(missing_docs)]
 pub mod analysis;
@@ -109,6 +112,8 @@ pub mod model;
 pub mod pathsearch;
 pub mod runtime;
 pub mod sim;
+#[deny(missing_docs)]
+pub mod stale;
 #[deny(missing_docs)]
 pub mod sweep;
 #[deny(missing_docs)]

@@ -81,6 +81,25 @@ pub struct Recorder {
     /// Sharded gossip: summed per-member shard staleness (rounds since
     /// each participant last refreshed the scheduled shard).
     pub shard_staleness: u64,
+    /// Bounded-staleness scheduling (`hop_bss`): iterations skipped
+    /// because the whole neighborhood was out of bound but queue room
+    /// remained.
+    pub stale_skips: u64,
+    /// Bounded-staleness scheduling: backup-worker activations (a
+    /// designated backup cloned a persistently observed-slow worker).
+    pub backup_activations: u64,
+    /// Bounded-staleness scheduling: total virtual seconds workers spent
+    /// parked because every outgoing token queue was full.
+    pub queue_block_time: f64,
+    /// Largest iteration lag ever consumed by a bounded-staleness
+    /// exchange (must stay ≤ the configured bound `s`).
+    pub max_observed_staleness: u64,
+    /// Sum of consumed iteration lags over all bounded-staleness
+    /// exchanges (numerator of the mean observed staleness).
+    pub observed_staleness_sum: u64,
+    /// Count of bounded-staleness exchanges (denominator of the mean
+    /// observed staleness).
+    pub observed_staleness_count: u64,
 }
 
 impl Recorder {
@@ -121,6 +140,24 @@ impl Recorder {
         *self.gossips_by_components.entry(components).or_insert(0) += 1;
         if components > 1 {
             self.partitioned_gossips += 1;
+        }
+    }
+
+    /// Record one bounded-staleness consumption of iteration lag `s`
+    /// (per exchange; updates the max and the mean's running sums).
+    pub fn note_staleness(&mut self, s: u64) {
+        self.max_observed_staleness = self.max_observed_staleness.max(s);
+        self.observed_staleness_sum += s;
+        self.observed_staleness_count += 1;
+    }
+
+    /// Mean iteration lag consumed per bounded-staleness exchange
+    /// (0.0 when the rule never ran).
+    pub fn mean_observed_staleness(&self) -> f64 {
+        if self.observed_staleness_count == 0 {
+            0.0
+        } else {
+            self.observed_staleness_sum as f64 / self.observed_staleness_count as f64
         }
     }
 
@@ -277,6 +314,18 @@ mod tests {
         assert_eq!(text.lines().count(), 4);
         assert_eq!(text, r.csv_string(), "file bytes = in-memory CSV");
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn staleness_accounting() {
+        let mut r = Recorder::new();
+        assert_eq!(r.mean_observed_staleness(), 0.0);
+        r.note_staleness(2);
+        r.note_staleness(0);
+        r.note_staleness(4);
+        assert_eq!(r.max_observed_staleness, 4);
+        assert_eq!(r.observed_staleness_count, 3);
+        assert_eq!(r.mean_observed_staleness(), 2.0);
     }
 
     #[test]

@@ -1,0 +1,537 @@
+//! Bounded-staleness scheduling: per-link token queues, skip budgets,
+//! and backup-worker bookkeeping (Hop, arxiv 1902.01064).
+//!
+//! DSGD-AAU waits *adaptively* (the group forms around whoever is ready);
+//! Hop never waits on a set at all.  Each worker keeps a local iteration
+//! clock, and every **directed** link `u -> v` carries a [`TokenQueue`] of
+//! the updates `u` produced that `v` has not yet consumed.  Three policies
+//! bound how far clocks may drift apart:
+//!
+//! * **Staleness bound `s`** — a worker may consume a neighbor's update
+//!   only while their iteration lag is at most `s` (in either direction).
+//!   Every parameter exchange the [`crate::algorithms::HopBss`] rule
+//!   performs is gated on this check, which is the invariant the
+//!   randomized suite in `rust/tests/stale.rs` asserts.
+//! * **Skip iteration** — a worker whose neighbors have all fallen more
+//!   than `s` behind may *skip* the consume step and advance its clock
+//!   alone, but only while at least one of its producer queues still has
+//!   room (`depth` tokens per link).  Once every outgoing queue is full
+//!   the producer **blocks**: its gossip is deferred in virtual time (the
+//!   worker parks until the laggard's clock advances), and the stall is
+//!   charged to `Recorder::queue_block_time`.
+//! * **Backup workers** — the highest-indexed `backups` slots double as
+//!   designated backups.  When a straggler's *observed* slow state (no
+//!   clock advance for `backup_after` virtual seconds — the same lagged
+//!   observed-state idea as [`crate::adapt::PartitionMonitor`], where
+//!   ground truth is only visible through delayed local evidence)
+//!   persists, a backup clones the straggler's role: the blocked peer
+//!   exchanges with the backup instead and the straggler is reseeded from
+//!   the backup's parameters, its clock jumping to the donor's.
+//!
+//! The module owns the strict-parsed `"stale"` config section
+//! ([`StaleConfig`]), the per-link queues, the parked-worker table, and
+//! the clock arithmetic.  It is engine-agnostic: the `hop_bss` update
+//! rule drives it with worker ids and virtual timestamps and performs the
+//! actual parameter movement through [`crate::engine::EngineCore`].
+//! State lives in `BTreeMap`s and `Vec`s only, keeping iteration order —
+//! and therefore the event schedule — deterministic.
+
+use crate::util::json::Json;
+use crate::util::Rng64;
+use crate::WorkerId;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Strict-parsed `"stale"` config section: the bounded-staleness knobs
+/// consumed by the `hop_bss` update rule.
+///
+/// The section is always present (like `"fragments"`); rules other than
+/// `hop_bss` ignore it, so the default is inert for every other
+/// algorithm.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StaleConfig {
+    /// Per-link staleness bound `s`: an update may be consumed only while
+    /// the producer/consumer iteration lag is at most `bound`.
+    pub bound: u64,
+    /// Token-queue depth per directed link: how many unconsumed updates a
+    /// producer may accumulate on one link before it must block.  This is
+    /// also the skip budget — a worker may skip ahead only while some
+    /// outgoing queue still has room.
+    pub depth: u64,
+    /// Allow skip-iteration (advance past an out-of-bound neighborhood
+    /// while queue room remains).  With `skip = false` the worker blocks
+    /// as soon as its neighborhood falls out of bound.
+    pub skip: bool,
+    /// Allow backup-worker activation.
+    pub backup: bool,
+    /// Number of designated backup slots (the highest-indexed workers).
+    pub backups: usize,
+    /// Observed-slow persistence threshold (virtual seconds without a
+    /// clock advance) before a backup may clone a straggler's role.
+    pub backup_after: f64,
+    /// Scheduling-RNG seed override; defaults to `seed_for("stale")`.
+    pub seed: Option<u64>,
+}
+
+impl Default for StaleConfig {
+    fn default() -> Self {
+        // Hop's evaluation runs small bounds; s = 4 with a 2-deep queue
+        // keeps clocks tight while letting fast workers ride out one
+        // Gilbert-Elliott slow period without blocking.
+        StaleConfig {
+            bound: 4,
+            depth: 2,
+            skip: true,
+            backup: true,
+            backups: 1,
+            backup_after: 0.25,
+            seed: None,
+        }
+    }
+}
+
+impl StaleConfig {
+    /// Parse the `"stale"` config section.  Strict: unknown keys are
+    /// errors, like every other section.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut cfg = StaleConfig::default();
+        let obj = match j.as_obj() {
+            Some(o) => o,
+            None => bail!("stale section must be an object"),
+        };
+        for (k, v) in obj {
+            match k.as_str() {
+                "bound" => cfg.bound = v.as_u64().context("stale.bound must be an integer")?,
+                "depth" => cfg.depth = v.as_u64().context("stale.depth must be an integer")?,
+                "skip" => cfg.skip = v.as_bool().context("stale.skip must be a boolean")?,
+                "backup" => cfg.backup = v.as_bool().context("stale.backup must be a boolean")?,
+                "backups" => {
+                    cfg.backups = v.as_usize().context("stale.backups must be an integer")?
+                }
+                "backup_after" => {
+                    cfg.backup_after =
+                        v.as_f64().context("stale.backup_after must be a number")?
+                }
+                "seed" => cfg.seed = Some(v.as_u64().context("stale.seed must be an integer")?),
+                other => bail!(
+                    "unknown stale key {other:?} (want bound, depth, skip, backup, \
+                     backups, backup_after, seed)"
+                ),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize back to the config form (inverse of [`Self::from_json`]).
+    pub fn to_json(&self) -> Json {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("bound".into(), Json::from(self.bound as usize));
+        m.insert("depth".into(), Json::from(self.depth as usize));
+        m.insert("skip".into(), Json::from(self.skip));
+        m.insert("backup".into(), Json::from(self.backup));
+        m.insert("backups".into(), Json::from(self.backups));
+        m.insert("backup_after".into(), Json::from(self.backup_after));
+        if let Some(s) = self.seed {
+            m.insert("seed".into(), Json::from(s as usize));
+        }
+        Json::Obj(m)
+    }
+
+    /// Range checks shared by strict parsing and config validation.
+    pub fn validate(&self) -> Result<()> {
+        if self.bound == 0 {
+            bail!("stale.bound must be >= 1 (a zero bound forbids every exchange)");
+        }
+        if self.depth == 0 {
+            bail!("stale.depth must be >= 1 (a zero-depth queue blocks immediately)");
+        }
+        if !(self.backup_after.is_finite() && self.backup_after > 0.0) {
+            bail!("stale.backup_after must be a positive number of virtual seconds");
+        }
+        if self.backup && self.backups == 0 {
+            bail!("stale.backups must be >= 1 when backup activation is enabled");
+        }
+        Ok(())
+    }
+}
+
+/// One directed link's token queue: updates the producer has published
+/// that the consumer has not yet drained.  Occupancy beyond `depth`
+/// means the producer ran ahead of this consumer and must stop skipping;
+/// a pairwise exchange drains the queue in both directions (the latest
+/// state supersedes everything queued behind it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TokenQueue {
+    depth: u64,
+    produced: u64,
+    consumed: u64,
+}
+
+impl TokenQueue {
+    /// Empty queue with room for `depth` unconsumed updates.
+    pub fn new(depth: u64) -> Self {
+        TokenQueue { depth: depth.max(1), produced: 0, consumed: 0 }
+    }
+
+    /// The producer published one more update.  Returns `false` when the
+    /// queue was already full — the token is still recorded (the clock
+    /// did advance), but the producer has exhausted this link's budget.
+    pub fn produce(&mut self) -> bool {
+        let had_room = !self.is_full();
+        self.produced += 1;
+        had_room
+    }
+
+    /// The consumer caught up to the producer's latest state (a pairwise
+    /// exchange delivers the current vector, superseding every queued
+    /// update).  Returns how many tokens were retired.
+    pub fn drain(&mut self) -> u64 {
+        let n = self.occupancy();
+        self.consumed = self.produced;
+        n
+    }
+
+    /// Unconsumed updates currently queued on this link.
+    pub fn occupancy(&self) -> u64 {
+        self.produced - self.consumed
+    }
+
+    /// Whether the producer has used up this link's token budget.
+    pub fn is_full(&self) -> bool {
+        self.occupancy() >= self.depth
+    }
+}
+
+/// A worker parked by a full queue: who it waits on and since when.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Parked {
+    target: WorkerId,
+    since: f64,
+}
+
+/// Runtime bounded-staleness state: per-worker iteration clocks, the
+/// per-directed-link [`TokenQueue`]s, the parked-worker table, and the
+/// observed-slow bookkeeping the backup policy reads.  Owned by
+/// [`crate::engine::EngineCore`] and driven by the `hop_bss` rule.
+#[derive(Debug, Clone)]
+pub struct StaleState {
+    cfg: StaleConfig,
+    rng: Rng64,
+    /// Local iteration clock per slot.
+    clock: Vec<u64>,
+    /// Virtual time of each slot's last clock advance (observed-slow
+    /// evidence for the backup policy).
+    last_advance: Vec<f64>,
+    /// Token queues per directed link, created on first production.
+    queues: BTreeMap<(WorkerId, WorkerId), TokenQueue>,
+    /// Waiters per target, in arrival order (deterministic release).
+    waiting_on: BTreeMap<WorkerId, Vec<WorkerId>>,
+    /// Reverse map: parked worker -> (target, park time).
+    parked: BTreeMap<WorkerId, Parked>,
+}
+
+impl StaleState {
+    /// Fresh state for `n` slots.  `derived_seed` (`seed_for("stale")`)
+    /// feeds the scheduling RNG unless the section pins its own seed.
+    pub fn new(cfg: &StaleConfig, n: usize, derived_seed: u64) -> Self {
+        StaleState {
+            cfg: cfg.clone(),
+            rng: Rng64::seed_from_u64(cfg.seed.unwrap_or(derived_seed)),
+            clock: vec![0; n],
+            last_advance: vec![0.0; n],
+            queues: BTreeMap::new(),
+            waiting_on: BTreeMap::new(),
+            parked: BTreeMap::new(),
+        }
+    }
+
+    /// The configured section (bound, depth, policy switches).
+    pub fn config(&self) -> &StaleConfig {
+        &self.cfg
+    }
+
+    /// Worker `w`'s local iteration clock.
+    pub fn clock(&self, w: WorkerId) -> u64 {
+        self.clock[w]
+    }
+
+    /// Signed iteration lag of `b` behind `a` (positive: `a` is ahead).
+    pub fn lag(&self, a: WorkerId, b: WorkerId) -> i64 {
+        self.clock[a] as i64 - self.clock[b] as i64
+    }
+
+    /// Deterministic partner pick among `k` candidates.
+    pub fn pick(&mut self, k: usize) -> usize {
+        self.rng.gen_range(k)
+    }
+
+    /// Worker `w` completed one local step at `now`: advance its clock
+    /// and publish one token into each outgoing queue.
+    pub fn advance(&mut self, w: WorkerId, now: f64, neighbors: &[WorkerId]) {
+        self.clock[w] += 1;
+        self.last_advance[w] = now;
+        let depth = self.cfg.depth;
+        for &r in neighbors {
+            self.queues.entry((w, r)).or_insert_with(|| TokenQueue::new(depth)).produce();
+        }
+    }
+
+    /// Neighbors whose iteration lag from `w` is within the bound, i.e.
+    /// the set `w` may exchange with right now.
+    pub fn in_bound(&self, w: WorkerId, neighbors: &[WorkerId]) -> Vec<WorkerId> {
+        let s = self.cfg.bound as i64;
+        neighbors.iter().copied().filter(|&r| self.lag(w, r).abs() <= s).collect()
+    }
+
+    /// Whether every outgoing queue of `w` is full: the skip budget is
+    /// exhausted and the producer must block.
+    pub fn producers_saturated(&self, w: WorkerId, neighbors: &[WorkerId]) -> bool {
+        !neighbors.is_empty()
+            && neighbors
+                .iter()
+                .all(|&r| self.queues.get(&(w, r)).is_some_and(TokenQueue::is_full))
+    }
+
+    /// Occupancy of the directed queue `from -> to` (0 if never used).
+    pub fn occupancy(&self, from: WorkerId, to: WorkerId) -> u64 {
+        self.queues.get(&(from, to)).map_or(0, TokenQueue::occupancy)
+    }
+
+    /// Record a pairwise exchange between `a` and `b`: both directed
+    /// queues drain (each side consumed the other's latest state) and the
+    /// consumed staleness — the absolute iteration lag — is returned for
+    /// the recorder.  Callers gate on [`Self::in_bound`] (or check the
+    /// lag themselves), so the returned value never exceeds the bound.
+    pub fn consume_exchange(&mut self, a: WorkerId, b: WorkerId) -> u64 {
+        if let Some(q) = self.queues.get_mut(&(a, b)) {
+            q.drain();
+        }
+        if let Some(q) = self.queues.get_mut(&(b, a)) {
+            q.drain();
+        }
+        self.lag(a, b).unsigned_abs()
+    }
+
+    /// Whether `r`'s observed slow state has persisted long enough for a
+    /// backup to step in: no clock advance for `backup_after` seconds and
+    /// not merely parked on a full queue.
+    pub fn observed_slow(&self, r: WorkerId, now: f64) -> bool {
+        !self.is_parked(r) && now - self.last_advance[r] >= self.cfg.backup_after
+    }
+
+    /// The designated backup slots: the `backups` highest indices
+    /// (clamped so at least one regular worker remains).
+    pub fn backup_slots(&self) -> Vec<WorkerId> {
+        let n = self.clock.len();
+        let k = self.cfg.backups.min(n.saturating_sub(1));
+        (n - k..n).collect()
+    }
+
+    /// Reseed `w` from donor `d`: its clock jumps to the donor's and
+    /// every queue touching `w` drains (its outstanding obligations are
+    /// considered fulfilled by the reseed).  Used both when a straggler
+    /// is cloned by a backup and when a laggard pulls the frontier's
+    /// parameters to resynchronize.
+    pub fn resync(&mut self, w: WorkerId, d: WorkerId, now: f64) {
+        self.clock[w] = self.clock[d];
+        self.last_advance[w] = now;
+        for (&(a, b), q) in self.queues.iter_mut() {
+            if a == w || b == w {
+                q.drain();
+            }
+        }
+    }
+
+    /// Park `w` until `target`'s clock advances (the producer's queues
+    /// are full).  The stall is accounted when the waiter is released.
+    pub fn park(&mut self, w: WorkerId, target: WorkerId, now: f64) {
+        self.parked.insert(w, Parked { target, since: now });
+        self.waiting_on.entry(target).or_default().push(w);
+    }
+
+    /// Whether `w` is currently parked on a full queue.
+    pub fn is_parked(&self, w: WorkerId) -> bool {
+        self.parked.contains_key(&w)
+    }
+
+    /// Release every waiter parked on `target`, returning `(waiter,
+    /// seconds waited)` in arrival order.  Callers re-park waiters whose
+    /// lag is still out of bound; the accrued wait is returned each time
+    /// so block time accumulates without double counting.
+    pub fn release(&mut self, target: WorkerId, now: f64) -> Vec<(WorkerId, f64)> {
+        let waiters = self.waiting_on.remove(&target).unwrap_or_default();
+        let mut out = Vec::with_capacity(waiters.len());
+        for w in waiters {
+            if let Some(p) = self.parked.remove(&w) {
+                out.push((w, now - p.since));
+            }
+        }
+        out
+    }
+
+    /// Unpark every waiter everywhere (topology changed: targets may no
+    /// longer be reachable).  Returns `(waiter, seconds waited)` in
+    /// worker order.
+    pub fn release_all(&mut self, now: f64) -> Vec<(WorkerId, f64)> {
+        self.waiting_on.clear();
+        let parked = std::mem::take(&mut self.parked);
+        parked.into_iter().map(|(w, p)| (w, now - p.since)).collect()
+    }
+
+    /// Slot `w` left the fleet: forget its parked state and drain its
+    /// queues.  Waiters parked **on** `w` are released separately via
+    /// [`Self::release`] so their block time is accounted.
+    pub fn on_leave(&mut self, w: WorkerId) {
+        if let Some(p) = self.parked.remove(&w) {
+            if let Some(ws) = self.waiting_on.get_mut(&p.target) {
+                ws.retain(|&x| x != w);
+            }
+        }
+        for (&(a, b), q) in self.queues.iter_mut() {
+            if a == w || b == w {
+                q.drain();
+            }
+        }
+    }
+
+    /// Slot `w` (re)joined at `now`: its clock starts at the fastest
+    /// observed neighbor's (the engine warm-starts its parameters from
+    /// the same neighborhood, so clock and state stay consistent).
+    pub fn on_join(&mut self, w: WorkerId, now: f64, neighbor_clocks: &[u64]) {
+        self.clock[w] = neighbor_clocks.iter().copied().max().unwrap_or(0);
+        self.last_advance[w] = now;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn default_section_roundtrips() {
+        let cfg = StaleConfig::default();
+        cfg.validate().unwrap();
+        let back = StaleConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn section_parses_strictly() {
+        let ok = Json::parse(r#"{"bound": 6, "depth": 3, "skip": false, "seed": 9}"#).unwrap();
+        let cfg = StaleConfig::from_json(&ok).unwrap();
+        assert_eq!(cfg.bound, 6);
+        assert_eq!(cfg.depth, 3);
+        assert!(!cfg.skip);
+        assert_eq!(cfg.seed, Some(9));
+
+        let unknown = Json::parse(r#"{"bond": 6}"#).unwrap();
+        assert!(StaleConfig::from_json(&unknown).is_err());
+        let zero_bound = Json::parse(r#"{"bound": 0}"#).unwrap();
+        assert!(StaleConfig::from_json(&zero_bound).is_err());
+        let zero_depth = Json::parse(r#"{"depth": 0}"#).unwrap();
+        assert!(StaleConfig::from_json(&zero_depth).is_err());
+        let no_backups = Json::parse(r#"{"backup": true, "backups": 0}"#).unwrap();
+        assert!(StaleConfig::from_json(&no_backups).is_err());
+    }
+
+    #[test]
+    fn token_queue_fills_and_drains() {
+        let mut q = TokenQueue::new(2);
+        assert!(!q.is_full());
+        assert!(q.produce());
+        assert!(q.produce());
+        assert!(q.is_full());
+        assert!(!q.produce(), "production past depth reports a full queue");
+        assert_eq!(q.occupancy(), 3);
+        assert_eq!(q.drain(), 3);
+        assert_eq!(q.occupancy(), 0);
+        assert!(!q.is_full());
+    }
+
+    #[test]
+    fn clocks_and_bounds() {
+        let cfg = StaleConfig { bound: 2, depth: 1, ..StaleConfig::default() };
+        let mut st = StaleState::new(&cfg, 3, 7);
+        let nbrs = [1usize, 2];
+        for _ in 0..3 {
+            st.advance(0, 0.1, &nbrs);
+        }
+        assert_eq!(st.clock(0), 3);
+        assert_eq!(st.lag(0, 1), 3);
+        // Neighbor 1 is 3 > bound behind; neighbor 2 likewise.
+        assert!(st.in_bound(0, &nbrs).is_empty());
+        st.advance(1, 0.2, &[0]);
+        assert_eq!(st.in_bound(0, &nbrs), vec![1]);
+        // Both outgoing queues of 0 are full at depth 1.
+        assert!(st.producers_saturated(0, &nbrs));
+        let staleness = st.consume_exchange(0, 1);
+        assert_eq!(staleness, 2);
+        assert_eq!(st.occupancy(0, 1), 0);
+        assert!(!st.producers_saturated(0, &nbrs), "queue 0->2 is still full, 0->1 drained");
+    }
+
+    #[test]
+    fn park_release_accounts_wait() {
+        let mut st = StaleState::new(&StaleConfig::default(), 4, 1);
+        st.park(2, 0, 1.0);
+        st.park(3, 0, 1.5);
+        assert!(st.is_parked(2));
+        let released = st.release(0, 2.0);
+        assert_eq!(released, vec![(2, 1.0), (3, 0.5)]);
+        assert!(!st.is_parked(2));
+        assert!(st.release(0, 3.0).is_empty());
+    }
+
+    #[test]
+    fn resync_jumps_clock_and_drains() {
+        let cfg = StaleConfig { bound: 1, depth: 1, ..StaleConfig::default() };
+        let mut st = StaleState::new(&cfg, 2, 1);
+        for _ in 0..5 {
+            st.advance(0, 0.1, &[1]);
+        }
+        assert_eq!(st.occupancy(0, 1), 5);
+        st.resync(1, 0, 0.2);
+        assert_eq!(st.clock(1), 5);
+        assert_eq!(st.occupancy(0, 1), 0);
+    }
+
+    #[test]
+    fn backup_slots_are_highest_indices() {
+        let cfg = StaleConfig { backups: 2, ..StaleConfig::default() };
+        let st = StaleState::new(&cfg, 6, 1);
+        assert_eq!(st.backup_slots(), vec![4, 5]);
+        // Clamped: never swallow the whole fleet.
+        let st1 = StaleState::new(&cfg, 1, 1);
+        assert!(st1.backup_slots().is_empty());
+    }
+
+    #[test]
+    fn observed_slow_needs_persistence() {
+        let cfg = StaleConfig { backup_after: 0.5, ..StaleConfig::default() };
+        let mut st = StaleState::new(&cfg, 2, 1);
+        st.advance(1, 1.0, &[0]);
+        assert!(!st.observed_slow(1, 1.2));
+        assert!(st.observed_slow(1, 1.6));
+        // A parked worker is stalled, not slow.
+        st.park(1, 0, 1.6);
+        assert!(!st.observed_slow(1, 2.0));
+    }
+
+    #[test]
+    fn seeding_is_deterministic() {
+        let cfg = StaleConfig::default();
+        let mut a = StaleState::new(&cfg, 4, 42);
+        let mut b = StaleState::new(&cfg, 4, 42);
+        let pa: Vec<usize> = (0..16).map(|_| a.pick(5)).collect();
+        let pb: Vec<usize> = (0..16).map(|_| b.pick(5)).collect();
+        assert_eq!(pa, pb);
+        let pinned = StaleConfig { seed: Some(7), ..StaleConfig::default() };
+        let mut c = StaleState::new(&pinned, 4, 42);
+        let mut d = StaleState::new(&pinned, 4, 99);
+        let pc: Vec<usize> = (0..16).map(|_| c.pick(5)).collect();
+        let pd: Vec<usize> = (0..16).map(|_| d.pick(5)).collect();
+        assert_eq!(pc, pd, "a pinned section seed overrides the derived seed");
+    }
+}

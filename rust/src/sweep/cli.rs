@@ -143,7 +143,7 @@ pub struct Suite {
     pub build: fn(&BenchArgs) -> Result<SweepSpec>,
 }
 
-/// The twelve suites, in paper order.
+/// The thirteen suites, in paper order.
 pub fn registry() -> Vec<Suite> {
     vec![
         Suite {
@@ -218,6 +218,12 @@ pub fn registry() -> Vec<Suite> {
             summary: "MB to target accuracy: full vs fragmented exchange",
             build: suites::fragment,
         },
+        Suite {
+            name: "showdown",
+            paper: "ROADMAP Hop head-to-head",
+            summary: "DSGD-AAU vs Hop-BSS vs AD-PSGD x straggler process",
+            build: suites::showdown,
+        },
     ]
 }
 
@@ -286,15 +292,16 @@ mod tests {
     use super::*;
 
     #[test]
-    fn registry_has_twelve_unique_suites() {
+    fn registry_has_thirteen_unique_suites() {
         let names: Vec<&str> = registry().iter().map(|s| s.name).collect();
-        assert_eq!(names.len(), 12);
+        assert_eq!(names.len(), 13);
         let set: std::collections::BTreeSet<&str> = names.iter().copied().collect();
         assert_eq!(set.len(), names.len(), "suite names must be unique");
         assert!(find_suite("partition").is_some());
         assert!(find_suite("trace").is_some());
         assert!(find_suite("membership").is_some());
         assert!(find_suite("fragment").is_some());
+        assert!(find_suite("showdown").is_some());
         assert!(find_suite("nope").is_none());
     }
 

@@ -89,6 +89,17 @@ impl RunRecord {
         m.insert("prague_regroups".into(), num(r.prague_regroups as f64));
         m.insert("shard_bytes_saved".into(), num(r.shard_bytes_saved as f64));
         m.insert("shard_staleness".into(), num(r.shard_staleness as f64));
+        m.insert("stale_skips".into(), num(r.stale_skips as f64));
+        m.insert("backup_activations".into(), num(r.backup_activations as f64));
+        m.insert("queue_block_time".into(), num(r.queue_block_time));
+        m.insert(
+            "max_observed_staleness".into(),
+            num(r.max_observed_staleness as f64),
+        );
+        m.insert(
+            "mean_observed_staleness".into(),
+            num(r.mean_observed_staleness()),
+        );
         m.insert("loss_q25".into(), num(r.loss_at_fraction(0.25) as f64));
         m.insert("loss_q50".into(), num(r.loss_at_fraction(0.5) as f64));
         m.insert("loss_q100".into(), num(r.loss_at_fraction(1.0) as f64));

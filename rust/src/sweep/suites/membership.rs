@@ -100,14 +100,22 @@ pub fn membership(args: &BenchArgs) -> Result<SweepSpec> {
     let tier = args.tier()?;
     let n = 16usize;
     let budget = tier.pick(4.0, 15.0, 40.0);
+    // The quick/default tiers sweep the quadratic workload (fast smoke of
+    // the membership machinery); the paper-scale tier trains the native
+    // MLP so the 1e6-user axis carries an accuracy story too.
+    let backend = tier.pick(BackendKind::Quadratic, BackendKind::Quadratic, BackendKind::NativeMlp);
+    let workload = tier.pick("quadratic", "quadratic", "mlp_small");
     Ok(SweepSpec::new(
         "membership",
         &format!(
-            "Open-world membership sweep — {n} slots, quadratic workload, {budget}s budget"
+            "Open-world membership sweep — {n} slots, {workload} workload, {budget}s budget"
         ),
         move |cfg| {
             cfg.num_workers = n;
-            cfg.backend = BackendKind::Quadratic;
+            cfg.backend = backend;
+            if backend == BackendKind::NativeMlp {
+                cfg.model = "mlp_small".into();
+            }
             cfg.topology = TopologyKind::Random { p: 0.3, seed: 11 };
             cfg.mean_compute = 0.01;
             cfg.seed = 11000;
@@ -152,6 +160,7 @@ pub fn membership(args: &BenchArgs) -> Result<SweepSpec> {
         vec![
             Column::new("iters", "iterations", Fmt::Int),
             Column::new("loss", "final_loss", Fmt::F4),
+            Column::new("acc", "best_accuracy", Fmt::Pct),
             Column::new("bytes", "total_bytes", Fmt::Sci2),
             Column::new("rounds", "rounds_sampled", Fmt::Int),
             Column::new("joined", "workers_joined", Fmt::Int),
@@ -168,6 +177,8 @@ pub fn membership(args: &BenchArgs) -> Result<SweepSpec> {
          (plus the Poisson departure clock) caused; under sticky sampling \
          fewer swaps happen per round, trading freshness for warm-start \
          traffic.  `regroups` is Prague's proactive group reassignment \
-         when members depart mid-epoch.",
+         when members depart mid-epoch.  At --full the fleet trains the \
+         native MLP (the `acc` column is meaningful there; the quadratic \
+         tiers report its placeholder).",
     ))
 }

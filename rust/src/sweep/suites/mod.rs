@@ -7,12 +7,14 @@ mod fragment;
 mod membership;
 mod paper;
 mod scenarios;
+mod showdown;
 mod trace;
 
 pub use fragment::fragment;
 pub use membership::membership;
 pub use paper::{ablation, accuracy, fixedk, loss_curves, speedup, timebudget};
 pub use scenarios::{churn, partition, straggler};
+pub use showdown::showdown;
 pub use trace::trace;
 
 use crate::algorithms::AlgorithmKind;

@@ -1,0 +1,11 @@
+//! Fixture: annotation-typed float sums over hash containers must be
+//! flagged too (`let s: f32 = …sum()` — no turbofish to match).
+
+// pallas-lint: allow(no-unordered-iteration) — fixture: the hash map itself is under test
+use std::collections::HashMap;
+
+// pallas-lint: allow(no-unordered-iteration) — fixture: the hash map itself is under test
+pub fn mean_lag(lags: &HashMap<usize, f32>) -> f32 {
+    let total: f32 = lags.values().sum();
+    total / lags.len() as f32
+}

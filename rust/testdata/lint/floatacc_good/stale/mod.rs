@@ -1,0 +1,14 @@
+//! Fixture: annotation-typed float sums over ordered containers are
+//! fine, as are annotation-typed integer sums over hash containers.
+use std::collections::BTreeMap;
+
+pub fn mean_lag(lags: &BTreeMap<usize, f32>) -> f32 {
+    let total: f32 = lags.values().sum();
+    total / lags.len() as f32
+}
+
+// pallas-lint: allow(no-unordered-iteration) — fixture: integer counts are order-independent
+pub fn token_count(tokens: &std::collections::HashMap<usize, u64>) -> u64 {
+    let total: u64 = tokens.values().sum();
+    total
+}

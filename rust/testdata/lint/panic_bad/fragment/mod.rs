@@ -1,0 +1,5 @@
+//! Fixture: panicking calls in the fragment wire (event-path) must be
+//! flagged.
+pub fn shard_of(plan: Option<usize>) -> usize {
+    plan.unwrap()
+}

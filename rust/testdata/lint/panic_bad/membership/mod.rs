@@ -1,0 +1,5 @@
+//! Fixture: panicking calls in membership dispatch (event-path) must be
+//! flagged.
+pub fn slot_of(slot: Result<usize, String>) -> usize {
+    slot.expect("slot must be filled")
+}

@@ -1,0 +1,5 @@
+//! Fixture: non-panicking option handling in the adapt monitor path is
+//! fine.
+pub fn latency_of(lat: Option<f64>) -> f64 {
+    lat.unwrap_or(0.1)
+}

@@ -1,4 +1,5 @@
-//! Fixture: the panic rule is scoped to the engine module only.
+//! Fixture: the panic rule covers the event-path modules (engine,
+//! adapt, fragment, membership, stale); algorithms is outside the scope.
 pub fn pick(xs: &[f64]) -> f64 {
     *xs.first().unwrap()
 }

@@ -1,0 +1,193 @@
+//! Integration: the bounded-staleness subsystem end to end — the staleness
+//! bound is an *invariant* (no exchange ever consumes an update with
+//! iteration lag above `s`, across randomized seeds, bounds, processes,
+//! and churn), the skip/backup policies fire exactly when the scenario
+//! calls for them (nonzero under persistent Gilbert–Elliott slowness,
+//! identically zero in a homogeneous no-straggler control), the counters
+//! are deterministic, and Hop-BSS stays live — parked producers are
+//! always released and the run completes its iteration budget.
+
+use dsgd_aau::algorithms::AlgorithmKind;
+use dsgd_aau::churn::{ChurnConfig, ChurnKind};
+use dsgd_aau::config::{BackendKind, ExperimentConfig};
+use dsgd_aau::coordinator::run_experiment;
+use dsgd_aau::sim::{StragglerKind, StragglerModel};
+use dsgd_aau::stale::StaleConfig;
+use dsgd_aau::topology::TopologyKind;
+
+/// Persistent correlated slowness: slow states last ~0.3 virtual seconds
+/// (~30 fast iterations at `mean_compute = 0.01`), at a slowdown deep
+/// enough that a slow worker's neighbors exhaust the staleness bound.
+fn persistent_ge(seed: u64) -> StragglerModel {
+    StragglerModel {
+        kind: StragglerKind::GilbertElliott { mean_fast: 0.3, mean_slow: 0.3 },
+        slowdown: 25.0,
+        seed: Some(seed),
+        ..StragglerModel::default()
+    }
+}
+
+fn hop_cfg(straggler: StragglerModel, stale: StaleConfig) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "stale_invariants".into();
+    cfg.num_workers = 8;
+    cfg.algorithm = AlgorithmKind::HopBss;
+    cfg.backend = BackendKind::Quadratic;
+    cfg.topology = TopologyKind::Ring;
+    cfg.straggler = straggler;
+    cfg.stale = stale;
+    cfg.hetero_sigma = 0.0; // isolate the straggler process from static speed spread
+    cfg.mean_compute = 0.01;
+    cfg.max_iterations = 2500;
+    cfg.eval_every = 500;
+    cfg
+}
+
+#[test]
+fn skip_and_backup_fire_under_persistent_slowness() {
+    // Under Gilbert–Elliott with ~0.5 stationary slow share on a ring,
+    // some worker's whole neighborhood repeatedly falls out of bound:
+    // first it skips (queue room remains), then the queues saturate and
+    // the observed-slow laggard is cloned by the backup slot.  Both
+    // counters must be nonzero, and no run may ever consume past the
+    // bound while doing so.
+    // backup_after is well under a slow state's ~0.25 s iteration gap:
+    // a producer that saturates mid-window sees the laggard as observed
+    // slow (a producer that saturates in the first 0.05 s parks instead
+    // and waits — both paths are exercised across the seeds).
+    let stale = StaleConfig {
+        bound: 2,
+        depth: 2,
+        backups: 1,
+        backup_after: 0.05,
+        ..StaleConfig::default()
+    };
+    let (mut skips, mut backups) = (0u64, 0u64);
+    for seed in [901u64, 902, 903] {
+        let mut cfg = hop_cfg(persistent_ge(seed), stale.clone());
+        cfg.seed = 7000 + seed;
+        let s = run_experiment(&cfg).unwrap();
+        assert!(
+            s.iterations >= cfg.max_iterations,
+            "seed {seed}: quiesced at k={} — a parked producer was never released",
+            s.iterations
+        );
+        assert!(
+            s.recorder.max_observed_staleness <= stale.bound,
+            "seed {seed}: consumed staleness {} > bound {}",
+            s.recorder.max_observed_staleness,
+            stale.bound
+        );
+        assert!(s.straggler_fraction > 0.0, "seed {seed}: scenario injected no slowness");
+        assert!(
+            s.final_loss() < s.recorder.curve.first().unwrap().loss,
+            "seed {seed}: must still learn under the bound"
+        );
+        skips += s.recorder.stale_skips;
+        backups += s.recorder.backup_activations;
+    }
+    assert!(skips > 0, "persistent slowness never triggered a skip iteration");
+    assert!(backups > 0, "persistent slowness never activated a backup worker");
+}
+
+#[test]
+fn no_straggler_control_keeps_policies_idle() {
+    // Homogeneous fleet, no stragglers: clocks drift only by log-normal
+    // jitter (sigma 0.1), far inside a bound of 10, so nothing skips,
+    // blocks, or clones.  This is the suite's specificity check — the
+    // counters in the test above are signal, not noise.
+    let none = StragglerModel { probability: 0.0, ..StragglerModel::default() };
+    let stale = StaleConfig { bound: 10, ..StaleConfig::default() };
+    let mut cfg = hop_cfg(none, stale);
+    cfg.topology = TopologyKind::Complete;
+    cfg.num_workers = 6;
+    cfg.max_iterations = 600;
+    cfg.seed = 4321;
+    let s = run_experiment(&cfg).unwrap();
+    assert!(s.iterations >= cfg.max_iterations);
+    assert_eq!(s.straggler_fraction, 0.0, "control must be straggler-free");
+    assert_eq!(s.recorder.stale_skips, 0, "no-straggler control skipped an iteration");
+    assert_eq!(s.recorder.backup_activations, 0, "no-straggler control activated a backup");
+    assert_eq!(s.recorder.queue_block_time, 0.0, "no-straggler control blocked on a queue");
+    assert!(s.recorder.max_observed_staleness <= 10);
+    assert!(s.recorder.mean_observed_staleness() <= s.recorder.max_observed_staleness as f64);
+}
+
+#[test]
+fn staleness_bound_holds_across_randomized_scenarios() {
+    // The core invariant, fuzzed: across seeds, bounds, queue depths,
+    // policy switches, and partition/heal churn, no exchange may consume
+    // an update whose producer/consumer lag exceeds the configured bound.
+    for (i, seed) in (0u64..6).enumerate() {
+        let bound = [1u64, 2, 4][i % 3];
+        let stale = StaleConfig {
+            bound,
+            depth: 1 + (seed % 3),
+            skip: seed % 2 == 0,
+            backup: true,
+            backups: 1 + (i % 2),
+            backup_after: 0.1,
+            seed: None,
+        };
+        let mut cfg = hop_cfg(persistent_ge(40 + seed), stale);
+        cfg.topology = TopologyKind::Random { p: 0.35, seed: 17 + seed };
+        cfg.seed = 90_000 + seed;
+        cfg.max_iterations = u64::MAX / 2;
+        cfg.time_budget = Some(3.0);
+        if seed % 2 == 1 {
+            cfg.churn = ChurnConfig {
+                kind: ChurnKind::PartitionHeal { period: 0.8, downtime: 0.3 },
+                seed: Some(5 + seed),
+            };
+        }
+        let s = run_experiment(&cfg).unwrap();
+        assert!(
+            s.recorder.max_observed_staleness <= bound,
+            "seed {seed} bound {bound}: consumed staleness {}",
+            s.recorder.max_observed_staleness
+        );
+        assert!(s.recorder.observed_staleness_count > 0, "seed {seed}: no exchanges at all");
+        assert!(
+            s.recorder.mean_observed_staleness() <= bound as f64,
+            "seed {seed}: mean staleness above the bound"
+        );
+    }
+}
+
+#[test]
+fn stale_counters_are_deterministic() {
+    // The new counters ride the same golden path as the metrics CSV: a
+    // rerun of the same config must reproduce them bit for bit.
+    let stale = StaleConfig { bound: 2, backup_after: 0.05, ..StaleConfig::default() };
+    let mut cfg = hop_cfg(persistent_ge(901), stale);
+    cfg.seed = 7901;
+    let a = run_experiment(&cfg).unwrap();
+    let b = run_experiment(&cfg).unwrap();
+    assert_eq!(a.recorder.stale_skips, b.recorder.stale_skips);
+    assert_eq!(a.recorder.backup_activations, b.recorder.backup_activations);
+    assert_eq!(a.recorder.queue_block_time, b.recorder.queue_block_time);
+    assert_eq!(a.recorder.max_observed_staleness, b.recorder.max_observed_staleness);
+    assert_eq!(a.recorder.observed_staleness_sum, b.recorder.observed_staleness_sum);
+    assert_eq!(a.recorder.observed_staleness_count, b.recorder.observed_staleness_count);
+}
+
+#[test]
+fn other_rules_leave_the_stale_section_inert() {
+    // The `"stale"` section is always present (like `"fragments"`), but
+    // only Hop-BSS drives it: every other rule must run untouched by it
+    // and report zeroed bounded-staleness counters.
+    let stale = StaleConfig { bound: 1, depth: 1, ..StaleConfig::default() };
+    for alg in AlgorithmKind::all() {
+        if alg == AlgorithmKind::HopBss {
+            continue;
+        }
+        let mut cfg = hop_cfg(persistent_ge(11), stale.clone());
+        cfg.algorithm = alg;
+        cfg.max_iterations = 200;
+        let s = run_experiment(&cfg).unwrap();
+        assert_eq!(s.recorder.stale_skips, 0, "{}", alg.label());
+        assert_eq!(s.recorder.backup_activations, 0, "{}", alg.label());
+        assert_eq!(s.recorder.queue_block_time, 0.0, "{}", alg.label());
+        assert_eq!(s.recorder.observed_staleness_count, 0, "{}", alg.label());
+    }
+}
