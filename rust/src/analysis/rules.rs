@@ -98,9 +98,10 @@ pub fn registry() -> Vec<RuleInfo> {
             name: "no-float-accumulation-order",
             severity: Severity::Error,
             description: "float sum/product (turbofish or annotation-typed) over a hash \
-                          container in event-ordered modules (f32 addition is \
-                          non-associative, so a randomized visit order changes the result \
-                          bitwise; reduce over a BTree/sorted Vec)",
+                          container or a parallel iterator in event-ordered modules (f32 \
+                          addition is non-associative, so a randomized visit or reduction \
+                          order changes the result bitwise; reduce over a BTree/sorted \
+                          Vec, sequentially)",
         },
     ]
 }
@@ -419,15 +420,18 @@ fn strict_config_parse(code: &[&Tok], out: &mut Vec<RawFinding>) {
     }
 }
 
-/// Flag float `sum()`/`product()` reductions inside a function that
-/// also names a `HashMap`/`HashSet` — the classic shape of "iterate the
-/// hash container, fold the floats", whose result depends on the
-/// randomized visit order even when the container itself carries a
-/// suppression pragma.  Two detection forms: the turbofish
-/// (`sum::<f32>()`) and the annotation-typed let binding
-/// (`let s: f32 = it.sum()`).  Scoped to the event-ordered modules; the
-/// enclosing-function window is a heuristic that keeps the rule free of
-/// false positives on ordered reductions.
+/// Flag float `sum()`/`product()` reductions whose visit order is not
+/// deterministic: inside a function that also names a
+/// `HashMap`/`HashSet` (the classic "iterate the hash container, fold
+/// the floats" shape, order-randomized even when the container itself
+/// carries a suppression pragma), or chained off a **parallel iterator**
+/// in the same statement (`par_iter().sum::<f32>()` — rayon-style
+/// reductions combine partial sums in thread-completion order).  Two
+/// detection forms for each: the turbofish (`sum::<f32>()`) and the
+/// annotation-typed let binding (`let s: f32 = it.sum()`).  Scoped to
+/// the event-ordered modules; the enclosing-function / same-statement
+/// windows are heuristics that keep the rule free of false positives on
+/// ordered reductions.
 fn no_float_accumulation_order(top: &str, code: &[&Tok], out: &mut Vec<RawFinding>) {
     if !ORDERED_SCOPES.contains(&top) {
         return;
@@ -438,16 +442,42 @@ fn no_float_accumulation_order(top: &str, code: &[&Tok], out: &mut Vec<RawFindin
         let fn_start = code[..i].iter().rposition(|t| t.is_ident("fn")).unwrap_or(0);
         code[fn_start..i].iter().any(|t| t.is_ident("HashMap") || t.is_ident("HashSet"))
     };
-    let flag = |out: &mut Vec<RawFinding>, t: &Tok, lexeme: &str| {
+    let stmt_start_of = |i: usize| {
+        code[..i]
+            .iter()
+            .rposition(|t| t.is_punct(';') || t.is_punct('{') || t.is_punct('}'))
+            .map(|j| j + 1)
+            .unwrap_or(0)
+    };
+    // is the reduction chained off a parallel iterator in this statement?
+    let par_stmt = |i: usize| {
+        code[stmt_start_of(i)..i].iter().any(|t| {
+            t.is_ident("par_iter")
+                || t.is_ident("into_par_iter")
+                || t.is_ident("par_iter_mut")
+                || t.is_ident("par_bridge")
+                || t.is_ident("par_chunks")
+        })
+    };
+    let flag = |out: &mut Vec<RawFinding>, t: &Tok, lexeme: &str, parallel: bool| {
+        let why = if parallel {
+            "over a parallel iterator"
+        } else {
+            "in a function using HashMap/HashSet"
+        };
+        let fix = if parallel {
+            "collect and reduce sequentially in a deterministic order"
+        } else {
+            "reduce over a BTree container or a sorted Vec"
+        };
         push(
             out,
             "no-float-accumulation-order",
             t,
             lexeme,
             format!(
-                "{lexeme} in a function using HashMap/HashSet in `{top}`: float \
-                 addition is non-associative, so the randomized visit order changes \
-                 the result bitwise; reduce over a BTree container or a sorted Vec"
+                "{lexeme} {why} in `{top}`: float addition is non-associative, so a \
+                 nondeterministic accumulation order changes the result bitwise; {fix}"
             ),
         );
     };
@@ -458,9 +488,13 @@ fn no_float_accumulation_order(top: &str, code: &[&Tok], out: &mut Vec<RawFindin
             && code[i + 2].is_punct(':')
             && code[i + 3].is_punct('<')
             && (code[i + 4].is_ident("f32") || code[i + 4].is_ident("f64"));
-        if turbofish && hashed_fn(i) {
+        if !turbofish {
+            continue;
+        }
+        let parallel = par_stmt(i);
+        if parallel || hashed_fn(i) {
             let lexeme = format!("{}::<{}>", t.text, code[i + 4].text);
-            flag(out, t, &lexeme);
+            flag(out, t, &lexeme, parallel);
         }
     }
     // annotation-typed form: `let s: f32 = …sum()` — the element type is
@@ -471,19 +505,18 @@ fn no_float_accumulation_order(top: &str, code: &[&Tok], out: &mut Vec<RawFindin
         if !bare_call {
             continue;
         }
-        let stmt_start = code[..i]
-            .iter()
-            .rposition(|t| t.is_punct(';') || t.is_punct('{') || t.is_punct('}'))
-            .map(|j| j + 1)
-            .unwrap_or(0);
-        let stmt = &code[stmt_start..i];
+        let stmt = &code[stmt_start_of(i)..i];
         let is_let = stmt.first().map_or(false, |t| t.is_ident("let"));
         let float_typed = stmt
             .windows(2)
             .any(|w| w[0].is_punct(':') && (w[1].is_ident("f32") || w[1].is_ident("f64")));
-        if is_let && float_typed && hashed_fn(i) {
+        if !(is_let && float_typed) {
+            continue;
+        }
+        let parallel = par_stmt(i);
+        if parallel || hashed_fn(i) {
             let lexeme = format!("{}()", t.text);
-            flag(out, t, &lexeme);
+            flag(out, t, &lexeme, parallel);
         }
     }
 }
@@ -600,6 +633,30 @@ mod tests {
         let fired: Vec<&str> =
             run_rules("fragment/mod.rs", &lex(split)).iter().map(|f| f.rule).collect();
         assert!(!fired.contains(&"no-float-accumulation-order"));
+    }
+
+    #[test]
+    fn float_accumulation_catches_parallel_iterators() {
+        // float turbofish reduction chained off par_iter: flagged even
+        // with no hash container anywhere in the function
+        let bad = "fn f(v: &[f32]) -> f32 { v.par_iter().copied().sum::<f32>() }";
+        let f = run_rules("engine/mod.rs", &lex(bad));
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("parallel iterator"), "{}", f[0].message);
+        // annotation-typed form over into_par_iter
+        let bad2 = "fn f(v: Vec<f64>) -> f64 { let s: f64 = v.into_par_iter().sum(); s }";
+        assert_eq!(run_rules("engine/mod.rs", &lex(bad2)).len(), 1);
+        // integer parallel sum: order-independent, clean
+        let ints = "fn f(v: &[u64]) -> u64 { v.par_iter().sum::<u64>() }";
+        assert!(run_rules("engine/mod.rs", &lex(ints)).is_empty());
+        // the parallel stage and the float fold in different statements:
+        // the reduction itself is sequential and ordered, clean
+        let staged = "fn f(v: &[f32]) -> f32 { \
+                      let c: Vec<f32> = v.par_iter().copied().collect(); \
+                      c.iter().sum::<f32>() }";
+        assert!(run_rules("engine/mod.rs", &lex(staged)).is_empty());
+        // out-of-scope module: clean
+        assert!(run_rules("data/mod.rs", &lex(bad)).is_empty());
     }
 
     #[test]

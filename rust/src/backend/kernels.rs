@@ -1,0 +1,437 @@
+//! Cache-blocked, autovectorizable matmul kernels for the native MLP
+//! forward–backward pass.
+//!
+//! Every kernel here is **bitwise equal** to the scalar reference path
+//! ([`crate::backend::NativeMlpBackend::fwd_bwd_reference`]) by
+//! construction: for each output element, the floating-point accumulation
+//! order — and the exact set of skipped zero terms — is identical to the
+//! scalar loops, so blocking reorders *memory traffic*, never *math*.
+//! The invariants each kernel preserves:
+//!
+//! * **Forward** ([`matmul_bias_act`]): `out[r][o]` starts at `bias[o]`
+//!   and accumulates `x[r][a] · w[a][o]` over `a` ascending, skipping
+//!   terms where `x[r][a] == 0.0` (exactly the scalar skip — `-0.0`
+//!   counts as zero there too).  The fused ReLU applies `v < 0.0 → 0.0`
+//!   at store, the same predicate as the scalar post-pass (so `-0.0`
+//!   survives unchanged in both).
+//! * **dW** ([`matmul_at_delta`]): `gw[a][o]` accumulates
+//!   `act[r][a] · delta[r][o]` over `r` ascending, skipping rows where
+//!   `act[r][a] == 0.0`.  A register accumulator starting at `+0.0` and
+//!   stored once is bitwise the same as the scalar's in-place `+=` into a
+//!   zeroed buffer (an accumulation from `+0.0` can never produce `-0.0`
+//!   that in-place addition would avoid, and untouched elements store the
+//!   untouched `+0.0`).
+//! * **dprev** ([`matmul_delta_wt`]): `dprev[r][a]` accumulates
+//!   `wt[k][a] · delta[r][k]` over `k` ascending with *no* skip — the
+//!   scalar dot product adds every `w[a][k] · delta[r][k]` term, zeros
+//!   included (a skipped `±0.0` product can flip the sign of a zero
+//!   accumulator, so the blocked kernel must add them too).  The caller
+//!   passes `w` pre-transposed so the inner loop is a contiguous
+//!   elementwise FMA over `a` (vectorizable) instead of a serial dot
+//!   reduction (not).  The ReLU mask (`act[r][a] > 0.0`) applies after,
+//!   forcing masked entries to the scalar's untouched `+0.0`.
+//!
+//! Block sizes: [`MR`] batch rows × [`NR`] output columns per register
+//! tile.  Full tiles take a constant-bound microkernel the compiler
+//! unrolls and vectorizes; edge tiles (batch not a multiple of `MR`,
+//! output dim not a multiple of `NR` — e.g. the 10-class logit layer)
+//! take the same code shape with runtime bounds.  The reference-parity
+//! suite (`rust/tests/backend_parity.rs`) fuzzes both paths against the
+//! scalar reference across every `MlpShape` variant and asserts exact
+//! bit equality.
+
+/// Batch rows per register tile.
+pub const MR: usize = 4;
+/// Output columns per register tile.
+pub const NR: usize = 16;
+
+/// Blocked `out[b, dn] = x[b, di] @ w[di, dn] + bias`, with a fused ReLU
+/// at store when `relu` is set.  Bitwise equal to the scalar
+/// `matmul_add_bias` + ReLU post-pass (see module docs).
+pub fn matmul_bias_act(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    b: usize,
+    di: usize,
+    dn: usize,
+    relu: bool,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), b * di);
+    debug_assert_eq!(w.len(), di * dn);
+    debug_assert_eq!(bias.len(), dn);
+    debug_assert_eq!(out.len(), b * dn);
+    let mut r0 = 0;
+    while r0 < b {
+        let mr = MR.min(b - r0);
+        let mut o0 = 0;
+        while o0 < dn {
+            let nr = NR.min(dn - o0);
+            if mr == MR && nr == NR {
+                fwd_tile_full(x, w, bias, di, dn, r0, o0, relu, out);
+            } else {
+                fwd_tile_edge(x, w, bias, di, dn, r0, o0, mr, nr, relu, out);
+            }
+            o0 += NR;
+        }
+        r0 += MR;
+    }
+}
+
+/// Full `MR × NR` forward tile: accumulators live in registers, each
+/// loaded `w` row feeds all `MR` batch rows.  Constant loop bounds let
+/// the compiler unroll and vectorize the inner FMA.
+#[inline]
+fn fwd_tile_full(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    di: usize,
+    dn: usize,
+    r0: usize,
+    o0: usize,
+    relu: bool,
+    out: &mut [f32],
+) {
+    let mut acc = [[0f32; NR]; MR];
+    for row in acc.iter_mut() {
+        row.copy_from_slice(&bias[o0..o0 + NR]);
+    }
+    for a in 0..di {
+        let wrow = &w[a * dn + o0..a * dn + o0 + NR];
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let xv = x[(r0 + r) * di + a];
+            if xv == 0.0 {
+                continue; // identical to the scalar zero-skip
+            }
+            for (c, &wv) in accr.iter_mut().zip(wrow) {
+                *c += xv * wv;
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        let orow = &mut out[(r0 + r) * dn + o0..(r0 + r) * dn + o0 + NR];
+        for (o, &v) in orow.iter_mut().zip(accr) {
+            *o = if relu && v < 0.0 { 0.0 } else { v };
+        }
+    }
+}
+
+/// Edge forward tile (`mr ≤ MR`, `nr ≤ NR` with at least one strict):
+/// same accumulation order as the full tile, runtime bounds.
+fn fwd_tile_edge(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    di: usize,
+    dn: usize,
+    r0: usize,
+    o0: usize,
+    mr: usize,
+    nr: usize,
+    relu: bool,
+    out: &mut [f32],
+) {
+    let mut acc = [[0f32; NR]; MR];
+    for row in acc.iter_mut().take(mr) {
+        row[..nr].copy_from_slice(&bias[o0..o0 + nr]);
+    }
+    for a in 0..di {
+        let wrow = &w[a * dn + o0..a * dn + o0 + nr];
+        for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+            let xv = x[(r0 + r) * di + a];
+            if xv == 0.0 {
+                continue;
+            }
+            for (c, &wv) in accr[..nr].iter_mut().zip(wrow) {
+                *c += xv * wv;
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate().take(mr) {
+        let orow = &mut out[(r0 + r) * dn + o0..(r0 + r) * dn + o0 + nr];
+        for (o, &v) in orow.iter_mut().zip(&accr[..nr]) {
+            *o = if relu && v < 0.0 { 0.0 } else { v };
+        }
+    }
+}
+
+/// Blocked `gw[di, dn] = act[b, di]ᵀ @ delta[b, dn]` (the weight
+/// gradient).  `gw` is *assigned* (not accumulated into); callers pass
+/// the weight block of the flat gradient buffer.  Bitwise equal to the
+/// scalar `r`-outer accumulation with its `act == 0.0` row skip.
+pub fn matmul_at_delta(
+    act: &[f32],
+    delta: &[f32],
+    b: usize,
+    di: usize,
+    dn: usize,
+    gw: &mut [f32],
+) {
+    debug_assert_eq!(act.len(), b * di);
+    debug_assert_eq!(delta.len(), b * dn);
+    debug_assert_eq!(gw.len(), di * dn);
+    let mut a0 = 0;
+    while a0 < di {
+        let ma = MR.min(di - a0);
+        let mut o0 = 0;
+        while o0 < dn {
+            let nr = NR.min(dn - o0);
+            let mut acc = [[0f32; NR]; MR];
+            for r in 0..b {
+                let drow = &delta[r * dn + o0..r * dn + o0 + nr];
+                for (ai, accr) in acc.iter_mut().enumerate().take(ma) {
+                    let av = act[r * di + a0 + ai];
+                    if av == 0.0 {
+                        continue; // identical to the scalar zero-skip
+                    }
+                    for (c, &dv) in accr[..nr].iter_mut().zip(drow) {
+                        *c += av * dv;
+                    }
+                }
+            }
+            for (ai, accr) in acc.iter().enumerate().take(ma) {
+                gw[(a0 + ai) * dn + o0..(a0 + ai) * dn + o0 + nr]
+                    .copy_from_slice(&accr[..nr]);
+            }
+            o0 += NR;
+        }
+        a0 += MR;
+    }
+}
+
+/// Transpose `w[di, dn]` into `wt[dn, di]` (`wt[k][a] = w[a][k]`) —
+/// the one-off per-layer cost that turns the backward `delta @ Wᵀ`
+/// dot-product reduction into a contiguous vectorizable FMA.
+pub fn transpose_into(w: &[f32], di: usize, dn: usize, wt: &mut [f32]) {
+    debug_assert_eq!(w.len(), di * dn);
+    debug_assert_eq!(wt.len(), di * dn);
+    for a in 0..di {
+        for k in 0..dn {
+            wt[k * di + a] = w[a * dn + k];
+        }
+    }
+}
+
+/// `dprev[b, di] = (delta[b, dn] @ wt[dn, di]ᵀ-of-transpose) ⊙ relu'(act)`:
+/// the input-gradient matmul over the *pre-transposed* weights, masked by
+/// the forward activations (`act[r][a] > 0.0` keeps the value, anything
+/// else forces `+0.0` — exactly the scalar's skip-leaves-zero).  The
+/// per-element accumulation runs over `k` ascending with no zero-skip,
+/// matching the scalar dot product term for term.
+pub fn matmul_delta_wt(
+    delta: &[f32],
+    wt: &[f32],
+    act: &[f32],
+    b: usize,
+    di: usize,
+    dn: usize,
+    dprev: &mut [f32],
+) {
+    debug_assert_eq!(delta.len(), b * dn);
+    debug_assert_eq!(wt.len(), di * dn);
+    debug_assert_eq!(act.len(), b * di);
+    debug_assert_eq!(dprev.len(), b * di);
+    for r in 0..b {
+        let prow = &mut dprev[r * di..(r + 1) * di];
+        prow.fill(0.0);
+        let drow = &delta[r * dn..(r + 1) * dn];
+        for (k, &dv) in drow.iter().enumerate() {
+            let wtrow = &wt[k * di..(k + 1) * di];
+            // One k per pass keeps the per-element order identical to
+            // the scalar dot product (pairing two k's would reassociate
+            // the sum and break bit parity).
+            for (p, &wv) in prow.iter_mut().zip(wtrow) {
+                *p += wv * dv;
+            }
+        }
+        let arow = &act[r * di..(r + 1) * di];
+        for (p, &av) in prow.iter_mut().zip(arow) {
+            if !(av > 0.0) {
+                *p = 0.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng64;
+
+    fn fill(rng: &mut Rng64, n: usize, zero_every: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| {
+                if zero_every > 0 && i % zero_every == 0 {
+                    0.0
+                } else {
+                    rng.normal_f32()
+                }
+            })
+            .collect()
+    }
+
+    /// The scalar forward the blocked kernel must match bit for bit.
+    fn fwd_reference(
+        x: &[f32],
+        w: &[f32],
+        bias: &[f32],
+        b: usize,
+        di: usize,
+        dn: usize,
+        relu: bool,
+    ) -> Vec<f32> {
+        let mut out = vec![0f32; b * dn];
+        for r in 0..b {
+            let orow = &mut out[r * dn..(r + 1) * dn];
+            orow.copy_from_slice(bias);
+            let xrow = &x[r * di..(r + 1) * di];
+            for (a, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[a * dn..(a + 1) * dn];
+                for (o, wv) in orow.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+        }
+        if relu {
+            for v in out.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        out
+    }
+
+    fn dw_reference(act: &[f32], delta: &[f32], b: usize, di: usize, dn: usize) -> Vec<f32> {
+        let mut gw = vec![0f32; di * dn];
+        for r in 0..b {
+            let arow = &act[r * di..(r + 1) * di];
+            let drow = &delta[r * dn..(r + 1) * dn];
+            for a in 0..di {
+                let av = arow[a];
+                if av == 0.0 {
+                    continue;
+                }
+                for (g, d) in gw[a * dn..(a + 1) * dn].iter_mut().zip(drow) {
+                    *g += av * d;
+                }
+            }
+        }
+        gw
+    }
+
+    fn dprev_reference(
+        delta: &[f32],
+        w: &[f32],
+        act: &[f32],
+        b: usize,
+        di: usize,
+        dn: usize,
+    ) -> Vec<f32> {
+        let mut dprev = vec![0f32; b * di];
+        for r in 0..b {
+            let drow = &delta[r * dn..(r + 1) * dn];
+            let arow = &act[r * di..(r + 1) * di];
+            let prow = &mut dprev[r * di..(r + 1) * di];
+            for a in 0..di {
+                if arow[a] > 0.0 {
+                    let wrow = &w[a * dn..(a + 1) * dn];
+                    let mut acc = 0f32;
+                    for (wv, dv) in wrow.iter().zip(drow) {
+                        acc += wv * dv;
+                    }
+                    prow[a] = acc;
+                }
+            }
+        }
+        dprev
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn forward_matches_scalar_bitwise_over_edge_shapes() {
+        let mut rng = Rng64::seed_from_u64(7);
+        // (b, di, dn) covering full tiles, tail rows, tail cols, and both
+        for &(b, di, dn) in
+            &[(4, 16, 16), (1, 3, 10), (5, 32, 16), (7, 13, 10), (32, 128, 64), (3, 1, 1)]
+        {
+            for relu in [false, true] {
+                let x = fill(&mut rng, b * di, 3);
+                let w = fill(&mut rng, di * dn, 0);
+                let bias = fill(&mut rng, dn, 0);
+                let mut out = vec![f32::NAN; b * dn]; // prove every slot is written
+                matmul_bias_act(&x, &w, &bias, b, di, dn, relu, &mut out);
+                let reference = fwd_reference(&x, &w, &bias, b, di, dn, relu);
+                assert_bits_eq(&out, &reference, &format!("fwd b={b} di={di} dn={dn}"));
+            }
+        }
+    }
+
+    #[test]
+    fn dw_matches_scalar_bitwise_over_edge_shapes() {
+        let mut rng = Rng64::seed_from_u64(8);
+        for &(b, di, dn) in &[(4, 16, 16), (1, 3, 10), (5, 32, 16), (7, 13, 10), (16, 30, 10)] {
+            // act has zeros (post-ReLU shape) to exercise the skip
+            let act = fill(&mut rng, b * di, 2);
+            let delta = fill(&mut rng, b * dn, 0);
+            let mut gw = vec![f32::NAN; di * dn];
+            matmul_at_delta(&act, &delta, b, di, dn, &mut gw);
+            let reference = dw_reference(&act, &delta, b, di, dn);
+            assert_bits_eq(&gw, &reference, &format!("dW b={b} di={di} dn={dn}"));
+        }
+    }
+
+    #[test]
+    fn dprev_matches_scalar_bitwise_over_edge_shapes() {
+        let mut rng = Rng64::seed_from_u64(9);
+        for &(b, di, dn) in &[(4, 16, 16), (1, 3, 10), (5, 32, 16), (7, 13, 10), (16, 30, 10)] {
+            let delta = fill(&mut rng, b * dn, 5);
+            let w = fill(&mut rng, di * dn, 0);
+            // negative and zero activations exercise the ReLU mask
+            let act = fill(&mut rng, b * di, 2);
+            let mut wt = vec![0f32; di * dn];
+            transpose_into(&w, di, dn, &mut wt);
+            let mut dprev = vec![f32::NAN; b * di];
+            matmul_delta_wt(&delta, &wt, &act, b, di, dn, &mut dprev);
+            let reference = dprev_reference(&delta, &w, &act, b, di, dn);
+            assert_bits_eq(&dprev, &reference, &format!("dprev b={b} di={di} dn={dn}"));
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrips() {
+        let mut rng = Rng64::seed_from_u64(10);
+        let (di, dn) = (7, 5);
+        let w = fill(&mut rng, di * dn, 0);
+        let mut wt = vec![0f32; di * dn];
+        transpose_into(&w, di, dn, &mut wt);
+        let mut back = vec![0f32; di * dn];
+        transpose_into(&wt, dn, di, &mut back);
+        assert_eq!(w, back);
+    }
+
+    #[test]
+    fn negative_zero_inputs_are_skipped_like_positive_zero() {
+        // -0.0 == 0.0, so the scalar skip treats both as zero; the
+        // blocked kernel must too, or a -0.0·w term could flip the sign
+        // of a zero accumulator.
+        let x = vec![-0.0f32, 2.0];
+        let w = vec![-3.0f32, 1.0, 4.0, -1.0]; // 2×2
+        let bias = vec![0.0f32, -0.0];
+        let mut out = vec![f32::NAN; 2];
+        matmul_bias_act(&x, &w, &bias, 1, 2, 2, false, &mut out);
+        let reference = fwd_reference(&x, &w, &bias, 1, 2, 2, false);
+        assert_bits_eq(&out, &reference, "fwd -0.0");
+    }
+}

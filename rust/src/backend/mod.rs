@@ -8,6 +8,7 @@
 //!   gradients; used by the convergence-property tests (the theory says
 //!   all doubly-stochastic gossip rules drive `‖∇F(w̄)‖ → small`).
 
+pub mod kernels;
 mod native_mlp;
 mod pjrt;
 mod quadratic;
@@ -57,6 +58,21 @@ pub trait Backend {
 
     /// Compute worker `w`'s local mini-batch gradient at `params`.
     fn grad(&mut self, w: WorkerId, params: &[f32]) -> GradOutput;
+
+    /// Compute a batch of per-worker gradients, one per `(ws[i],
+    /// params[i])` pair, returned in input order.
+    ///
+    /// Contract: the result must be byte-identical to calling [`grad`]
+    /// sequentially for each pair, for every `threads` value — backends
+    /// may parallelize internally (up to `threads` OS threads) only if
+    /// they can keep that promise (pure per-worker compute, any shared
+    /// RNG advanced serially in input order).  The default implementation
+    /// is the sequential loop itself.
+    ///
+    /// [`grad`]: Backend::grad
+    fn grad_batch(&mut self, ws: &[WorkerId], params: &[&[f32]], _threads: usize) -> Vec<GradOutput> {
+        ws.iter().zip(params).map(|(&w, p)| self.grad(w, p)).collect()
+    }
 
     /// Evaluate `params` globally (held-out or full-data depending on
     /// backend).

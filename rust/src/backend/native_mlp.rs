@@ -4,7 +4,7 @@
 //! (N up to 256 workers × thousands of gossip iterations) and as the perf
 //! baseline for the runtime benches.
 
-use super::{Backend, EvalOutput, GradOutput};
+use super::{kernels, Backend, EvalOutput, GradOutput};
 use crate::data::{
     partition_iid, partition_noniid_shards, SyntheticClassification, WorkerShard,
 };
@@ -135,9 +135,120 @@ impl NativeMlpBackend {
         NativeMlpBackend { shape, data, shards, eval_indices, padded }
     }
 
-    /// Forward + backward over one gathered batch.  Returns
+    /// Read-only view of the synthetic dataset.  The parity and bench
+    /// harnesses use this to gather fixed batches without advancing the
+    /// per-worker shard RNGs.
+    pub fn dataset(&self) -> &SyntheticClassification {
+        &self.data
+    }
+
+    /// The model shape this backend was built with.
+    pub fn shape(&self) -> &MlpShape {
+        &self.shape
+    }
+
+    /// Forward + backward over one gathered batch, on the cache-blocked
+    /// kernel path ([`super::kernels`]).  Returns
     /// `(loss, grad_flat, correct)`.
-    fn fwd_bwd(&self, params: &[f32], x: &[f32], y: &[i32]) -> (f32, Vec<f32>, u32) {
+    ///
+    /// Bitwise equal to [`Self::fwd_bwd_reference`]: the blocked kernels
+    /// preserve the scalar path's per-output-element accumulation order
+    /// and zero-skip set exactly (see the kernels module docs for the
+    /// per-kernel argument), so blocking changes memory traffic, never
+    /// math.  `rust/tests/backend_parity.rs` fuzzes the equivalence
+    /// across every `MlpShape` variant and batch size.
+    pub fn fwd_bwd(&self, params: &[f32], x: &[f32], y: &[i32]) -> (f32, Vec<f32>, u32) {
+        let dims = &self.shape.dims;
+        let b = y.len();
+        let l = dims.len() - 1;
+        // slice params
+        let mut weights: Vec<&[f32]> = Vec::with_capacity(l);
+        let mut biases: Vec<&[f32]> = Vec::with_capacity(l);
+        let mut off = 0usize;
+        for win in dims.windows(2) {
+            let (di, dn) = (win[0], win[1]);
+            weights.push(&params[off..off + di * dn]);
+            off += di * dn;
+            biases.push(&params[off..off + dn]);
+            off += dn;
+        }
+        // forward, keeping activations; ReLU fused into the tile store
+        let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
+        for (i, win) in dims.windows(2).enumerate() {
+            let (di, dn) = (win[0], win[1]);
+            let input = &acts[i];
+            let mut out = vec![0f32; b * dn];
+            kernels::matmul_bias_act(input, weights[i], biases[i], b, di, dn, i < l - 1, &mut out);
+            acts.push(out);
+        }
+        // softmax CE + dlogits (same elementwise pass as the reference)
+        let c = dims[l];
+        let logits = &acts[l];
+        let mut loss = 0f32;
+        let mut correct = 0u32;
+        let mut delta = vec![0f32; b * c];
+        for r in 0..b {
+            let row = &logits[r * c..(r + 1) * c];
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0f32;
+            for &v in row {
+                denom += (v - max).exp();
+            }
+            let label = y[r] as usize;
+            loss += -(row[label] - max - denom.ln());
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if argmax == label {
+                correct += 1;
+            }
+            for k in 0..c {
+                let p = (row[k] - max).exp() / denom;
+                delta[r * c + k] = (p - if k == label { 1.0 } else { 0.0 }) / b as f32;
+            }
+        }
+        loss /= b as f32;
+        // backward, blocked: dW by register tile, dprev over a per-layer
+        // transposed weight scratch so the inner loop is contiguous
+        let mut grad = vec![0f32; self.padded];
+        let mut doff = off; // == dim
+        debug_assert_eq!(doff, self.shape.dim());
+        let mut delta_cur = delta;
+        let mut wt_scratch: Vec<f32> = Vec::new();
+        for i in (0..l).rev() {
+            let (di, dn) = (dims[i], dims[i + 1]);
+            doff -= dn; // bias block: db[k] = Σ_r delta[r][k], r ascending
+            for r in 0..b {
+                let drow = &delta_cur[r * dn..(r + 1) * dn];
+                for (g, d) in grad[doff..doff + dn].iter_mut().zip(drow) {
+                    *g += *d;
+                }
+            }
+            doff -= di * dn; // weight block: dW = act^T delta
+            let act = &acts[i];
+            kernels::matmul_at_delta(act, &delta_cur, b, di, dn, &mut grad[doff..doff + di * dn]);
+            if i > 0 {
+                // delta_prev = (delta @ W^T) * relu'(act_i)
+                wt_scratch.resize(di * dn, 0.0);
+                kernels::transpose_into(weights[i], di, dn, &mut wt_scratch);
+                let mut dprev = vec![0f32; b * di];
+                kernels::matmul_delta_wt(&delta_cur, &wt_scratch, act, b, di, dn, &mut dprev);
+                delta_cur = dprev;
+            }
+        }
+        (loss, grad, correct)
+    }
+
+    /// The original scalar forward + backward, retained verbatim as the
+    /// reference the blocked path is proven against (bit for bit) by
+    /// `rust/tests/backend_parity.rs` and the in-tree kernel unit tests.
+    /// Also the slow side of the `bench engine` compute micro-bench, so
+    /// the committed speedup baseline is measured against real code, not
+    /// a remembered number.
+    pub fn fwd_bwd_reference(&self, params: &[f32], x: &[f32], y: &[i32]) -> (f32, Vec<f32>, u32) {
         let dims = &self.shape.dims;
         let b = y.len();
         let l = dims.len() - 1;
@@ -253,7 +364,9 @@ impl NativeMlpBackend {
     }
 }
 
-/// `out[b, dO] = x[b, dI] @ w[dI, dO] + bias`.
+/// `out[b, dO] = x[b, dI] @ w[dI, dO] + bias` — the scalar reference
+/// kernel, used only by [`NativeMlpBackend::fwd_bwd_reference`].  The
+/// fast path lives in [`super::kernels`].
 fn matmul_add_bias(
     x: &[f32],
     w: &[f32],
@@ -293,6 +406,62 @@ impl Backend for NativeMlpBackend {
         let (x, y) = self.data.gather(&idx);
         let (loss, grad, correct) = self.fwd_bwd(params, &x, &y);
         GradOutput { loss, grad, correct, examples: y.len() as u32 }
+    }
+
+    fn grad_batch(&mut self, ws: &[WorkerId], params: &[&[f32]], threads: usize) -> Vec<GradOutput> {
+        debug_assert_eq!(ws.len(), params.len());
+        // Draw every mini-batch serially, in input order: the per-worker
+        // shard RNGs advance exactly as N sequential `grad` calls would,
+        // independent of the thread count below.
+        let jobs: Vec<(Vec<f32>, Vec<i32>)> = ws
+            .iter()
+            .map(|&w| {
+                let idx = self.shards[w].next_batch(self.shape.batch);
+                self.data.gather(&idx)
+            })
+            .collect();
+        let threads = threads.max(1).min(jobs.len());
+        let this: &NativeMlpBackend = self;
+        if threads <= 1 {
+            return jobs
+                .iter()
+                .zip(params)
+                .map(|((x, y), p)| {
+                    let (loss, grad, correct) = this.fwd_bwd(p, x, y);
+                    GradOutput { loss, grad, correct, examples: y.len() as u32 }
+                })
+                .collect();
+        }
+        // fwd_bwd is pure (&self, no RNG), so jobs can run on any thread;
+        // results land in position-indexed slots, so the output order —
+        // and therefore everything downstream — is thread-count-invariant.
+        let mut outs: Vec<Option<GradOutput>> = Vec::new();
+        outs.resize_with(jobs.len(), || None);
+        let chunk = jobs.len().div_ceil(threads);
+        std::thread::scope(|s| {
+            let mut out_rest: &mut [Option<GradOutput>] = &mut outs;
+            let mut job_rest: &[(Vec<f32>, Vec<i32>)] = &jobs;
+            let mut par_rest: &[&[f32]] = params;
+            while !job_rest.is_empty() {
+                let take = chunk.min(job_rest.len());
+                let (out_chunk, r) = out_rest.split_at_mut(take);
+                out_rest = r;
+                let (job_chunk, r) = job_rest.split_at(take);
+                job_rest = r;
+                let (par_chunk, r) = par_rest.split_at(take);
+                par_rest = r;
+                s.spawn(move || {
+                    for ((slot, (x, y)), p) in
+                        out_chunk.iter_mut().zip(job_chunk).zip(par_chunk)
+                    {
+                        let (loss, grad, correct) = this.fwd_bwd(p, x, y);
+                        *slot =
+                            Some(GradOutput { loss, grad, correct, examples: y.len() as u32 });
+                    }
+                });
+            }
+        });
+        outs.into_iter().map(|o| o.expect("every batch slot is filled")).collect()
     }
 
     fn eval(&mut self, params: &[f32]) -> EvalOutput {
@@ -381,11 +550,68 @@ mod tests {
     }
 
     #[test]
-    fn grad_padding_zero() {
-        let mut b = backend();
-        let params = b.init_params(7);
-        let g = b.grad(1, &params);
-        assert_eq!(g.grad.len(), 1792);
-        assert!(g.grad[1754..].iter().all(|&v| v == 0.0));
+    fn grad_padding_zero_for_every_variant() {
+        // every shape variant — including batch sizes that leave tail
+        // blocks in the MR×NR tiling — must keep the padding slots at
+        // literal +0.0 after a full grad step
+        for name in ["mlp_tiny", "mlp_small", "mlp2nn", "mlp_tiny@b1", "mlp_small@b5"] {
+            let shape = MlpShape::by_name(name).unwrap();
+            let dim = shape.dim();
+            let padded = shape.padded_dim();
+            let mut b = NativeMlpBackend::new(shape, 4, 512, 3.0, true, 5, 1);
+            let params = b.init_params(7);
+            let g = b.grad(1, &params);
+            assert_eq!(g.grad.len(), padded, "{name}");
+            assert!(
+                g.grad[dim..].iter().all(|&v| v.to_bits() == 0),
+                "{name}: padding tail must be literal +0.0"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_path_matches_reference_smoke() {
+        // one quick case here; the full fuzz lives in
+        // rust/tests/backend_parity.rs
+        let b = backend();
+        let params = b.init_params(11);
+        let idx: Vec<usize> = (3..3 + 16).collect();
+        let (x, y) = b.data.gather(&idx);
+        let (loss_f, grad_f, correct_f) = b.fwd_bwd(&params, &x, &y);
+        let (loss_r, grad_r, correct_r) = b.fwd_bwd_reference(&params, &x, &y);
+        assert_eq!(loss_f.to_bits(), loss_r.to_bits());
+        assert_eq!(correct_f, correct_r);
+        assert_eq!(grad_f.len(), grad_r.len());
+        for (i, (a, r)) in grad_f.iter().zip(&grad_r).enumerate() {
+            assert_eq!(a.to_bits(), r.to_bits(), "grad[{i}]: {a} vs {r}");
+        }
+    }
+
+    #[test]
+    fn grad_batch_matches_sequential_grads_any_thread_count() {
+        // the batched entry point must be byte-identical to N sequential
+        // grad() calls, for every thread count
+        for threads in [1usize, 2, 8] {
+            let mut seq = backend();
+            let mut bat = backend();
+            let params: Vec<ParamVec> =
+                (0..4).map(|s| seq.init_params(20 + s as u64)).collect();
+            let expected: Vec<GradOutput> =
+                (0..4).map(|w| seq.grad(w, &params[w])).collect();
+            let ws: Vec<WorkerId> = (0..4).collect();
+            let views: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+            let got = bat.grad_batch(&ws, &views, threads);
+            assert_eq!(got.len(), expected.len());
+            for (w, (g, e)) in got.iter().zip(&expected).enumerate() {
+                assert_eq!(g.loss.to_bits(), e.loss.to_bits(), "t={threads} w={w}");
+                assert_eq!(g.correct, e.correct);
+                assert_eq!(g.examples, e.examples);
+                assert!(g
+                    .grad
+                    .iter()
+                    .zip(&e.grad)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()));
+            }
+        }
     }
 }

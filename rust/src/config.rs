@@ -142,6 +142,13 @@ pub struct ExperimentConfig {
     /// `EventKind::EvalTick`; useful when iteration rates differ wildly
     /// across algorithms).  `None` disables time-based evaluation.
     pub eval_every_seconds: Option<f64>,
+    /// OS threads for intra-cell gradient batches: when several workers
+    /// start computing at the same virtual instant, the backend may run
+    /// their gradients on this many threads.  `1` is the serial legacy
+    /// path, `0` sizes to the machine.  A pure wall-clock lever: results
+    /// are byte-identical for every value (the determinism suite sweeps
+    /// {1, 2, 8}).
+    pub compute_threads: usize,
     /// Mean local compute time (virtual seconds per gradient step).
     pub mean_compute: f64,
     /// Log-normal σ of per-worker base speeds (0 = homogeneous fleet).
@@ -189,6 +196,7 @@ impl Default for ExperimentConfig {
             time_budget: None,
             eval_every: 10,
             eval_every_seconds: None,
+            compute_threads: 1,
             mean_compute: 0.05,
             hetero_sigma: 0.25,
             straggler: StragglerModel::default(),
@@ -263,6 +271,7 @@ impl ExperimentConfig {
                 self.eval_every_seconds =
                     if matches!(v, Json::Null) { None } else { Some(need_f64(key, v)?) }
             }
+            "compute_threads" => self.compute_threads = need_usize(key, v)?,
             "mean_compute" => self.mean_compute = need_f64(key, v)?,
             "hetero_sigma" => self.hetero_sigma = need_f64(key, v)?,
             // the full straggler section (process kind + parameters)
@@ -321,6 +330,7 @@ impl ExperimentConfig {
         if let Some(t) = self.eval_every_seconds {
             m.insert("eval_every_seconds".into(), Json::Num(t));
         }
+        m.insert("compute_threads".into(), Json::from(self.compute_threads));
         m.insert("mean_compute".into(), Json::Num(self.mean_compute));
         m.insert("hetero_sigma".into(), Json::Num(self.hetero_sigma));
         m.insert("straggler".into(), self.straggler.to_json());
@@ -713,6 +723,11 @@ mod tests {
         assert_eq!(cfg.num_workers, 64);
         cfg.apply_kv("model", &Json::from("mlp_tiny")).unwrap();
         assert_eq!(cfg.model, "mlp_tiny");
+        assert_eq!(cfg.compute_threads, 1, "serial legacy default");
+        cfg.apply_kv("compute_threads", &Json::from(8usize)).unwrap();
+        assert_eq!(cfg.compute_threads, 8);
+        cfg.apply_kv("compute_threads", &Json::from(0usize)).unwrap();
+        assert_eq!(cfg.compute_threads, 0, "0 = auto is a valid setting");
         assert!(cfg.apply_kv("no_such_key", &Json::from(1usize)).is_err());
     }
 

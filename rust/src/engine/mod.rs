@@ -52,6 +52,12 @@ pub struct EngineCore {
     pub stale: StaleState,
     adapt: AdaptConfig,
     compute: ComputeModel,
+    /// OS threads for intra-cell gradient batches (`compute_threads`
+    /// config knob, already resolved: `0 = auto` became the detected
+    /// parallelism).  Purely a wall-clock lever — `begin_compute_batch`
+    /// commits results in drain order whatever this is, so metrics are
+    /// byte-identical across values (the determinism suite sweeps it).
+    compute_threads: usize,
     backend: Box<dyn Backend>,
     params: Vec<ParamVec>,
     stash: Vec<Option<GradOutput>>,
@@ -212,6 +218,42 @@ impl EngineCore {
     /// sampled compute duration.
     pub fn begin_compute(&mut self, w: WorkerId) {
         let out = self.backend.grad(w, &self.params[w]);
+        self.commit_grad(w, out);
+    }
+
+    /// Begin local computations for every worker in `ws`, in order.
+    ///
+    /// Byte-identical to calling [`begin_compute`] for each worker in
+    /// turn: the backend's `grad_batch` contract guarantees the outputs
+    /// match sequential `grad` calls (any internal parallelism
+    /// notwithstanding), and the commit loop below then applies them —
+    /// and draws each compute duration from the shared straggler RNG —
+    /// serially in the same input order.  The engine's parallel
+    /// intra-cell stepping is therefore invisible to metrics: only
+    /// wall-clock changes with `compute_threads`.
+    ///
+    /// [`begin_compute`]: EngineCore::begin_compute
+    pub fn begin_compute_batch(&mut self, ws: &[WorkerId]) {
+        if ws.len() <= 1 {
+            if let Some(&w) = ws.first() {
+                self.begin_compute(w);
+            }
+            return;
+        }
+        let outs = {
+            let views: Vec<&[f32]> = ws.iter().map(|&w| self.params[w].as_slice()).collect();
+            self.backend.grad_batch(ws, &views, self.compute_threads)
+        };
+        debug_assert_eq!(outs.len(), ws.len());
+        for (&w, out) in ws.iter().zip(outs) {
+            self.commit_grad(w, out);
+        }
+    }
+
+    /// Serial tail of a compute start: record the loss, stash the
+    /// gradient, and schedule the completion.  Draws from the shared
+    /// straggler RNG, so callers must invoke it in worker input order.
+    fn commit_grad(&mut self, w: WorkerId, out: GradOutput) {
         self.recent_loss.0 += out.loss as f64;
         self.recent_loss.1 += 1;
         self.stash[w] = Some(out);
@@ -864,6 +906,12 @@ impl Engine {
             k: 0,
             adapt: cfg.adapt.clone(),
             compute,
+            compute_threads: match cfg.compute_threads {
+                // auto: size to the machine (a capability probe, not a
+                // clock — results are identical whatever it returns)
+                0 => std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+                t => t,
+            },
             backend,
             params: vec![init.clone(); n],
             stash: vec![None; n],
@@ -997,11 +1045,8 @@ impl Engine {
         for s in vacant {
             self.do_leave(s);
         }
-        for w in 0..n {
-            if self.core.active[w] {
-                self.core.begin_compute(w);
-            }
-        }
+        let startup: Vec<WorkerId> = (0..n).filter(|&w| self.core.active[w]).collect();
+        self.core.begin_compute_batch(&startup);
         self.core.eval_now(); // k = 0 baseline point
         if let Some(t) = self.churn.next_change() {
             self.core.queue.schedule(t, EventKind::TopologyChange);
@@ -1018,9 +1063,47 @@ impl Engine {
         while let Some(Event { kind, .. }) = self.core.queue.pop() {
             match kind {
                 EventKind::ComputeStart(w) => {
+                    // Parallel intra-cell stepping: drain the run of
+                    // *consecutive* same-timestamp ComputeStarts at the
+                    // queue head and hand them to the backend as one
+                    // batch.  Only consecutive heads are taken — a
+                    // same-time TopologyChange (or any other event)
+                    // between two starts ends the batch, so event
+                    // interleaving is exactly the serial engine's.
+                    // Results commit in drain (FIFO) order, which *is*
+                    // the order the serial loop would have popped, so
+                    // the trajectory is byte-identical for every
+                    // `compute_threads` value.
+                    let now = self.core.queue.now();
+                    let mut batch: Vec<WorkerId> = Vec::new();
                     if self.core.can_start(w) {
-                        self.core.begin_compute(w);
+                        batch.push(w);
                     }
+                    // if this timestamp already exhausts the time budget
+                    // the serial loop would break after this one event —
+                    // don't drain peers it would never have started
+                    let within_budget = self.time_budget.map_or(true, |b| now < b);
+                    while let Some(head) = self.core.queue.peek() {
+                        if !within_budget {
+                            break;
+                        }
+                        match head.kind {
+                            EventKind::ComputeStart(v)
+                                if head.time.to_bits() == now.to_bits() =>
+                            {
+                                self.core.queue.pop();
+                                // duplicate starts for one worker collapse
+                                // exactly as serial dispatch would: the
+                                // first commit arms expected_done, so
+                                // can_start vetoes the second
+                                if self.core.can_start(v) && !batch.contains(&v) {
+                                    batch.push(v);
+                                }
+                            }
+                            _ => break,
+                        }
+                    }
+                    self.core.begin_compute_batch(&batch);
                 }
                 EventKind::ComputeDone(w) => {
                     if self.core.accept_done(w) {

@@ -109,6 +109,15 @@ impl EventQueue {
         self.schedule(self.now + delay, kind);
     }
 
+    /// The earliest pending event, without popping it or advancing the
+    /// clock.  Returned by value (`Event` is `Copy`) so callers can keep
+    /// mutating the queue while holding the peeked head — the engine's
+    /// parallel-stepping drain uses this to batch consecutive
+    /// same-timestamp `ComputeStart`s.
+    pub fn peek(&self) -> Option<Event> {
+        self.heap.peek().copied()
+    }
+
     /// Pop the earliest event, advancing the clock.
     pub fn pop(&mut self) -> Option<Event> {
         let ev = self.heap.pop()?;
@@ -215,6 +224,22 @@ mod tests {
         let e = q.pop().unwrap();
         assert_eq!((e.time, e.kind), (10.5, EventKind::EvalTick));
         assert_eq!(q.now(), 10.5);
+    }
+
+    #[test]
+    fn peek_matches_next_pop_and_leaves_clock_alone() {
+        let mut q = EventQueue::new();
+        assert!(q.peek().is_none());
+        q.schedule(2.0, EventKind::ComputeStart(1));
+        q.schedule(1.0, EventKind::ComputeStart(0));
+        let head = q.peek().unwrap();
+        assert_eq!((head.time, head.kind), (1.0, EventKind::ComputeStart(0)));
+        assert_eq!(q.now(), 0.0, "peek must not advance the clock");
+        assert_eq!(q.len(), 2, "peek must not consume");
+        let popped = q.pop().unwrap();
+        assert_eq!((popped.time, popped.seq), (head.time, head.seq));
+        let head = q.peek().unwrap();
+        assert_eq!((head.time, head.kind), (2.0, EventKind::ComputeStart(1)));
     }
 
     #[test]

@@ -1,12 +1,22 @@
 //! `bench engine` — the canonical engine micro-bench behind
 //! `BENCH_engine.json`: event-queue throughput (schedule/pop ops per
-//! wall-clock second) and end-to-end engine runs (events/sec, peak RSS)
-//! across fleet sizes.  `--check` gates the measured numbers against the
+//! wall-clock second), end-to-end engine runs (events/sec, peak RSS)
+//! across fleet sizes, and the compute micro-bench (params/sec for
+//! `NativeMlpBackend::fwd_bwd` across `MlpShape` variants, blocked vs
+//! scalar-reference).  `--check` gates the measured numbers against the
 //! committed baseline (`rust/testdata/perf/BENCH_engine.json`) with a
 //! multiplicative `--tolerance` (default 0.6: a run may be up to 40 %
 //! slower / proportionally larger than the baseline before CI fails —
-//! wide on purpose, shared runners are noisy).
+//! wide on purpose, shared runners are noisy).  The compute rows also
+//! carry a `min_speedup` gate on the *in-run* blocked-vs-scalar ratio,
+//! which is machine-independent and therefore ungoverned by the
+//! tolerance.
+//!
+//! `--full` adds the large-cell profile rows (n ∈ {1e3, 1e4}, native
+//! MLP backend, `compute_threads = 0`) that exercise the parallel
+//! intra-cell stepping path end to end.
 
+use crate::backend::{Backend, MlpShape, NativeMlpBackend};
 use crate::config::{BackendKind, ExperimentConfig};
 use crate::coordinator::run_experiment;
 use crate::sim::{EventKind, EventQueue};
@@ -78,6 +88,82 @@ fn bench_e2e(n: usize, iters: u64) -> Result<E2eRow> {
     })
 }
 
+/// End-to-end engine throughput at large fleet size `n` (`--full` only):
+/// DSGD-AAU over a ring with the native MLP backend and auto intra-cell
+/// threading, so the parallel stepping path is what's being profiled.
+/// Ungated — no committed floors yet at these sizes.
+fn bench_e2e_large(n: usize, iters: u64) -> Result<E2eRow> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = format!("bench_engine_large_n{n}");
+    cfg.num_workers = n;
+    cfg.backend = BackendKind::NativeMlp;
+    cfg.model = "mlp_tiny".into();
+    cfg.dataset_samples = (2 * n).max(4096);
+    cfg.compute_threads = 0; // auto: size to the machine
+    cfg.topology = crate::topology::TopologyKind::Ring;
+    cfg.mean_compute = 0.01;
+    cfg.max_iterations = iters;
+    cfg.eval_every = iters.max(1);
+    cfg.seed = 12000;
+    let start = Instant::now();
+    let s = run_experiment(&cfg)?;
+    let elapsed = start.elapsed().as_secs_f64().max(1e-9);
+    Ok(E2eRow {
+        n,
+        events_per_sec: 2.0 * s.recorder.local_steps as f64 / elapsed,
+        peak_rss_kb: peak_rss_kb(),
+    })
+}
+
+/// One compute micro-bench row: fwd_bwd throughput in parameters/second
+/// (flat model dim × calls / elapsed) on the blocked kernel path and the
+/// retained scalar reference, plus their ratio.
+#[derive(Debug, Clone)]
+struct ComputeRow {
+    shape: String,
+    params_per_sec: f64,
+    scalar_params_per_sec: f64,
+    speedup: f64,
+}
+
+/// Time repeated calls of `step` for ~`budget` wall-clock seconds and
+/// return parameters/second (`dim` per call).
+fn fwd_bwd_throughput(dim: usize, budget: f64, mut step: impl FnMut() -> f32) -> f64 {
+    let mut sink = step(); // warm-up call, also keeps the work observable
+    let start = Instant::now();
+    let mut calls = 0u64;
+    while start.elapsed().as_secs_f64() < budget {
+        sink += step();
+        calls += 1;
+    }
+    let elapsed = start.elapsed().as_secs_f64().max(1e-9);
+    assert!(sink.is_finite(), "fwd_bwd produced a non-finite loss");
+    calls as f64 * dim as f64 / elapsed
+}
+
+/// Measure one `MlpShape` variant: same backend, same params, same fixed
+/// batch (gathered via the dataset accessor, shard RNGs untouched) driven
+/// through `fwd_bwd` and `fwd_bwd_reference`.
+fn bench_compute(shape_name: &str, budget: f64) -> Result<ComputeRow> {
+    let shape =
+        MlpShape::by_name(shape_name).with_context(|| format!("unknown shape {shape_name}"))?;
+    let dim = shape.dim();
+    let batch = shape.batch;
+    let backend = NativeMlpBackend::new(shape, 1, 1024.max(4 * batch), 3.0, true, 5, 9);
+    let params = backend.init_params(9);
+    let idx: Vec<usize> = (0..batch).collect();
+    let (x, y) = backend.dataset().gather(&idx);
+    let blocked = fwd_bwd_throughput(dim, budget, || backend.fwd_bwd(&params, &x, &y).0);
+    let scalar =
+        fwd_bwd_throughput(dim, budget, || backend.fwd_bwd_reference(&params, &x, &y).0);
+    Ok(ComputeRow {
+        shape: shape_name.to_string(),
+        params_per_sec: blocked,
+        scalar_params_per_sec: scalar,
+        speedup: blocked / scalar.max(1e-9),
+    })
+}
+
 fn row_json(r: &E2eRow) -> Json {
     let mut m: BTreeMap<String, Json> = BTreeMap::new();
     m.insert("n".into(), Json::from(r.n));
@@ -86,6 +172,15 @@ fn row_json(r: &E2eRow) -> Json {
         Some(kb) => m.insert("peak_rss_kb".into(), Json::from(kb as usize)),
         None => m.insert("peak_rss_kb".into(), Json::Null),
     };
+    Json::Obj(m)
+}
+
+fn compute_row_json(r: &ComputeRow) -> Json {
+    let mut m: BTreeMap<String, Json> = BTreeMap::new();
+    m.insert("shape".into(), Json::from(r.shape.as_str()));
+    m.insert("params_per_sec".into(), Json::Num(r.params_per_sec));
+    m.insert("scalar_params_per_sec".into(), Json::Num(r.scalar_params_per_sec));
+    m.insert("speedup".into(), Json::Num(r.speedup));
     Json::Obj(m)
 }
 
@@ -116,14 +211,66 @@ fn check_against_baseline(
     baseline_path: &Path,
     queue_ops: f64,
     rows: &[E2eRow],
+    compute_rows: &[ComputeRow],
     tolerance: f64,
 ) -> Result<()> {
     let text = std::fs::read_to_string(baseline_path)
         .with_context(|| format!("read baseline {}", baseline_path.display()))?;
     let base = Json::parse(&text)?;
+    let failures = baseline_failures(&base, queue_ops, rows, compute_rows, tolerance)?;
+    anyhow::ensure!(
+        failures.is_empty(),
+        "engine bench regressed past the baseline gate:\n  {}",
+        failures.join("\n  ")
+    );
+    println!("[bench engine] baseline gate passed (tolerance {tolerance})");
+    Ok(())
+}
+
+/// The gate proper, over a parsed baseline (separated so tests can feed
+/// synthetic measurements through it without touching the filesystem).
+fn baseline_failures(
+    base: &Json,
+    queue_ops: f64,
+    rows: &[E2eRow],
+    compute_rows: &[ComputeRow],
+    tolerance: f64,
+) -> Result<Vec<String>> {
     let mut failures = Vec::new();
     if let Some(b) = base.req("queue")?.req("ops_per_sec")?.as_f64() {
         gate(&mut failures, "queue ops/sec", queue_ops, b, tolerance, true);
+    }
+    // compute rows: a throughput floor under the usual tolerance, plus a
+    // tolerance-free minimum on the in-run blocked-vs-scalar speedup
+    // (same machine, same build — the ratio is what the blocked-kernel
+    // rewrite promises, so it gets no noise allowance)
+    let base_compute: &[Json] =
+        base.get("compute").and_then(Json::as_arr).unwrap_or(&[]);
+    for r in compute_rows {
+        let Some(b) = base_compute
+            .iter()
+            .find(|bc| bc.get("shape").and_then(Json::as_str) == Some(r.shape.as_str()))
+        else {
+            continue; // shape not in the committed baseline — ungated
+        };
+        if let Some(floor) = b.get("params_per_sec").and_then(Json::as_f64) {
+            gate(
+                &mut failures,
+                &format!("compute {} params/sec", r.shape),
+                r.params_per_sec,
+                floor,
+                tolerance,
+                true,
+            );
+        }
+        if let Some(min) = b.get("min_speedup").and_then(Json::as_f64) {
+            if r.speedup < min {
+                failures.push(format!(
+                    "compute {}: blocked/scalar speedup {:.2}x below required {min}x",
+                    r.shape, r.speedup
+                ));
+            }
+        }
     }
     let base_rows: &[Json] = base.req("e2e")?.as_arr().unwrap_or(&[]);
     for r in rows {
@@ -155,13 +302,7 @@ fn check_against_baseline(
             );
         }
     }
-    anyhow::ensure!(
-        failures.is_empty(),
-        "engine bench regressed past the baseline gate:\n  {}",
-        failures.join("\n  ")
-    );
-    println!("[bench engine] baseline gate passed (tolerance {tolerance})");
-    Ok(())
+    Ok(failures)
 }
 
 /// Entry point of `bench engine`.
@@ -182,13 +323,42 @@ pub fn run(args: &BenchArgs) -> Result<()> {
         );
         rows.push(row);
     }
+    if !quick {
+        // large-cell profile: the parallel intra-cell stepping path
+        for &(n, iters) in &[(1_000usize, 100u64), (10_000, 20)] {
+            let row = bench_e2e_large(n, iters)?;
+            println!(
+                "[bench engine] e2e-large n={}: {:.0} events/sec, peak RSS {} kB",
+                n,
+                row.events_per_sec,
+                row.peak_rss_kb.map_or("n/a".into(), |kb| kb.to_string()),
+            );
+            rows.push(row);
+        }
+    }
+    let shapes: &[&str] = if quick {
+        &["mlp_tiny", "mlp_small"]
+    } else {
+        &["mlp_tiny", "mlp_small", "mlp2nn", "mlp_small@b1"]
+    };
+    let budget = if quick { 0.2 } else { 0.5 };
+    let mut compute_rows = Vec::new();
+    for shape in shapes {
+        let row = bench_compute(shape, budget)?;
+        println!(
+            "[bench engine] compute {}: {:.3e} params/sec blocked, {:.3e} scalar ({:.2}x)",
+            row.shape, row.params_per_sec, row.scalar_params_per_sec, row.speedup,
+        );
+        compute_rows.push(row);
+    }
 
     let mut m: BTreeMap<String, Json> = BTreeMap::new();
-    m.insert("schema".into(), Json::from("bench-engine-v1"));
+    m.insert("schema".into(), Json::from("bench-engine-v2"));
     let mut qm: BTreeMap<String, Json> = BTreeMap::new();
     qm.insert("ops_per_sec".into(), Json::Num(queue_ops));
     m.insert("queue".into(), Json::Obj(qm));
     m.insert("e2e".into(), Json::Arr(rows.iter().map(row_json).collect()));
+    m.insert("compute".into(), Json::Arr(compute_rows.iter().map(compute_row_json).collect()));
     let out = Json::Obj(m);
     std::fs::create_dir_all(&args.out_dir)?;
     let out_path = crate::sweep::json_path(&args.out_dir, "engine");
@@ -206,7 +376,7 @@ pub fn run(args: &BenchArgs) -> Result<()> {
             .get("baseline")
             .map(PathBuf::from)
             .unwrap_or_else(|| PathBuf::from(BASELINE_PATH));
-        check_against_baseline(&baseline, queue_ops, &rows, tolerance)?;
+        check_against_baseline(&baseline, queue_ops, &rows, &compute_rows, tolerance)?;
     }
     Ok(())
 }
@@ -235,14 +405,69 @@ mod tests {
     #[test]
     fn baseline_file_parses_and_gates_loosely() {
         // the committed baseline must stay parseable and conservative
-        // enough that a quick in-test measurement passes it
+        // enough that a quick in-test measurement passes it (compute rows
+        // are left out here: speedup ratios are meaningless in unoptimized
+        // test builds — the speedup gate is exercised synthetically below
+        // and for real by the release-built CI bench run)
         let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(BASELINE_PATH);
         let text = std::fs::read_to_string(&path).expect("committed baseline exists");
         let base = Json::parse(&text).expect("baseline parses");
-        assert_eq!(base.req("schema").unwrap().as_str(), Some("bench-engine-v1"));
+        assert_eq!(base.req("schema").unwrap().as_str(), Some("bench-engine-v2"));
+        assert!(
+            base.req("compute").unwrap().as_arr().is_some_and(|rows| rows
+                .iter()
+                .any(|r| r.get("shape").and_then(Json::as_str) == Some("mlp_small")
+                    && r.get("min_speedup").and_then(Json::as_f64).is_some_and(|s| s >= 2.0))),
+            "baseline must require >= 2x blocked-vs-scalar speedup on mlp_small"
+        );
         let queue_ops = bench_queue(20_000);
         let row = bench_e2e(8, 100).unwrap();
-        check_against_baseline(&path, queue_ops, &[row], 0.01)
+        check_against_baseline(&path, queue_ops, &[row], &[], 0.01)
             .expect("ultra-loose tolerance passes the committed floors");
+    }
+
+    #[test]
+    fn compute_gate_enforces_floor_and_speedup() {
+        let base = Json::parse(
+            r#"{
+                "schema": "bench-engine-v2",
+                "queue": {"ops_per_sec": 100.0},
+                "e2e": [],
+                "compute": [
+                    {"shape": "mlp_small", "params_per_sec": 1000.0, "min_speedup": 2.0}
+                ]
+            }"#,
+        )
+        .unwrap();
+        let row = |pps: f64, speedup: f64| ComputeRow {
+            shape: "mlp_small".into(),
+            params_per_sec: pps,
+            scalar_params_per_sec: pps / speedup,
+            speedup,
+        };
+        // healthy: above floor, above required speedup
+        let f = baseline_failures(&base, 100.0, &[], &[row(2000.0, 3.0)], 0.6).unwrap();
+        assert!(f.is_empty(), "{f:?}");
+        // throughput floor breached (tolerance applies)
+        let f = baseline_failures(&base, 100.0, &[], &[row(100.0, 3.0)], 0.6).unwrap();
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].contains("params/sec"), "{f:?}");
+        // speedup gate breached (no tolerance on the ratio)
+        let f = baseline_failures(&base, 100.0, &[], &[row(2000.0, 1.5)], 0.6).unwrap();
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].contains("speedup"), "{f:?}");
+        // unknown shapes are ungated
+        let mut other = row(1.0, 0.5);
+        other.shape = "mlp_tiny".into();
+        let f = baseline_failures(&base, 100.0, &[], &[other], 0.6).unwrap();
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn compute_bench_measures_both_paths() {
+        let row = bench_compute("mlp_tiny", 0.02).unwrap();
+        assert!(row.params_per_sec > 0.0);
+        assert!(row.scalar_params_per_sec > 0.0);
+        assert!(row.speedup > 0.0);
     }
 }

@@ -1,0 +1,13 @@
+//! Fixture: float reductions chained off a parallel iterator must be
+//! flagged in ordered scopes — thread scheduling decides the addition
+//! order, so the result drifts bitwise across runs even without a hash
+//! container anywhere in sight.
+
+pub fn total_loss(losses: &[f32]) -> f32 {
+    losses.par_iter().copied().sum::<f32>()
+}
+
+pub fn total_gap(gaps: &[f64]) -> f64 {
+    let total: f64 = gaps.par_iter().sum();
+    total
+}

@@ -1,0 +1,12 @@
+//! Fixture: parallel iterators are fine when the float reduction itself
+//! stays sequential — par map, collect, then an ordered fold — and
+//! integer parallel sums are order-independent to begin with.
+
+pub fn event_total(counts: &[u64]) -> u64 {
+    counts.par_iter().sum::<u64>()
+}
+
+pub fn total_loss(losses: &[f32]) -> f32 {
+    let scaled: Vec<f32> = losses.par_iter().map(|l| l * 2.0).collect();
+    scaled.iter().sum::<f32>()
+}

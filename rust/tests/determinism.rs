@@ -108,6 +108,46 @@ fn sweep_thread_count_does_not_change_results() {
 }
 
 #[test]
+fn intra_cell_thread_count_does_not_change_results() {
+    // The parallel intra-cell stepping path (`compute_threads` > 1 with
+    // the native MLP backend) must be invisible to metrics: gradients are
+    // computed in parallel but committed in drain order, so the metrics
+    // CSV stays byte-identical across {1, 2, 8} threads for all six
+    // algorithms — still under churn + Gilbert–Elliott + partitions.
+    for alg in AlgorithmKind::all() {
+        let mut base = cfg(alg);
+        base.backend = BackendKind::NativeMlp;
+        base.model = "mlp_tiny".into();
+        base.time_budget = Some(3.0);
+        let runs: Vec<_> = [1usize, 2, 8]
+            .into_iter()
+            .map(|t| {
+                let mut c = base.clone();
+                c.compute_threads = t;
+                run_experiment(&c).unwrap()
+            })
+            .collect();
+        let csv = runs[0].recorder.csv_string();
+        for (t, r) in [1usize, 2, 8].into_iter().zip(&runs) {
+            assert_eq!(
+                csv,
+                r.recorder.csv_string(),
+                "{}: compute_threads=1 vs {t} must be byte-identical",
+                alg.label()
+            );
+            assert_eq!(runs[0].iterations, r.iterations, "{} t={t}", alg.label());
+            assert_eq!(runs[0].virtual_time, r.virtual_time, "{} t={t}", alg.label());
+            assert_eq!(
+                runs[0].recorder.total_bytes(),
+                r.recorder.total_bytes(),
+                "{} t={t}",
+                alg.label()
+            );
+        }
+    }
+}
+
+#[test]
 fn legacy_mode_reruns_are_byte_identical_too() {
     // the pre-adapt configuration (repair on, no awareness) stays on the
     // golden path as well — churn + stragglers, legacy defaults

@@ -93,7 +93,7 @@ fn strict_config_parse_requires_unknown_key_rejection() {
 #[test]
 fn float_accumulation_order_scoped_to_ordered_modules() {
     let bad = fixture("floatacc_bad");
-    assert_eq!(rules_of(&bad), ["no-float-accumulation-order"; 3], "{bad:?}");
+    assert_eq!(rules_of(&bad), ["no-float-accumulation-order"; 5], "{bad:?}");
     let lexemes: Vec<(&str, &str)> =
         bad.iter().map(|f| (f.file.as_str(), f.lexeme.as_str())).collect();
     assert_eq!(
@@ -101,11 +101,18 @@ fn float_accumulation_order_scoped_to_ordered_modules() {
         [
             ("engine/mod.rs", "sum::<f32>"),
             ("engine/mod.rs", "sum::<f64>"),
+            ("engine/par.rs", "sum::<f32>"),
+            ("engine/par.rs", "sum()"),
             ("stale/mod.rs", "sum()"),
         ]
     );
+    // the parallel-iterator findings carry the scheduling diagnosis, not
+    // the hash-container one
+    assert!(bad[2].message.contains("parallel iterator"), "{}", bad[2].message);
+    assert!(bad[3].message.contains("parallel iterator"), "{}", bad[3].message);
     // ordered containers, integer reductions (turbofish or annotation-
-    // typed), test code and out-of-scope modules: all clean
+    // typed), sequential folds after a par collect, test code and
+    // out-of-scope modules: all clean
     assert!(fixture("floatacc_good").is_empty());
 }
 
